@@ -1,0 +1,103 @@
+//! End-to-end validation driver (experiment H1, DESIGN.md).
+//!
+//! Loads the *trained* tiny Spike-driven Transformer (synthetic CIFAR-10
+//! stand-in; substitution #2) and runs the held-out split through all three
+//! execution paths:
+//!
+//!   1. the 10-bit quantized cycle **simulator** (the paper's datapath),
+//!   2. the dense **golden** executor (bit-exactness oracle),
+//!   3. the float **PJRT** model AOT-compiled from JAX (L2/L1 cross-check),
+//!
+//! reporting accuracy for each, simulator-vs-golden bit-exactness, the
+//! quantized-vs-float agreement, and the modelled hardware metrics.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example cifar_inference
+//! ```
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{load_model, loader::load_test_split, GoldenExecutor};
+use spikeformer_accel::runtime::PjrtRuntime;
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).map(|(i, _)| i).unwrap_or(0)
+}
+
+fn main() -> Result<()> {
+    let dir = Path::new("artifacts/weights");
+    ensure!(
+        dir.join("manifest.txt").exists(),
+        "run `make artifacts` first (trains the model and AOT-compiles the HLO)"
+    );
+    let model = load_model(dir)?;
+    let (imgs, shape, labels) = load_test_split(dir)?;
+    let n = shape[0].min(128);
+    let img_len = shape[1] * shape[2] * shape[3];
+    println!(
+        "model `{}` (D={}, T={}, blocks={}), evaluating {n} held-out images",
+        model.cfg.name, model.cfg.embed_dim, model.cfg.timesteps, model.cfg.num_blocks
+    );
+
+    let golden = GoldenExecutor::new(&model);
+    let mut accel = Accelerator::new(model.clone(), AccelConfig::paper());
+    let rt = PjrtRuntime::cpu()?;
+    let float_model = rt.load_hlo(Path::new("artifacts/model.hlo.txt"))?;
+
+    let (mut sim_ok, mut gold_ok, mut float_ok, mut agree_qf) = (0, 0, 0, 0);
+    let mut bit_exact = true;
+    let mut cycles_total = 0u64;
+    let mut sops_total = 0u64;
+    let host_t0 = std::time::Instant::now();
+
+    for i in 0..n {
+        let img = &imgs[i * img_len..(i + 1) * img_len];
+        let label = labels[i] as usize;
+
+        let r_sim = accel.infer(img)?;
+        let r_gold = golden.infer(img);
+        let r_float = float_model.run_f32(&[(img, &[1, 3, 32, 32])])?;
+
+        bit_exact &= r_sim.logits == r_gold.logits;
+        let (ps, pg, pf) = (r_sim.argmax(), argmax(&r_gold.logits), argmax(&r_float[0]));
+        sim_ok += (ps == label) as usize;
+        gold_ok += (pg == label) as usize;
+        float_ok += (pf == label) as usize;
+        agree_qf += (ps == pf) as usize;
+        cycles_total += r_sim.total.cycles;
+        sops_total += r_sim.total.sops;
+    }
+    let host_s = host_t0.elapsed().as_secs_f64();
+
+    let pct = |k: usize| 100.0 * k as f64 / n as f64;
+    println!("\n=== accuracy (paper: 94.87% on CIFAR-10 after 10-bit quantization) ===");
+    println!("quantized simulator : {:.2}%", pct(sim_ok));
+    println!("quantized golden    : {:.2}%", pct(gold_ok));
+    println!("float JAX (PJRT)    : {:.2}%", pct(float_ok));
+    println!("quant-vs-float agreement: {:.2}%", pct(agree_qf));
+    println!("simulator == golden bit-exact: {bit_exact}");
+
+    println!("\n=== modelled hardware (paper operating point) ===");
+    let hw = AccelConfig::paper();
+    let secs = hw.seconds(cycles_total);
+    println!("total cycles: {cycles_total}  ({:.3} ms @ 200 MHz)", secs * 1e3);
+    println!("total SOPs  : {sops_total}");
+    println!(
+        "achieved    : {:.1} GSOP/s (peak {:.1})",
+        sops_total as f64 / secs / 1e9,
+        hw.peak_gsops()
+    );
+    println!(
+        "inference   : {:.3} ms/image modelled, {:.1} img/s",
+        secs * 1e3 / n as f64,
+        n as f64 / secs
+    );
+    println!("host wall   : {:.2} s ({:.1} ms/image)", host_s, host_s * 1e3 / n as f64);
+
+    ensure!(bit_exact, "simulator diverged from golden executor");
+    Ok(())
+}

@@ -1,0 +1,26 @@
+//! Perf probe: per-path timings for the EXPERIMENTS.md §Perf log.
+use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::benchlib::{bench, black_box};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{GoldenExecutor, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn main() {
+    let mut rng = Prng::new(1);
+    let img: Vec<f32> = (0..3*32*32).map(|_| rng.next_f32_signed()).collect();
+    let sim_only = std::env::args().any(|a| a == "--sim-only");
+
+    let tiny = QuantizedModel::random(&SdtModelConfig::tiny(), 42);
+    let mut accel = Accelerator::new(tiny.clone(), AccelConfig::paper());
+    bench("sim.infer tiny", 2, 20, || { black_box(accel.infer(&img).unwrap()); });
+    let paper = QuantizedModel::random(&SdtModelConfig::paper(), 42);
+    let mut ap = Accelerator::new(paper.clone(), AccelConfig::paper());
+    bench("sim.infer paper", 1, 5, || { black_box(ap.infer(&img).unwrap()); });
+
+    if !sim_only {
+        let golden = GoldenExecutor::new(&tiny);
+        bench("golden.infer tiny", 2, 10, || { black_box(golden.infer(&img)); });
+        let gp = GoldenExecutor::new(&paper);
+        bench("golden.infer paper", 1, 2, || { black_box(gp.infer(&img)); });
+    }
+}

@@ -1,0 +1,48 @@
+//! Quickstart: run one Spike-driven Transformer inference on the cycle
+//! simulator and print the hardware report.
+//!
+//! ```bash
+//! make artifacts            # once: trains the tiny model + AOT-compiles
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Works without artifacts too (falls back to a random-weight model).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{load_model, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn main() -> Result<()> {
+    // 1. A quantized model: trained artifacts if present, random otherwise.
+    let weights = Path::new("artifacts/weights");
+    let model = if weights.join("manifest.txt").exists() {
+        println!("loading trained weights from {}", weights.display());
+        load_model(weights)?
+    } else {
+        println!("no artifacts found - using a random tiny model");
+        QuantizedModel::random(&SdtModelConfig::tiny(), 42)
+    };
+
+    // 2. An accelerator instance at the paper's operating point
+    //    (1,536 lanes @ 200 MHz on a modelled Virtex UltraScale).
+    let mut accel = Accelerator::new(model, AccelConfig::paper());
+
+    // 3. One image (synthetic pixels for the quickstart).
+    let mut rng = Prng::new(7);
+    let image: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+
+    // 4. Run and inspect the hardware report.
+    let report = accel.infer(&image)?;
+    println!("\n{}", report.summary());
+    println!("predicted class: {}", report.argmax());
+    println!("\nper-module spike sparsity (the signal the accelerator exploits):");
+    for (name, s) in &report.sparsity {
+        println!("  {name:<28}{:.1}%", s * 100.0);
+    }
+    Ok(())
+}

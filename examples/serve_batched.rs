@@ -1,0 +1,86 @@
+//! Batched serving demo (experiment E1): drive the L3 coordinator with a
+//! stream of inference requests against (a) golden-executor workers and
+//! (b) the PJRT float model, comparing latency/throughput under different
+//! batching policies.
+//!
+//! ```bash
+//! cargo run --release --example serve_batched
+//! ```
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use spikeformer_accel::coordinator::{
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, PjrtBackend, Request,
+};
+use spikeformer_accel::model::{load_model, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Prng::new(3);
+    (0..n).map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()).collect()
+}
+
+fn run_session(
+    label: &str,
+    factories: Vec<BackendFactory>,
+    policy: BatchPolicy,
+    imgs: &[Vec<f32>],
+) -> Result<()> {
+    let started = Instant::now();
+    let mut co = Coordinator::new(factories, policy);
+    for (i, img) in imgs.iter().enumerate() {
+        co.submit(Request { id: i as u64, image: img.clone() });
+    }
+    let (responses, report) = co.finish(started)?;
+    assert_eq!(responses.len(), imgs.len());
+    println!("{label:<44} {}", report.summary());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let weights = Path::new("artifacts/weights");
+    let model = if weights.join("manifest.txt").exists() {
+        load_model(weights)?
+    } else {
+        QuantizedModel::random(&SdtModelConfig::tiny(), 42)
+    };
+    let imgs = images(64);
+
+    println!("== golden workers, batching policy sweep ==");
+    for (workers, batch) in [(1usize, 1usize), (1, 8), (2, 8), (4, 8), (4, 16)] {
+        let factories: Vec<BackendFactory> = (0..workers)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> { Ok(Box::new(GoldenBackend::new(m))) }) as BackendFactory
+            })
+            .collect();
+        let policy =
+            BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(1) };
+        run_session(&format!("golden workers={workers} max_batch={batch}"), factories, policy, &imgs)?;
+    }
+
+    if Path::new("artifacts/model.hlo.txt").exists() {
+        println!("\n== PJRT (AOT JAX) workers ==");
+        for workers in [1usize, 2] {
+            let factories: Vec<BackendFactory> = (0..workers)
+                .map(|_| {
+                    Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> {
+                        Ok(Box::new(PjrtBackend::from_artifacts(
+                            Path::new("artifacts"),
+                            3 * 32 * 32,
+                            10,
+                        )?))
+                    }) as BackendFactory
+                })
+                .collect();
+            let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+            run_session(&format!("pjrt workers={workers} max_batch=8"), factories, policy, &imgs)?;
+        }
+    } else {
+        println!("(skip PJRT session: run `make artifacts` first)");
+    }
+    Ok(())
+}

@@ -1,0 +1,63 @@
+"""Cross-layer sparsity analysis: measure the per-module spike sparsity of
+the trained (float, BN-folded) JAX model on the held-out split and write
+``fig6_jax.txt`` — `rust/tests/cross_layer.rs` compares the rust quantized
+pipeline's sparsities against these numbers, closing the L1/L2 <-> L3 loop
+on the Fig.-6 measurement (not just on logits).
+
+Usage: (from python/)  python -m compile.analysis --weights-dir ../artifacts/weights
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aot import load_folded
+from .config import get_config
+from .model import forward_folded
+
+
+def measure_sparsity(folded, cfg, images, batch=32):
+    """Average spike sparsity per aux module over `images` [N,C,H,W]."""
+    totals = {}
+
+    @jax.jit
+    def run(xb):
+        _, aux = forward_folded(folded, cfg, xb, collect_aux=True)
+        return {k: jnp.mean(v) for k, v in aux.items()}
+
+    n = 0
+    for i in range(0, len(images), batch):
+        xb = jnp.asarray(images[i : i + batch])
+        rates = run(xb)
+        w = xb.shape[0]
+        for k, r in rates.items():
+            totals[k] = totals.get(k, 0.0) + float(r) * w
+        n += w
+    return {k: 1.0 - v / n for k, v in sorted(totals.items())}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--weights-dir", default="../artifacts/weights")
+    ap.add_argument("--out", default=None, help="defaults to <weights-dir>/../fig6_jax.txt")
+    ap.add_argument("--limit", type=int, default=64)
+    args = ap.parse_args()
+
+    folded, cfg_kv = load_folded(args.weights_dir)
+    cfg = get_config(cfg_kv.get("name", "tiny"))
+    images = np.load(os.path.join(args.weights_dir, "test_images.npy"))[: args.limit]
+
+    sparsity = measure_sparsity(folded, cfg, images)
+    out = args.out or os.path.join(args.weights_dir, "..", "fig6_jax.txt")
+    with open(out, "w") as f:
+        for name, s in sparsity.items():
+            f.write(f"{name} {s:.6f}\n")
+            print(f"{name:<30}{s * 100:6.2f}%")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""AOT-lower the Spike-driven Transformer to HLO text for the rust runtime.
+
+Interchange format is HLO *text*, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Exports (all with ``return_tuple=True``; unwrap with ``to_tuple1`` in rust):
+  model.hlo.txt   — folded tiny model, batch 1:  f32[1,3,32,32] -> f32[1,10]
+  model_b8.hlo.txt— same, batch 8 (coordinator batching path)
+  sdsa.hlo.txt    — SDSA Pallas micro-kernel:    3x f32[64,C] -> f32[64,C]
+
+The folded weights are baked into the HLO as constants so the rust binary is
+fully self-contained after ``make artifacts`` (python never runs again).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import get_config
+from .kernels.sdsa import sdsa as sdsa_pallas
+from .model import forward_folded
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # CRITICAL: the default printer elides large constants as
+    # `constant({...})`, which the 0.5.1-era text parser silently reads as
+    # zeros — the baked (BN-folded) weights would vanish. Print from the
+    # HloModule with print_large_constants so the artifact is self-contained.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax >= 0.8 emits metadata attributes (source_end_line, ...) the
+    # 0.5.1-era parser rejects; strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def load_folded(weights_dir):
+    """Re-load the exported flat weights into the folded pytree layout."""
+    folded = {"sps": {}, "blocks": [], "head": {}}
+    names = {}
+    with open(os.path.join(weights_dir, "manifest.txt")) as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            names[parts[0]] = parts[-1]
+    cfg_kv = {}
+    with open(os.path.join(weights_dir, "config.txt")) as f:
+        for line in f:
+            k, v = line.split()
+            cfg_kv[k] = v
+    num_blocks = int(cfg_kv["num_blocks"])
+
+    def arr(name):
+        return jnp.asarray(np.load(os.path.join(weights_dir, names[name])))
+
+    for name in [f"stage{i}" for i in range(4)] + ["rpe"]:
+        folded["sps"][name] = {"w": arr(f"sps.{name}.w"), "b": arr(f"sps.{name}.b")}
+    for bi in range(num_blocks):
+        folded["blocks"].append(
+            {
+                lname: {"w": arr(f"block{bi}.{lname}.w"), "b": arr(f"block{bi}.{lname}.b")}
+                for lname in ("q", "k", "v", "o", "mlp1", "mlp2")
+            }
+        )
+    folded["head"] = {"w": arr("head.w"), "b": arr("head.b")}
+    return folded, cfg_kv
+
+
+def export_model(cfg, folded, out_path, batch, use_pallas=True):
+    def fn(x):
+        return (forward_folded(folded, cfg, x, use_pallas=use_pallas),)
+
+    spec = jax.ShapeDtypeStruct((batch, cfg.in_channels, cfg.img_size, cfg.img_size), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path} ({len(text)} chars, batch={batch}, pallas={use_pallas})")
+
+
+def export_sdsa(cfg, out_path):
+    l, c = cfg.num_tokens, cfg.embed_dim
+
+    def fn(q, k, v):
+        return (sdsa_pallas(q, k, v, v_th=cfg.attn_v_th),)
+
+    spec = jax.ShapeDtypeStruct((l, c), jnp.float32)
+    lowered = jax.jit(fn).lower(spec, spec, spec)
+    text = to_hlo_text(lowered)
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path} ({len(text)} chars, L={l}, C={c})")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--weights-dir", default=None, help="defaults to <out-dir>/weights")
+    ap.add_argument("--config", default="tiny")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    weights_dir = args.weights_dir or os.path.join(args.out_dir, "weights")
+    cfg = get_config(args.config)
+
+    if os.path.exists(os.path.join(weights_dir, "manifest.txt")):
+        folded, _ = load_folded(weights_dir)
+        print(f"using trained weights from {weights_dir}")
+    else:
+        # Artifacts must be buildable before training (e.g. CI smoke): fall
+        # back to a deterministic random fold so the HLO structure is real.
+        from .model import fold_batchnorm, init_params
+
+        params, bn_state = init_params(jax.random.PRNGKey(0), cfg)
+        folded = fold_batchnorm(params, bn_state, cfg)
+        print("weights dir missing — baked deterministic random weights")
+
+    export_model(cfg, folded, os.path.join(args.out_dir, "model.hlo.txt"), batch=1)
+    export_model(cfg, folded, os.path.join(args.out_dir, "model_b8.hlo.txt"), batch=8)
+    export_sdsa(cfg, os.path.join(args.out_dir, "sdsa.hlo.txt"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Model configurations for the Spike-driven Transformer reproduction.
+
+Two named configs:
+  * ``tiny``  — trainable-in-minutes config used for the end-to-end accuracy
+    experiment (H1) and the Fig-6 sparsity measurement.
+  * ``paper`` — the CIFAR-10 configuration of the Spike-driven Transformer
+    [Yao et al., NeurIPS 2023] that the accelerator paper benchmarks
+    (T=4, D=384); used (with random weights) for the Table-I cycle/energy
+    accounting in the rust simulator.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class LifConfig:
+    """Leaky Integrate-and-Fire constants (Eqs. (1)-(3) of the paper)."""
+
+    v_th: float = 1.0
+    v_reset: float = 0.0
+    gamma: float = 0.5  # membrane decay ("time constant" in the paper)
+
+
+@dataclass(frozen=True)
+class SdtConfig:
+    """Spike-driven Transformer hyper-parameters."""
+
+    name: str = "tiny"
+    img_size: int = 32
+    in_channels: int = 3
+    num_classes: int = 10
+    timesteps: int = 2
+    embed_dim: int = 64          # D; SPS stages use D/8, D/4, D/2, D
+    num_blocks: int = 1          # spike-driven encoder blocks (SDEB)
+    num_heads: int = 1           # mask is per-channel, heads partition channels
+    mlp_ratio: float = 2.0
+    attn_v_th: float = 2.0       # firing threshold of the SDSA mask neuron
+    lif: LifConfig = field(default_factory=LifConfig)
+
+    @property
+    def tokens_hw(self) -> int:
+        """Token grid side after SPS (two 2x2 maxpools)."""
+        return self.img_size // 4
+
+    @property
+    def num_tokens(self) -> int:
+        return self.tokens_hw * self.tokens_hw
+
+    @property
+    def mlp_hidden(self) -> int:
+        return int(self.embed_dim * self.mlp_ratio)
+
+    @property
+    def stage_dims(self) -> tuple:
+        d = self.embed_dim
+        return (max(d // 8, 8), max(d // 4, 8), max(d // 2, 8), d)
+
+
+def tiny_config(**overrides) -> SdtConfig:
+    return SdtConfig(name="tiny", **overrides)
+
+
+def paper_config() -> SdtConfig:
+    """The configuration the accelerator paper evaluates (Table I)."""
+    return SdtConfig(
+        name="paper",
+        timesteps=4,
+        embed_dim=384,
+        num_blocks=2,
+        num_heads=8,
+        mlp_ratio=4.0,
+        attn_v_th=2.0,
+    )
+
+
+CONFIGS = {"tiny": tiny_config, "paper": paper_config}
+
+
+def get_config(name: str) -> SdtConfig:
+    try:
+        return CONFIGS[name]()
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; choose from {sorted(CONFIGS)}")

@@ -1,0 +1,66 @@
+"""Synthetic 10-class 32x32x3 corpus standing in for CIFAR-10.
+
+Substitution (DESIGN.md §Substitutions #2): no dataset download is possible
+in this environment, so we generate a class-conditional corpus with real
+spatial structure — each class is a deterministic prototype built from a few
+oriented sinusoidal gratings plus a class-coloured blob, and samples are
+noisy, randomly-shifted renderings of their prototype. A linear probe cannot
+solve it perfectly (shifts + noise), but the tiny Spike-driven Transformer
+learns it well above chance, which is all experiments H1/F6 need: the
+accelerator's numerics are validated bit-exactly against the golden executor
+regardless of the data distribution, and the Fig-6 sparsity profile is
+measured on real trained activations.
+"""
+
+import numpy as np
+
+IMG = 32
+CHANNELS = 3
+NUM_CLASSES = 10
+
+
+def _prototypes(rng):
+    """One 3x32x32 prototype per class with distinct orientation/colour."""
+    yy, xx = np.meshgrid(np.arange(IMG), np.arange(IMG), indexing="ij")
+    protos = np.zeros((NUM_CLASSES, CHANNELS, IMG, IMG), np.float32)
+    for c in range(NUM_CLASSES):
+        theta = np.pi * c / NUM_CLASSES
+        freq = 2.0 * np.pi * (1.5 + 0.35 * c) / IMG
+        grating = np.sin(freq * (np.cos(theta) * xx + np.sin(theta) * yy))
+        cy, cx = rng.integers(8, 24, size=2)
+        blob = np.exp(-(((yy - cy) ** 2 + (xx - cx) ** 2) / 40.0))
+        colour = rng.normal(size=CHANNELS).astype(np.float32)
+        colour /= np.linalg.norm(colour) + 1e-8
+        for ch in range(CHANNELS):
+            protos[c, ch] = 0.8 * grating + 1.4 * colour[ch] * blob
+    return protos
+
+
+def make_dataset(n_train=2000, n_test=512, noise=0.35, seed=7):
+    """Returns (x_train, y_train, x_test, y_test); x in [N, 3, 32, 32]."""
+    rng = np.random.default_rng(seed)
+    protos = _prototypes(rng)
+
+    def sample(n, rng):
+        ys = rng.integers(0, NUM_CLASSES, size=n)
+        xs = np.empty((n, CHANNELS, IMG, IMG), np.float32)
+        for i, y in enumerate(ys):
+            img = protos[y].copy()
+            dy, dx = rng.integers(-3, 4, size=2)
+            img = np.roll(np.roll(img, dy, axis=1), dx, axis=2)
+            img += noise * rng.normal(size=img.shape).astype(np.float32)
+            xs[i] = img
+        return xs, ys.astype(np.int32)
+
+    x_tr, y_tr = sample(n_train, rng)
+    x_te, y_te = sample(n_test, rng)
+    return x_tr, y_tr, x_te, y_te
+
+
+def save_test_split(out_dir, x_test, y_test):
+    """Persist the held-out split for the rust examples (.npy files)."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    np.save(f"{out_dir}/test_images.npy", x_test.astype(np.float32))
+    np.save(f"{out_dir}/test_labels.npy", y_test.astype(np.int32))

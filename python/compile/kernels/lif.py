@@ -1,0 +1,56 @@
+"""Pallas kernel for a LIF neuron array (Eqs. (1)-(3) of the paper).
+
+The FPGA's SEU array updates 1,536 neurons per cycle, each carrying its
+membrane state across timesteps in the ESS. The TPU mapping tiles the neuron
+axis into VMEM-resident blocks and walks the (small, static) time axis with a
+``fori_loop`` whose carry holds the temporal state Temp[t] — the carry plays
+the role the temporal-data SRAM plays on chip, so HBM sees each input
+timestep exactly once per tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_N = 1024
+
+
+def _lif_kernel(spa_ref, s_ref, *, t_steps, v_th, v_reset, gamma):
+    bn = spa_ref.shape[1]
+
+    def body(t, temp):
+        spa_t = pl.load(spa_ref, (pl.dslice(t, 1), slice(None)))[0]
+        mem = spa_t + temp
+        s = (mem >= v_th).astype(mem.dtype)
+        pl.store(s_ref, (pl.dslice(t, 1), slice(None)), s[None, :])
+        return s * v_reset + (1.0 - s) * (gamma * mem)
+
+    temp0 = jnp.zeros((bn,), spa_ref.dtype)
+    jax.lax.fori_loop(0, t_steps, body, temp0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("v_th", "v_reset", "gamma", "block_n")
+)
+def lif(spa, v_th=1.0, v_reset=0.0, gamma=0.5, block_n: int = DEFAULT_BLOCK_N):
+    """Spikes for spa: [T, N] spatial input (flatten features into N)."""
+    t_steps, n = spa.shape
+    bn = min(block_n, n)
+    if n % bn != 0:
+        pad = bn - n % bn
+        spa = jnp.pad(spa, ((0, 0), (0, pad)))
+    np_ = spa.shape[1]
+    out = pl.pallas_call(
+        functools.partial(
+            _lif_kernel, t_steps=t_steps, v_th=v_th, v_reset=v_reset, gamma=gamma
+        ),
+        out_shape=jax.ShapeDtypeStruct((t_steps, np_), spa.dtype),
+        grid=(np_ // bn,),
+        in_specs=[pl.BlockSpec((t_steps, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((t_steps, bn), lambda j: (0, j)),
+        interpret=True,
+    )(spa)
+    return out[:, :n]

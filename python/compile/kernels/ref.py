@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth the pytest suite checks the interpret-mode Pallas
+kernels against, and they double as the training-time forward path (the
+surrogate-gradient machinery lives here, not in the kernels, because
+autodiff through ``pallas_call`` in interpret mode is unnecessary overhead
+for this model size).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Heaviside step with a surrogate gradient (rectangular window), used by the
+# LIF neuron during training. Forward is exactly eps(x) from Eq. (3).
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def spike_step(x):
+    return (x >= 0.0).astype(x.dtype)
+
+
+def _spike_step_fwd(x):
+    return spike_step(x), x
+
+
+def _spike_step_bwd(x, g):
+    # Rectangular surrogate: d spike / dx ~= 1 inside |x| < 0.5.
+    window = (jnp.abs(x) < 0.5).astype(x.dtype)
+    return (g * window,)
+
+
+spike_step.defvjp(_spike_step_fwd, _spike_step_bwd)
+
+
+# ---------------------------------------------------------------------------
+# LIF neuron, Eqs. (1)-(3):
+#   Mem[t]  = Spa[t] + Temp[t-1]
+#   S[t]    = eps(Mem[t] - Vth)
+#   Temp[t] = S[t] * Vreset + (1 - S[t]) * (gamma * Mem[t])
+# ---------------------------------------------------------------------------
+
+def lif_ref(spa, v_th=1.0, v_reset=0.0, gamma=0.5):
+    """Run a LIF layer over the leading time axis.
+
+    spa: [T, ...] spatial input per timestep.
+    Returns spikes of the same shape.
+    """
+
+    def step(temp, spa_t):
+        mem = spa_t + temp
+        s = spike_step(mem - v_th)
+        temp_next = s * v_reset + (1.0 - s) * (gamma * mem)
+        return temp_next, s
+
+    temp0 = jnp.zeros_like(spa[0])
+    _, spikes = jax.lax.scan(step, temp0, spa)
+    return spikes
+
+
+def lif_ref_with_mem(spa, v_th=1.0, v_reset=0.0, gamma=0.5):
+    """Like :func:`lif_ref` but also returns the membrane trace (for tests)."""
+
+    def step(temp, spa_t):
+        mem = spa_t + temp
+        s = spike_step(mem - v_th)
+        temp_next = s * v_reset + (1.0 - s) * (gamma * mem)
+        return temp_next, (s, mem)
+
+    temp0 = jnp.zeros_like(spa[0])
+    _, (spikes, mems) = jax.lax.scan(step, temp0, spa)
+    return spikes, mems
+
+
+# ---------------------------------------------------------------------------
+# Spike-Driven Self-Attention (SDSA) mask-add, Section III-C:
+#   acc[c] = sum_l  Q_s[l, c] * K_s[l, c]        (token-dim accumulation)
+#   S[c]   = eps(acc[c] - Vth)                   (fire determination)
+#   out    = V_s * S                             (channel masking)
+# ---------------------------------------------------------------------------
+
+def sdsa_ref(q_s, k_s, v_s, v_th=2.0):
+    """q_s, k_s, v_s: [L, C] binary spike matrices (one head, one timestep)."""
+    acc = jnp.sum(q_s * k_s, axis=0)
+    mask = spike_step(acc - v_th)
+    return v_s * mask[None, :]
+
+
+def sdsa_acc_ref(q_s, k_s):
+    """Token-dim accumulation of the Hadamard product only (for unit tests)."""
+    return jnp.sum(q_s * k_s, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Spike linear (SLU), Section III-D: Y = X_s @ W + b with X_s binary.
+# On the FPGA this is an address-indexed weight-row accumulation; the dense
+# oracle is an ordinary matmul.
+# ---------------------------------------------------------------------------
+
+def spike_linear_ref(x_s, w, b=None):
+    """x_s: [L, C_in] binary; w: [C_in, C_out]; b: [C_out] or None."""
+    y = jnp.dot(x_s, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Spike maxpooling (SMU), Section III-B: binary maxpool == logical OR of the
+# kernel window. kernel 2x2, stride 2 (the network's pooling); the SMU unit
+# test also exercises stride 1 via this oracle.
+# ---------------------------------------------------------------------------
+
+def spike_maxpool_ref(x, kernel=2, stride=2):
+    """x: [..., H, W] binary; windowed max over the trailing two dims."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1,) * (x.ndim - 2) + (kernel, kernel),
+        window_strides=(1,) * (x.ndim - 2) + (stride, stride),
+        padding="VALID",
+    )

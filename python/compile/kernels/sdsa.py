@@ -1,0 +1,88 @@
+"""Pallas kernel for Spike-Driven Self-Attention (the paper's SMAM, Fig. 4).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA implements
+SDSA as a two-pointer merge-join over per-channel *encoded spike address
+lists* — inherently serial, data-dependent control flow. That shape does not
+map onto the TPU's MXU/VPU. The TPU re-think keeps the identical math
+
+    acc[c] = sum_l Q_s[l,c] * K_s[l,c]   (token-dim accumulation)
+    S[c]   = step(acc[c] - Vth)          (fire determination)
+    out    = V_s * S                     (channel masking)
+
+but expresses it as a dense masked elementwise-reduce, tiled over channel
+blocks so each (L, BC) tile of Q/K/V lives in VMEM. Binary spikes are carried
+as f32 0/1 (bf16 on a real TPU); the VPU does the Hadamard + column reduction
+and the mask broadcast fuses into the same tile pass, so HBM traffic is one
+read of Q,K,V and one write of the output — matching the single-pass ESS
+streaming of the FPGA datapath.
+
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and the AOT path (aot.py) inlines this kernel into the
+exported HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_C = 128  # lane-dim tile; multiple of the VPU lane width
+
+
+def _sdsa_kernel(q_ref, k_ref, v_ref, o_ref, *, v_th):
+    q = q_ref[...]
+    k = k_ref[...]
+    acc = jnp.sum(q * k, axis=0)                      # [BC] token-dim acc
+    mask = (acc >= v_th).astype(q.dtype)              # fire determination
+    o_ref[...] = v_ref[...] * mask[None, :]           # channel masking
+
+
+@functools.partial(jax.jit, static_argnames=("v_th", "block_c"))
+def sdsa(q_s, k_s, v_s, v_th: float = 2.0, block_c: int = DEFAULT_BLOCK_C):
+    """Masked V_s for one head/timestep. q_s,k_s,v_s: [L, C] binary f32."""
+    l, c = q_s.shape
+    bc = min(block_c, c)
+    if c % bc != 0:  # pad channels to the tile size, slice after
+        pad = bc - c % bc
+        q_s = jnp.pad(q_s, ((0, 0), (0, pad)))
+        k_s = jnp.pad(k_s, ((0, 0), (0, pad)))
+        v_s = jnp.pad(v_s, ((0, 0), (0, pad)))
+    cp = q_s.shape[1]
+    spec = pl.BlockSpec((l, bc), lambda j: (0, j))
+    out = pl.pallas_call(
+        functools.partial(_sdsa_kernel, v_th=v_th),
+        out_shape=jax.ShapeDtypeStruct((l, cp), q_s.dtype),
+        grid=(cp // bc,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=True,
+    )(q_s, k_s, v_s)
+    return out[:, :c]
+
+
+def _sdsa_mask_kernel(q_ref, k_ref, m_ref, *, v_th):
+    acc = jnp.sum(q_ref[...] * k_ref[...], axis=0)
+    m_ref[...] = (acc >= v_th).astype(q_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("v_th", "block_c"))
+def sdsa_mask(q_s, k_s, v_th: float = 2.0, block_c: int = DEFAULT_BLOCK_C):
+    """Only the per-channel mask S (Fig. 4(b)); used by unit tests."""
+    l, c = q_s.shape
+    bc = min(block_c, c)
+    if c % bc != 0:
+        pad = bc - c % bc
+        q_s = jnp.pad(q_s, ((0, 0), (0, pad)))
+        k_s = jnp.pad(k_s, ((0, 0), (0, pad)))
+    cp = q_s.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_sdsa_mask_kernel, v_th=v_th),
+        out_shape=jax.ShapeDtypeStruct((cp,), q_s.dtype),
+        grid=(cp // bc,),
+        in_specs=[pl.BlockSpec((l, bc), lambda j: (0, j))] * 2,
+        out_specs=pl.BlockSpec((bc,), lambda j: (j,)),
+        interpret=True,
+    )(q_s, k_s)
+    return out[:c]

@@ -1,0 +1,334 @@
+"""L2 — Spike-driven Transformer forward/backward in JAX.
+
+Architecture follows [Yao et al., NeurIPS 2023] as specialised by the
+accelerator paper (Section III): a Spiking Patch Splitting (SPS) front-end
+(four Conv-BN-LIF stages, two 2x2 spike maxpools, an RPE conv with a residual
+adder) followed by N Spike-driven Encoder Blocks (SDEB), each containing
+Spike-Driven Self-Attention (SDSA: Hadamard of Q_s/K_s, token-dim
+accumulation, threshold fire, channel masking of V_s) and a two-layer spiking
+MLP, with residual adders in the value (membrane) domain — exactly the
+ResBuffer + Adder Module dataflow of Fig. 1.
+
+Two forward paths share one parameter pytree:
+  * training path  — pure-jnp oracles from ``kernels.ref`` (surrogate grad);
+  * inference path — Pallas kernels (``use_pallas=True``), the path that
+    ``aot.py`` lowers to HLO for the rust PJRT runtime.
+
+BN layers are folded into conv/linear weights for export
+(:func:`fold_batchnorm`); the folded forward (:func:`forward_folded`) is the
+graph the rust golden executor and cycle simulator implement, so numerics can
+be cross-checked end to end.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import SdtConfig
+from .kernels import ref
+from .kernels.lif import lif as lif_pallas
+from .kernels.sdsa import sdsa as sdsa_pallas
+from .kernels.spike_linear import spike_linear as spike_linear_pallas
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialisation
+# ---------------------------------------------------------------------------
+
+def _conv_init(key, c_in, c_out, k=3):
+    kw, _ = jax.random.split(key)
+    fan_in = c_in * k * k
+    w = jax.random.normal(kw, (c_out, c_in, k, k)) * jnp.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((c_out,))}
+
+
+def _linear_init(key, d_in, d_out):
+    kw, _ = jax.random.split(key)
+    w = jax.random.normal(kw, (d_in, d_out)) * jnp.sqrt(2.0 / d_in)
+    return {"w": w, "b": jnp.zeros((d_out,))}
+
+
+def _bn_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,))}
+
+
+def _bn_state_init(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def init_params(key, cfg: SdtConfig):
+    """Returns (params, bn_state) pytrees."""
+    keys = jax.random.split(key, 16 + 8 * cfg.num_blocks)
+    ki = iter(keys)
+    dims = cfg.stage_dims
+    sps, sps_state = {}, {}
+    c_prev = cfg.in_channels
+    for i, c in enumerate(dims):
+        sps[f"stage{i}"] = {"conv": _conv_init(next(ki), c_prev, c), "bn": _bn_init(c)}
+        sps_state[f"stage{i}"] = _bn_state_init(c)
+        c_prev = c
+    sps["rpe"] = {"conv": _conv_init(next(ki), cfg.embed_dim, cfg.embed_dim), "bn": _bn_init(cfg.embed_dim)}
+    sps_state["rpe"] = _bn_state_init(cfg.embed_dim)
+
+    blocks, blocks_state = [], []
+    d, h = cfg.embed_dim, cfg.mlp_hidden
+    for _ in range(cfg.num_blocks):
+        blk, st = {}, {}
+        for name, (di, do) in {
+            "q": (d, d), "k": (d, d), "v": (d, d), "o": (d, d),
+            "mlp1": (d, h), "mlp2": (h, d),
+        }.items():
+            blk[name] = {"lin": _linear_init(next(ki), di, do), "bn": _bn_init(do)}
+            st[name] = _bn_state_init(do)
+        blocks.append(blk)
+        blocks_state.append(st)
+
+    head = _linear_init(next(ki), cfg.embed_dim, cfg.num_classes)
+    return (
+        {"sps": sps, "blocks": blocks, "head": head},
+        {"sps": sps_state, "blocks": blocks_state},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def _conv2d(x, w, b):
+    """x: [N, C, H, W]; w: [O, I, kh, kw]; SAME padding, stride 1."""
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def _bn_apply(x, bn, state, axis_c, train, momentum=BN_MOMENTUM):
+    """BatchNorm over all axes except ``axis_c``. Returns (y, new_state)."""
+    axes = tuple(i for i in range(x.ndim) if i != axis_c)
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    shape = [1] * x.ndim
+    shape[axis_c] = -1
+    y = (x - mean.reshape(shape)) / jnp.sqrt(var.reshape(shape) + BN_EPS)
+    y = y * bn["gamma"].reshape(shape) + bn["beta"].reshape(shape)
+    return y, new_state
+
+
+def _lif(spa, cfg: SdtConfig, use_pallas: bool):
+    """LIF over leading time axis; spa: [T, ...]."""
+    c = cfg.lif
+    if not use_pallas:
+        return ref.lif_ref(spa, c.v_th, c.v_reset, c.gamma)
+    t = spa.shape[0]
+    flat = spa.reshape(t, -1)
+    s = lif_pallas(flat, v_th=c.v_th, v_reset=c.v_reset, gamma=c.gamma)
+    return s.reshape(spa.shape)
+
+
+def _maxpool2(x):
+    """2x2 stride-2 spatial maxpool on [..., H, W]."""
+    return ref.spike_maxpool_ref(x, kernel=2, stride=2)
+
+
+def _sdsa(q_s, k_s, v_s, v_th, use_pallas):
+    """q_s,k_s,v_s: [T, B, L, C] binary. Mask per (t, b) sample."""
+    if not use_pallas:
+        acc = jnp.sum(q_s * k_s, axis=2)                     # [T,B,C]
+        mask = ref.spike_step(acc - v_th)
+        return v_s * mask[:, :, None, :]
+    t, b, l, c = q_s.shape
+    f = jax.vmap(lambda q, k, v: sdsa_pallas(q, k, v, v_th=v_th))
+    out = f(q_s.reshape(t * b, l, c), k_s.reshape(t * b, l, c), v_s.reshape(t * b, l, c))
+    return out.reshape(t, b, l, c)
+
+
+def _spike_linear(x_s, w, b, use_pallas):
+    """x_s: [T, B, L, C_in] binary -> [T, B, L, C_out]."""
+    if not use_pallas:
+        return ref.spike_linear_ref(x_s, w, b)
+    t, bb, l, c = x_s.shape
+    y = spike_linear_pallas(x_s.reshape(t * bb * l, c), w, b)
+    return y.reshape(t, bb, l, -1)
+
+
+# ---------------------------------------------------------------------------
+# Forward (unfolded: conv/linear + explicit BN; used for training)
+# ---------------------------------------------------------------------------
+
+def forward(params, bn_state, cfg: SdtConfig, x, train=False, use_pallas=False):
+    """x: [B, C, H, W] static image. Returns (logits [B, classes], new_state,
+    aux) where aux carries per-module spike tensors for sparsity analysis."""
+    b = x.shape[0]
+    t = cfg.timesteps
+    aux = {}
+    cur = jnp.broadcast_to(x[None], (t,) + x.shape)  # direct coding
+
+    new_sps_state = {}
+    spikes = None
+    for i in range(4):
+        p = params["sps"][f"stage{i}"]
+        st = bn_state["sps"][f"stage{i}"]
+        flat = cur.reshape((t * b,) + cur.shape[2:])
+        y = _conv2d(flat, p["conv"]["w"], p["conv"]["b"])
+        y = y.reshape((t, b) + y.shape[1:])
+        y, new_sps_state[f"stage{i}"] = _bn_apply(y, p["bn"], st, axis_c=2, train=train)
+        spikes = _lif(y, cfg, use_pallas)
+        if i in (1, 3):
+            spikes = _maxpool2(spikes)
+        aux[f"sps.stage{i}.spikes"] = spikes
+        cur = spikes
+
+    # RPE conv + residual adder in the value domain (ResBuffer + Adder).
+    p = params["sps"]["rpe"]
+    flat = cur.reshape((t * b,) + cur.shape[2:])
+    y = _conv2d(flat, p["conv"]["w"], p["conv"]["b"])
+    y = y.reshape((t, b) + y.shape[1:])
+    y, new_sps_state["rpe"] = _bn_apply(y, p["bn"], bn_state["sps"]["rpe"], axis_c=2, train=train)
+    u = y + cur                                             # [T,B,D,h,w]
+
+    # tokens: [T, B, L, D]
+    d = cfg.embed_dim
+    u = u.reshape(t, b, d, -1).transpose(0, 1, 3, 2)
+
+    new_blocks_state = []
+    for bi, blk in enumerate(params["blocks"]):
+        st = bn_state["blocks"][bi]
+        nst = {}
+
+        s = _lif(u, cfg, use_pallas)                        # SEA encoding
+        aux[f"block{bi}.in.spikes"] = s
+
+        def lin_bn(name, xs, train=train):
+            y = _spike_linear(xs, blk[name]["lin"]["w"], blk[name]["lin"]["b"], use_pallas)
+            y, nst[name] = _bn_apply(y, blk[name]["bn"], st[name], axis_c=3, train=train)
+            return y
+
+        q_s = _lif(lin_bn("q", s), cfg, use_pallas)
+        k_s = _lif(lin_bn("k", s), cfg, use_pallas)
+        v_s = _lif(lin_bn("v", s), cfg, use_pallas)
+        aux[f"block{bi}.q.spikes"] = q_s
+        aux[f"block{bi}.k.spikes"] = k_s
+        aux[f"block{bi}.v.spikes"] = v_s
+
+        attn = _sdsa(q_s, k_s, v_s, cfg.attn_v_th, use_pallas)
+        aux[f"block{bi}.sdsa.spikes"] = attn
+        u = u + lin_bn("o", attn)                           # residual adder
+
+        s2 = _lif(u, cfg, use_pallas)
+        aux[f"block{bi}.mlp.in.spikes"] = s2
+        h = lin_bn("mlp1", s2)
+        s3 = _lif(h, cfg, use_pallas)
+        aux[f"block{bi}.mlp.hidden.spikes"] = s3
+        u = u + lin_bn("mlp2", s3)                          # residual adder
+        new_blocks_state.append(nst)
+
+    s_out = _lif(u, cfg, use_pallas)
+    aux["head.in.spikes"] = s_out
+    pooled = jnp.mean(s_out, axis=(0, 2))                   # mean over T, L
+    logits = pooled @ params["head"]["w"] + params["head"]["b"]
+    new_state = {"sps": new_sps_state, "blocks": new_blocks_state}
+    return logits, new_state, aux
+
+
+# ---------------------------------------------------------------------------
+# BN folding + folded forward (the exact graph the rust side implements)
+# ---------------------------------------------------------------------------
+
+def _fold_conv(conv, bn, state):
+    scale = bn["gamma"] / jnp.sqrt(state["var"] + BN_EPS)
+    w = conv["w"] * scale[:, None, None, None]
+    b = (conv["b"] - state["mean"]) * scale + bn["beta"]
+    return {"w": w, "b": b}
+
+
+def _fold_linear(lin, bn, state):
+    scale = bn["gamma"] / jnp.sqrt(state["var"] + BN_EPS)
+    w = lin["w"] * scale[None, :]
+    b = (lin["b"] - state["mean"]) * scale + bn["beta"]
+    return {"w": w, "b": b}
+
+
+def fold_batchnorm(params, bn_state, cfg: SdtConfig):
+    """Fold every BN into the preceding conv/linear; returns a flat pytree
+    whose leaves map 1:1 onto the rust weight manifest."""
+    folded = {"sps": {}, "blocks": [], "head": dict(params["head"])}
+    for name in [f"stage{i}" for i in range(4)] + ["rpe"]:
+        folded["sps"][name] = _fold_conv(
+            params["sps"][name]["conv"], params["sps"][name]["bn"], bn_state["sps"][name]
+        )
+    for bi, blk in enumerate(params["blocks"]):
+        fb = {}
+        for name in ("q", "k", "v", "o", "mlp1", "mlp2"):
+            fb[name] = _fold_linear(blk[name]["lin"], blk[name]["bn"], bn_state["blocks"][bi][name])
+        folded["blocks"].append(fb)
+    return folded
+
+
+def forward_folded(folded, cfg: SdtConfig, x, use_pallas=False, collect_aux=False):
+    """Inference with BN pre-folded. x: [B, C, H, W] -> logits [B, classes]."""
+    b = x.shape[0]
+    t = cfg.timesteps
+    aux = {}
+    cur = jnp.broadcast_to(x[None], (t,) + x.shape)
+
+    for i in range(4):
+        p = folded["sps"][f"stage{i}"]
+        flat = cur.reshape((t * b,) + cur.shape[2:])
+        y = _conv2d(flat, p["w"], p["b"]).reshape((t, b, -1) + cur.shape[3:])
+        spikes = _lif(y, cfg, use_pallas)
+        if i in (1, 3):
+            spikes = _maxpool2(spikes)
+        if collect_aux:
+            aux[f"sps.stage{i}.spikes"] = spikes
+        cur = spikes
+
+    p = folded["sps"]["rpe"]
+    flat = cur.reshape((t * b,) + cur.shape[2:])
+    y = _conv2d(flat, p["w"], p["b"]).reshape((t, b) + cur.shape[2:])
+    u = y + cur
+
+    d = cfg.embed_dim
+    u = u.reshape(t, b, d, -1).transpose(0, 1, 3, 2)
+
+    for bi, blk in enumerate(folded["blocks"]):
+        s = _lif(u, cfg, use_pallas)
+        q_s = _lif(_spike_linear(s, blk["q"]["w"], blk["q"]["b"], use_pallas), cfg, use_pallas)
+        k_s = _lif(_spike_linear(s, blk["k"]["w"], blk["k"]["b"], use_pallas), cfg, use_pallas)
+        v_s = _lif(_spike_linear(s, blk["v"]["w"], blk["v"]["b"], use_pallas), cfg, use_pallas)
+        attn = _sdsa(q_s, k_s, v_s, cfg.attn_v_th, use_pallas)
+        u = u + _spike_linear(attn, blk["o"]["w"], blk["o"]["b"], use_pallas)
+        s2 = _lif(u, cfg, use_pallas)
+        h = _spike_linear(s2, blk["mlp1"]["w"], blk["mlp1"]["b"], use_pallas)
+        s3 = _lif(h, cfg, use_pallas)
+        u = u + _spike_linear(s3, blk["mlp2"]["w"], blk["mlp2"]["b"], use_pallas)
+        if collect_aux:
+            aux[f"block{bi}.q.spikes"] = q_s
+            aux[f"block{bi}.k.spikes"] = k_s
+            aux[f"block{bi}.v.spikes"] = v_s
+            aux[f"block{bi}.sdsa.spikes"] = attn
+            aux[f"block{bi}.mlp.hidden.spikes"] = s3
+
+    s_out = _lif(u, cfg, use_pallas)
+    pooled = jnp.mean(s_out, axis=(0, 2))
+    logits = pooled @ folded["head"]["w"] + folded["head"]["b"]
+    if collect_aux:
+        return logits, aux
+    return logits
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def predict_folded(folded, cfg: SdtConfig, x, use_pallas=False):
+    return forward_folded(folded, cfg, x, use_pallas=use_pallas)

@@ -1,0 +1,45 @@
+"""Sparsity analysis: aux-derived sparsity is consistent and in range."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.analysis import measure_sparsity
+from compile.config import tiny_config
+from compile.model import fold_batchnorm, forward, forward_folded, init_params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny_config()
+    params, st = init_params(jax.random.PRNGKey(0), cfg)
+    x = np.random.default_rng(0).normal(size=(8, 3, 32, 32)).astype(np.float32)
+    _, st, _ = forward(params, st, cfg, jnp.asarray(x[:4]), train=True)
+    folded = fold_batchnorm(params, st, cfg)
+    return cfg, folded, x
+
+
+def test_sparsity_in_unit_interval(setup):
+    cfg, folded, x = setup
+    sp = measure_sparsity(folded, cfg, x, batch=4)
+    assert len(sp) >= 8
+    for name, s in sp.items():
+        assert 0.0 <= s <= 1.0, f"{name}: {s}"
+
+
+def test_sparsity_matches_direct_aux(setup):
+    cfg, folded, x = setup
+    sp = measure_sparsity(folded, cfg, x, batch=8)  # single batch
+    _, aux = forward_folded(folded, cfg, jnp.asarray(x), collect_aux=True)
+    for name, s in sp.items():
+        direct = 1.0 - float(jnp.mean(aux[name]))
+        assert abs(s - direct) < 1e-5, f"{name}: {s} vs {direct}"
+
+
+def test_batched_equals_unbatched(setup):
+    cfg, folded, x = setup
+    a = measure_sparsity(folded, cfg, x, batch=3)
+    b = measure_sparsity(folded, cfg, x, batch=8)
+    for name in a:
+        assert abs(a[name] - b[name]) < 1e-5, name

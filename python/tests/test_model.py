@@ -1,0 +1,84 @@
+"""L2 correctness: model shapes, BN folding, pallas-vs-ref forward parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import get_config, tiny_config
+from compile.model import (
+    fold_batchnorm,
+    forward,
+    forward_folded,
+    init_params,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = tiny_config()
+    params, st = init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 3, 32, 32)).astype(np.float32))
+    # one train step's worth of BN statistics
+    _, st, _ = forward(params, st, cfg, x, train=True)
+    return cfg, params, st, x
+
+
+def test_forward_shapes(tiny):
+    cfg, params, st, x = tiny
+    logits, _, aux = forward(params, st, cfg, x, train=False)
+    assert logits.shape == (2, cfg.num_classes)
+    t, b, l, d = cfg.timesteps, 2, cfg.num_tokens, cfg.embed_dim
+    assert aux["block0.q.spikes"].shape == (t, b, l, d)
+    assert aux["block0.sdsa.spikes"].shape == (t, b, l, d)
+    assert aux["head.in.spikes"].shape == (t, b, l, d)
+
+
+def test_spikes_are_binary(tiny):
+    cfg, params, st, x = tiny
+    _, _, aux = forward(params, st, cfg, x, train=False)
+    for name, arr in aux.items():
+        vals = np.unique(np.asarray(arr))
+        assert set(vals) <= {0.0, 1.0}, f"{name} not binary: {vals[:5]}"
+
+
+def test_fold_batchnorm_is_exact(tiny):
+    cfg, params, st, x = tiny
+    logits, _, _ = forward(params, st, cfg, x, train=False)
+    folded = fold_batchnorm(params, st, cfg)
+    logits_f = forward_folded(folded, cfg, x)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_f), rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_path_matches_ref_path(tiny):
+    cfg, params, st, x = tiny
+    folded = fold_batchnorm(params, st, cfg)
+    l_ref = forward_folded(folded, cfg, x, use_pallas=False)
+    l_pl = forward_folded(folded, cfg, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_pl), rtol=1e-5, atol=1e-5)
+
+
+def test_gradients_flow(tiny):
+    cfg, params, st, x = tiny
+
+    def loss(p):
+        logits, _, _ = forward(p, st, cfg, x, train=True)
+        return jnp.sum(logits**2)
+
+    grads = jax.grad(loss)(params)
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(total) and total > 0.0, "surrogate gradient is dead"
+
+
+def test_paper_config_shapes():
+    cfg = get_config("paper")
+    assert cfg.embed_dim == 384 and cfg.timesteps == 4 and cfg.num_blocks == 2
+    assert cfg.num_tokens == 64
+
+
+def test_aux_sparsity_reasonable(tiny):
+    cfg, params, st, x = tiny
+    _, _, aux = forward(params, st, cfg, x, train=False)
+    for name, arr in aux.items():
+        rate = float(jnp.mean(arr))
+        assert 0.0 <= rate <= 1.0

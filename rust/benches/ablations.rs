@@ -1,0 +1,128 @@
+//! Bench A1 — design-choice ablations at the whole-network level:
+//!
+//!  1. encoded-spike datapath vs conventional bitmap datapath (the paper's
+//!     core redundancy-elimination claim) at the paper scale;
+//!  2. encoded-spike *storage* cost vs bitmap storage across sparsity
+//!     (the paper's "additional memory resource" discussion);
+//!  3. SDSA threshold sensitivity (mask density vs attn_v_th).
+//!
+//! ```bash
+//! cargo bench --bench ablations
+//! ```
+
+use spikeformer_accel::accel::{Accelerator, DatapathMode};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::quant::ADDR_BITS;
+use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix};
+use spikeformer_accel::units::SpikeMaskAddModule;
+use spikeformer_accel::util::Prng;
+
+fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+    let mut m = SpikeMatrix::zeros(c, l);
+    for ci in 0..c {
+        for li in 0..l {
+            if rng.bernoulli(p) {
+                m.set(ci, li, true);
+            }
+        }
+    }
+    EncodedSpikes::from_bitmap(&m)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Prng::new(2);
+    let image: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+
+    println!("A1.1 — whole-network: encoded vs bitmap datapath (paper scale, D=384 T=4)\n");
+    let cfg = SdtModelConfig::paper();
+    let model = QuantizedModel::random(&cfg, 42);
+    let hw = AccelConfig::paper();
+    let mut enc = Accelerator::with_mode(model.clone(), hw, DatapathMode::Encoded);
+    let mut bmp = Accelerator::with_mode(model.clone(), hw, DatapathMode::Bitmap);
+    let r_enc = enc.infer(&image)?;
+    let r_bmp = bmp.infer(&image)?;
+    assert_eq!(r_enc.logits, r_bmp.logits, "modes must agree numerically");
+    println!("{:<22}{:>14}{:>14}{:>10}", "phase", "encoded cyc", "bitmap cyc", "saving");
+    for (name, s1) in &r_enc.phases.phases {
+        let s2 = r_bmp.phases.get(name);
+        if s2.cycles > 0 {
+            println!(
+                "{:<22}{:>14}{:>14}{:>9.2}x",
+                name,
+                s1.cycles,
+                s2.cycles,
+                s2.cycles as f64 / s1.cycles.max(1) as f64
+            );
+        }
+    }
+    println!(
+        "{:<22}{:>14}{:>14}{:>9.2}x   <- end-to-end",
+        "TOTAL",
+        r_enc.total.cycles,
+        r_bmp.total.cycles,
+        r_bmp.total.cycles as f64 / r_enc.total.cycles as f64
+    );
+    // The dense conv front-end (Tile Engine) is identical in both modes and
+    // dominates end-to-end cycles; the paper's contribution lives in the
+    // spike-consuming phases. Report the subtotal the encoding targets.
+    let spike_phases = ["sps.maxpool", "sdeb.qkv", "sdeb.smam", "sdeb.proj", "sdeb.mlp"];
+    let sub = |r: &spikeformer_accel::accel::RunReport| -> u64 {
+        spike_phases.iter().map(|p| r.phases.get(p).cycles).sum()
+    };
+    let (se, sb) = (sub(&r_enc), sub(&r_bmp));
+    println!(
+        "{:<22}{:>14}{:>14}{:>9.2}x   <- spike-consuming phases only",
+        "SPIKE PHASES",
+        se,
+        sb,
+        sb as f64 / se as f64
+    );
+    // Extension (refs [7]-[10]): an event-driven conv engine would also
+    // skip zero spike inputs in the SPS stages. Estimate its effect from
+    // the recorded conv SOPs (spike x fan-out) vs dense MAC cycles.
+    let conv = r_enc.phases.get("sps.conv");
+    let event_conv_cycles = conv.sops / AccelConfig::paper().tile_macs as u64;
+    println!(
+        "\nextension estimate — event-driven conv front-end (not in the paper):\n  dense Tile Engine: {} cycles;  event-driven: ~{} cycles ({:.2}x)",
+        conv.cycles,
+        event_conv_cycles,
+        conv.cycles as f64 / event_conv_cycles.max(1) as f64
+    );
+
+    println!("\nA1.2 — storage: encoded words (8-bit) vs bitmap bits (384ch x 64 tok)\n");
+    println!("{:<12}{:>16}{:>16}{:>12}", "sparsity", "encoded bits", "bitmap bits", "ratio");
+    for &p in &[0.02, 0.05, 0.1, 0.125, 0.2, 0.3, 0.5] {
+        let e = random_encoded(&mut rng, 384, 64, p);
+        let enc_bits = e.storage_words() as u64 * ADDR_BITS as u64;
+        let bmp_bits = (384 * 64) as u64;
+        println!(
+            "{:<12.3}{:>16}{:>16}{:>12.2}",
+            1.0 - p,
+            enc_bits,
+            bmp_bits,
+            enc_bits as f64 / bmp_bits as f64
+        );
+    }
+    println!("(crossover near 1/8 spike rate: encoding wins only in the sparse regime,");
+    println!(" which is why the paper pairs it with spiking networks)");
+
+    println!("\nA1.3 — SDSA mask density vs firing threshold (384ch, 64 tok, 20% spikes)\n");
+    println!("{:<10}{:>14}{:>18}", "v_th", "mask fired", "V spikes kept");
+    let q = random_encoded(&mut rng, 384, 64, 0.2);
+    let k = random_encoded(&mut rng, 384, 64, 0.2);
+    let v = random_encoded(&mut rng, 384, 64, 0.2);
+    for v_th in [0u32, 1, 2, 3, 4, 6, 8] {
+        let (out, _) = SpikeMaskAddModule::new(v_th).run(&q, &k, &v, &AccelConfig::paper());
+        let fired = out.mask.iter().filter(|&&m| m).count();
+        println!(
+            "{:<10}{:>11}/384{:>13}/{}",
+            v_th,
+            fired,
+            out.masked_v.count_spikes(),
+            v.count_spikes()
+        );
+    }
+
+    Ok(())
+}

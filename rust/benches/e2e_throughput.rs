@@ -1,0 +1,98 @@
+//! Bench E1 — end-to-end serving: the L3 coordinator under load with
+//! golden and simulator workers, across worker counts and batch policies.
+//! Reports host throughput/latency plus the modelled accelerator cycles.
+//!
+//! ```bash
+//! cargo bench --bench e2e_throughput
+//! ```
+
+use std::time::{Duration, Instant};
+
+use spikeformer_accel::benchlib::section;
+use spikeformer_accel::coordinator::{
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, Request, SimulatorBackend,
+};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn images(n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Prng::new(9);
+    (0..n).map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 42);
+    let imgs = images(96);
+
+    section("golden workers (host-throughput scaling)");
+    for workers in [1usize, 2, 4, 8] {
+        let factories: Vec<BackendFactory> = (0..workers)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> { Ok(Box::new(GoldenBackend::new(m))) }) as BackendFactory
+            })
+            .collect();
+        let started = Instant::now();
+        let mut co = Coordinator::new(
+            factories,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        for (i, img) in imgs.iter().enumerate() {
+            co.submit(Request { id: i as u64, image: img.clone() });
+        }
+        let (_, report) = co.finish(started)?;
+        println!("workers={workers}  {}", report.summary());
+    }
+
+    section("simulator workers (modelled accelerator throughput)");
+    for workers in [1usize, 2, 4] {
+        let factories: Vec<BackendFactory> = (0..workers)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> {
+                    Ok(Box::new(SimulatorBackend::new(m, AccelConfig::paper())))
+                }) as BackendFactory
+            })
+            .collect();
+        let started = Instant::now();
+        let mut co = Coordinator::new(
+            factories,
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+        );
+        for (i, img) in imgs.iter().enumerate() {
+            co.submit(Request { id: i as u64, image: img.clone() });
+        }
+        let (_, report) = co.finish(started)?;
+        let hw = AccelConfig::paper();
+        let modelled_s = report.modelled_cycles as f64 / (hw.freq_mhz * 1e6);
+        println!(
+            "workers={workers}  {}  modelled={:.3}ms total ({:.3}ms/img @200MHz)",
+            report.summary(),
+            modelled_s * 1e3,
+            modelled_s * 1e3 / imgs.len() as f64
+        );
+    }
+
+    section("batch-policy sensitivity (2 golden workers)");
+    for (batch, wait_ms) in [(1usize, 0u64), (4, 1), (8, 1), (16, 2), (32, 4)] {
+        let factories: Vec<BackendFactory> = (0..2)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> { Ok(Box::new(GoldenBackend::new(m))) }) as BackendFactory
+            })
+            .collect();
+        let started = Instant::now();
+        let mut co = Coordinator::new(
+            factories,
+            BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(wait_ms) },
+        );
+        for (i, img) in imgs.iter().enumerate() {
+            co.submit(Request { id: i as u64, image: img.clone() });
+        }
+        let (_, report) = co.finish(started)?;
+        println!("max_batch={batch:<3} max_wait={wait_ms}ms  {}", report.summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Bench T1 — regenerates Table I: "COMPARISON WITH OTHER SNN
+//! ACCELERATORS". Prints the published baseline columns, our modelled
+//! column (resources from the calibrated resource model, peak GSOP/s from
+//! lanes x clock, peak GSOP/W from the energy model), the improvement
+//! factors the paper headlines (13.24x throughput, 1.33x efficiency), and
+//! the same-framework simulated baseline styles as a consistency check.
+//!
+//! ```bash
+//! cargo bench --bench table1
+//! ```
+
+use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::baselines::{
+    aicas23_row, iscas22_row, tcad22_row, EventDrivenFcModel, SkydiverCnnModel,
+};
+use spikeformer_accel::hw::{AccelConfig, EnergyModel, ResourceModel};
+use spikeformer_accel::metrics::{format_table1, improvement, AccelRow};
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SdtModelConfig::paper();
+    let model = QuantizedModel::random(&cfg, 42);
+    let hw = AccelConfig::paper();
+    let energy = EnergyModel::default();
+    let res = ResourceModel::default().estimate(&hw);
+
+    // Run the paper-scale workload for the achieved-rate footnote.
+    let mut accel = Accelerator::new(model, hw);
+    let mut rng = Prng::new(1);
+    let image: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+    let report = accel.infer(&image)?;
+
+    let ours = AccelRow {
+        name: "Ours".into(),
+        year: 2024,
+        network: "Trans.*".into(),
+        dataset: "Cifar-10".into(),
+        platform: "Virtex Ultra.".into(),
+        lut: res.lut,
+        ff: res.ff,
+        bram: res.bram,
+        freq_mhz: hw.freq_mhz,
+        gsops: hw.peak_gsops(),
+        gsop_per_w: energy.peak_gsop_per_w(&hw),
+    };
+
+    let rows = vec![iscas22_row(), tcad22_row(), aicas23_row(), ours.clone()];
+    println!("TABLE I — COMPARISON WITH OTHER SNN ACCELERATORS\n");
+    println!("{}", format_table1(&rows));
+
+    println!("improvement factors (paper: up to 13.24x GSOP/s, up to 1.33x GSOP/W):");
+    for r in &rows[..3] {
+        println!(
+            "  vs {:<10}  {:>6.2}x GSOP/s   {:>5.2}x GSOP/W",
+            r.name,
+            improvement(ours.gsops, r.gsops),
+            improvement(ours.gsop_per_w, r.gsop_per_w)
+        );
+    }
+
+    println!("\nachieved on the paper-scale SDT workload (D=384, T=4, 2 blocks):");
+    println!(
+        "  {:.1} GSOP/s, {:.2} GSOP/W, {} cycles/image ({:.3} ms @ 200 MHz)",
+        report.gsops,
+        report.gsop_per_w,
+        report.total.cycles,
+        report.seconds * 1e3
+    );
+    let pipe = spikeformer_accel::accel::pipeline_estimate(&report.phases, cfg.timesteps);
+    println!(
+        "  with SPS/SDEB core overlap (double-buffered ESS): {} cycles ({:.2}x, bottleneck: {})",
+        pipe.pipelined_cycles,
+        pipe.speedup(),
+        pipe.bottleneck()
+    );
+
+    println!("\nsame-framework baseline style models (consistency check):");
+    let fc = EventDrivenFcModel::iscas22_like();
+    let fc_stats = fc.run(4, 0.3, 7);
+    println!(
+        "  event-driven FC (ISCAS'22-like):  {:>7.1} GSOP/s (published 179*)",
+        fc.gsops(&fc_stats)
+    );
+    let cnn = SkydiverCnnModel::tcad22_like();
+    let cnn_stats = cnn.run(4, 0.25, 7);
+    println!(
+        "  balanced CNN (Skydiver-like):     {:>7.1} GSOP/s (published 22.6)",
+        cnn.gsops(&cnn_stats)
+    );
+    Ok(())
+}

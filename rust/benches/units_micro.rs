@@ -1,0 +1,117 @@
+//! Bench U1 — per-unit microbenchmarks: modelled cycles AND host wall-time
+//! for the SMU, SMAM, and SLU against their dense/bitmap baselines across
+//! a sparsity sweep. This is the unit-level version of the paper's
+//! redundancy-elimination claim.
+//!
+//! ```bash
+//! cargo bench --bench units_micro
+//! ```
+
+use spikeformer_accel::benchlib::{bench, black_box, section};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::quant::QuantizedLinear;
+use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix, TokenGrid};
+use spikeformer_accel::units::{SpikeLinearUnit, SpikeMaskAddModule, SpikeMaxpoolUnit};
+use spikeformer_accel::util::Prng;
+
+fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+    let mut m = SpikeMatrix::zeros(c, l);
+    for ci in 0..c {
+        for li in 0..l {
+            if rng.bernoulli(p) {
+                m.set(ci, li, true);
+            }
+        }
+    }
+    EncodedSpikes::from_bitmap(&m)
+}
+
+fn main() {
+    let cfg = AccelConfig::paper();
+    let mut rng = Prng::new(11);
+
+    section("SMU: spike maxpool vs dense maxpool (384ch, 32x32, k2s2)");
+    let grid = TokenGrid::new(32, 32);
+    let smu = SpikeMaxpoolUnit::new(2, 2);
+    println!(
+        "{:<12}{:>16}{:>16}{:>10}",
+        "sparsity", "enc cycles", "dense cycles", "saving"
+    );
+    for &p in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+        let enc = random_encoded(&mut rng, 384, 1024, p);
+        let (_, s1) = smu.pool(&enc, grid, &cfg);
+        let (_, s2) = smu.pool_dense_baseline(&enc, grid, &cfg);
+        println!(
+            "{:<12.2}{:>16}{:>16}{:>9.1}x",
+            1.0 - p,
+            s1.cycles,
+            s2.cycles,
+            s2.cycles as f64 / s1.cycles as f64
+        );
+    }
+
+    section("SMAM: merge-join vs dense Hadamard (384ch, 64 tokens)");
+    let smam = SpikeMaskAddModule::new(2);
+    println!(
+        "{:<12}{:>16}{:>16}{:>10}",
+        "sparsity", "enc cycles", "dense cycles", "saving"
+    );
+    for &p in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+        let q = random_encoded(&mut rng, 384, 64, p);
+        let k = random_encoded(&mut rng, 384, 64, p);
+        let v = random_encoded(&mut rng, 384, 64, p);
+        let (_, s1) = smam.run(&q, &k, &v, &cfg);
+        let (_, s2) = smam.run_dense_baseline(&q, &k, &v, &cfg);
+        println!(
+            "{:<12.2}{:>16}{:>16}{:>9.1}x",
+            1.0 - p,
+            s1.cycles,
+            s2.cycles,
+            s2.cycles as f64 / s1.cycles as f64
+        );
+    }
+
+    section("SLU: encoded vs bitmap vs dense linear (384 -> 384, 64 tokens)");
+    let wf: Vec<f32> = (0..384 * 384).map(|_| rng.next_f32_signed() * 0.1).collect();
+    let layer = QuantizedLinear::from_f32(&wf, &vec![0.0; 384], 384, 384, 0);
+    println!(
+        "{:<12}{:>14}{:>14}{:>14}{:>12}{:>12}",
+        "sparsity", "enc cycles", "bitmap cyc", "dense cyc", "vs bitmap", "vs dense"
+    );
+    for &p in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+        let x = random_encoded(&mut rng, 384, 64, p);
+        let mut slu = SpikeLinearUnit::new();
+        let (_, s1) = slu.forward(&x, &layer, &cfg);
+        let (_, s2) = slu.forward_bitmap_baseline(&x, &layer, &cfg);
+        let (_, s3) = slu.forward_dense_baseline(&x, &layer, &cfg);
+        println!(
+            "{:<12.2}{:>14}{:>14}{:>14}{:>11.2}x{:>11.2}x",
+            1.0 - p,
+            s1.cycles,
+            s2.cycles,
+            s3.cycles,
+            s2.cycles as f64 / s1.cycles as f64,
+            s3.cycles as f64 / s1.cycles as f64
+        );
+    }
+
+    section("host wall-time (release): the simulator's own hot paths");
+    let x = random_encoded(&mut rng, 384, 64, 0.2);
+    let mut slu = SpikeLinearUnit::new();
+    bench("slu.forward 384x384 @20% spikes", 3, 30, || {
+        let (out, _) = slu.forward(&x, &layer, &cfg);
+        black_box(out);
+    });
+    let q = random_encoded(&mut rng, 384, 64, 0.2);
+    let k = random_encoded(&mut rng, 384, 64, 0.2);
+    let v = random_encoded(&mut rng, 384, 64, 0.2);
+    bench("smam.run 384ch @20% spikes", 3, 100, || {
+        let (out, _) = smam.run(&q, &k, &v, &cfg);
+        black_box(out);
+    });
+    let enc = random_encoded(&mut rng, 384, 1024, 0.2);
+    bench("smu.pool 384ch 32x32 @20% spikes", 3, 100, || {
+        let (out, _) = smu.pool(&enc, grid, &cfg);
+        black_box(out);
+    });
+}

@@ -1,0 +1,216 @@
+//! The Controller (Fig. 1): sequences the SPS Core, the SDEB Cores and the
+//! head over all timesteps of an inference, owns the buffer complement, and
+//! assembles the final [`RunReport`].
+
+use anyhow::Result;
+
+use crate::hw::{AccelConfig, EnergyModel, UnitStats};
+use crate::quant::{QFormat, QTensor, ACT_FRAC, MEM_BITS};
+use crate::units::SpikeEncodingArray;
+use crate::model::QuantizedModel;
+use crate::util::div_ceil;
+
+use super::buffers::BufferSet;
+use super::report::{RunReport, StatSink};
+use super::sdeb_core::SdebCore;
+use super::sps_core::SpsCore;
+
+/// Which datapath the spike-consuming units use (ablation A1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatapathMode {
+    /// The paper's position-encoded spike processing.
+    Encoded,
+    /// Conventional bitmap processing (zero-checking every position).
+    Bitmap,
+}
+
+/// A full accelerator instance bound to one quantized model.
+pub struct Accelerator {
+    pub hw: AccelConfig,
+    pub energy: EnergyModel,
+    pub mode: DatapathMode,
+    model: QuantizedModel,
+    sps: SpsCore,
+    sdebs: Vec<SdebCore>,
+    sea_head: SpikeEncodingArray,
+}
+
+impl Accelerator {
+    pub fn new(model: QuantizedModel, hw: AccelConfig) -> Self {
+        Self::with_mode(model, hw, DatapathMode::Encoded)
+    }
+
+    pub fn with_mode(model: QuantizedModel, hw: AccelConfig, mode: DatapathMode) -> Self {
+        let cfg = &model.cfg;
+        let params = cfg.lif_params();
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+        let sps = SpsCore::new(&model, params);
+        let sdebs = (0..cfg.num_blocks)
+            .map(|i| SdebCore::new(i, l, d, cfg.mlp_hidden, cfg.attn_v_th, params))
+            .collect();
+        let sea_head = SpikeEncodingArray::new(d, l, params);
+        Self { hw, energy: EnergyModel::default(), mode, model, sps, sdebs, sea_head }
+    }
+
+    pub fn model(&self) -> &QuantizedModel {
+        &self.model
+    }
+
+    fn reset(&mut self) {
+        self.sps.reset();
+        for s in &mut self.sdebs {
+            s.reset();
+        }
+        self.sea_head.reset();
+    }
+
+    /// Run a full inference of one image (f32 CHW pixels).
+    pub fn infer(&mut self, image: &[f32]) -> Result<RunReport> {
+        let cfg = self.model.cfg.clone();
+        assert_eq!(image.len(), cfg.in_channels * cfg.img_size * cfg.img_size);
+        self.reset();
+
+        let mut buffers = BufferSet::new(&self.hw);
+        let mut sink = StatSink::new();
+
+        // External input transfer: 10-bit activations packed 2 B/value.
+        let in_bytes = image.len() * 2;
+        let st = buffers.load_external(in_bytes, &self.hw)?;
+        sink.add("io.input", st);
+
+        let act = QFormat::new(MEM_BITS, ACT_FRAC);
+        let qimg =
+            QTensor::from_f32(image, &[cfg.in_channels, cfg.img_size, cfg.img_size], act);
+
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+        let mut head_counts = vec![0u64; d];
+
+        for _t in 0..cfg.timesteps {
+            let (u0_cl, _enc3) =
+                self.sps.run_timestep(&self.model, &qimg, &self.hw, self.mode, &mut buffers, &mut sink)?;
+
+            // [D, L] -> [L, D] for the SDEB residual stream.
+            let mut u = QTensor::zeros(&[l, d], ACT_FRAC);
+            for c in 0..d {
+                for tok in 0..l {
+                    u.data[tok * d + c] = u0_cl.data[c * l + tok];
+                }
+            }
+
+            for (bi, core) in self.sdebs.iter_mut().enumerate() {
+                u = core.run_timestep(
+                    &self.model.blocks[bi],
+                    u,
+                    &self.hw,
+                    self.mode,
+                    &mut buffers,
+                    &mut sink,
+                )?;
+            }
+
+            // Head LIF + pooled spike counting (output side).
+            let mut u_cl = vec![0i32; d * l];
+            for tok in 0..l {
+                for c in 0..d {
+                    u_cl[c * l + tok] = u.data[tok * d + c];
+                }
+            }
+            let (s_out, st) = self.sea_head.encode(&u_cl, &self.hw);
+            sink.add("head.encode", st);
+            sink.sparsity("head.in.spikes", &s_out);
+            for (c, list) in s_out.lists.iter().enumerate() {
+                head_counts[c] += list.len() as u64;
+            }
+        }
+
+        // Host/output-side classification head on pooled rates.
+        let denom = (cfg.timesteps * l) as f32;
+        let mut logits = self.model.head_b.clone();
+        for c in 0..d {
+            let rate = head_counts[c] as f32 / denom;
+            if rate != 0.0 {
+                for k in 0..cfg.num_classes {
+                    logits[k] += rate * self.model.head_w[c * cfg.num_classes + k];
+                }
+            }
+        }
+
+        // Output transfer (logits as f32).
+        let out_bytes = cfg.num_classes * 4;
+        sink.add(
+            "io.output",
+            UnitStats {
+                cycles: div_ceil(out_bytes as u64, self.hw.dram_bytes_per_cycle as u64),
+                dram_bytes: out_bytes as u64,
+                ..Default::default()
+            },
+        );
+
+        Ok(RunReport::from_sink(logits, sink, &self.hw, &self.energy))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{GoldenExecutor, SdtModelConfig};
+    use crate::util::Prng;
+
+    fn random_image(seed: u64) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+    }
+
+    #[test]
+    fn accelerator_matches_golden_bit_exactly() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let golden = GoldenExecutor::new(&model).infer(&random_image(4));
+        let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
+        let report = accel.infer(&random_image(4)).unwrap();
+        assert_eq!(report.logits, golden.logits, "encoded datapath != golden");
+    }
+
+    #[test]
+    fn repeated_inference_is_deterministic() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let mut accel = Accelerator::new(model, AccelConfig::small());
+        let a = accel.infer(&random_image(5)).unwrap();
+        let b = accel.infer(&random_image(5)).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total.cycles, b.total.cycles);
+    }
+
+    #[test]
+    fn bitmap_mode_same_logits_more_cycles() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let img = random_image(6);
+        let mut enc = Accelerator::new(model.clone(), AccelConfig::small());
+        let mut bmp = Accelerator::with_mode(model, AccelConfig::small(), DatapathMode::Bitmap);
+        let r1 = enc.infer(&img).unwrap();
+        let r2 = bmp.infer(&img).unwrap();
+        assert_eq!(r1.logits, r2.logits);
+        assert!(
+            r2.total.cycles > r1.total.cycles,
+            "bitmap {} !> encoded {}",
+            r2.total.cycles,
+            r1.total.cycles
+        );
+    }
+
+    #[test]
+    fn report_contains_fig6_modules() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let mut accel = Accelerator::new(model, AccelConfig::small());
+        let r = accel.infer(&random_image(7)).unwrap();
+        let names: Vec<&str> = r.sparsity.iter().map(|(n, _)| n.as_str()).collect();
+        for want in ["block0.q.spikes", "block0.k.spikes", "block0.v.spikes", "block0.sdsa.spikes"] {
+            assert!(names.contains(&want), "missing {want}");
+        }
+        assert!(r.gsops > 0.0);
+        assert!(r.gsop_per_w > 0.0);
+    }
+}

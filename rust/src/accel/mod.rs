@@ -1,0 +1,19 @@
+//! Accelerator top level (Fig. 1): the SPS Core (Tile Engine + Maxpooling
+//! Array + SEA/ESS), the SDEB Core (SEA/ESS + SMAM + Spike Linear Array),
+//! the ResBuffer/Adder Module, the Controller that sequences them, and the
+//! buffer/SRAM complement. [`Accelerator::infer`] runs a full quantized
+//! Spike-driven Transformer inference with cycle/energy/sparsity accounting
+//! and returns the same logits as the dense golden executor — bit-exactly.
+
+pub mod buffers;
+pub mod controller;
+pub mod pipeline;
+pub mod report;
+pub mod sdeb_core;
+pub mod sps_core;
+
+pub use controller::{Accelerator, DatapathMode};
+pub use pipeline::{estimate as pipeline_estimate, PipelineEstimate};
+pub use report::RunReport;
+pub use sdeb_core::SdebCore;
+pub use sps_core::SpsCore;

@@ -1,0 +1,162 @@
+//! Pipelined-schedule estimator.
+//!
+//! The controller in this repo charges phases *serially* (conservative).
+//! The real accelerator double-buffers between the SPS Core and the SDEB
+//! Core (Fig. 1: each core has its own SEA/ESS pair), so timestep t+1's
+//! SPS work overlaps timestep t's SDEB work, and the external I/O overlaps
+//! compute. This module re-times a recorded [`PhaseStats`] under that
+//! overlap model and reports the pipelined cycle count and speedup — the
+//! number an RTL implementation would actually see.
+
+use crate::hw::stats::PhaseStats;
+
+/// Which pipeline stage a phase belongs to.
+fn stage_of(phase: &str) -> Stage {
+    if phase.starts_with("io.") {
+        Stage::Io
+    } else if phase.starts_with("sps.") {
+        Stage::Sps
+    } else {
+        Stage::Sdeb // sdeb.* and head.*
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Stage {
+    Io,
+    Sps,
+    Sdeb,
+}
+
+/// Result of re-timing a run under the two-core overlap model.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineEstimate {
+    pub serialized_cycles: u64,
+    /// max(io, sps, sdeb) + pipeline fill (one stage latency of each
+    /// non-bottleneck stage, amortised over timesteps).
+    pub pipelined_cycles: u64,
+    pub io_cycles: u64,
+    pub sps_cycles: u64,
+    pub sdeb_cycles: u64,
+}
+
+impl PipelineEstimate {
+    pub fn speedup(&self) -> f64 {
+        if self.pipelined_cycles == 0 {
+            return 1.0;
+        }
+        self.serialized_cycles as f64 / self.pipelined_cycles as f64
+    }
+
+    /// Which stage bounds the pipelined schedule.
+    pub fn bottleneck(&self) -> &'static str {
+        let m = self.io_cycles.max(self.sps_cycles).max(self.sdeb_cycles);
+        if m == self.sdeb_cycles {
+            "sdeb"
+        } else if m == self.sps_cycles {
+            "sps"
+        } else {
+            "io"
+        }
+    }
+}
+
+/// Estimate the pipelined schedule for a run of `timesteps` timesteps.
+///
+/// Model: the three stages form a linear pipeline over timesteps; the
+/// steady-state period is the slowest stage's per-timestep cycles, plus a
+/// fill of one per-timestep latency for each upstream stage.
+pub fn estimate(phases: &PhaseStats, timesteps: usize) -> PipelineEstimate {
+    let t = timesteps.max(1) as u64;
+    let (mut io, mut sps, mut sdeb) = (0u64, 0u64, 0u64);
+    for (name, st) in &phases.phases {
+        match stage_of(name) {
+            Stage::Io => io += st.cycles,
+            Stage::Sps => sps += st.cycles,
+            Stage::Sdeb => sdeb += st.cycles,
+        }
+    }
+    let serialized = io + sps + sdeb;
+    let bottleneck = io.max(sps).max(sdeb);
+    // steady state: bottleneck dominates; fill: one timestep of each
+    // non-bottleneck stage entering the pipe.
+    let fill = (io + sps + sdeb - bottleneck) / t;
+    let pipelined = bottleneck + fill;
+    PipelineEstimate {
+        serialized_cycles: serialized,
+        pipelined_cycles: pipelined.min(serialized),
+        io_cycles: io,
+        sps_cycles: sps,
+        sdeb_cycles: sdeb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::UnitStats;
+
+    fn stats(cycles: u64) -> UnitStats {
+        UnitStats { cycles, ..Default::default() }
+    }
+
+    #[test]
+    fn balanced_stages_overlap_fully() {
+        let mut p = PhaseStats::new();
+        p.add("sps.conv", stats(1000));
+        p.add("sdeb.qkv", stats(1000));
+        let e = estimate(&p, 4);
+        assert_eq!(e.serialized_cycles, 2000);
+        // bottleneck 1000 + fill 1000/4 = 1250
+        assert_eq!(e.pipelined_cycles, 1250);
+        assert!((e.speedup() - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_pipeline_bounded_by_bottleneck() {
+        let mut p = PhaseStats::new();
+        p.add("io.input", stats(10));
+        p.add("sps.conv", stats(100));
+        p.add("sdeb.mlp", stats(5000));
+        let e = estimate(&p, 4);
+        assert_eq!(e.bottleneck(), "sdeb");
+        assert!(e.pipelined_cycles >= 5000);
+        assert!(e.pipelined_cycles < e.serialized_cycles);
+    }
+
+    #[test]
+    fn single_stage_no_speedup() {
+        let mut p = PhaseStats::new();
+        p.add("sps.conv", stats(777));
+        let e = estimate(&p, 2);
+        assert_eq!(e.pipelined_cycles, 777);
+        assert_eq!(e.serialized_cycles, 777);
+        assert!((e.speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_exceeds_serialized() {
+        let mut p = PhaseStats::new();
+        p.add("io.input", stats(3));
+        p.add("sps.encode", stats(5));
+        p.add("sdeb.smam", stats(2));
+        let e = estimate(&p, 1);
+        assert!(e.pipelined_cycles <= e.serialized_cycles);
+    }
+
+    #[test]
+    fn real_run_speedup_between_1_and_3() {
+        use crate::accel::Accelerator;
+        use crate::hw::AccelConfig;
+        use crate::model::{QuantizedModel, SdtModelConfig};
+        use crate::util::Prng;
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 3);
+        let mut accel = Accelerator::new(model, AccelConfig::paper());
+        let mut rng = Prng::new(1);
+        let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+        let r = accel.infer(&img).unwrap();
+        let e = estimate(&r.phases, 2);
+        assert!(e.speedup() >= 1.0 && e.speedup() <= 3.0, "{e:?}");
+    }
+}

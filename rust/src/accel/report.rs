@@ -1,0 +1,148 @@
+//! Run reporting: phase-tagged stat collection during inference and the
+//! final [`RunReport`] with throughput/energy/sparsity numbers.
+
+use crate::hw::stats::PhaseStats;
+use crate::hw::{AccelConfig, EnergyModel, UnitStats};
+use crate::spike::EncodedSpikes;
+
+/// Collects stats and sparsity during a run (borrowed by the cores).
+#[derive(Clone, Debug, Default)]
+pub struct StatSink {
+    pub phases: PhaseStats,
+    /// (module, zeros, total) accumulated over timesteps.
+    sparsity_acc: Vec<(String, u64, u64)>,
+}
+
+impl StatSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, stats: UnitStats) {
+        self.phases.add(phase, stats);
+    }
+
+    /// Record the sparsity of an encoded spike tensor under `name`.
+    pub fn sparsity(&mut self, name: &str, enc: &EncodedSpikes) {
+        let total = (enc.channels * enc.tokens) as u64;
+        let zeros = total - enc.count_spikes() as u64;
+        if let Some(r) = self.sparsity_acc.iter_mut().find(|r| r.0 == name) {
+            r.1 += zeros;
+            r.2 += total;
+        } else {
+            self.sparsity_acc.push((name.to_string(), zeros, total));
+        }
+    }
+
+    pub fn sparsity_table(&self) -> Vec<(String, f64)> {
+        self.sparsity_acc
+            .iter()
+            .map(|(n, z, t)| (n.clone(), if *t == 0 { 0.0 } else { *z as f64 / *t as f64 }))
+            .collect()
+    }
+}
+
+/// Final report for one inference (or one batch).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub logits: Vec<f32>,
+    pub phases: PhaseStats,
+    pub total: UnitStats,
+    /// Modelled wall-clock at the configured frequency.
+    pub seconds: f64,
+    /// Achieved throughput in GSOP/s.
+    pub gsops: f64,
+    /// Modelled average power (W) and efficiency (GSOP/W).
+    pub power_w: f64,
+    pub gsop_per_w: f64,
+    /// (module, sparsity) — the Fig. 6 measurement.
+    pub sparsity: Vec<(String, f64)>,
+}
+
+impl RunReport {
+    pub fn from_sink(
+        logits: Vec<f32>,
+        sink: StatSink,
+        cfg: &AccelConfig,
+        energy: &EnergyModel,
+    ) -> Self {
+        let total = sink.phases.total();
+        let seconds = cfg.seconds(total.cycles);
+        let gsops = if seconds > 0.0 { total.sops as f64 / seconds / 1e9 } else { 0.0 };
+        let power_w = energy.avg_power_w(&total, seconds);
+        let gsop_per_w = energy.gsop_per_w(&total, seconds);
+        Self {
+            logits,
+            sparsity: sink.sparsity_table(),
+            phases: sink.phases,
+            total,
+            seconds,
+            gsops,
+            power_w,
+            gsop_per_w,
+        }
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Pretty multi-line summary for CLI/bench output.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "cycles={}  time={:.3} ms  sops={}  achieved={:.2} GSOP/s  power={:.2} W  eff={:.2} GSOP/W\n",
+            self.total.cycles,
+            self.seconds * 1e3,
+            self.total.sops,
+            self.gsops,
+            self.power_w,
+            self.gsop_per_w
+        );
+        for (name, st) in &self.phases.phases {
+            s.push_str(&format!(
+                "  {:<16} cycles={:<10} sops={:<12} reads={:<12} writes={}\n",
+                name, st.cycles, st.sops, st.sram_reads, st.sram_writes
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spike::SpikeMatrix;
+
+    #[test]
+    fn sparsity_accumulates_over_calls() {
+        let mut sink = StatSink::new();
+        let mut m = SpikeMatrix::zeros(1, 4);
+        m.set(0, 0, true); // 75% sparse
+        let enc = EncodedSpikes::from_bitmap(&m);
+        sink.sparsity("x", &enc);
+        sink.sparsity("x", &EncodedSpikes::empty(1, 4)); // 100% sparse
+        let t = sink.sparsity_table();
+        assert_eq!(t.len(), 1);
+        assert!((t[0].1 - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_computes_throughput() {
+        let mut sink = StatSink::new();
+        sink.add(
+            "slu",
+            UnitStats { cycles: 2_000_000, sops: 3_072_000_000, adds: 10, ..Default::default() },
+        );
+        let cfg = AccelConfig::paper();
+        let r = RunReport::from_sink(vec![0.0], sink, &cfg, &EnergyModel::default());
+        assert!((r.seconds - 0.01).abs() < 1e-9);
+        assert!((r.gsops - 307.2).abs() < 0.1);
+        assert_eq!(r.argmax(), 0);
+        assert!(r.summary().contains("slu"));
+    }
+}

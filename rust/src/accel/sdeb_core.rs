@@ -1,0 +1,246 @@
+//! SDEB Core (Fig. 1 right): SEA/ESS encoding, the Spike Linear Array for
+//! Q/K/V/O and the MLP, the SMAM for spike-driven self-attention, and the
+//! residual Adder — one instance per encoder block, with persistent LIF
+//! state across timesteps.
+
+use anyhow::Result;
+
+use crate::hw::{AccelConfig, UnitStats};
+use crate::lif::LifParams;
+use crate::quant::QTensor;
+use crate::spike::EncodedSpikes;
+use crate::units::{AdderModule, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule};
+use crate::model::QuantizedBlock;
+
+use super::buffers::BufferSet;
+use super::controller::DatapathMode;
+use super::report::StatSink;
+
+pub struct SdebCore {
+    index: usize,
+    sea_in: SpikeEncodingArray,
+    sea_q: SpikeEncodingArray,
+    sea_k: SpikeEncodingArray,
+    sea_v: SpikeEncodingArray,
+    sea_mlp_in: SpikeEncodingArray,
+    sea_mlp_hidden: SpikeEncodingArray,
+    slu: SpikeLinearUnit,
+    smam: SpikeMaskAddModule,
+    adder: AdderModule,
+    tokens: usize,
+    dim: usize,
+}
+
+impl SdebCore {
+    pub fn new(
+        index: usize,
+        tokens: usize,
+        dim: usize,
+        mlp_hidden: usize,
+        attn_v_th: u32,
+        params: LifParams,
+    ) -> Self {
+        Self {
+            index,
+            sea_in: SpikeEncodingArray::new(dim, tokens, params),
+            sea_q: SpikeEncodingArray::new(dim, tokens, params),
+            sea_k: SpikeEncodingArray::new(dim, tokens, params),
+            sea_v: SpikeEncodingArray::new(dim, tokens, params),
+            sea_mlp_in: SpikeEncodingArray::new(dim, tokens, params),
+            sea_mlp_hidden: SpikeEncodingArray::new(mlp_hidden, tokens, params),
+            slu: SpikeLinearUnit::new(),
+            smam: SpikeMaskAddModule::new(attn_v_th),
+            adder: AdderModule::new(),
+            tokens,
+            dim,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.sea_in.reset();
+        self.sea_q.reset();
+        self.sea_k.reset();
+        self.sea_v.reset();
+        self.sea_mlp_in.reset();
+        self.sea_mlp_hidden.reset();
+    }
+
+    /// Transpose a token-major `[L, C]` value tensor into the channel-major
+    /// `[C, L]` layout the SEA/ESS banks use.
+    fn to_cl(&self, v: &QTensor, c: usize) -> Vec<i32> {
+        let l = self.tokens;
+        debug_assert_eq!(v.data.len(), l * c);
+        let mut out = vec![0i32; c * l];
+        for tok in 0..l {
+            for ch in 0..c {
+                out[ch * l + tok] = v.data[tok * c + ch];
+            }
+        }
+        out
+    }
+
+    fn slu_forward(
+        &mut self,
+        x: &EncodedSpikes,
+        layer: &crate::quant::QuantizedLinear,
+        cfg: &AccelConfig,
+        mode: DatapathMode,
+    ) -> (QTensor, UnitStats) {
+        match mode {
+            DatapathMode::Encoded => self.slu.forward(x, layer, cfg),
+            DatapathMode::Bitmap => self.slu.forward_bitmap_baseline(x, layer, cfg),
+        }
+    }
+
+    /// One timestep of the block. `u` is the `[L, D]` residual-stream value
+    /// tensor (token-major); updated in place (returned).
+    pub fn run_timestep(
+        &mut self,
+        blk: &QuantizedBlock,
+        u: QTensor,
+        cfg: &AccelConfig,
+        mode: DatapathMode,
+        buffers: &mut BufferSet,
+        sink: &mut StatSink,
+    ) -> Result<QTensor> {
+        let bi = self.index;
+        let d = self.dim;
+
+        // SEA encode the residual stream.
+        let u_cl = self.to_cl(&u, d);
+        let (s_in, st) = self.sea_in.encode(&u_cl, cfg);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.in.spikes"), &s_in);
+        buffers.store_encoded(&s_in, true)?;
+
+        // Q/K/V projections on the Spike Linear Array + SEA fire.
+        let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, mode);
+        sink.add("sdeb.qkv", st);
+        let (q_s, st) = self.sea_q.encode(&self.to_cl(&qv, d), cfg);
+        sink.add("sdeb.encode", st);
+        let (kv, st) = self.slu_forward(&s_in, &blk.k, cfg, mode);
+        sink.add("sdeb.qkv", st);
+        let (k_s, st) = self.sea_k.encode(&self.to_cl(&kv, d), cfg);
+        sink.add("sdeb.encode", st);
+        let (vv, st) = self.slu_forward(&s_in, &blk.v, cfg, mode);
+        sink.add("sdeb.qkv", st);
+        let (v_s, st) = self.sea_v.encode(&self.to_cl(&vv, d), cfg);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.q.spikes"), &q_s);
+        sink.sparsity(&format!("block{bi}.k.spikes"), &k_s);
+        sink.sparsity(&format!("block{bi}.v.spikes"), &v_s);
+        buffers.store_encoded(&q_s, true)?;
+        buffers.store_encoded(&k_s, true)?;
+        buffers.store_encoded(&v_s, true)?;
+
+        // SMAM: dual-spike mask-add (the SDSA engine).
+        let (smam_out, st) = match mode {
+            DatapathMode::Encoded => self.smam.run(&q_s, &k_s, &v_s, cfg),
+            DatapathMode::Bitmap => self.smam.run_dense_baseline(&q_s, &k_s, &v_s, cfg),
+        };
+        sink.add("sdeb.smam", st);
+        sink.sparsity(&format!("block{bi}.sdsa.spikes"), &smam_out.masked_v);
+
+        // Output projection + residual.
+        let (ov, st) = self.slu_forward(&smam_out.masked_v, &blk.o, cfg, mode);
+        sink.add("sdeb.proj", st);
+        let (u, st) = self.adder.add(&u, &ov, cfg);
+        sink.add("sdeb.residual", st);
+
+        // MLP: encode -> SLU -> encode -> SLU -> residual.
+        let (s2, st) = self.sea_mlp_in.encode(&self.to_cl(&u, d), cfg);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.mlp.in.spikes"), &s2);
+        buffers.store_encoded(&s2, true)?;
+        let (hv, st) = self.slu_forward(&s2, &blk.mlp1, cfg, mode);
+        sink.add("sdeb.mlp", st);
+        let h = blk.mlp1.out_dim;
+        let (s3, st) = self.sea_mlp_hidden.encode(&self.to_cl(&hv, h), cfg);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.mlp.hidden.spikes"), &s3);
+        buffers.store_encoded(&s3, true)?;
+        let (m2, st) = self.slu_forward(&s3, &blk.mlp2, cfg, mode);
+        sink.add("sdeb.mlp", st);
+        let (u, st) = self.adder.add(&u, &m2, cfg);
+        sink.add("sdeb.residual", st);
+
+        Ok(u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{QuantizedModel, SdtModelConfig};
+    use crate::quant::{QFormat, ACT_FRAC, MEM_BITS};
+    use crate::util::Prng;
+
+    fn setup() -> (QuantizedModel, QTensor, AccelConfig) {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 6);
+        let mut rng = Prng::new(2);
+        let vals: Vec<f32> = (0..64 * 64).map(|_| rng.next_f32_signed() * 1.5).collect();
+        let u = QTensor::from_f32(&vals, &[64, 64], QFormat::new(MEM_BITS, ACT_FRAC));
+        (model, u, AccelConfig::small())
+    }
+
+    #[test]
+    fn block_preserves_shape_and_format() {
+        let (model, u, hw) = setup();
+        let mc = &model.cfg;
+        let mut core =
+            SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
+        let mut buffers = BufferSet::new(&hw);
+        let mut sink = StatSink::new();
+        let out = core
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .unwrap();
+        assert_eq!(out.shape, vec![64, 64]);
+        assert_eq!(out.frac, ACT_FRAC);
+        for phase in ["sdeb.encode", "sdeb.qkv", "sdeb.smam", "sdeb.mlp", "sdeb.residual"] {
+            assert!(sink.phases.get(phase).cycles > 0, "phase {phase} missing");
+        }
+    }
+
+    #[test]
+    fn encoded_and_bitmap_modes_agree_on_values() {
+        let (model, u, hw) = setup();
+        let mc = &model.cfg;
+        let mut c1 = SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
+        let mut c2 = SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
+        let mut b1 = BufferSet::new(&hw);
+        let mut b2 = BufferSet::new(&hw);
+        let mut s1 = StatSink::new();
+        let mut s2 = StatSink::new();
+        let o1 = c1
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, &mut b1, &mut s1)
+            .unwrap();
+        let o2 = c2
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, &mut b2, &mut s2)
+            .unwrap();
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn timesteps_carry_lif_state() {
+        let (model, u, hw) = setup();
+        let mc = &model.cfg;
+        let mut core =
+            SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
+        let mut buffers = BufferSet::new(&hw);
+        let mut sink = StatSink::new();
+        let o1 = core
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .unwrap();
+        // Same input, different membrane state -> (almost surely) different output.
+        let o2 = core
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .unwrap();
+        core.reset();
+        let o3 = core
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .unwrap();
+        assert_eq!(o1, o3, "reset must restore t=0 behaviour");
+        let _ = o2;
+    }
+}

@@ -1,0 +1,170 @@
+//! SPS Core (Fig. 1 left): Tile Engine convolutions, SEA encoding, the
+//! Maxpooling Array (SMUs for spike input), the RPE convolution and the
+//! residual Adder — producing the token tensor the SDEB Core consumes.
+
+use anyhow::Result;
+
+use crate::hw::AccelConfig;
+use crate::lif::LifParams;
+use crate::quant::{QTensor, ACT_FRAC};
+use crate::spike::{EncodedSpikes, TokenGrid};
+use crate::units::{AdderModule, SpikeEncodingArray, SpikeMaxpoolUnit, TileEngine};
+use crate::model::QuantizedModel;
+
+use super::buffers::BufferSet;
+use super::controller::DatapathMode;
+use super::report::StatSink;
+
+pub struct SpsCore {
+    tile: TileEngine,
+    seas: Vec<SpikeEncodingArray>,
+    smu: SpikeMaxpoolUnit,
+    adder: AdderModule,
+    sides: [usize; 4],
+    dims: [usize; 4],
+}
+
+impl SpsCore {
+    pub fn new(model: &QuantizedModel, params: LifParams) -> Self {
+        let cfg = &model.cfg;
+        let dims = cfg.stage_dims();
+        let sides = cfg.stage_sides();
+        let seas = (0..4)
+            .map(|i| SpikeEncodingArray::new(dims[i], sides[i] * sides[i], params))
+            .collect();
+        Self {
+            tile: TileEngine::new(),
+            seas,
+            smu: SpikeMaxpoolUnit::new(2, 2),
+            adder: AdderModule::new(),
+            sides,
+            dims,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        for sea in &mut self.seas {
+            sea.reset();
+        }
+    }
+
+    /// Run one timestep of SPS on the quantized input image.
+    ///
+    /// Returns `u0` as `[D, L]` channel-major values plus the stage-3
+    /// output spikes (needed by the controller for sparsity reporting).
+    pub fn run_timestep(
+        &mut self,
+        model: &QuantizedModel,
+        image: &QTensor,
+        cfg: &AccelConfig,
+        mode: DatapathMode,
+        buffers: &mut BufferSet,
+        sink: &mut StatSink,
+    ) -> Result<(QTensor, EncodedSpikes)> {
+        let mut cur = image.clone();
+        let mut enc_prev: Option<EncodedSpikes> = None;
+
+        for i in 0..4 {
+            let spike_input = i > 0;
+            let (y, conv_stats) = self.tile.conv2d(&cur, &model.sps_convs[i], cfg, spike_input);
+            sink.add("sps.conv", conv_stats);
+
+            let (mut enc, sea_stats) = self.seas[i].encode(&y.data, cfg);
+            sink.add("sps.encode", sea_stats);
+
+            let side = self.sides[i];
+            if i == 1 || i == 3 {
+                let grid = TokenGrid::new(side, side);
+                let (pooled, mp_stats) = match mode {
+                    DatapathMode::Encoded => self.smu.pool(&enc, grid, cfg),
+                    DatapathMode::Bitmap => self.smu.pool_dense_baseline(&enc, grid, cfg),
+                };
+                sink.add("sps.maxpool", mp_stats);
+                enc = pooled;
+            }
+            // Post-pool sparsity: matches the golden executor and the JAX
+            // model's aux records (Fig. 6 measures what later layers see).
+            sink.sparsity(&format!("sps.stage{i}.spikes"), &enc);
+            buffers.store_encoded(&enc, false)?;
+
+            // Next conv consumes the spike map as a dense binary tensor.
+            let bm = enc.to_bitmap();
+            let s = if i == 1 { side / 2 } else if i == 3 { side / 2 } else { side };
+            cur = QTensor {
+                shape: vec![self.dims[i], s, s],
+                frac: 0,
+                data: (0..bm.channels * bm.tokens)
+                    .map(|j| bm.channel(j / bm.tokens)[j % bm.tokens] as i32)
+                    .collect(),
+            };
+            enc_prev = Some(enc);
+        }
+
+        let enc3 = enc_prev.expect("four stages ran");
+        let (rpe, rpe_stats) = self.tile.conv2d(&cur, &model.sps_convs[4], cfg, true);
+        sink.add("sps.conv", rpe_stats);
+
+        // Residual: u0 = RPE(s4) + s4 in the value domain ([D, L] layout).
+        let d = model.cfg.embed_dim;
+        let l = model.cfg.num_tokens();
+        let rpe_cl = QTensor { shape: vec![d, l], frac: ACT_FRAC, data: rpe.data.clone() };
+        let (u0, add_stats) = self.adder.add_spikes(&rpe_cl, &enc3, cfg);
+        sink.add("sps.residual", add_stats);
+
+        Ok((u0, enc3))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SdtModelConfig;
+    use crate::quant::{QFormat, MEM_BITS};
+    use crate::util::Prng;
+
+    fn setup() -> (QuantizedModel, QTensor) {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 5);
+        let mut rng = Prng::new(1);
+        let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+        let q = QTensor::from_f32(&img, &[3, 32, 32], QFormat::new(MEM_BITS, ACT_FRAC));
+        (model, q)
+    }
+
+    #[test]
+    fn sps_produces_token_tensor() {
+        let (model, img) = setup();
+        let hw = AccelConfig::small();
+        let mut core = SpsCore::new(&model, model.cfg.lif_params());
+        let mut buffers = BufferSet::new(&hw);
+        let mut sink = StatSink::new();
+        let (u0, enc3) = core
+            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .unwrap();
+        assert_eq!(u0.shape, vec![64, 64]);
+        assert_eq!(enc3.channels, 64);
+        assert_eq!(enc3.tokens, 64);
+        assert!(sink.phases.get("sps.conv").cycles > 0);
+        assert!(sink.phases.get("sps.encode").adds > 0);
+    }
+
+    #[test]
+    fn bitmap_mode_same_values_more_maxpool_cycles() {
+        let (model, img) = setup();
+        let hw = AccelConfig::small();
+        let mut b1 = BufferSet::new(&hw);
+        let mut b2 = BufferSet::new(&hw);
+        let mut s1 = StatSink::new();
+        let mut s2 = StatSink::new();
+        let mut c1 = SpsCore::new(&model, model.cfg.lif_params());
+        let mut c2 = SpsCore::new(&model, model.cfg.lif_params());
+        let (u1, _) = c1
+            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, &mut b1, &mut s1)
+            .unwrap();
+        let (u2, _) = c2
+            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, &mut b2, &mut s2)
+            .unwrap();
+        assert_eq!(u1, u2, "datapath modes must agree on values");
+        assert!(s2.phases.get("sps.maxpool").cycles >= s1.phases.get("sps.maxpool").cycles);
+    }
+}

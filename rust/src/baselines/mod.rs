@@ -1,0 +1,20 @@
+//! Baseline accelerators for Table I (substitution #3, DESIGN.md).
+//!
+//! Two kinds of baseline:
+//! * [`published`] — the comparison columns exactly as reported by the
+//!   cited papers (ISCAS'22 [14], TCAD'22 Skydiver [15], AICAS'23
+//!   FrameFire [16]); these are the numbers Table I compares against.
+//! * [`simulated`] — small cycle-level models of the same accelerator
+//!   *styles* (event-driven FC, spatio-temporal-balanced CNN) running on
+//!   our own hw substrate, used to sanity-check that the published
+//!   operating points are consistent with their architectures and to give
+//!   the ablation benches a same-framework comparison.
+//!
+//! The in-datapath baseline (bitmap processing without position encoding)
+//! lives in [`crate::accel::DatapathMode::Bitmap`].
+
+pub mod published;
+pub mod simulated;
+
+pub use published::{aicas23_row, iscas22_row, tcad22_row};
+pub use simulated::{EventDrivenFcModel, SkydiverCnnModel};

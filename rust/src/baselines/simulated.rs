@@ -1,0 +1,167 @@
+//! Cycle-level models of the baseline accelerator *styles*, on our own hw
+//! substrate, so the Table I comparison can also be made within a single
+//! framework (ablation benches) rather than only against published numbers.
+//!
+//! Both models process bitmap spikes (no position encoding — that is the
+//! paper's contribution) but are event-driven: they skip zero activations
+//! at the cost of a zero-check per position, which is exactly the
+//! architecture class [14]-[16] describe.
+
+use crate::hw::{EnergyModel, UnitStats};
+use crate::spike::SpikeMatrix;
+use crate::util::{div_ceil, Prng};
+
+/// An event-driven fully-connected SNN accelerator in the style of
+/// ISCAS'22 [14]: `lanes` parallel accumulators, one weight row per spike.
+#[derive(Clone, Debug)]
+pub struct EventDrivenFcModel {
+    pub lanes: usize,
+    pub freq_mhz: f64,
+    /// Layer widths, e.g. [784, 512, 256, 10] for MNIST.
+    pub layers: Vec<usize>,
+}
+
+impl EventDrivenFcModel {
+    pub fn iscas22_like() -> Self {
+        Self { lanes: 1280, freq_mhz: 140.0, layers: vec![784, 512, 256, 10] }
+    }
+
+    /// Run `timesteps` of one inference with input spike rate `rate`;
+    /// hidden-layer rates decay by ~0.5x per layer, which matches reported
+    /// MNIST FC sparsities.
+    pub fn run(&self, timesteps: usize, rate: f64, seed: u64) -> UnitStats {
+        let mut rng = Prng::new(seed);
+        let mut stats = UnitStats::default();
+        for _t in 0..timesteps {
+            let mut r = rate;
+            for w in self.layers.windows(2) {
+                let (n_in, n_out) = (w[0], w[1]);
+                let mut spikes = 0u64;
+                for _ in 0..n_in {
+                    if rng.bernoulli(r) {
+                        spikes += 1;
+                    }
+                }
+                let sops = spikes * n_out as u64;
+                stats.sops += sops;
+                stats.adds += sops;
+                // zero-check every position (bitmap), then event-driven work
+                stats.cmps += n_in as u64;
+                stats.sram_reads += n_in as u64 + sops;
+                stats.sram_writes += n_out as u64;
+                stats.cycles += div_ceil(n_in as u64, self.lanes as u64)
+                    + div_ceil(sops, self.lanes as u64).max(1);
+                // membrane update + fire for the output neurons
+                stats.adds += n_out as u64;
+                stats.cmps += n_out as u64;
+                r *= 0.5;
+            }
+        }
+        stats
+    }
+
+    pub fn gsops(&self, stats: &UnitStats) -> f64 {
+        let secs = stats.cycles as f64 / (self.freq_mhz * 1e6);
+        stats.sops as f64 / secs / 1e9
+    }
+
+    pub fn gsop_per_w(&self, stats: &UnitStats, energy: &EnergyModel) -> f64 {
+        let secs = stats.cycles as f64 / (self.freq_mhz * 1e6);
+        energy.gsop_per_w(stats, secs)
+    }
+}
+
+/// A Skydiver-style [15] spatio-temporally balanced spiking-CNN
+/// accelerator: channel-parallel convolution over bitmap spike maps.
+#[derive(Clone, Debug)]
+pub struct SkydiverCnnModel {
+    pub macs: usize,
+    pub freq_mhz: f64,
+    /// (c_in, c_out, side) per conv layer, 3x3 kernels.
+    pub convs: Vec<(usize, usize, usize)>,
+}
+
+impl SkydiverCnnModel {
+    pub fn tcad22_like() -> Self {
+        Self {
+            macs: 128,
+            freq_mhz: 200.0,
+            convs: vec![(1, 16, 28), (16, 32, 14), (32, 32, 7)],
+        }
+    }
+
+    pub fn run(&self, timesteps: usize, rate: f64, seed: u64) -> UnitStats {
+        let mut rng = Prng::new(seed);
+        let mut stats = UnitStats::default();
+        for _t in 0..timesteps {
+            let mut r = rate;
+            for &(c_in, c_out, side) in &self.convs {
+                let positions = (c_in * side * side) as u64;
+                let mut m = SpikeMatrix::zeros(c_in, side * side);
+                for c in 0..c_in {
+                    for l in 0..side * side {
+                        if rng.bernoulli(r) {
+                            m.set(c, l, true);
+                        }
+                    }
+                }
+                let spikes = m.count_spikes() as u64;
+                let fan_out = (c_out * 9) as u64;
+                let sops = spikes * fan_out;
+                stats.sops += sops;
+                stats.adds += sops;
+                stats.cmps += positions;
+                stats.sram_reads += positions + sops;
+                stats.sram_writes += (c_out * side * side) as u64;
+                stats.cycles += div_ceil(positions, self.macs as u64)
+                    + div_ceil(sops, self.macs as u64).max(1);
+                r *= 0.6;
+            }
+        }
+        stats
+    }
+
+    pub fn gsops(&self, stats: &UnitStats) -> f64 {
+        let secs = stats.cycles as f64 / (self.freq_mhz * 1e6);
+        stats.sops as f64 / secs / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_model_order_of_magnitude_matches_published() {
+        // ISCAS'22 reports 179 GSOP/s average; the style model should land
+        // in the same regime (tens to ~200 GSOP/s), not at our 307.2 peak.
+        let m = EventDrivenFcModel::iscas22_like();
+        let stats = m.run(4, 0.3, 1);
+        let g = m.gsops(&stats);
+        assert!(g > 20.0 && g < 250.0, "FC model at {g:.1} GSOP/s");
+    }
+
+    #[test]
+    fn cnn_model_order_of_magnitude_matches_published() {
+        // Skydiver reports 22.6 GSOP/s with 128 MACs at 200 MHz.
+        let m = SkydiverCnnModel::tcad22_like();
+        let stats = m.run(4, 0.25, 2);
+        let g = m.gsops(&stats);
+        assert!(g > 5.0 && g < 60.0, "CNN model at {g:.1} GSOP/s");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let m = EventDrivenFcModel::iscas22_like();
+        assert_eq!(m.run(2, 0.3, 9), m.run(2, 0.3, 9));
+    }
+
+    #[test]
+    fn more_timesteps_more_work() {
+        let m = SkydiverCnnModel::tcad22_like();
+        let s1 = m.run(1, 0.25, 3);
+        let s4 = m.run(4, 0.25, 3);
+        assert!(s4.sops > 2 * s1.sops);
+        assert!(s4.cycles > 2 * s1.cycles);
+    }
+}

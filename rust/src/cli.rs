@@ -1,0 +1,117 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline): a
+//! subcommand plus `--key value` / `--flag` options.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut options = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        options.insert(key.to_string(), it.next().unwrap());
+                    }
+                    _ => flags.push(key.to_string()),
+                }
+            } else {
+                bail!("unexpected positional argument `{arg}`");
+            }
+        }
+        Ok(Self { command, options, flags })
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const USAGE: &str = "\
+sdt-accel — sparse accelerator for the Spike-driven Transformer
+
+USAGE: sdt-accel <COMMAND> [OPTIONS]
+
+COMMANDS:
+  run        single inference on the cycle simulator (random or trained model)
+             --weights DIR   use trained artifacts (default artifacts/weights)
+             --config tiny|paper   model scale with random weights
+             --seed N        image seed
+  accuracy   held-out accuracy: quantized simulator vs float PJRT model
+             --weights DIR   --limit N
+  table1     regenerate Table I (comparison with SNN accelerators)
+  fig6       regenerate Fig. 6 (module sparsity)
+             --weights DIR   --limit N
+  serve      batched serving demo through the coordinator
+             --workers N --requests N --backend sim|golden|pjrt --batch N
+  sweep      lane-count parallelism sweep (ablation A2)
+  help       this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = parse(&["serve", "--workers", "4", "--verbose", "--batch", "8"]);
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("workers"), Some("4"));
+        assert_eq!(a.usize_or("batch", 1).unwrap(), 8);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_when_missing() {
+        let a = parse(&["run"]);
+        assert_eq!(a.get_or("config", "tiny"), "tiny");
+        assert_eq!(a.usize_or("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(["run".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn empty_means_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

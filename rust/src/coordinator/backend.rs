@@ -1,0 +1,187 @@
+//! Inference backends the coordinator can drive.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::accel::{Accelerator, DatapathMode};
+use crate::hw::AccelConfig;
+use crate::model::{GoldenExecutor, QuantizedModel};
+use crate::runtime::{LoadedHlo, PjrtRuntime};
+
+/// A backend executes batches of images and returns per-image logits.
+///
+/// Backends are NOT required to be `Send`: the PJRT executable holds
+/// thread-local handles, so the coordinator constructs each worker's
+/// backend *inside* its thread via a [`BackendFactory`].
+pub trait InferBackend {
+    fn name(&self) -> &'static str;
+
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
+
+    /// Modelled accelerator cycles spent so far (simulator backend only).
+    fn modelled_cycles(&self) -> u64 {
+        0
+    }
+}
+
+/// Constructor run inside the worker thread that will own the backend.
+pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn InferBackend>> + Send>;
+
+/// The cycle-level accelerator simulator (the paper's datapath).
+pub struct SimulatorBackend {
+    accel: Accelerator,
+    cycles: u64,
+}
+
+impl SimulatorBackend {
+    pub fn new(model: QuantizedModel, hw: AccelConfig) -> Self {
+        Self { accel: Accelerator::new(model, hw), cycles: 0 }
+    }
+
+    pub fn with_mode(model: QuantizedModel, hw: AccelConfig, mode: DatapathMode) -> Self {
+        Self { accel: Accelerator::with_mode(model, hw, mode), cycles: 0 }
+    }
+}
+
+impl InferBackend for SimulatorBackend {
+    fn name(&self) -> &'static str {
+        "simulator"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(images.len());
+        for img in images {
+            let r = self.accel.infer(img)?;
+            self.cycles += r.total.cycles;
+            out.push(r.logits);
+        }
+        Ok(out)
+    }
+
+    fn modelled_cycles(&self) -> u64 {
+        self.cycles
+    }
+}
+
+/// The dense golden executor (no hw accounting; fastest host path).
+pub struct GoldenBackend {
+    model: QuantizedModel,
+}
+
+impl GoldenBackend {
+    pub fn new(model: QuantizedModel) -> Self {
+        Self { model }
+    }
+}
+
+impl InferBackend for GoldenBackend {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let exec = GoldenExecutor::new(&self.model);
+        Ok(images.iter().map(|img| exec.infer(img).logits).collect())
+    }
+}
+
+/// The AOT JAX model on the PJRT CPU client. Loads the batch-8 HLO when
+/// available and pads partial batches (standard serving practice).
+pub struct PjrtBackend {
+    b1: LoadedHlo,
+    b8: Option<LoadedHlo>,
+    classes: usize,
+    img_len: usize,
+}
+
+impl PjrtBackend {
+    pub fn from_artifacts(dir: &Path, img_len: usize, classes: usize) -> Result<Self> {
+        let rt = PjrtRuntime::cpu()?;
+        let b1 = rt.load_hlo(&dir.join("model.hlo.txt"))?;
+        let b8 = rt.load_hlo(&dir.join("model_b8.hlo.txt")).ok();
+        Ok(Self { b1, b8, classes, img_len })
+    }
+}
+
+impl InferBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(images.len());
+        let mut i = 0;
+        while i < images.len() {
+            let remaining = images.len() - i;
+            if remaining >= 1 && self.b8.is_some() && remaining >= 2 {
+                // batch-8 path with padding
+                let take = remaining.min(8);
+                let mut flat = vec![0f32; 8 * self.img_len];
+                for (j, img) in images[i..i + take].iter().enumerate() {
+                    flat[j * self.img_len..(j + 1) * self.img_len].copy_from_slice(img);
+                }
+                let res = self
+                    .b8
+                    .as_ref()
+                    .unwrap()
+                    .run_f32(&[(&flat, &[8, 3, 32, 32])])?;
+                for j in 0..take {
+                    out.push(res[0][j * self.classes..(j + 1) * self.classes].to_vec());
+                }
+                i += take;
+            } else {
+                let res = self.b1.run_f32(&[(&images[i], &[1, 3, 32, 32])])?;
+                out.push(res[0].clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SdtModelConfig;
+    use crate::util::Prng;
+
+    fn images(n: usize) -> Vec<Vec<f32>> {
+        let mut rng = Prng::new(1);
+        (0..n)
+            .map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn simulator_and_golden_agree() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 17);
+        let imgs = images(3);
+        let mut sim = SimulatorBackend::new(model.clone(), AccelConfig::small());
+        let mut gold = GoldenBackend::new(model);
+        let a = sim.infer_batch(&imgs).unwrap();
+        let b = gold.infer_batch(&imgs).unwrap();
+        assert_eq!(a, b);
+        assert!(sim.modelled_cycles() > 0);
+    }
+
+    #[test]
+    fn pjrt_backend_batches_pad_correctly() {
+        let dir = Path::new("artifacts");
+        if !dir.join("model_b8.hlo.txt").exists() {
+            return;
+        }
+        let mut be = PjrtBackend::from_artifacts(dir, 3 * 32 * 32, 10).unwrap();
+        let imgs = images(5);
+        let batched = be.infer_batch(&imgs).unwrap();
+        assert_eq!(batched.len(), 5);
+        // singles must match the batch-8 padded path
+        for (img, want) in imgs.iter().zip(&batched) {
+            let single = be.b1.run_f32(&[(img, &[1, 3, 32, 32])]).unwrap();
+            for (a, b) in single[0].iter().zip(want) {
+                assert!((a - b).abs() < 1e-4, "batch vs single mismatch");
+            }
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Dynamic batching policy: accumulate requests until the batch is full or
+//! the oldest request has waited `max_wait`, then release the batch
+//! (the standard latency/throughput trade-off knob in serving systems).
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// FIFO queue + policy. Single-threaded core; the server wraps it in a
+/// mutex. Timestamps travel with the requests for latency accounting.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    pub policy: BatchPolicy,
+    queue: VecDeque<(Request, Instant)>,
+}
+
+impl DynamicBatcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queue.push_back((req, Instant::now()));
+    }
+
+    /// Enqueue an item that already carries its submission timestamp
+    /// (used when the coordinator's flush path splits an oversized drain).
+    pub(crate) fn push_raw(&mut self, item: (Request, Instant)) {
+        self.queue.push_back(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether a batch should be released right now.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some((_, t0)) => now.duration_since(*t0) >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Pop up to `max_batch` requests (oldest first) if ready.
+    pub fn take_batch(&mut self, now: Instant) -> Option<Vec<(Request, Instant)>> {
+        if !self.ready(now) {
+            return None;
+        }
+        let n = self.queue.len().min(self.policy.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Drain everything regardless of policy (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<(Request, Instant)> {
+        self.queue.drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, image: vec![0.0; 4] }
+    }
+
+    #[test]
+    fn full_batch_releases_immediately() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(10) });
+        b.push(req(1));
+        assert!(!b.ready(Instant::now()));
+        b.push(req(2));
+        assert!(b.ready(Instant::now()));
+        let batch = b.take_batch(Instant::now()).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(batch[0].0.id, 1, "FIFO order");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn timeout_releases_partial_batch() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) });
+        b.push(req(7));
+        let later = Instant::now() + Duration::from_millis(5);
+        assert!(b.ready(later));
+        let batch = b.take_batch(later).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn not_ready_returns_none() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) });
+        b.push(req(1));
+        assert!(b.take_batch(Instant::now()).is_none());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn oversized_queue_splits_into_policy_batches() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(0) });
+        for i in 0..7 {
+            b.push(req(i));
+        }
+        let now = Instant::now();
+        assert_eq!(b.take_batch(now).unwrap().len(), 3);
+        assert_eq!(b.take_batch(now).unwrap().len(), 3);
+        assert_eq!(b.take_batch(now).unwrap().len(), 1);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_all_ignores_policy() {
+        let mut b = DynamicBatcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) });
+        b.push(req(1));
+        b.push(req(2));
+        assert_eq!(b.drain_all().len(), 2);
+    }
+}

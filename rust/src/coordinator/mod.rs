@@ -1,0 +1,35 @@
+//! L3 request coordinator: a router + dynamic batcher + worker pool that
+//! drives inference backends (the cycle simulator, the dense golden
+//! executor, or the PJRT-compiled JAX model) and reports serving metrics
+//! (throughput, p50/p99 latency).
+//!
+//! The paper's contribution is the accelerator itself, so per the
+//! system-prompt taxonomy L3 here is a *thin but real* serving layer:
+//! process lifecycle, request queues, batching policy and metrics — enough
+//! that `examples/serve_batched` exercises a realistic deployment loop.
+
+pub mod backend;
+pub mod batcher;
+pub mod server;
+
+pub use backend::{BackendFactory, GoldenBackend, InferBackend, PjrtBackend, SimulatorBackend};
+pub use batcher::{BatchPolicy, DynamicBatcher};
+pub use server::{Coordinator, ServeReport};
+
+/// A single inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// CHW f32 pixels.
+    pub image: Vec<f32>,
+}
+
+/// The completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Host wall-clock latency (queue + compute), seconds.
+    pub latency_s: f64,
+}

@@ -1,0 +1,116 @@
+//! Accelerator configuration. `AccelConfig::paper()` is the operating point
+//! of Table I: 1,536 parallel spiking neurons at 200 MHz on a Virtex
+//! UltraScale part.
+
+/// Structural parameters of the accelerator instance.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AccelConfig {
+    /// Parallel spiking-neuron lanes (SEU array width == SLA adder width).
+    pub lanes: usize,
+    /// Clock frequency in MHz.
+    pub freq_mhz: f64,
+    /// Dense MAC units in the SPS Tile Engine.
+    pub tile_macs: usize,
+    /// Address comparators in the SMAM (one per concurrently-processed
+    /// channel of the Q/K intersection).
+    pub smam_comparators: usize,
+    /// Spike Maxpooling Units in the Maxpooling Array.
+    pub smu_units: usize,
+    /// ESS banks (one per channel group; encoded spikes are banked by
+    /// channel so the SLU can parallelise over input channels, §III-D).
+    pub ess_banks: usize,
+    /// Words per ESS bank (8-bit encoded addresses + segment headers).
+    pub ess_bank_words: usize,
+    /// External-memory interface bytes/cycle (Input/Output Buffer side).
+    pub dram_bytes_per_cycle: usize,
+}
+
+impl AccelConfig {
+    /// The paper's implementation point (Table I "Ours").
+    pub fn paper() -> Self {
+        Self {
+            lanes: 1536,
+            freq_mhz: 200.0,
+            tile_macs: 576,
+            smam_comparators: 384,
+            smu_units: 256,
+            ess_banks: 384,
+            ess_bank_words: 4096,
+            dram_bytes_per_cycle: 16,
+        }
+    }
+
+    /// A scaled-down instance used by fast unit/integration tests.
+    pub fn small() -> Self {
+        Self {
+            lanes: 64,
+            freq_mhz: 200.0,
+            tile_macs: 32,
+            smam_comparators: 16,
+            smu_units: 16,
+            ess_banks: 16,
+            ess_bank_words: 2048,
+            dram_bytes_per_cycle: 8,
+        }
+    }
+
+    /// Scale the compute fabric to a different lane count, keeping the
+    /// proportions of the paper instance (used by the parallelism sweep).
+    pub fn with_lanes(lanes: usize) -> Self {
+        let p = Self::paper();
+        let ratio = lanes as f64 / p.lanes as f64;
+        let scale = |v: usize| ((v as f64 * ratio).round() as usize).max(1);
+        Self {
+            lanes,
+            freq_mhz: p.freq_mhz,
+            tile_macs: scale(p.tile_macs),
+            smam_comparators: scale(p.smam_comparators),
+            smu_units: scale(p.smu_units),
+            ess_banks: scale(p.ess_banks),
+            ess_bank_words: p.ess_bank_words,
+            dram_bytes_per_cycle: p.dram_bytes_per_cycle,
+        }
+    }
+
+    /// Peak throughput in GSOP/s: every lane retires one synaptic
+    /// operation per cycle. 1536 lanes x 200 MHz = 307.2 GSOP/s, the
+    /// paper's headline peak.
+    pub fn peak_gsops(&self) -> f64 {
+        self.lanes as f64 * self.freq_mhz * 1e6 / 1e9
+    }
+
+    /// Seconds for a cycle count at this clock.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.freq_mhz * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_peak_is_307_2_gsops() {
+        let c = AccelConfig::paper();
+        assert!((c.peak_gsops() - 307.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_lanes_scales_proportionally() {
+        let half = AccelConfig::with_lanes(768);
+        assert_eq!(half.tile_macs, 288);
+        assert_eq!(half.smam_comparators, 192);
+        assert!((half.peak_gsops() - 153.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn with_lanes_identity() {
+        assert_eq!(AccelConfig::with_lanes(1536), AccelConfig::paper());
+    }
+
+    #[test]
+    fn seconds_at_clock() {
+        let c = AccelConfig::paper();
+        assert!((c.seconds(200_000_000) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,21 @@
+//! Hardware-modelling substrate: the accelerator configuration, cycle and
+//! operation accounting, SRAM bank models, and the energy / FPGA-resource
+//! models calibrated against the paper's Table I column.
+//!
+//! Substitution #1 (DESIGN.md): the paper's Virtex UltraScale RTL is
+//! replaced by this cycle-level model. Units charge cycles/ops exactly as
+//! the Figs. 2-5 dataflows describe; energy and LUT/FF/BRAM come from
+//! per-structure cost functions whose totals are validated against the
+//! paper's reported implementation results.
+
+pub mod config;
+pub mod energy;
+pub mod resources;
+pub mod sram;
+pub mod stats;
+
+pub use config::AccelConfig;
+pub use energy::EnergyModel;
+pub use resources::{ResourceModel, Resources};
+pub use sram::SramBank;
+pub use stats::UnitStats;

@@ -1,0 +1,114 @@
+//! FPGA resource model: LUT/FF/BRAM cost per structure, calibrated so the
+//! paper configuration reproduces the Table I utilisation column
+//! (453,266 LUT / 94,120 FF / 784 BRAM on Virtex UltraScale).
+//!
+//! The per-structure costs are engineering estimates for 10-bit datapaths:
+//! a 10x10 MAC with its pipeline ~ 180 LUT, a 24-bit accumulate lane
+//! ~ 120 LUT, an SEU (adder + threshold compare + address counter) ~ 55 LUT,
+//! an 8-bit two-pointer comparator ~ 90 LUT, an SMU ~ 40 LUT. BRAM counts
+//! allocate the ESS banks, the weight buffer and the I/O + residual
+//! buffers. A fixed controller/interconnect overhead absorbs the rest.
+
+use super::config::AccelConfig;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Resources {
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ResourceModel {
+    pub lut_per_mac: u64,
+    pub lut_per_sla_lane: u64,
+    pub lut_per_seu: u64,
+    pub lut_per_smam_cmp: u64,
+    pub lut_per_smu: u64,
+    pub lut_overhead: u64,
+    pub ff_per_lane: u64,
+    pub ff_per_mac: u64,
+    pub ff_overhead: u64,
+    pub bram_per_ess_bank: u64,
+    pub bram_weight_buffer: u64,
+    pub bram_io_buffers: u64,
+    pub bram_res_buffer: u64,
+}
+
+impl Default for ResourceModel {
+    fn default() -> Self {
+        Self {
+            lut_per_mac: 180,
+            lut_per_sla_lane: 120,
+            lut_per_seu: 55,
+            lut_per_smam_cmp: 90,
+            lut_per_smu: 40,
+            lut_overhead: 35_986,
+            ff_per_lane: 30,
+            ff_per_mac: 40,
+            ff_overhead: 25_000,
+            bram_per_ess_bank: 1,
+            bram_weight_buffer: 256,
+            bram_io_buffers: 96,
+            bram_res_buffer: 48,
+        }
+    }
+}
+
+impl ResourceModel {
+    /// Estimate the utilisation of an accelerator instance.
+    pub fn estimate(&self, c: &AccelConfig) -> Resources {
+        let lut = self.lut_per_mac * c.tile_macs as u64
+            + self.lut_per_sla_lane * c.lanes as u64
+            + self.lut_per_seu * c.lanes as u64
+            + self.lut_per_smam_cmp * c.smam_comparators as u64
+            + self.lut_per_smu * c.smu_units as u64
+            + self.lut_overhead;
+        let ff = self.ff_per_lane * c.lanes as u64
+            + self.ff_per_mac * c.tile_macs as u64
+            + self.ff_overhead;
+        let bram = self.bram_per_ess_bank * c.ess_banks as u64
+            + self.bram_weight_buffer
+            + self.bram_io_buffers
+            + self.bram_res_buffer;
+        Resources { lut, ff, bram }
+    }
+}
+
+/// Table I utilisation reported by the paper for the "Ours" column.
+pub const PAPER_RESOURCES: Resources = Resources { lut: 453_266, ff: 94_120, bram: 784 };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_config_matches_table1_within_2pct() {
+        let est = ResourceModel::default().estimate(&AccelConfig::paper());
+        let pct = |a: u64, b: u64| (a as f64 - b as f64).abs() / b as f64;
+        assert!(pct(est.lut, PAPER_RESOURCES.lut) < 0.02, "LUT {est:?}");
+        assert!(pct(est.ff, PAPER_RESOURCES.ff) < 0.02, "FF {est:?}");
+        assert_eq!(est.bram, PAPER_RESOURCES.bram, "BRAM {est:?}");
+    }
+
+    #[test]
+    fn smaller_instance_uses_less() {
+        let m = ResourceModel::default();
+        let small = m.estimate(&AccelConfig::with_lanes(256));
+        let full = m.estimate(&AccelConfig::paper());
+        assert!(small.lut < full.lut);
+        assert!(small.ff < full.ff);
+        assert!(small.bram < full.bram);
+    }
+
+    #[test]
+    fn resources_monotonic_in_lanes() {
+        let m = ResourceModel::default();
+        let mut prev = 0;
+        for lanes in [128, 256, 512, 1024, 1536] {
+            let r = m.estimate(&AccelConfig::with_lanes(lanes));
+            assert!(r.lut > prev);
+            prev = r.lut;
+        }
+    }
+}

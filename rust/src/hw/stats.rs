@@ -1,0 +1,120 @@
+//! Per-unit operation/cycle accounting. Every compute unit returns a
+//! [`UnitStats`]; the controller sums them per phase and the energy model
+//! converts the op counts into Joules.
+
+use std::ops::{Add, AddAssign};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct UnitStats {
+    /// Cycles the unit was busy (its own pipeline view).
+    pub cycles: u64,
+    /// Synaptic operations: one spike traversing one unique synapse
+    /// (the paper's SOP definition, §IV-B).
+    pub sops: u64,
+    /// Integer additions (accumulators, residual adders, membrane updates).
+    pub adds: u64,
+    /// Address/threshold comparisons.
+    pub cmps: u64,
+    /// Dense multiply-accumulates (Tile Engine only).
+    pub macs: u64,
+    pub sram_reads: u64,
+    pub sram_writes: u64,
+    /// External-memory traffic in bytes (Input/Output Buffer side).
+    pub dram_bytes: u64,
+}
+
+impl UnitStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Busy-time in seconds at `freq_mhz`.
+    pub fn seconds(&self, freq_mhz: f64) -> f64 {
+        self.cycles as f64 / (freq_mhz * 1e6)
+    }
+}
+
+impl Add for UnitStats {
+    type Output = UnitStats;
+    fn add(self, o: UnitStats) -> UnitStats {
+        UnitStats {
+            cycles: self.cycles + o.cycles,
+            sops: self.sops + o.sops,
+            adds: self.adds + o.adds,
+            cmps: self.cmps + o.cmps,
+            macs: self.macs + o.macs,
+            sram_reads: self.sram_reads + o.sram_reads,
+            sram_writes: self.sram_writes + o.sram_writes,
+            dram_bytes: self.dram_bytes + o.dram_bytes,
+        }
+    }
+}
+
+impl AddAssign for UnitStats {
+    fn add_assign(&mut self, o: UnitStats) {
+        *self = *self + o;
+    }
+}
+
+/// A named breakdown of stats per pipeline phase (SPS conv, SMU, SDSA, ...).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseStats {
+    pub phases: Vec<(String, UnitStats)>,
+}
+
+impl PhaseStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: &str, stats: UnitStats) {
+        if let Some((_, s)) = self.phases.iter_mut().find(|(n, _)| n == phase) {
+            *s += stats;
+        } else {
+            self.phases.push((phase.to_string(), stats));
+        }
+    }
+
+    pub fn total(&self) -> UnitStats {
+        self.phases.iter().fold(UnitStats::new(), |acc, (_, s)| acc + *s)
+    }
+
+    pub fn get(&self, phase: &str) -> UnitStats {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == phase)
+            .map(|(_, s)| *s)
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_assign_sums_fields() {
+        let mut a = UnitStats { cycles: 1, sops: 2, ..Default::default() };
+        a += UnitStats { cycles: 10, adds: 5, ..Default::default() };
+        assert_eq!(a.cycles, 11);
+        assert_eq!(a.sops, 2);
+        assert_eq!(a.adds, 5);
+    }
+
+    #[test]
+    fn seconds_at_200mhz() {
+        let s = UnitStats { cycles: 200_000_000, ..Default::default() };
+        assert!((s.seconds(200.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_stats_merges_same_name() {
+        let mut p = PhaseStats::new();
+        p.add("slu", UnitStats { cycles: 5, ..Default::default() });
+        p.add("slu", UnitStats { cycles: 7, ..Default::default() });
+        p.add("smam", UnitStats { cycles: 1, ..Default::default() });
+        assert_eq!(p.get("slu").cycles, 12);
+        assert_eq!(p.total().cycles, 13);
+        assert_eq!(p.phases.len(), 2);
+    }
+}

@@ -1,0 +1,176 @@
+//! The plain-text weight manifest + model config emitted by
+//! `python/compile/train.py`:
+//!
+//! ```text
+//! manifest.txt : <name> <dtype> <ndim> <d0> ... <dn-1> <file>
+//! config.txt   : <key> <value>
+//! ```
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::npy::NpyArray;
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub file: String,
+}
+
+/// Parsed weight manifest bound to its directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {}", dir.display()))?;
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() < 4 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let ndim: usize = parts[2].parse().context("bad ndim")?;
+            if parts.len() != 4 + ndim {
+                bail!("manifest line {}: expected {} fields", lineno + 1, 4 + ndim);
+            }
+            let shape = parts[3..3 + ndim]
+                .iter()
+                .map(|s| s.parse().context("bad dim"))
+                .collect::<Result<Vec<usize>>>()?;
+            entries.push(Entry {
+                name: parts[0].to_string(),
+                dtype: parts[1].to_string(),
+                shape,
+                file: parts[3 + ndim].to_string(),
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Entry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .with_context(|| format!("weight `{name}` not in manifest"))
+    }
+
+    /// Load a named array, verifying the manifest shape against the file.
+    pub fn load_array(&self, name: &str) -> Result<NpyArray> {
+        let e = self.get(name)?;
+        let arr = NpyArray::load(&self.dir.join(&e.file))?;
+        if arr.shape != e.shape {
+            bail!("`{name}` shape mismatch: manifest {:?} vs file {:?}", e.shape, arr.shape);
+        }
+        Ok(arr)
+    }
+
+    pub fn load_f32(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        let arr = self.load_array(name)?;
+        Ok((arr.as_f32()?, arr.shape))
+    }
+}
+
+/// Parsed `config.txt` key/value file.
+#[derive(Clone, Debug)]
+pub struct ModelConfigFile {
+    pub kv: HashMap<String, String>,
+}
+
+impl ModelConfigFile {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = fs::read_to_string(dir.join("config.txt"))
+            .with_context(|| format!("reading config in {}", dir.display()))?;
+        Ok(Self::parse(&text))
+    }
+
+    pub fn parse(text: &str) -> Self {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            if let (Some(k), Some(v)) = (it.next(), it.next()) {
+                kv.insert(k.to_string(), v.to_string());
+            }
+        }
+        Self { kv }
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.kv
+            .get(key)
+            .with_context(|| format!("config key `{key}` missing"))?
+            .parse()
+            .with_context(|| format!("config key `{key}` not an integer"))
+    }
+
+    pub fn f32(&self, key: &str) -> Result<f32> {
+        self.kv
+            .get(key)
+            .with_context(|| format!("config key `{key}` missing"))?
+            .parse()
+            .with_context(|| format!("config key `{key}` not a float"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_config_text() {
+        let c = ModelConfigFile::parse("embed_dim 64\ntimesteps 2\nlif_gamma 0.5\n");
+        assert_eq!(c.usize("embed_dim").unwrap(), 64);
+        assert_eq!(c.usize("timesteps").unwrap(), 2);
+        assert!((c.f32("lif_gamma").unwrap() - 0.5).abs() < 1e-9);
+        assert!(c.usize("missing").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("sfa_manifest_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("manifest.txt"), "head.b f32 1 10 head.b.npy\n# comment\n").unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.get("head.b").unwrap();
+        assert_eq!(e.shape, vec![10]);
+        assert_eq!(e.file, "head.b.npy");
+        assert!(m.get("nope").is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join(format!("sfa_manifest_bad_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("manifest.txt"), "only two\n").unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_if_present() {
+        let dir = Path::new("artifacts/weights");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(dir).unwrap();
+            assert!(m.entries.len() >= 12);
+            let (w, shape) = m.load_f32("head.w").unwrap();
+            assert_eq!(shape.len(), 2);
+            assert_eq!(w.len(), shape[0] * shape[1]);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Artifact I/O: a minimal NumPy `.npy` reader (numpy is the only
+//! interchange producer; serde/npy crates are unavailable offline), the
+//! plain-text weight manifest written by `python/compile/train.py`, and the
+//! exported model/runtime configuration.
+
+pub mod manifest;
+pub mod npy;
+
+pub use manifest::{Manifest, ModelConfigFile};
+pub use npy::NpyArray;

@@ -1,0 +1,216 @@
+//! Minimal `.npy` (format version 1.0/2.0) reader for little-endian
+//! f32/i32/i64 C-order arrays — the only layouts `train.py` emits.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A loaded array: shape + data (converted to f32 or i32 as requested).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyArray {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+    raw: Vec<u8>,
+}
+
+impl NpyArray {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+            bail!("not an npy file (bad magic)");
+        }
+        let major = bytes[6];
+        let (header_len, header_start) = match major {
+            1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+            2 => (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12,
+            ),
+            v => bail!("unsupported npy version {v}"),
+        };
+        let header_end = header_start + header_len;
+        if bytes.len() < header_end {
+            bail!("truncated npy header");
+        }
+        let header = std::str::from_utf8(&bytes[header_start..header_end])
+            .context("npy header not utf-8")?;
+
+        let dtype = extract_quoted(header, "'descr':").context("missing descr")?;
+        if extract_bool(header, "'fortran_order':")? {
+            bail!("fortran-order npy not supported");
+        }
+        let shape = extract_shape(header).context("missing shape")?;
+
+        let elem = match dtype.as_str() {
+            "<f4" | "<i4" => 4,
+            "<i8" => 8,
+            "|i1" | "|u1" => 1,
+            d => bail!("unsupported dtype {d}"),
+        };
+        let n: usize = shape.iter().product();
+        let data = &bytes[header_end..];
+        if data.len() < n * elem {
+            bail!("npy payload too short: {} < {}", data.len(), n * elem);
+        }
+        Ok(Self { shape, dtype, raw: data[..n * elem].to_vec() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        match self.dtype.as_str() {
+            "<f4" => Ok(self
+                .raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            "<i4" => Ok(self
+                .raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32)
+                .collect()),
+            d => bail!("cannot view {d} as f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<Vec<i32>> {
+        match self.dtype.as_str() {
+            "<i4" => Ok(self
+                .raw
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect()),
+            "<i8" => Ok(self
+                .raw
+                .chunks_exact(8)
+                .map(|c| {
+                    i64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as i32
+                })
+                .collect()),
+            "|i1" => Ok(self.raw.iter().map(|&b| b as i8 as i32).collect()),
+            "|u1" => Ok(self.raw.iter().map(|&b| b as i32).collect()),
+            d => bail!("cannot view {d} as i32"),
+        }
+    }
+}
+
+fn extract_quoted(header: &str, key: &str) -> Option<String> {
+    let at = header.find(key)? + key.len();
+    let rest = &header[at..];
+    let q0 = rest.find('\'')? + 1;
+    let q1 = rest[q0..].find('\'')? + q0;
+    Some(rest[q0..q1].to_string())
+}
+
+fn extract_bool(header: &str, key: &str) -> Result<bool> {
+    let at = header.find(key).context("missing key")? + key.len();
+    let rest = header[at..].trim_start();
+    Ok(rest.starts_with("True"))
+}
+
+fn extract_shape(header: &str) -> Option<Vec<usize>> {
+    let at = header.find("'shape':")? + "'shape':".len();
+    let rest = &header[at..];
+    let open = rest.find('(')? + 1;
+    let close = rest[open..].find(')')? + open;
+    let inner = &rest[open..close];
+    let dims: Vec<usize> = inner
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse().ok())
+        .collect::<Option<Vec<_>>>()?;
+    Some(dims)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-assemble a v1.0 npy byte stream.
+    fn make_npy(descr: &str, shape: &str, payload: &[u8]) -> Vec<u8> {
+        let mut header = format!(
+            "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}"
+        );
+        let total = 10 + header.len();
+        let pad = (64 - total % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend((header.len() as u16).to_le_bytes());
+        out.extend(header.as_bytes());
+        out.extend(payload);
+        out
+    }
+
+    #[test]
+    fn parses_f32_2d() {
+        let vals = [1.0f32, -2.5, 3.25, 0.0, 7.0, -0.125];
+        let payload: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let npy = make_npy("<f4", "(2, 3)", &payload);
+        let arr = NpyArray::parse(&npy).unwrap();
+        assert_eq!(arr.shape, vec![2, 3]);
+        assert_eq!(arr.as_f32().unwrap(), vals);
+    }
+
+    #[test]
+    fn parses_i32_1d_and_scalar_shape() {
+        let vals = [5i32, -9];
+        let payload: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let arr = NpyArray::parse(&make_npy("<i4", "(2,)", &payload)).unwrap();
+        assert_eq!(arr.shape, vec![2]);
+        assert_eq!(arr.as_i32().unwrap(), vals);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(NpyArray::parse(b"not an npy").is_err());
+    }
+
+    #[test]
+    fn rejects_fortran_order() {
+        let mut npy = make_npy("<f4", "(1,)", &1.0f32.to_le_bytes());
+        // Flip the fortran_order flag in the (ASCII) header bytes only.
+        let header_len = u16::from_le_bytes([npy[8], npy[9]]) as usize;
+        let header = String::from_utf8(npy[10..10 + header_len].to_vec()).unwrap();
+        let flipped = header.replace("False", "True ");
+        npy[10..10 + header_len].copy_from_slice(flipped.as_bytes());
+        assert!(NpyArray::parse(&npy).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let npy = make_npy("<f4", "(4,)", &1.0f32.to_le_bytes());
+        assert!(NpyArray::parse(&npy).is_err());
+    }
+
+    #[test]
+    fn i64_downcast() {
+        let vals = [42i64, -7];
+        let payload: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let arr = NpyArray::parse(&make_npy("<i8", "(2,)", &payload)).unwrap();
+        assert_eq!(arr.as_i32().unwrap(), vec![42, -7]);
+    }
+
+    #[test]
+    fn roundtrip_real_numpy_file() {
+        // If artifacts exist (post `make artifacts`), check a real file.
+        let p = std::path::Path::new("artifacts/weights/head.b.npy");
+        if p.exists() {
+            let arr = NpyArray::load(p).unwrap();
+            assert_eq!(arr.shape, vec![10]);
+            assert!(arr.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
+    }
+}

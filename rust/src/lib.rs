@@ -1,0 +1,30 @@
+//! # spikeformer-accel
+//!
+//! Reproduction of "An Efficient Sparse Hardware Accelerator for
+//! Spike-Driven Transformer" (CS.AR 2025): a cycle-level model of the
+//! paper's FPGA accelerator (spike position encoding, SMU/SMAM/SLU compute
+//! units, SPS + SDEB cores), a quantized golden executor for the
+//! Spike-driven Transformer, baseline accelerator models for Table I, and a
+//! PJRT runtime that cross-checks numerics against the AOT-compiled JAX
+//! model (see `python/compile/`).
+//!
+//! Layer map (DESIGN.md):
+//! * L3 — this crate: coordinator, simulator, metrics, benches.
+//! * L2 — JAX model lowered to `artifacts/*.hlo.txt` at build time.
+//! * L1 — Pallas kernels inlined into the same HLO.
+
+pub mod util;
+pub mod quant;
+pub mod spike;
+pub mod lif;
+pub mod hw;
+pub mod units;
+pub mod accel;
+pub mod model;
+pub mod baselines;
+pub mod metrics;
+pub mod io;
+pub mod runtime;
+pub mod coordinator;
+pub mod benchlib;
+pub mod cli;

@@ -1,0 +1,203 @@
+//! Integer Leaky Integrate-and-Fire neuron array (Eqs. (1)-(3)).
+//!
+//! The membrane potential lives in a wide (16-bit modelled) accumulator at
+//! the activation Q-format; the decay `gamma * Mem[t]` is a multiply by a
+//! Q0.6 constant followed by a rounding shift, which for the default
+//! `gamma = 0.5` degenerates to a single arithmetic shift — exactly what
+//! the RTL would synthesize.
+
+use crate::quant::{rshift_round, sat, QFormat, ACT_FRAC, MEM_BITS};
+
+/// Fractional bits of the quantized decay constant.
+pub const GAMMA_FRAC: i32 = 6;
+
+/// Quantized LIF constants shared by every neuron of a layer.
+#[derive(Clone, Copy, Debug)]
+pub struct LifParams {
+    /// Firing threshold in the activation format.
+    pub v_th: i32,
+    /// Reset potential in the activation format.
+    pub v_reset: i32,
+    /// Decay constant in Q0.GAMMA_FRAC.
+    pub gamma_q: i32,
+}
+
+impl LifParams {
+    pub fn from_f32(v_th: f32, v_reset: f32, gamma: f32) -> Self {
+        let act = QFormat::new(MEM_BITS, ACT_FRAC);
+        Self {
+            v_th: act.from_f32(v_th),
+            v_reset: act.from_f32(v_reset),
+            gamma_q: ((gamma as f64) * 2f64.powi(GAMMA_FRAC)).round() as i32,
+        }
+    }
+}
+
+impl Default for LifParams {
+    fn default() -> Self {
+        Self::from_f32(1.0, 0.0, 0.5)
+    }
+}
+
+/// A bank of LIF neurons with persistent temporal state Temp[t-1].
+#[derive(Clone, Debug)]
+pub struct LifArray {
+    pub params: LifParams,
+    /// Temp[t-1] per neuron, activation format, wide accumulator.
+    temp: Vec<i32>,
+}
+
+impl LifArray {
+    pub fn new(n: usize, params: LifParams) -> Self {
+        Self { params, temp: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.temp.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.temp.is_empty()
+    }
+
+    /// Reset all temporal state (between images).
+    pub fn reset(&mut self) {
+        self.temp.fill(0);
+    }
+
+    /// One timestep for one neuron: returns true iff it fires.
+    ///
+    /// `spa` is the spatial input in the activation format (wide).
+    #[inline]
+    pub fn step_one(&mut self, idx: usize, spa: i32) -> bool {
+        let p = self.params;
+        // Eq. (2): Mem[t] = Spa[t] + Temp[t-1], saturated to the wide format.
+        let mem = sat(spa as i64 + self.temp[idx] as i64, MEM_BITS);
+        // Eq. (3): S[t] = eps(Mem[t] - Vth).
+        let fired = mem >= p.v_th;
+        // Eq. (1): Temp[t] = S Vreset + (1-S)(gamma Mem).
+        self.temp[idx] = if fired {
+            p.v_reset
+        } else {
+            sat(rshift_round(mem as i64 * p.gamma_q as i64, GAMMA_FRAC), MEM_BITS)
+        };
+        fired
+    }
+
+    /// One timestep for a whole vector of spatial inputs; fills `fired`.
+    pub fn step(&mut self, spa: &[i32], fired: &mut Vec<bool>) {
+        assert_eq!(spa.len(), self.temp.len());
+        fired.clear();
+        fired.reserve(spa.len());
+        for (i, &s) in spa.iter().enumerate() {
+            fired.push(self.step_one(i, s));
+        }
+    }
+
+    /// Current temporal state (for tests / checkpointing).
+    pub fn temp(&self) -> &[i32] {
+        &self.temp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QFormat;
+
+    fn act(v: f32) -> i32 {
+        QFormat::new(MEM_BITS, ACT_FRAC).from_f32(v)
+    }
+
+    #[test]
+    fn fires_at_threshold() {
+        let mut a = LifArray::new(1, LifParams::default());
+        assert!(a.step_one(0, act(1.0))); // mem == v_th fires (eps(0) = 1)
+        assert_eq!(a.temp()[0], 0); // hard reset to v_reset = 0
+    }
+
+    #[test]
+    fn subthreshold_decays() {
+        let mut a = LifArray::new(1, LifParams::default());
+        assert!(!a.step_one(0, act(0.6)));
+        // temp = 0.6 * 0.5 = 0.3
+        assert_eq!(a.temp()[0], act(0.3));
+        // 0.3 + 0.6 = 0.9 < 1.0 : still silent
+        assert!(!a.step_one(0, act(0.6)));
+        // temp = 0.45; 0.45 + 0.6 = 1.05 >= 1.0 : fires
+        assert!(a.step_one(0, act(0.6)));
+        assert_eq!(a.temp()[0], 0);
+    }
+
+    #[test]
+    fn negative_input_never_fires() {
+        let mut a = LifArray::new(1, LifParams::default());
+        for _ in 0..10 {
+            assert!(!a.step_one(0, act(-0.5)));
+        }
+    }
+
+    #[test]
+    fn matches_grid_reference() {
+        // Cross-check the integer pipeline against a float LIF whose decay
+        // is rounded to the quantization grid exactly like the RTL would
+        // (ties away from zero).
+        let params = LifParams::from_f32(1.0, 0.0, 0.5);
+        let mut a = LifArray::new(1, params);
+        let grid = 64.0f64; // 2^ACT_FRAC
+        let mut temp_f = 0.0f64;
+        let mut rng = crate::util::Prng::new(9);
+        for _ in 0..200 {
+            let spa_raw = (rng.gen_range(0, 257) as i32) - 128; // +-2.0
+            let spa_f = spa_raw as f64 / grid;
+            let mem_f = spa_f + temp_f;
+            let fired_f = mem_f >= 1.0;
+            temp_f = if fired_f {
+                0.0
+            } else {
+                let half = mem_f * 0.5 * grid;
+                let rounded =
+                    if half >= 0.0 { (half + 0.5).floor() } else { (half - 0.5).ceil() };
+                rounded / grid
+            };
+            let fired = a.step_one(0, spa_raw);
+            assert_eq!(fired, fired_f);
+        }
+    }
+
+    #[test]
+    fn gamma_zero_is_memoryless() {
+        let params = LifParams::from_f32(1.0, 0.0, 0.0);
+        let mut a = LifArray::new(1, params);
+        assert!(!a.step_one(0, act(0.9)));
+        assert_eq!(a.temp()[0], 0);
+        assert!(!a.step_one(0, act(0.9)));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut a = LifArray::new(2, LifParams::default());
+        a.step_one(0, act(0.5));
+        assert_ne!(a.temp()[0], 0);
+        a.reset();
+        assert_eq!(a.temp(), &[0, 0]);
+    }
+
+    #[test]
+    fn vector_step_matches_scalar() {
+        let mut a = LifArray::new(3, LifParams::default());
+        let mut b = LifArray::new(3, LifParams::default());
+        let spa = vec![act(0.4), act(1.2), act(-0.1)];
+        let mut fired = Vec::new();
+        a.step(&spa, &mut fired);
+        let scalar: Vec<bool> = (0..3).map(|i| b.step_one(i, spa[i])).collect();
+        assert_eq!(fired, scalar);
+        assert_eq!(a.temp(), b.temp());
+    }
+
+    #[test]
+    fn saturation_on_huge_input() {
+        let mut a = LifArray::new(1, LifParams::default());
+        assert!(a.step_one(0, i32::MAX / 2)); // saturates, fires, no overflow
+    }
+}

@@ -1,0 +1,227 @@
+//! `sdt-accel` — leader entrypoint for the sparse Spike-driven Transformer
+//! accelerator: single-shot runs, accuracy evaluation, Table I / Fig 6
+//! regeneration, the batched-serving demo and the parallelism sweep.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::baselines::{aicas23_row, iscas22_row, tcad22_row};
+use spikeformer_accel::cli::{Args, USAGE};
+use spikeformer_accel::coordinator::{
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, PjrtBackend, Request,
+    SimulatorBackend,
+};
+use spikeformer_accel::hw::{AccelConfig, ResourceModel};
+use spikeformer_accel::metrics::{format_table1, AccelRow};
+use spikeformer_accel::model::{load_model, loader::load_test_split, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::runtime::PjrtRuntime;
+use spikeformer_accel::util::Prng;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_str() {
+        "run" => cmd_run(&args),
+        "accuracy" => cmd_accuracy(&args),
+        "table1" => cmd_table1(),
+        "fig6" => cmd_fig6(&args),
+        "serve" => cmd_serve(&args),
+        "sweep" => cmd_sweep(),
+        _ => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn get_model(args: &Args) -> Result<QuantizedModel> {
+    let dir = args.get_or("weights", "artifacts/weights");
+    let path = Path::new(&dir);
+    if path.join("manifest.txt").exists() && args.get("config").is_none() {
+        return load_model(path);
+    }
+    let cfg = match args.get_or("config", "tiny").as_str() {
+        "tiny" => SdtModelConfig::tiny(),
+        "paper" => SdtModelConfig::paper(),
+        other => bail!("unknown config `{other}`"),
+    };
+    Ok(QuantizedModel::random(&cfg, 42))
+}
+
+fn random_image(seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let model = get_model(args)?;
+    let seed = args.usize_or("seed", 1)? as u64;
+    println!(
+        "model `{}`: D={} T={} blocks={}",
+        model.cfg.name, model.cfg.embed_dim, model.cfg.timesteps, model.cfg.num_blocks
+    );
+    let mut accel = Accelerator::new(model, AccelConfig::paper());
+    let report = accel.infer(&random_image(seed))?;
+    println!("{}", report.summary());
+    println!("predicted class: {}", report.argmax());
+    Ok(())
+}
+
+fn cmd_accuracy(args: &Args) -> Result<()> {
+    let dir = args.get_or("weights", "artifacts/weights");
+    let dir = Path::new(&dir);
+    let model = load_model(dir)?;
+    let (imgs, shape, labels) = load_test_split(dir)?;
+    let n = shape[0].min(args.usize_or("limit", 128)?);
+    let img_len = shape[1] * shape[2] * shape[3];
+
+    let mut accel = Accelerator::new(model, AccelConfig::paper());
+    let rt = PjrtRuntime::cpu()?;
+    let float_model = rt.load_hlo(Path::new("artifacts/model.hlo.txt"))?;
+
+    let (mut q_ok, mut f_ok, mut agree) = (0usize, 0usize, 0usize);
+    for i in 0..n {
+        let img = &imgs[i * img_len..(i + 1) * img_len];
+        let rq = accel.infer(img)?;
+        let pf = float_model.run_f32(&[(img, &[1, 3, 32, 32])])?;
+        let qp = rq.argmax();
+        let fp = argmax(&pf[0]);
+        q_ok += (qp == labels[i] as usize) as usize;
+        f_ok += (fp == labels[i] as usize) as usize;
+        agree += (qp == fp) as usize;
+    }
+    println!("n={n}");
+    println!("quantized 10-bit simulator accuracy: {:.2}%", 100.0 * q_ok as f64 / n as f64);
+    println!("float PJRT (JAX AOT) accuracy:       {:.2}%", 100.0 * f_ok as f64 / n as f64);
+    println!("prediction agreement:                {:.2}%", 100.0 * agree as f64 / n as f64);
+    Ok(())
+}
+
+fn cmd_table1() -> Result<()> {
+    // "Ours": paper-scale model on the paper hw config.
+    let cfg = SdtModelConfig::paper();
+    let model = QuantizedModel::random(&cfg, 42);
+    let hw = AccelConfig::paper();
+    let res = ResourceModel::default().estimate(&hw);
+    let mut accel = Accelerator::new(model, hw);
+    let report = accel.infer(&random_image(3))?;
+    let ours = AccelRow {
+        name: "Ours".into(),
+        year: 2024,
+        network: "Trans.*".into(),
+        dataset: "Cifar-10".into(),
+        platform: "Virtex Ultra.".into(),
+        lut: res.lut,
+        ff: res.ff,
+        bram: res.bram,
+        freq_mhz: hw.freq_mhz,
+        gsops: hw.peak_gsops(),
+        gsop_per_w: accel.energy.peak_gsop_per_w(&hw),
+    };
+    let rows = vec![iscas22_row(), tcad22_row(), aicas23_row(), ours];
+    println!("{}", format_table1(&rows));
+    println!(
+        "achieved (this workload): {:.1} GSOP/s, {:.2} GSOP/W",
+        report.gsops, report.gsop_per_w
+    );
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<()> {
+    let model = get_model(args)?;
+    let mut accel = Accelerator::new(model, AccelConfig::paper());
+    let dir = args.get_or("weights", "artifacts/weights");
+    let limit = args.usize_or("limit", 16)?;
+    let mut table: Vec<(String, f64, usize)> = Vec::new();
+    let run = |img: &[f32], accel: &mut Accelerator, table: &mut Vec<(String, f64, usize)>| -> Result<()> {
+        let r = accel.infer(img)?;
+        for (name, s) in r.sparsity {
+            if let Some(e) = table.iter_mut().find(|e| e.0 == name) {
+                e.1 += s;
+                e.2 += 1;
+            } else {
+                table.push((name, s, 1));
+            }
+        }
+        Ok(())
+    };
+    if Path::new(&dir).join("test_images.npy").exists() {
+        let (imgs, shape, _) = load_test_split(Path::new(&dir))?;
+        let img_len = shape[1] * shape[2] * shape[3];
+        for i in 0..shape[0].min(limit) {
+            run(&imgs[i * img_len..(i + 1) * img_len], &mut accel, &mut table)?;
+        }
+    } else {
+        for s in 0..limit as u64 {
+            run(&random_image(s), &mut accel, &mut table)?;
+        }
+    }
+    println!("{:<28}{}", "module", "avg sparsity");
+    for (name, total, n) in &table {
+        println!("{:<28}{:.4}", name, total / *n as f64);
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.usize_or("workers", 2)?;
+    let requests = args.usize_or("requests", 32)?;
+    let batch = args.usize_or("batch", 8)?;
+    let backend = args.get_or("backend", "golden");
+    let model = get_model(args)?;
+
+    let mut factories: Vec<BackendFactory> = Vec::new();
+    for _ in 0..workers {
+        let m = model.clone();
+        let f: BackendFactory = match backend.as_str() {
+            "sim" => Box::new(move || {
+                Ok(Box::new(SimulatorBackend::new(m, AccelConfig::paper())) as _)
+            }),
+            "golden" => Box::new(move || Ok(Box::new(GoldenBackend::new(m)) as _)),
+            "pjrt" => Box::new(move || {
+                Ok(Box::new(PjrtBackend::from_artifacts(Path::new("artifacts"), 3 * 32 * 32, 10)?)
+                    as _)
+            }),
+            other => bail!("unknown backend `{other}`"),
+        };
+        factories.push(f);
+    }
+
+    let policy = BatchPolicy { max_batch: batch, ..Default::default() };
+    let started = Instant::now();
+    let mut co = Coordinator::new(factories, policy);
+    for i in 0..requests {
+        co.submit(Request { id: i as u64, image: random_image(i as u64) });
+    }
+    let (_, report) = co.finish(started)?;
+    println!("backend={backend} workers={workers}");
+    println!("{}", report.summary());
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    let cfg = SdtModelConfig::paper();
+    let model = QuantizedModel::random(&cfg, 42);
+    println!("{:<8}{:>14}{:>14}{:>14}{:>12}", "lanes", "cycles", "GSOP/s", "GSOP/W", "LUT");
+    for lanes in [128, 256, 512, 768, 1024, 1536] {
+        let hw = AccelConfig::with_lanes(lanes);
+        let res = ResourceModel::default().estimate(&hw);
+        let mut accel = Accelerator::new(model.clone(), hw);
+        let r = accel.infer(&random_image(1))?;
+        println!(
+            "{:<8}{:>14}{:>14.1}{:>14.2}{:>12}",
+            lanes, r.total.cycles, r.gsops, r.gsop_per_w, res.lut
+        );
+    }
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,39 @@
+//! Metrics & reporting: the Table I row type, table formatting, and
+//! derived-quantity helpers shared by the benches.
+
+pub mod table;
+
+pub use table::{format_table1, AccelRow};
+
+/// GSOP/s from a SOP count and modelled seconds.
+pub fn gsops(sops: u64, seconds: f64) -> f64 {
+    if seconds <= 0.0 {
+        return 0.0;
+    }
+    sops as f64 / seconds / 1e9
+}
+
+/// Improvement factor a/b with guards.
+pub fn improvement(a: f64, b: f64) -> f64 {
+    if b <= 0.0 {
+        return 0.0;
+    }
+    a / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gsops_math() {
+        assert!((gsops(307_200_000_000, 1.0) - 307.2).abs() < 1e-9);
+        assert_eq!(gsops(10, 0.0), 0.0);
+    }
+
+    #[test]
+    fn improvement_factor() {
+        assert!((improvement(307.2, 23.2) - 13.24).abs() < 0.01);
+        assert!((improvement(25.6, 19.3) - 1.33).abs() < 0.01);
+    }
+}

@@ -1,0 +1,76 @@
+//! Table I row type and formatter: "COMPARISON WITH OTHER SNN ACCELERATORS".
+
+/// One column of Table I.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccelRow {
+    pub name: String,
+    pub year: u32,
+    pub network: String,
+    pub dataset: String,
+    pub platform: String,
+    pub lut: u64,
+    pub ff: u64,
+    pub bram: u64,
+    pub freq_mhz: f64,
+    pub gsops: f64,
+    pub gsop_per_w: f64,
+}
+
+/// Render rows in the paper's Table I layout (metrics as rows, designs as
+/// columns).
+pub fn format_table1(rows: &[AccelRow]) -> String {
+    let mut out = String::new();
+    let headers: Vec<String> = rows.iter().map(|r| r.name.clone()).collect();
+    let field = |label: &str, vals: Vec<String>| {
+        let mut line = format!("{label:<12}");
+        for v in vals {
+            line.push_str(&format!("{v:>16}"));
+        }
+        line.push('\n');
+        line
+    };
+    out.push_str(&field("", headers));
+    out.push_str(&field("Year", rows.iter().map(|r| r.year.to_string()).collect()));
+    out.push_str(&field("Network", rows.iter().map(|r| r.network.clone()).collect()));
+    out.push_str(&field("Dataset", rows.iter().map(|r| r.dataset.clone()).collect()));
+    out.push_str(&field("Platform", rows.iter().map(|r| r.platform.clone()).collect()));
+    out.push_str(&field("LUT", rows.iter().map(|r| r.lut.to_string()).collect()));
+    out.push_str(&field("FF", rows.iter().map(|r| r.ff.to_string()).collect()));
+    out.push_str(&field("BRAM", rows.iter().map(|r| r.bram.to_string()).collect()));
+    out.push_str(&field(
+        "Freq.(MHz)",
+        rows.iter().map(|r| format!("{:.0}", r.freq_mhz)).collect(),
+    ));
+    out.push_str(&field("GSOP/s", rows.iter().map(|r| format!("{:.1}", r.gsops)).collect()));
+    out.push_str(&field(
+        "GSOP/W",
+        rows.iter().map(|r| format!("{:.2}", r.gsop_per_w)).collect(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_all_fields() {
+        let row = AccelRow {
+            name: "Ours".into(),
+            year: 2024,
+            network: "Trans.".into(),
+            dataset: "Cifar-10".into(),
+            platform: "Virtex Ultra.".into(),
+            lut: 453_266,
+            ff: 94_120,
+            bram: 784,
+            freq_mhz: 200.0,
+            gsops: 307.2,
+            gsop_per_w: 25.6,
+        };
+        let t = format_table1(&[row]);
+        for needle in ["Ours", "453266", "94120", "784", "200", "307.2", "25.60"] {
+            assert!(t.contains(needle), "missing {needle} in\n{t}");
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Model hyper-parameters, loadable from the exported `config.txt` and
+//! constructible for the paper operating point.
+
+use anyhow::Result;
+
+use crate::io::ModelConfigFile;
+use crate::lif::LifParams;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct SdtModelConfig {
+    pub name: String,
+    pub img_size: usize,
+    pub in_channels: usize,
+    pub num_classes: usize,
+    pub timesteps: usize,
+    pub embed_dim: usize,
+    pub num_blocks: usize,
+    pub num_heads: usize,
+    pub mlp_hidden: usize,
+    /// SDSA mask-neuron threshold as an integer accumulation count.
+    pub attn_v_th: u32,
+    pub lif_v_th: f32,
+    pub lif_v_reset: f32,
+    pub lif_gamma: f32,
+}
+
+impl SdtModelConfig {
+    /// The trainable `tiny` config (matches `python/compile/config.py`).
+    pub fn tiny() -> Self {
+        Self {
+            name: "tiny".into(),
+            img_size: 32,
+            in_channels: 3,
+            num_classes: 10,
+            timesteps: 2,
+            embed_dim: 64,
+            num_blocks: 1,
+            num_heads: 1,
+            mlp_hidden: 128,
+            attn_v_th: 2,
+            lif_v_th: 1.0,
+            lif_v_reset: 0.0,
+            lif_gamma: 0.5,
+        }
+    }
+
+    /// The paper's CIFAR operating point (Table I workload; T=4, D=384).
+    pub fn paper() -> Self {
+        Self {
+            name: "paper".into(),
+            img_size: 32,
+            in_channels: 3,
+            num_classes: 10,
+            timesteps: 4,
+            embed_dim: 384,
+            num_blocks: 2,
+            num_heads: 8,
+            mlp_hidden: 1536,
+            attn_v_th: 2,
+            lif_v_th: 1.0,
+            lif_v_reset: 0.0,
+            lif_gamma: 0.5,
+        }
+    }
+
+    pub fn from_file(f: &ModelConfigFile) -> Result<Self> {
+        Ok(Self {
+            name: f.kv.get("name").cloned().unwrap_or_else(|| "custom".into()),
+            img_size: f.usize("img_size")?,
+            in_channels: f.usize("in_channels")?,
+            num_classes: f.usize("num_classes")?,
+            timesteps: f.usize("timesteps")?,
+            embed_dim: f.usize("embed_dim")?,
+            num_blocks: f.usize("num_blocks")?,
+            num_heads: f.usize("num_heads")?,
+            mlp_hidden: f.usize("mlp_hidden")?,
+            attn_v_th: f.f32("attn_v_th")? as u32,
+            lif_v_th: f.f32("lif_v_th")?,
+            lif_v_reset: f.f32("lif_v_reset")?,
+            lif_gamma: f.f32("lif_gamma")?,
+        })
+    }
+
+    pub fn lif_params(&self) -> LifParams {
+        LifParams::from_f32(self.lif_v_th, self.lif_v_reset, self.lif_gamma)
+    }
+
+    /// SPS stage output channels: D/8, D/4, D/2, D (min 8 each).
+    pub fn stage_dims(&self) -> [usize; 4] {
+        let d = self.embed_dim;
+        [(d / 8).max(8), (d / 4).max(8), (d / 2).max(8), d]
+    }
+
+    /// Spatial side of each SPS stage *input*: 32, 32, 16, 16 (pools after
+    /// stages 1 and 3), and the token side after SPS.
+    pub fn stage_sides(&self) -> [usize; 4] {
+        let s = self.img_size;
+        [s, s, s / 2, s / 2]
+    }
+
+    pub fn tokens_side(&self) -> usize {
+        self.img_size / 4
+    }
+
+    pub fn num_tokens(&self) -> usize {
+        self.tokens_side() * self.tokens_side()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_matches_python_defaults() {
+        let c = SdtModelConfig::tiny();
+        assert_eq!(c.stage_dims(), [8, 16, 32, 64]);
+        assert_eq!(c.stage_sides(), [32, 32, 16, 16]);
+        assert_eq!(c.num_tokens(), 64);
+        assert_eq!(c.mlp_hidden, 128);
+    }
+
+    #[test]
+    fn paper_point() {
+        let c = SdtModelConfig::paper();
+        assert_eq!(c.embed_dim, 384);
+        assert_eq!(c.stage_dims(), [48, 96, 192, 384]);
+        assert_eq!(c.timesteps, 4);
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let text = "name tiny\nimg_size 32\nin_channels 3\nnum_classes 10\ntimesteps 2\n\
+                    embed_dim 64\nnum_blocks 1\nnum_heads 1\nmlp_hidden 128\nattn_v_th 2.0\n\
+                    lif_v_th 1.0\nlif_v_reset 0.0\nlif_gamma 0.5\n";
+        let f = ModelConfigFile::parse(text);
+        let c = SdtModelConfig::from_file(&f).unwrap();
+        assert_eq!(c, SdtModelConfig::tiny());
+    }
+}

@@ -1,0 +1,342 @@
+//! Quantized-model checkpoints: a self-describing binary format
+//! (`SFAQ` magic, version, config block, little-endian tensors) so a
+//! deployed rust binary can ship one file instead of the npy directory,
+//! and so quantization happens exactly once.
+//!
+//! No serde offline — the format is hand-rolled and versioned; every field
+//! is length-prefixed so readers fail loudly on truncation or skew.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::quant::QuantizedLinear;
+use crate::units::QuantizedConv;
+
+use super::config::SdtModelConfig;
+use super::weights::{QuantizedBlock, QuantizedModel};
+
+const MAGIC: &[u8; 4] = b"SFAQ";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// primitive writers/readers
+// ---------------------------------------------------------------------------
+
+fn w_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_i32<W: Write>(w: &mut W, v: i32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32<W: Write>(w: &mut W, v: f32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_vec_i32<W: Write>(w: &mut W, v: &[i32]) -> Result<()> {
+    w_u32(w, v.len() as u32)?;
+    for &x in v {
+        w_i32(w, x)?;
+    }
+    Ok(())
+}
+
+fn w_vec_i64<W: Write>(w: &mut W, v: &[i64]) -> Result<()> {
+    w_u32(w, v.len() as u32)?;
+    for &x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn w_vec_f32<W: Write>(w: &mut W, v: &[f32]) -> Result<()> {
+    w_u32(w, v.len() as u32)?;
+    for &x in v {
+        w_f32(w, x)?;
+    }
+    Ok(())
+}
+
+fn w_str<W: Write>(w: &mut W, s: &str) -> Result<()> {
+    w_u32(w, s.len() as u32)?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn r_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated checkpoint (u32)")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_i32<R: Read>(r: &mut R) -> Result<i32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated checkpoint (i32)")?;
+    Ok(i32::from_le_bytes(b))
+}
+
+fn r_f32<R: Read>(r: &mut R) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).context("truncated checkpoint (f32)")?;
+    Ok(f32::from_le_bytes(b))
+}
+
+fn r_vec_i32<R: Read>(r: &mut R) -> Result<Vec<i32>> {
+    let n = r_u32(r)? as usize;
+    ensure!(n < 1 << 28, "implausible tensor length {n}");
+    (0..n).map(|_| r_i32(r)).collect()
+}
+
+fn r_vec_i64<R: Read>(r: &mut R) -> Result<Vec<i64>> {
+    let n = r_u32(r)? as usize;
+    ensure!(n < 1 << 28, "implausible tensor length {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b).context("truncated checkpoint (i64)")?;
+        out.push(i64::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+fn r_vec_f32<R: Read>(r: &mut R) -> Result<Vec<f32>> {
+    let n = r_u32(r)? as usize;
+    ensure!(n < 1 << 28, "implausible tensor length {n}");
+    (0..n).map(|_| r_f32(r)).collect()
+}
+
+fn r_str<R: Read>(r: &mut R) -> Result<String> {
+    let n = r_u32(r)? as usize;
+    ensure!(n < 1 << 16, "implausible string length {n}");
+    let mut b = vec![0u8; n];
+    r.read_exact(&mut b).context("truncated checkpoint (str)")?;
+    String::from_utf8(b).context("non-utf8 string in checkpoint")
+}
+
+// ---------------------------------------------------------------------------
+// layer blocks
+// ---------------------------------------------------------------------------
+
+fn w_conv<W: Write>(w: &mut W, c: &QuantizedConv) -> Result<()> {
+    for d in [c.c_out, c.c_in, c.kh, c.kw] {
+        w_u32(w, d as u32)?;
+    }
+    w_i32(w, c.w_frac)?;
+    w_i32(w, c.in_frac)?;
+    w_vec_i32(w, &c.w)?;
+    w_vec_i64(w, &c.bias)?;
+    Ok(())
+}
+
+fn r_conv<R: Read>(r: &mut R) -> Result<QuantizedConv> {
+    let (c_out, c_in, kh, kw) =
+        (r_u32(r)? as usize, r_u32(r)? as usize, r_u32(r)? as usize, r_u32(r)? as usize);
+    let w_frac = r_i32(r)?;
+    let in_frac = r_i32(r)?;
+    let w = r_vec_i32(r)?;
+    let bias = r_vec_i64(r)?;
+    ensure!(w.len() == c_out * c_in * kh * kw, "conv weight length mismatch");
+    ensure!(bias.len() == c_out, "conv bias length mismatch");
+    // rebuild via from_f32 would re-quantize; reconstruct directly and
+    // rebuild the scatter layouts.
+    let mut wt = vec![0i64; w.len()];
+    for o in 0..c_out {
+        for i in 0..c_in {
+            for ky in 0..kh {
+                for kx in 0..kw {
+                    wt[((i * kh + ky) * kw + kx) * c_out + o] =
+                        w[((o * c_in + i) * kh + ky) * kw + kx] as i64;
+                }
+            }
+        }
+    }
+    let wt32 = wt.iter().map(|&v| v as i32).collect();
+    Ok(QuantizedConv { c_out, c_in, kh, kw, w, wt, wt32, w_frac, in_frac, bias })
+}
+
+fn w_linear<W: Write>(w: &mut W, l: &QuantizedLinear) -> Result<()> {
+    w_u32(w, l.in_dim as u32)?;
+    w_u32(w, l.out_dim as u32)?;
+    w_i32(w, l.w_frac)?;
+    w_i32(w, l.in_frac)?;
+    w_vec_i32(w, &l.w)?;
+    w_vec_i64(w, &l.bias)?;
+    Ok(())
+}
+
+fn r_linear<R: Read>(r: &mut R) -> Result<QuantizedLinear> {
+    let in_dim = r_u32(r)? as usize;
+    let out_dim = r_u32(r)? as usize;
+    let w_frac = r_i32(r)?;
+    let in_frac = r_i32(r)?;
+    let w = r_vec_i32(r)?;
+    let bias = r_vec_i64(r)?;
+    ensure!(w.len() == in_dim * out_dim, "linear weight length mismatch");
+    ensure!(bias.len() == out_dim, "linear bias length mismatch");
+    Ok(QuantizedLinear { in_dim, out_dim, w, w_frac, in_frac, bias })
+}
+
+// ---------------------------------------------------------------------------
+// whole model
+// ---------------------------------------------------------------------------
+
+/// Serialize a quantized model to `path`.
+pub fn save_checkpoint(model: &QuantizedModel, path: &Path) -> Result<()> {
+    let mut w =
+        std::io::BufWriter::new(std::fs::File::create(path).context("creating checkpoint")?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, VERSION)?;
+    let c = &model.cfg;
+    w_str(&mut w, &c.name)?;
+    for v in [
+        c.img_size,
+        c.in_channels,
+        c.num_classes,
+        c.timesteps,
+        c.embed_dim,
+        c.num_blocks,
+        c.num_heads,
+        c.mlp_hidden,
+        c.attn_v_th as usize,
+    ] {
+        w_u32(&mut w, v as u32)?;
+    }
+    for v in [c.lif_v_th, c.lif_v_reset, c.lif_gamma] {
+        w_f32(&mut w, v)?;
+    }
+    w_u32(&mut w, model.sps_convs.len() as u32)?;
+    for conv in &model.sps_convs {
+        w_conv(&mut w, conv)?;
+    }
+    w_u32(&mut w, model.blocks.len() as u32)?;
+    for blk in &model.blocks {
+        for lin in [&blk.q, &blk.k, &blk.v, &blk.o, &blk.mlp1, &blk.mlp2] {
+            w_linear(&mut w, lin)?;
+        }
+    }
+    w_vec_f32(&mut w, &model.head_w)?;
+    w_vec_f32(&mut w, &model.head_b)?;
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save_checkpoint`].
+pub fn load_checkpoint(path: &Path) -> Result<QuantizedModel> {
+    let mut r =
+        std::io::BufReader::new(std::fs::File::open(path).context("opening checkpoint")?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic).context("truncated checkpoint (magic)")?;
+    if &magic != MAGIC {
+        bail!("not a SFAQ checkpoint (bad magic {magic:?})");
+    }
+    let version = r_u32(&mut r)?;
+    ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let name = r_str(&mut r)?;
+    let mut u = |r: &mut std::io::BufReader<std::fs::File>| -> Result<usize> {
+        Ok(r_u32(r)? as usize)
+    };
+    let cfg = SdtModelConfig {
+        name,
+        img_size: u(&mut r)?,
+        in_channels: u(&mut r)?,
+        num_classes: u(&mut r)?,
+        timesteps: u(&mut r)?,
+        embed_dim: u(&mut r)?,
+        num_blocks: u(&mut r)?,
+        num_heads: u(&mut r)?,
+        mlp_hidden: u(&mut r)?,
+        attn_v_th: r_u32(&mut r)?,
+        lif_v_th: r_f32(&mut r)?,
+        lif_v_reset: r_f32(&mut r)?,
+        lif_gamma: r_f32(&mut r)?,
+    };
+    let n_convs = r_u32(&mut r)? as usize;
+    ensure!(n_convs == 5, "expected 5 SPS convs, found {n_convs}");
+    let sps_convs = (0..n_convs).map(|_| r_conv(&mut r)).collect::<Result<Vec<_>>>()?;
+    let n_blocks = r_u32(&mut r)? as usize;
+    ensure!(n_blocks == cfg.num_blocks, "block count mismatch");
+    let mut blocks = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let q = r_linear(&mut r)?;
+        let k = r_linear(&mut r)?;
+        let v = r_linear(&mut r)?;
+        let o = r_linear(&mut r)?;
+        let mlp1 = r_linear(&mut r)?;
+        let mlp2 = r_linear(&mut r)?;
+        blocks.push(QuantizedBlock { q, k, v, o, mlp1, mlp2 });
+    }
+    let head_w = r_vec_f32(&mut r)?;
+    let head_b = r_vec_f32(&mut r)?;
+    ensure!(head_w.len() == cfg.embed_dim * cfg.num_classes, "head shape mismatch");
+    Ok(QuantizedModel { cfg, sps_convs, blocks, head_w, head_b })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GoldenExecutor;
+    use crate::util::Prng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("sfaq_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn roundtrip_preserves_inference() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 77);
+        let path = tmp("roundtrip.bin");
+        save_checkpoint(&model, &path).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(loaded.cfg, model.cfg);
+        assert_eq!(loaded.sps_convs[0].w, model.sps_convs[0].w);
+        assert_eq!(loaded.blocks[0].mlp2.bias, model.blocks[0].mlp2.bias);
+        // inference must be bit-identical
+        let mut rng = Prng::new(1);
+        let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+        let a = GoldenExecutor::new(&model).infer(&img);
+        let b = GoldenExecutor::new(&loaded).infer(&img);
+        assert_eq!(a.logits, b.logits);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmp("badmagic.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        assert!(err.to_string().contains("magic"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 8);
+        let path = tmp("trunc.bin");
+        save_checkpoint(&model, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 8);
+        let path = tmp("ver.bin");
+        save_checkpoint(&model, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99; // bump version field
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        assert!(err.to_string().contains("version"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,369 @@
+//! Dense golden executor: runs the identical 10-bit integer pipeline with
+//! plain loops over bitmap/dense tensors — no position encoding, no unit
+//! scheduling. The accelerator datapath must match it *bit-exactly*
+//! (`tests/integration_accel.rs`); it is also the reference for the H1
+//! accuracy experiment and the Fig. 6 sparsity measurement.
+
+use crate::lif::LifArray;
+use crate::quant::{sat, QFormat, QTensor, SaturationTruncation, ACT_FRAC, MEM_BITS};
+use crate::units::QuantizedConv;
+use crate::quant::QuantizedLinear;
+
+use super::weights::QuantizedModel;
+
+/// Result of a golden inference.
+#[derive(Clone, Debug)]
+pub struct GoldenResult {
+    pub logits: Vec<f32>,
+    /// (module name, spike sparsity averaged over timesteps).
+    pub sparsity: Vec<(String, f64)>,
+    /// Total spikes fired anywhere in the network.
+    pub total_spikes: u64,
+}
+
+pub struct GoldenExecutor<'m> {
+    pub model: &'m QuantizedModel,
+}
+
+struct SparsityAcc {
+    records: Vec<(String, u64, u64)>, // name, zeros, total
+}
+
+impl SparsityAcc {
+    fn new() -> Self {
+        Self { records: Vec::new() }
+    }
+
+    fn add(&mut self, name: &str, spikes: &[bool]) {
+        let zeros = spikes.iter().filter(|&&b| !b).count() as u64;
+        if let Some(r) = self.records.iter_mut().find(|r| r.0 == name) {
+            r.1 += zeros;
+            r.2 += spikes.len() as u64;
+        } else {
+            self.records.push((name.to_string(), zeros, spikes.len() as u64));
+        }
+    }
+
+    fn finish(&self) -> Vec<(String, f64)> {
+        self.records
+            .iter()
+            .map(|(n, z, t)| (n.clone(), if *t == 0 { 0.0 } else { *z as f64 / *t as f64 }))
+            .collect()
+    }
+}
+
+impl<'m> GoldenExecutor<'m> {
+    pub fn new(model: &'m QuantizedModel) -> Self {
+        Self { model }
+    }
+
+    /// Dense SAME conv, identical arithmetic to the Tile Engine.
+    fn conv(&self, input: &QTensor, conv: &QuantizedConv, st: &mut SaturationTruncation) -> QTensor {
+        let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+        assert_eq!(c_in, conv.c_in);
+        let (ph, pw) = (conv.kh / 2, conv.kw / 2);
+        let out_fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+        let mut out = QTensor::zeros(&[conv.c_out, h, w], ACT_FRAC);
+        for o in 0..conv.c_out {
+            for oy in 0..h {
+                for ox in 0..w {
+                    let mut acc: i64 = conv.bias[o];
+                    for i in 0..c_in {
+                        for ky in 0..conv.kh {
+                            let iy = oy as isize + ky as isize - ph as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..conv.kw {
+                                let ix = ox as isize + kx as isize - pw as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let v = input.data[(i * h + iy as usize) * w + ix as usize];
+                                let wt = conv.w[((o * c_in + i) * conv.kh + ky) * conv.kw + kx];
+                                acc += v as i64 * wt as i64;
+                            }
+                        }
+                    }
+                    out.data[(o * h + oy) * w + ox] =
+                        st.convert(acc, conv.w_frac + conv.in_frac, out_fmt);
+                }
+            }
+        }
+        out
+    }
+
+    /// Dense linear: `[L, C_in]` spikes -> `[L, C_out]` values.
+    fn linear(
+        &self,
+        spikes: &[bool],
+        l: usize,
+        layer: &QuantizedLinear,
+        st: &mut SaturationTruncation,
+    ) -> Vec<i32> {
+        assert_eq!(spikes.len(), l * layer.in_dim);
+        let out_fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+        let mut out = vec![0i32; l * layer.out_dim];
+        for tok in 0..l {
+            let row_in = &spikes[tok * layer.in_dim..(tok + 1) * layer.in_dim];
+            let mut acc: Vec<i64> = layer.bias.clone();
+            for (c, &s) in row_in.iter().enumerate() {
+                if s {
+                    for (a, &wv) in acc.iter_mut().zip(layer.row(c)) {
+                        *a += wv as i64;
+                    }
+                }
+            }
+            for (o, a) in out[tok * layer.out_dim..(tok + 1) * layer.out_dim]
+                .iter_mut()
+                .zip(acc.iter())
+            {
+                *o = st.convert(*a, layer.acc_frac(), out_fmt);
+            }
+        }
+        out
+    }
+
+    /// Full inference of one image (`[3*H*W]` f32, CHW order).
+    pub fn infer(&self, image: &[f32]) -> GoldenResult {
+        let cfg = &self.model.cfg;
+        let mut st = SaturationTruncation::new();
+        let mut sp = SparsityAcc::new();
+        let mut total_spikes: u64 = 0;
+
+        let act = QFormat::new(MEM_BITS, ACT_FRAC);
+        let side = cfg.img_size;
+        let input = QTensor::from_f32(image, &[cfg.in_channels, side, side], act);
+
+        let dims = cfg.stage_dims();
+        let (l_tokens, d) = (cfg.num_tokens(), cfg.embed_dim);
+
+        // Persistent LIF state across timesteps, one array per spiking site.
+        let mut lif_stage: Vec<LifArray> = (0..4)
+            .map(|i| {
+                let s = if i < 2 { side } else { side / 2 };
+                LifArray::new(dims[i] * s * s, cfg.lif_params())
+            })
+            .collect();
+        let mut lif_block: Vec<[LifArray; 6]> = (0..cfg.num_blocks)
+            .map(|_| {
+                [
+                    LifArray::new(l_tokens * d, cfg.lif_params()), // in
+                    LifArray::new(l_tokens * d, cfg.lif_params()), // q
+                    LifArray::new(l_tokens * d, cfg.lif_params()), // k
+                    LifArray::new(l_tokens * d, cfg.lif_params()), // v
+                    LifArray::new(l_tokens * d, cfg.lif_params()), // mlp in
+                    LifArray::new(l_tokens * cfg.mlp_hidden, cfg.lif_params()), // mlp hidden
+                ]
+            })
+            .collect();
+        let mut lif_head = LifArray::new(l_tokens * d, cfg.lif_params());
+
+        let mut head_counts = vec![0u64; d];
+
+        for _t in 0..cfg.timesteps {
+            // ---------------- SPS ----------------
+            let mut cur = input.clone();
+            let mut cur_spikes: Vec<bool> = Vec::new();
+            for i in 0..4 {
+                let y = self.conv(&cur, &self.model.sps_convs[i], &mut st);
+                let mut spikes = vec![false; y.len()];
+                for (j, &v) in y.data.iter().enumerate() {
+                    spikes[j] = lif_stage[i].step_one(j, v);
+                }
+                let (c, mut hh, mut ww) = (y.shape[0], y.shape[1], y.shape[2]);
+                if i == 1 || i == 3 {
+                    // dense 2x2/2 OR-maxpool
+                    let (oh, ow) = (hh / 2, ww / 2);
+                    let mut pooled = vec![false; c * oh * ow];
+                    for ch in 0..c {
+                        for oy in 0..oh {
+                            for ox in 0..ow {
+                                let mut any = false;
+                                for ky in 0..2 {
+                                    for kx in 0..2 {
+                                        any |= spikes[(ch * hh + oy * 2 + ky) * ww + ox * 2 + kx];
+                                    }
+                                }
+                                pooled[(ch * oh + oy) * ow + ox] = any;
+                            }
+                        }
+                    }
+                    spikes = pooled;
+                    hh = oh;
+                    ww = ow;
+                }
+                sp.add(&format!("sps.stage{i}.spikes"), &spikes);
+                total_spikes += spikes.iter().filter(|&&b| b).count() as u64;
+                // next conv input: binary spikes at frac 0
+                cur = QTensor {
+                    shape: vec![c, hh, ww],
+                    frac: 0,
+                    data: spikes.iter().map(|&b| b as i32).collect(),
+                };
+                cur_spikes = spikes;
+            }
+
+            // RPE conv + residual (value + spike).
+            let rpe = self.conv(&cur, &self.model.sps_convs[4], &mut st);
+            let mut u_cl: Vec<i32> = rpe.data.clone(); // [D, L] channel-major
+            let one = 1i64 << ACT_FRAC;
+            for (j, &s) in cur_spikes.iter().enumerate() {
+                if s {
+                    u_cl[j] = sat(u_cl[j] as i64 + one, MEM_BITS);
+                }
+            }
+            // to token-major [L, D]
+            let mut u = vec![0i32; l_tokens * d];
+            for c in 0..d {
+                for l in 0..l_tokens {
+                    u[l * d + c] = u_cl[c * l_tokens + l];
+                }
+            }
+
+            // ---------------- SDEB blocks ----------------
+            for (bi, blk) in self.model.blocks.iter().enumerate() {
+                let lifs = &mut lif_block[bi];
+
+                let mut s_in = vec![false; l_tokens * d];
+                for (j, &v) in u.iter().enumerate() {
+                    s_in[j] = lifs[0].step_one(j, v);
+                }
+                sp.add(&format!("block{bi}.in.spikes"), &s_in);
+                total_spikes += s_in.iter().filter(|&&b| b).count() as u64;
+
+                let fire =
+                    |vals: &[i32], lif: &mut LifArray| -> Vec<bool> {
+                        vals.iter().enumerate().map(|(j, &v)| lif.step_one(j, v)).collect()
+                    };
+
+                let qv = self.linear(&s_in, l_tokens, &blk.q, &mut st);
+                let kv = self.linear(&s_in, l_tokens, &blk.k, &mut st);
+                let vv = self.linear(&s_in, l_tokens, &blk.v, &mut st);
+                let q_s = fire(&qv, &mut lifs[1]);
+                let k_s = fire(&kv, &mut lifs[2]);
+                let v_s = fire(&vv, &mut lifs[3]);
+                sp.add(&format!("block{bi}.q.spikes"), &q_s);
+                sp.add(&format!("block{bi}.k.spikes"), &k_s);
+                sp.add(&format!("block{bi}.v.spikes"), &v_s);
+                total_spikes +=
+                    (q_s.iter().chain(&k_s).chain(&v_s)).filter(|&&b| b).count() as u64;
+
+                // SDSA: per-channel token-dim accumulation + threshold mask.
+                let mut attn = vec![false; l_tokens * d];
+                for c in 0..d {
+                    let mut count = 0u32;
+                    for l in 0..l_tokens {
+                        if q_s[l * d + c] && k_s[l * d + c] {
+                            count += 1;
+                        }
+                    }
+                    if count >= cfg.attn_v_th {
+                        for l in 0..l_tokens {
+                            attn[l * d + c] = v_s[l * d + c];
+                        }
+                    }
+                }
+                sp.add(&format!("block{bi}.sdsa.spikes"), &attn);
+
+                let ov = self.linear(&attn, l_tokens, &blk.o, &mut st);
+                for (uu, &o) in u.iter_mut().zip(&ov) {
+                    *uu = sat(*uu as i64 + o as i64, MEM_BITS);
+                }
+
+                let mut s2 = vec![false; l_tokens * d];
+                for (j, &v) in u.iter().enumerate() {
+                    s2[j] = lifs[4].step_one(j, v);
+                }
+                sp.add(&format!("block{bi}.mlp.in.spikes"), &s2);
+                let hv = self.linear(&s2, l_tokens, &blk.mlp1, &mut st);
+                let s3 = fire(&hv, &mut lifs[5]);
+                sp.add(&format!("block{bi}.mlp.hidden.spikes"), &s3);
+                total_spikes += (s2.iter().chain(&s3)).filter(|&&b| b).count() as u64;
+                let m2 = self.linear(&s3, l_tokens, &blk.mlp2, &mut st);
+                for (uu, &o) in u.iter_mut().zip(&m2) {
+                    *uu = sat(*uu as i64 + o as i64, MEM_BITS);
+                }
+            }
+
+            // ---------------- head pooling ----------------
+            let mut s_out = vec![false; l_tokens * d];
+            for (j, &v) in u.iter().enumerate() {
+                s_out[j] = lif_head.step_one(j, v);
+            }
+            sp.add("head.in.spikes", &s_out);
+            for l in 0..l_tokens {
+                for c in 0..d {
+                    if s_out[l * d + c] {
+                        head_counts[c] += 1;
+                        total_spikes += 1;
+                    }
+                }
+            }
+        }
+
+        // Host-side classification head on pooled spike rates.
+        let denom = (cfg.timesteps * l_tokens) as f32;
+        let mut logits = self.model.head_b.clone();
+        for c in 0..d {
+            let rate = head_counts[c] as f32 / denom;
+            if rate != 0.0 {
+                for k in 0..cfg.num_classes {
+                    logits[k] += rate * self.model.head_w[c * cfg.num_classes + k];
+                }
+            }
+        }
+
+        GoldenResult { logits, sparsity: sp.finish(), total_spikes }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::SdtModelConfig;
+    use crate::util::Prng;
+
+    fn random_image(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.next_f32_signed()).collect()
+    }
+
+    #[test]
+    fn golden_runs_tiny_random() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 3);
+        let img = random_image(1, 3 * 32 * 32);
+        let res = GoldenExecutor::new(&model).infer(&img);
+        assert_eq!(res.logits.len(), 10);
+        assert!(res.logits.iter().all(|v| v.is_finite()));
+        assert!(res.total_spikes > 0, "random model should spike");
+        // sparsity names include the Fig-6 modules
+        let names: Vec<&str> = res.sparsity.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"block0.q.spikes"));
+        assert!(names.contains(&"block0.sdsa.spikes"));
+        for (_, s) in &res.sparsity {
+            assert!((0.0..=1.0).contains(s));
+        }
+    }
+
+    #[test]
+    fn golden_deterministic() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 3);
+        let img = random_image(2, 3 * 32 * 32);
+        let a = GoldenExecutor::new(&model).infer(&img);
+        let b = GoldenExecutor::new(&model).infer(&img);
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_spikes, b.total_spikes);
+    }
+
+    #[test]
+    fn different_images_different_logits() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 3);
+        let a = GoldenExecutor::new(&model).infer(&random_image(1, 3 * 32 * 32));
+        let b = GoldenExecutor::new(&model).infer(&random_image(9, 3 * 32 * 32));
+        assert_ne!(a.logits, b.logits);
+    }
+}

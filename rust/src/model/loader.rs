@@ -1,0 +1,98 @@
+//! Load the trained, BN-folded weights exported by `python/compile/train.py`
+//! into a [`QuantizedModel`] (quantization happens here, on the rust side,
+//! so the whole 10-bit pipeline is exercised end to end).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::io::{Manifest, ModelConfigFile};
+use crate::quant::{QuantizedLinear, ACT_FRAC};
+use crate::units::QuantizedConv;
+
+use super::config::SdtModelConfig;
+use super::weights::{QuantizedBlock, QuantizedModel};
+
+/// Load `config.txt` + `manifest.txt` + `.npy` weights from `dir`
+/// (normally `artifacts/weights/`).
+pub fn load_model(dir: &Path) -> Result<QuantizedModel> {
+    let cfg = SdtModelConfig::from_file(&ModelConfigFile::load(dir)?)?;
+    let m = Manifest::load(dir)?;
+
+    let mut sps_convs = Vec::new();
+    let stage_names: Vec<String> =
+        (0..4).map(|i| format!("sps.stage{i}")).chain(["sps.rpe".to_string()]).collect();
+    let dims = cfg.stage_dims();
+    let mut c_prev = cfg.in_channels;
+    for (i, name) in stage_names.iter().enumerate() {
+        let (w, ws) = m.load_f32(&format!("{name}.w"))?;
+        let (b, _) = m.load_f32(&format!("{name}.b"))?;
+        let (c_out, c_in) = (ws[0], ws[1]);
+        let expect_out = if i < 4 { dims[i] } else { cfg.embed_dim };
+        let expect_in = if i < 4 { c_prev } else { cfg.embed_dim };
+        ensure!(c_out == expect_out && c_in == expect_in, "conv `{name}` shape {ws:?}");
+        let in_frac = if i == 0 { ACT_FRAC } else { 0 };
+        sps_convs.push(QuantizedConv::from_f32(&w, &b, c_out, c_in, ws[2], ws[3], in_frac));
+        if i < 4 {
+            c_prev = dims[i];
+        }
+    }
+
+    let mut blocks = Vec::new();
+    for bi in 0..cfg.num_blocks {
+        let lin = |lname: &str| -> Result<QuantizedLinear> {
+            let (w, ws) = m.load_f32(&format!("block{bi}.{lname}.w"))?;
+            let (b, _) = m.load_f32(&format!("block{bi}.{lname}.b"))?;
+            // python exports [in, out] row-major — exactly the SLU layout.
+            Ok(QuantizedLinear::from_f32(&w, &b, ws[0], ws[1], 0))
+        };
+        blocks.push(QuantizedBlock {
+            q: lin("q")?,
+            k: lin("k")?,
+            v: lin("v")?,
+            o: lin("o")?,
+            mlp1: lin("mlp1")?,
+            mlp2: lin("mlp2")?,
+        });
+    }
+
+    let (head_w, hs) = m.load_f32("head.w").context("head.w")?;
+    let (head_b, _) = m.load_f32("head.b")?;
+    ensure!(hs == vec![cfg.embed_dim, cfg.num_classes], "head shape {hs:?}");
+
+    Ok(QuantizedModel { cfg, sps_convs, blocks, head_w, head_b })
+}
+
+/// Load the exported held-out split (`test_images.npy` / `test_labels.npy`).
+pub fn load_test_split(dir: &Path) -> Result<(Vec<f32>, Vec<usize>, Vec<i32>)> {
+    let imgs = crate::io::NpyArray::load(&dir.join("test_images.npy"))?;
+    let labels = crate::io::NpyArray::load(&dir.join("test_labels.npy"))?;
+    let shape = imgs.shape.clone();
+    ensure!(shape.len() == 4, "expect [N,C,H,W] images");
+    Ok((imgs.as_f32()?, shape, labels.as_i32()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new("artifacts/weights");
+        if !dir.join("manifest.txt").exists() {
+            return; // pre-`make artifacts` environment
+        }
+        let model = load_model(dir).unwrap();
+        assert_eq!(model.cfg.name, "tiny");
+        assert_eq!(model.sps_convs.len(), 5);
+        assert_eq!(model.blocks.len(), model.cfg.num_blocks);
+        // quantized weights are within 10-bit range
+        for conv in &model.sps_convs {
+            assert!(conv.w.iter().all(|&w| (-512..=511).contains(&w)));
+        }
+        let (imgs, shape, labels) = load_test_split(dir).unwrap();
+        assert_eq!(shape[1..], [3, 32, 32]);
+        assert_eq!(imgs.len(), shape.iter().product::<usize>());
+        assert_eq!(labels.len(), shape[0]);
+    }
+}

@@ -1,0 +1,17 @@
+//! The Spike-driven Transformer model on the rust side: configuration
+//! (mirroring `python/compile/config.py`), BN-folded quantized weights
+//! loaded from the artifact manifest, and a dense *golden executor* that
+//! computes the identical integer pipeline without any spike encoding —
+//! the bit-exactness oracle for the accelerator datapath.
+
+pub mod config;
+pub mod export;
+pub mod golden;
+pub mod loader;
+pub mod weights;
+
+pub use config::SdtModelConfig;
+pub use export::{load_checkpoint, save_checkpoint};
+pub use golden::GoldenExecutor;
+pub use loader::load_model;
+pub use weights::{QuantizedBlock, QuantizedModel};

@@ -1,0 +1,119 @@
+//! Quantized (BN-folded) model weights, plus a deterministic random
+//! generator for the paper-scale hardware benchmarks where trained weights
+//! are unnecessary (cycle/energy accounting only needs realistic sparsity).
+
+use crate::quant::{QuantizedLinear, ACT_FRAC};
+use crate::units::QuantizedConv;
+use crate::util::Prng;
+
+use super::config::SdtModelConfig;
+
+/// One Spike-driven Encoder Block's linear layers.
+#[derive(Clone, Debug)]
+pub struct QuantizedBlock {
+    pub q: QuantizedLinear,
+    pub k: QuantizedLinear,
+    pub v: QuantizedLinear,
+    pub o: QuantizedLinear,
+    pub mlp1: QuantizedLinear,
+    pub mlp2: QuantizedLinear,
+}
+
+/// The full BN-folded, quantized Spike-driven Transformer.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub cfg: SdtModelConfig,
+    /// stage0..3 then rpe.
+    pub sps_convs: Vec<QuantizedConv>,
+    pub blocks: Vec<QuantizedBlock>,
+    /// Classification head (runs host-side on pooled spike rates).
+    pub head_w: Vec<f32>, // [D, classes]
+    pub head_b: Vec<f32>,
+}
+
+impl QuantizedModel {
+    /// Deterministic random model at any config — used by the Table I /
+    /// ablation benches at the paper scale.
+    pub fn random(cfg: &SdtModelConfig, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let dims = cfg.stage_dims();
+        let mut sps_convs = Vec::new();
+        let mut c_prev = cfg.in_channels;
+        for (i, &c) in dims.iter().enumerate() {
+            // Stage 0 sees activation-format pixels; later stages see spikes.
+            let in_frac = if i == 0 { ACT_FRAC } else { 0 };
+            sps_convs.push(random_conv(&mut rng, c, c_prev, in_frac, i));
+            c_prev = c;
+        }
+        sps_convs.push(random_conv(&mut rng, cfg.embed_dim, cfg.embed_dim, 0, 4));
+
+        let (d, h) = (cfg.embed_dim, cfg.mlp_hidden);
+        let blocks = (0..cfg.num_blocks)
+            .map(|_| QuantizedBlock {
+                q: random_linear(&mut rng, d, d),
+                k: random_linear(&mut rng, d, d),
+                v: random_linear(&mut rng, d, d),
+                o: random_linear(&mut rng, d, d),
+                mlp1: random_linear(&mut rng, d, h),
+                mlp2: random_linear(&mut rng, h, d),
+            })
+            .collect();
+
+        let head_w = (0..d * cfg.num_classes).map(|_| rng.next_f32_signed()).collect();
+        let head_b = (0..cfg.num_classes).map(|_| rng.next_f32_signed() * 0.1).collect();
+        Self { cfg: cfg.clone(), sps_convs, blocks, head_w, head_b }
+    }
+}
+
+fn random_conv(rng: &mut Prng, c_out: usize, c_in: usize, in_frac: i32, stage: usize) -> QuantizedConv {
+    let n = c_out * c_in * 9;
+    // He-style scale; slight positive bias keeps spike rates realistic
+    // (~10-30%) through the random SPS stack.
+    let std = (2.0 / (c_in as f64 * 9.0)).sqrt() as f32;
+    let w: Vec<f32> = (0..n).map(|_| (rng.normal() as f32) * std).collect();
+    let b: Vec<f32> = (0..c_out).map(|_| 0.15 + 0.1 * rng.next_f32_signed()).collect();
+    let _ = stage;
+    QuantizedConv::from_f32(&w, &b, c_out, c_in, 3, 3, in_frac)
+}
+
+fn random_linear(rng: &mut Prng, c_in: usize, c_out: usize) -> QuantizedLinear {
+    let std = (2.0 / c_in as f64).sqrt() as f32;
+    let w: Vec<f32> = (0..c_in * c_out).map(|_| (rng.normal() as f32) * std).collect();
+    let b: Vec<f32> = (0..c_out).map(|_| 0.1 + 0.05 * rng.next_f32_signed()).collect();
+    QuantizedLinear::from_f32(&w, &b, c_in, c_out, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_model_shapes() {
+        let cfg = SdtModelConfig::tiny();
+        let m = QuantizedModel::random(&cfg, 1);
+        assert_eq!(m.sps_convs.len(), 5);
+        assert_eq!(m.sps_convs[0].c_in, 3);
+        assert_eq!(m.sps_convs[0].c_out, 8);
+        assert_eq!(m.sps_convs[4].c_in, 64); // rpe
+        assert_eq!(m.blocks.len(), 1);
+        assert_eq!(m.blocks[0].mlp1.out_dim, 128);
+        assert_eq!(m.head_w.len(), 64 * 10);
+    }
+
+    #[test]
+    fn random_model_deterministic() {
+        let cfg = SdtModelConfig::tiny();
+        let a = QuantizedModel::random(&cfg, 7);
+        let b = QuantizedModel::random(&cfg, 7);
+        assert_eq!(a.sps_convs[0].w, b.sps_convs[0].w);
+        assert_eq!(a.blocks[0].q.w, b.blocks[0].q.w);
+    }
+
+    #[test]
+    fn stage0_uses_pixel_frac() {
+        let cfg = SdtModelConfig::tiny();
+        let m = QuantizedModel::random(&cfg, 1);
+        assert_eq!(m.sps_convs[0].in_frac, ACT_FRAC);
+        assert_eq!(m.sps_convs[1].in_frac, 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Fixed-point primitives: saturation, rounding shifts, Q-format metadata.
+
+/// Saturate `v` into a signed `bits`-wide integer range.
+#[inline]
+pub fn sat(v: i64, bits: u32) -> i32 {
+    debug_assert!(bits >= 2 && bits <= 32);
+    let hi = (1i64 << (bits - 1)) - 1;
+    let lo = -(1i64 << (bits - 1));
+    v.clamp(lo, hi) as i32
+}
+
+/// Arithmetic right shift with round-to-nearest (ties away from zero);
+/// negative `shift` is a left shift. Mirrors the RTL rounding stage.
+#[inline]
+pub fn rshift_round(v: i64, shift: i32) -> i64 {
+    if shift <= 0 {
+        return v << (-shift) as u32;
+    }
+    let s = shift as u32;
+    let bias = 1i64 << (s - 1);
+    if v >= 0 {
+        (v + bias) >> s
+    } else {
+        -((-v + bias) >> s)
+    }
+}
+
+/// A power-of-two-scaled signed fixed-point format: value = raw * 2^-frac.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub bits: u32,
+    pub frac: i32,
+}
+
+impl QFormat {
+    pub const fn new(bits: u32, frac: i32) -> Self {
+        Self { bits, frac }
+    }
+
+    /// Largest representable real value.
+    pub fn max_value(&self) -> f64 {
+        (((1i64 << (self.bits - 1)) - 1) as f64) * self.scale()
+    }
+
+    pub fn scale(&self) -> f64 {
+        2f64.powi(-self.frac)
+    }
+
+    /// Quantize a real value (round-to-nearest, saturating).
+    pub fn from_f32(&self, v: f32) -> i32 {
+        let raw = (v as f64 / self.scale()).round() as i64;
+        sat(raw, self.bits)
+    }
+
+    pub fn to_f32(&self, raw: i32) -> f32 {
+        (raw as f64 * self.scale()) as f32
+    }
+}
+
+/// The Saturation-Truncation Module of Fig. 5(b): re-scale a wide
+/// accumulator into a narrower output format, counting saturation events
+/// (useful for quantization debugging and the paper's bit-width ablation).
+#[derive(Clone, Debug, Default)]
+pub struct SaturationTruncation {
+    pub saturations: u64,
+    pub conversions: u64,
+}
+
+impl SaturationTruncation {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Convert `acc` (at `acc_frac` fractional bits) into `out` format.
+    #[inline]
+    pub fn convert(&mut self, acc: i64, acc_frac: i32, out: QFormat) -> i32 {
+        let shifted = rshift_round(acc, acc_frac - out.frac);
+        let clamped = sat(shifted, out.bits);
+        self.conversions += 1;
+        if clamped as i64 != shifted {
+            self.saturations += 1;
+        }
+        clamped
+    }
+
+    pub fn saturation_rate(&self) -> f64 {
+        if self.conversions == 0 {
+            0.0
+        } else {
+            self.saturations as f64 / self.conversions as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sat_clamps_both_sides() {
+        assert_eq!(sat(511, 10), 511);
+        assert_eq!(sat(512, 10), 511);
+        assert_eq!(sat(-512, 10), -512);
+        assert_eq!(sat(-513, 10), -512);
+        assert_eq!(sat(0, 10), 0);
+    }
+
+    #[test]
+    fn rshift_round_nearest() {
+        assert_eq!(rshift_round(5, 1), 3); // 2.5 -> 3
+        assert_eq!(rshift_round(4, 1), 2);
+        assert_eq!(rshift_round(-5, 1), -3); // -2.5 -> -3 (away from zero)
+        assert_eq!(rshift_round(6, 2), 2); // 1.5 -> 2
+        assert_eq!(rshift_round(3, 0), 3);
+        assert_eq!(rshift_round(3, -2), 12); // left shift
+    }
+
+    #[test]
+    fn qformat_roundtrip() {
+        let q = QFormat::new(10, 6);
+        assert_eq!(q.from_f32(1.0), 64);
+        assert_eq!(q.to_f32(64), 1.0);
+        assert_eq!(q.from_f32(100.0), 511); // saturates
+        assert_eq!(q.from_f32(-100.0), -512);
+        let v = 0.421_f32;
+        let err = (q.to_f32(q.from_f32(v)) - v).abs();
+        assert!(err <= q.scale() as f32 / 2.0 + 1e-6);
+    }
+
+    #[test]
+    fn sat_trunc_counts() {
+        let mut st = SaturationTruncation::new();
+        let out = QFormat::new(10, 6);
+        // acc at frac 12 representing 2.0 -> fits
+        assert_eq!(st.convert(2 << 12, 12, out), 128);
+        // representing 100.0 -> saturates to 511
+        assert_eq!(st.convert(100 << 12, 12, out), 511);
+        assert_eq!(st.saturations, 1);
+        assert_eq!(st.conversions, 2);
+        assert!((st.saturation_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sat_trunc_negative_saturation() {
+        let mut st = SaturationTruncation::new();
+        let out = QFormat::new(10, 6);
+        assert_eq!(st.convert(-(100i64 << 12), 12, out), -512);
+        assert_eq!(st.saturations, 1);
+    }
+}

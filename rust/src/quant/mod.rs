@@ -1,0 +1,41 @@
+//! Fixed-point quantization substrate (paper §IV-A: 10-bit weights and
+//! activations, 8-bit encoded spikes).
+//!
+//! All on-chip arithmetic in the simulator and the golden executor runs on
+//! `i32` lanes carrying power-of-two-scaled fixed-point values, so the two
+//! are bit-exact by construction. The [`fixed::SaturationTruncation`] module
+//! models the unit of the same name in Fig. 5(b).
+
+pub mod fixed;
+pub mod quantizer;
+pub mod tensor;
+
+pub use fixed::{rshift_round, sat, QFormat, SaturationTruncation};
+pub use quantizer::{quantize_bias, quantize_weights, QuantizedLinear};
+pub use tensor::QTensor;
+
+/// Bit width of weights and activations (paper: 10-bit quantization).
+pub const ACT_BITS: u32 = 10;
+/// Bit width of weights.
+pub const WEIGHT_BITS: u32 = 10;
+/// Bit width of an encoded spike address (paper: 8-bit encoded spikes).
+pub const ADDR_BITS: u32 = 8;
+/// Tokens addressable per encoding segment (2^ADDR_BITS).
+pub const SEGMENT_TOKENS: usize = 1 << ADDR_BITS as usize;
+/// Fractional bits of the shared activation format (Q3.6 in 10 bits).
+pub const ACT_FRAC: i32 = 6;
+/// Membrane accumulators are kept wider than activations (16-bit) before
+/// saturation-truncation back to the activation format.
+pub const MEM_BITS: u32 = 16;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_are_consistent() {
+        assert_eq!(SEGMENT_TOKENS, 256);
+        assert!(ACT_FRAC < ACT_BITS as i32);
+        assert!(MEM_BITS > ACT_BITS);
+    }
+}

@@ -1,0 +1,137 @@
+//! Weight/bias quantization: per-layer power-of-two scales so the
+//! accumulator re-scaling is a pure shift (hardware-friendly, matching the
+//! paper's Saturation-Truncation stage).
+
+use super::fixed::{sat, QFormat};
+use super::{ACT_FRAC, WEIGHT_BITS};
+
+/// Pick the largest fractional-bit count such that `max|w| * 2^frac` fits in
+/// a signed `bits` integer. Clamped to [0, 20] to bound the shift network.
+pub fn weight_frac(weights: &[f32], bits: u32) -> i32 {
+    let max_abs = weights.iter().fold(0f32, |m, &w| m.max(w.abs()));
+    if max_abs == 0.0 {
+        return 20;
+    }
+    let limit = ((1i64 << (bits - 1)) - 1) as f32;
+    let mut frac = (limit / max_abs).log2().floor() as i32;
+    frac = frac.clamp(0, 20);
+    frac
+}
+
+/// Quantize a weight array with a per-layer power-of-two scale.
+/// Returns (quantized, frac).
+pub fn quantize_weights(weights: &[f32]) -> (Vec<i32>, i32) {
+    let frac = weight_frac(weights, WEIGHT_BITS);
+    let fmt = QFormat::new(WEIGHT_BITS, frac);
+    (weights.iter().map(|&w| fmt.from_f32(w)).collect(), frac)
+}
+
+/// Quantize biases at the accumulator scale `acc_frac` (wide, 24-bit) so
+/// they can be added before the saturation-truncation shift.
+pub fn quantize_bias(bias: &[f32], acc_frac: i32) -> Vec<i64> {
+    let scale = 2f64.powi(acc_frac);
+    bias.iter()
+        .map(|&b| sat(((b as f64) * scale).round() as i64, 24) as i64)
+        .collect()
+}
+
+/// A fully-quantized linear layer: weights at `w_frac`, bias at the
+/// accumulator scale (`w_frac + in_frac`), plus the bookkeeping needed to
+/// drop the result back into the activation format.
+#[derive(Clone, Debug)]
+pub struct QuantizedLinear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Row-major `[in_dim][out_dim]` — row `c` is the weight row the SLU
+    /// accumulates when input channel `c` spikes (Fig. 5).
+    pub w: Vec<i32>,
+    pub w_frac: i32,
+    /// Input fractional bits (0 for binary spike inputs).
+    pub in_frac: i32,
+    pub bias: Vec<i64>,
+}
+
+impl QuantizedLinear {
+    pub fn from_f32(w: &[f32], bias: &[f32], in_dim: usize, out_dim: usize, in_frac: i32) -> Self {
+        assert_eq!(w.len(), in_dim * out_dim);
+        assert_eq!(bias.len(), out_dim);
+        let (wq, w_frac) = quantize_weights(w);
+        let acc_frac = w_frac + in_frac;
+        Self { in_dim, out_dim, w: wq, w_frac, in_frac, bias: quantize_bias(bias, acc_frac) }
+    }
+
+    /// Accumulator fractional bits (input scale x weight scale).
+    #[inline]
+    pub fn acc_frac(&self) -> i32 {
+        self.w_frac + self.in_frac
+    }
+
+    /// Shift to go from accumulator scale to activation scale.
+    #[inline]
+    pub fn out_shift(&self) -> i32 {
+        self.acc_frac() - ACT_FRAC
+    }
+
+    #[inline]
+    pub fn row(&self, c: usize) -> &[i32] {
+        &self.w[c * self.out_dim..(c + 1) * self.out_dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_frac_fits_max() {
+        let w = [0.5f32, -0.25, 0.1];
+        let frac = weight_frac(&w, 10);
+        let limit = 511f32;
+        assert!(0.5 * 2f32.powi(frac) <= limit);
+        assert!(0.5 * 2f32.powi(frac + 1) > limit);
+    }
+
+    #[test]
+    fn quantize_weights_max_uses_range() {
+        let w = [1.0f32, -1.0, 0.5];
+        let (q, frac) = quantize_weights(&w);
+        assert_eq!(frac, 8); // 1.0 * 2^8 = 256 <= 511 < 1.0 * 2^9
+        assert_eq!(q, vec![256, -256, 128]);
+    }
+
+    #[test]
+    fn zero_weights_dont_panic() {
+        let (q, frac) = quantize_weights(&[0.0, 0.0]);
+        assert_eq!(q, vec![0, 0]);
+        assert_eq!(frac, 20);
+    }
+
+    #[test]
+    fn quantized_linear_layout() {
+        let w = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // [3][2]
+        let l = QuantizedLinear::from_f32(&w, &[0.0, 0.0], 3, 2, 0);
+        assert_eq!(l.row(1).len(), 2);
+        let scale = 2f32.powi(l.w_frac);
+        assert_eq!(l.row(1)[0], (3.0 * scale).round() as i32);
+        assert_eq!(l.out_shift(), l.w_frac - ACT_FRAC);
+    }
+
+    #[test]
+    fn bias_at_accumulator_scale() {
+        let b = quantize_bias(&[1.0, -0.5], 8);
+        assert_eq!(b, vec![256, -128]);
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut xs = Vec::new();
+        for i in 0..100 {
+            xs.push((i as f32 - 50.0) / 37.0);
+        }
+        let (q, frac) = quantize_weights(&xs);
+        let scale = 2f32.powi(-frac);
+        for (orig, &qi) in xs.iter().zip(&q) {
+            assert!((orig - qi as f32 * scale).abs() <= scale / 2.0 + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Dense integer tensors carrying fixed-point values through the pipeline.
+
+use super::fixed::QFormat;
+
+/// A dense row-major integer tensor with a shared Q-format.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QTensor {
+    pub shape: Vec<usize>,
+    pub frac: i32,
+    pub data: Vec<i32>,
+}
+
+impl QTensor {
+    pub fn zeros(shape: &[usize], frac: i32) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), frac, data: vec![0; n] }
+    }
+
+    pub fn from_f32(values: &[f32], shape: &[usize], fmt: QFormat) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(values.len(), n, "shape/value mismatch");
+        Self {
+            shape: shape.to_vec(),
+            frac: fmt.frac,
+            data: values.iter().map(|&v| fmt.from_f32(v)).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        let scale = 2f32.powi(-self.frac);
+        self.data.iter().map(|&v| v as f32 * scale).collect()
+    }
+
+    /// Row-major index of a 2-D element.
+    #[inline]
+    pub fn idx2(&self, i: usize, j: usize) -> usize {
+        debug_assert_eq!(self.shape.len(), 2);
+        i * self.shape[1] + j
+    }
+
+    /// Fraction of zero entries (used by the sparsity reports).
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let zeros = self.data.iter().filter(|&&v| v == 0).count();
+        zeros as f64 / self.data.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_f32_quantizes() {
+        let fmt = QFormat::new(10, 6);
+        let t = QTensor::from_f32(&[1.0, -0.5, 0.0, 20.0], &[2, 2], fmt);
+        assert_eq!(t.data, vec![64, -32, 0, 511]);
+        assert_eq!(t.shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn roundtrip_to_f32() {
+        let fmt = QFormat::new(10, 6);
+        let t = QTensor::from_f32(&[0.25, -1.0], &[2], fmt);
+        assert_eq!(t.to_f32(), vec![0.25, -1.0]);
+    }
+
+    #[test]
+    fn sparsity_counts_zeros() {
+        let t = QTensor { shape: vec![4], frac: 0, data: vec![0, 1, 0, 2] };
+        assert_eq!(t.sparsity(), 0.5);
+        assert_eq!(QTensor::zeros(&[3], 0).sparsity(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/value mismatch")]
+    fn shape_mismatch_panics() {
+        QTensor::from_f32(&[1.0], &[2], QFormat::new(10, 6));
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: loads the AOT-compiled JAX model (`artifacts/*.hlo.txt`)
+//! and executes it on the CPU PJRT client via the `xla` crate. This is the
+//! L2/L1 cross-validation path: the same folded weights run (a) here as
+//! baked HLO constants and (b) through the rust quantized pipeline, and the
+//! float-vs-quantized logits are compared in `examples/cifar_inference`.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` for why).
+
+pub mod pjrt;
+
+pub use pjrt::{LoadedHlo, PjrtRuntime};

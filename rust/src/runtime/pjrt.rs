@@ -1,0 +1,133 @@
+//! Thin wrapper over the `xla` crate: CPU PJRT client + compiled
+//! executables loaded from HLO text files.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU plugin).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO text file (as produced by `compile/aot.py`).
+    pub fn load_hlo(&self, path: &Path) -> Result<LoadedHlo> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(LoadedHlo { exe })
+    }
+}
+
+/// A compiled executable. The jax side lowers with `return_tuple=True`, so
+/// outputs arrive as a 1-tuple literal.
+pub struct LoadedHlo {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedHlo {
+    /// Execute with f32 inputs given as (data, shape) pairs; returns the
+    /// flattened f32 outputs of the result tuple.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .with_context(|| format!("reshaping input to {shape:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("executing PJRT computation")?;
+        let out = result[0][0].to_literal_sync().context("fetching result")?;
+        let tuple = out.to_tuple().context("untupling result")?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            vecs.push(lit.to_vec::<f32>().context("reading f32 output")?);
+        }
+        Ok(vecs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<std::path::PathBuf> {
+        let p = std::path::Path::new("artifacts");
+        if p.join("model.hlo.txt").exists() {
+            Some(p.to_path_buf())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert!(rt.device_count() >= 1);
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn loads_and_runs_model_hlo() {
+        let Some(dir) = artifacts() else { return };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let model = rt.load_hlo(&dir.join("model.hlo.txt")).unwrap();
+        let img = vec![0.1f32; 3 * 32 * 32];
+        let outs = model.run_f32(&[(&img, &[1, 3, 32, 32])]).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].len(), 10);
+        assert!(outs[0].iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sdsa_micro_hlo_matches_semantics() {
+        let Some(dir) = artifacts() else { return };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let sdsa = rt.load_hlo(&dir.join("sdsa.hlo.txt")).unwrap();
+        // q == k == single spike per channel -> acc = 1 < vth=2 -> all zero
+        let l = 64;
+        let c = 64;
+        let mut q = vec![0f32; l * c];
+        for ch in 0..c {
+            q[ch] = 1.0; // token 0 fires in every channel
+        }
+        let v = vec![1f32; l * c];
+        let outs = sdsa
+            .run_f32(&[(&q, &[l, c]), (&q, &[l, c]), (&v, &[l, c])])
+            .unwrap();
+        assert!(outs[0].iter().all(|&x| x == 0.0), "acc=1 < vth=2 must mask all");
+        // q == k == two spikes per channel -> acc = 2 >= 2 -> V passes
+        let mut q2 = q.clone();
+        for ch in 0..c {
+            q2[c + ch] = 1.0; // token 1 also fires
+        }
+        let outs = sdsa
+            .run_f32(&[(&q2, &[l, c]), (&q2, &[l, c]), (&v, &[l, c])])
+            .unwrap();
+        assert!(outs[0].iter().all(|&x| x == 1.0), "acc=2 >= vth=2 must retain V");
+    }
+}

@@ -1,0 +1,221 @@
+//! Bitmap and position-encoded spike matrices + round-trip conversion.
+
+use crate::quant::SEGMENT_TOKENS;
+
+/// Conventional binary spike matrix, channel-major `[C, L]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpikeMatrix {
+    pub channels: usize,
+    pub tokens: usize,
+    data: Vec<bool>,
+}
+
+impl SpikeMatrix {
+    pub fn zeros(channels: usize, tokens: usize) -> Self {
+        Self { channels, tokens, data: vec![false; channels * tokens] }
+    }
+
+    /// Build from a row-major `[C, L]` 0/1 integer slice.
+    pub fn from_binary(values: &[i32], channels: usize, tokens: usize) -> Self {
+        assert_eq!(values.len(), channels * tokens);
+        Self {
+            channels,
+            tokens,
+            data: values.iter().map(|&v| v != 0).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, l: usize) -> bool {
+        self.data[c * self.tokens + l]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, l: usize, v: bool) {
+        self.data[c * self.tokens + l] = v;
+    }
+
+    pub fn count_spikes(&self) -> usize {
+        self.data.iter().filter(|&&b| b).count()
+    }
+
+    /// Fraction of zeros — the sparsity the paper's Fig. 6 reports.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.count_spikes() as f64 / self.data.len() as f64
+    }
+
+    pub fn channel(&self, c: usize) -> &[bool] {
+        &self.data[c * self.tokens..(c + 1) * self.tokens]
+    }
+}
+
+/// Position-encoded spikes: per channel, sorted token addresses (§III-A).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EncodedSpikes {
+    pub channels: usize,
+    pub tokens: usize,
+    /// `lists[c]` = strictly increasing token addresses of channel c.
+    pub lists: Vec<Vec<u16>>,
+}
+
+impl EncodedSpikes {
+    pub fn empty(channels: usize, tokens: usize) -> Self {
+        assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16");
+        Self { channels, tokens, lists: vec![Vec::new(); channels] }
+    }
+
+    /// Encode a bitmap — the software mirror of the SEA (Fig. 2), which in
+    /// hardware happens as a side effect of the LIF fire decision.
+    pub fn from_bitmap(m: &SpikeMatrix) -> Self {
+        let mut enc = Self::empty(m.channels, m.tokens);
+        for c in 0..m.channels {
+            let ch = m.channel(c);
+            let list = &mut enc.lists[c];
+            for (l, &fired) in ch.iter().enumerate() {
+                if fired {
+                    list.push(l as u16);
+                }
+            }
+        }
+        enc
+    }
+
+    /// Decode back to a bitmap (used by tests and the baseline datapath).
+    pub fn to_bitmap(&self) -> SpikeMatrix {
+        let mut m = SpikeMatrix::zeros(self.channels, self.tokens);
+        for (c, list) in self.lists.iter().enumerate() {
+            for &l in list {
+                m.set(c, l as usize, true);
+            }
+        }
+        m
+    }
+
+    pub fn count_spikes(&self) -> usize {
+        self.lists.iter().map(Vec::len).sum()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        let total = self.channels * self.tokens;
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.count_spikes() as f64 / total as f64
+    }
+
+    /// Push a spike; addresses must arrive in increasing token order (the
+    /// SEA scans addresses sequentially, §III-A: "stored sequentially
+    /// according to address order").
+    pub fn push(&mut self, c: usize, l: usize) {
+        debug_assert!(l < self.tokens);
+        let list = &mut self.lists[c];
+        debug_assert!(list.last().map_or(true, |&last| (last as usize) < l), "out-of-order push");
+        list.push(l as u16);
+    }
+
+    /// Number of 8-bit words the ESS stores for this tensor, including one
+    /// segment-header word per non-empty 256-token segment of each channel
+    /// (how 8-bit addresses cover token spaces > 256; DESIGN.md).
+    pub fn storage_words(&self) -> usize {
+        let mut words = 0;
+        for list in &self.lists {
+            words += list.len();
+            let mut seg_prev = usize::MAX;
+            for &l in list {
+                let seg = l as usize / SEGMENT_TOKENS;
+                if seg != seg_prev {
+                    words += 1; // segment header
+                    seg_prev = seg;
+                }
+            }
+        }
+        words
+    }
+
+    /// Validity check used by property tests: strictly sorted, in range.
+    pub fn is_well_formed(&self) -> bool {
+        self.lists.len() == self.channels
+            && self.lists.iter().all(|list| {
+                list.windows(2).all(|w| w[0] < w[1])
+                    && list.iter().all(|&l| (l as usize) < self.tokens)
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_bitmap(rng: &mut Prng, c: usize, l: usize, p: f64) -> SpikeMatrix {
+        let mut m = SpikeMatrix::zeros(c, l);
+        for ci in 0..c {
+            for li in 0..l {
+                if rng.bernoulli(p) {
+                    m.set(ci, li, true);
+                }
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn roundtrip_bitmap_encoded() {
+        let mut rng = Prng::new(1);
+        for &p in &[0.0, 0.1, 0.5, 1.0] {
+            let m = random_bitmap(&mut rng, 7, 33, p);
+            let enc = EncodedSpikes::from_bitmap(&m);
+            assert!(enc.is_well_formed());
+            assert_eq!(enc.to_bitmap(), m);
+            assert_eq!(enc.count_spikes(), m.count_spikes());
+        }
+    }
+
+    #[test]
+    fn sparsity_matches() {
+        let mut m = SpikeMatrix::zeros(2, 4);
+        m.set(0, 1, true);
+        m.set(1, 3, true);
+        assert!((m.sparsity() - 0.75).abs() < 1e-12);
+        assert!((EncodedSpikes::from_bitmap(&m).sparsity() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn storage_words_single_segment() {
+        // 64 tokens => one segment per non-empty channel.
+        let mut m = SpikeMatrix::zeros(2, 64);
+        m.set(0, 0, true);
+        m.set(0, 5, true);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        assert_eq!(enc.storage_words(), 2 + 1); // 2 addresses + 1 header
+    }
+
+    #[test]
+    fn storage_words_multi_segment() {
+        // 1024 tokens: spikes in segments 0 and 3 of one channel.
+        let mut m = SpikeMatrix::zeros(1, 1024);
+        m.set(0, 10, true);
+        m.set(0, 800, true);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        assert_eq!(enc.storage_words(), 2 + 2);
+    }
+
+    #[test]
+    fn push_in_order() {
+        let mut enc = EncodedSpikes::empty(1, 16);
+        enc.push(0, 2);
+        enc.push(0, 9);
+        assert!(enc.is_well_formed());
+        assert_eq!(enc.lists[0], vec![2, 9]);
+    }
+
+    #[test]
+    fn from_binary_values() {
+        let m = SpikeMatrix::from_binary(&[1, 0, 0, 1], 2, 2);
+        assert!(m.get(0, 0) && m.get(1, 1));
+        assert!(!m.get(0, 1) && !m.get(1, 0));
+    }
+}

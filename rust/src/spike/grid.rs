@@ -1,0 +1,150 @@
+//! Token-grid geometry: the reshape `I[C,H,W] -> I'[C,L]` of §III-A and the
+//! kernel-coverage arithmetic the SMU needs (§III-B).
+
+/// A 2-D token grid flattened row-major into L = H*W addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TokenGrid {
+    pub height: usize,
+    pub width: usize,
+}
+
+impl TokenGrid {
+    pub fn new(height: usize, width: usize) -> Self {
+        Self { height, width }
+    }
+
+    #[inline]
+    pub fn tokens(&self) -> usize {
+        self.height * self.width
+    }
+
+    #[inline]
+    pub fn addr(&self, y: usize, x: usize) -> usize {
+        debug_assert!(y < self.height && x < self.width);
+        y * self.width + x
+    }
+
+    #[inline]
+    pub fn coords(&self, addr: usize) -> (usize, usize) {
+        debug_assert!(addr < self.tokens());
+        (addr / self.width, addr % self.width)
+    }
+
+    /// Output grid of a `kernel`x`kernel`, stride `stride`, VALID pool.
+    pub fn pooled(&self, kernel: usize, stride: usize) -> TokenGrid {
+        assert!(kernel <= self.height && kernel <= self.width);
+        TokenGrid::new(
+            (self.height - kernel) / stride + 1,
+            (self.width - kernel) / stride + 1,
+        )
+    }
+
+    /// All pool-output addresses whose kernel window covers input (y, x) —
+    /// the "overlapping data is reused to determine the output of multiple
+    /// kernels simultaneously" rule of Fig. 3.
+    pub fn covering_outputs(
+        &self,
+        y: usize,
+        x: usize,
+        kernel: usize,
+        stride: usize,
+        out: &mut Vec<usize>,
+    ) {
+        out.clear();
+        let og = self.pooled(kernel, stride);
+        // Output rows oy with oy*stride <= y <= oy*stride + kernel - 1.
+        let oy_lo = y.saturating_sub(kernel - 1).div_ceil(stride);
+        let ox_lo = x.saturating_sub(kernel - 1).div_ceil(stride);
+        let oy_hi = (y / stride).min(og.height - 1);
+        let ox_hi = (x / stride).min(og.width - 1);
+        for oy in oy_lo..=oy_hi {
+            for ox in ox_lo..=ox_hi {
+                out.push(og.addr(oy, ox));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_coords_roundtrip() {
+        let g = TokenGrid::new(4, 5);
+        for a in 0..g.tokens() {
+            let (y, x) = g.coords(a);
+            assert_eq!(g.addr(y, x), a);
+        }
+    }
+
+    #[test]
+    fn pooled_dims() {
+        let g = TokenGrid::new(8, 8);
+        assert_eq!(g.pooled(2, 2), TokenGrid::new(4, 4));
+        assert_eq!(g.pooled(2, 1), TokenGrid::new(7, 7));
+        assert_eq!(g.pooled(3, 1), TokenGrid::new(6, 6));
+    }
+
+    #[test]
+    fn covering_outputs_2x2_stride1_interior() {
+        // Fig. 3's example: an interior spike is covered by up to 4 kernels
+        // for 2x2/stride-1.
+        let g = TokenGrid::new(4, 4);
+        let mut out = Vec::new();
+        g.covering_outputs(1, 1, 2, 1, &mut out);
+        let og = g.pooled(2, 1);
+        assert_eq!(
+            out,
+            vec![og.addr(0, 0), og.addr(0, 1), og.addr(1, 0), og.addr(1, 1)]
+        );
+    }
+
+    #[test]
+    fn covering_outputs_corner() {
+        let g = TokenGrid::new(4, 4);
+        let mut out = Vec::new();
+        g.covering_outputs(0, 0, 2, 1, &mut out);
+        assert_eq!(out, vec![0]);
+        g.covering_outputs(3, 3, 2, 1, &mut out);
+        let og = g.pooled(2, 1);
+        assert_eq!(out, vec![og.addr(2, 2)]);
+    }
+
+    #[test]
+    fn covering_outputs_stride2_partition() {
+        // stride == kernel: every input belongs to exactly one window.
+        let g = TokenGrid::new(8, 8);
+        let mut out = Vec::new();
+        for y in 0..8 {
+            for x in 0..8 {
+                g.covering_outputs(y, x, 2, 2, &mut out);
+                assert_eq!(out.len(), 1, "({y},{x}) -> {out:?}");
+                assert_eq!(out[0], g.pooled(2, 2).addr(y / 2, x / 2));
+            }
+        }
+    }
+
+    #[test]
+    fn covering_matches_bruteforce() {
+        let g = TokenGrid::new(6, 7);
+        let (kernel, stride) = (3, 2);
+        let og = g.pooled(kernel, stride);
+        let mut out = Vec::new();
+        for y in 0..g.height {
+            for x in 0..g.width {
+                g.covering_outputs(y, x, kernel, stride, &mut out);
+                let mut brute = Vec::new();
+                for oy in 0..og.height {
+                    for ox in 0..og.width {
+                        let (y0, x0) = (oy * stride, ox * stride);
+                        if y >= y0 && y < y0 + kernel && x >= x0 && x < x0 + kernel {
+                            brute.push(og.addr(oy, ox));
+                        }
+                    }
+                }
+                assert_eq!(out, brute, "mismatch at ({y},{x})");
+            }
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Spike tensors and the paper's position-encoding scheme (§III-A).
+//!
+//! Two representations of a binary spike matrix `[C, L]` (C channels,
+//! L = H*W flattened tokens):
+//! * [`SpikeMatrix`] — the conventional bitmap a baseline accelerator
+//!   would stream;
+//! * [`EncodedSpikes`] — the paper's format: per channel, the *sorted token
+//!   addresses* of the spikes, stored bank-per-channel in the ESS. Encoded
+//!   addresses are 8-bit; token spaces larger than 256 are split into
+//!   segments (DESIGN.md), which the storage model accounts for.
+
+pub mod encoding;
+pub mod grid;
+
+pub use encoding::{EncodedSpikes, SpikeMatrix};
+pub use grid::TokenGrid;

@@ -1,0 +1,118 @@
+//! Adder Module + ResBuffer (Fig. 1): residual additions in the value
+//! (membrane) domain. Two flavours appear in the Spike-driven Transformer
+//! dataflow:
+//! * value + value — e.g. `u + SDSA_out` around the encoder blocks;
+//! * value + spike — the SPS residual `RPE(s4) + s4`, where the binary
+//!   spike contributes `1.0` (one activation-format LSB step of 2^ACT_FRAC).
+
+use crate::hw::{AccelConfig, UnitStats};
+use crate::quant::{sat, QTensor, ACT_FRAC, MEM_BITS};
+use crate::spike::EncodedSpikes;
+use crate::util::div_ceil;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AdderModule;
+
+impl AdderModule {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Elementwise saturating add of two tensors in the same format.
+    pub fn add(&self, a: &QTensor, b: &QTensor, cfg: &AccelConfig) -> (QTensor, UnitStats) {
+        assert_eq!(a.shape, b.shape, "adder shape mismatch");
+        assert_eq!(a.frac, b.frac, "adder frac mismatch");
+        let mut out = QTensor::zeros(&a.shape, a.frac);
+        for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
+            *o = sat(x as i64 + y as i64, MEM_BITS);
+        }
+        let n = a.len() as u64;
+        let stats = UnitStats {
+            cycles: div_ceil(n, cfg.lanes as u64).max(1),
+            adds: n,
+            sram_reads: 2 * n,
+            sram_writes: n,
+            ..Default::default()
+        };
+        (out, stats)
+    }
+
+    /// value + spike residual: adds 1.0 (in activation format) at every
+    /// encoded spike position. `values` is `[C, L]` row-major; `spikes`
+    /// is the `[C, L]` encoded tensor. Touches only spike positions.
+    pub fn add_spikes(
+        &self,
+        values: &QTensor,
+        spikes: &EncodedSpikes,
+        cfg: &AccelConfig,
+    ) -> (QTensor, UnitStats) {
+        assert_eq!(values.shape, vec![spikes.channels, spikes.tokens]);
+        assert_eq!(values.frac, ACT_FRAC);
+        let one = 1i64 << ACT_FRAC;
+        let mut out = values.clone();
+        let mut n_spikes: u64 = 0;
+        for (c, list) in spikes.lists.iter().enumerate() {
+            n_spikes += list.len() as u64;
+            for &l in list {
+                let idx = c * spikes.tokens + l as usize;
+                out.data[idx] = sat(out.data[idx] as i64 + one, MEM_BITS);
+            }
+        }
+        let stats = UnitStats {
+            cycles: div_ceil(n_spikes, cfg.lanes as u64).max(1),
+            adds: n_spikes,
+            sops: n_spikes,
+            sram_reads: n_spikes,
+            sram_writes: n_spikes,
+            ..Default::default()
+        };
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QFormat;
+    use crate::spike::SpikeMatrix;
+
+    #[test]
+    fn add_is_elementwise() {
+        let fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+        let a = QTensor::from_f32(&[1.0, -2.0], &[2], fmt);
+        let b = QTensor::from_f32(&[0.5, 0.5], &[2], fmt);
+        let (out, stats) = AdderModule::new().add(&a, &b, &AccelConfig::small());
+        assert_eq!(out.to_f32(), vec![1.5, -1.5]);
+        assert_eq!(stats.adds, 2);
+    }
+
+    #[test]
+    fn add_saturates() {
+        let max = (1 << (MEM_BITS - 1)) - 1;
+        let a = QTensor { shape: vec![1], frac: ACT_FRAC, data: vec![max] };
+        let (out, _) = AdderModule::new().add(&a, &a, &AccelConfig::small());
+        assert_eq!(out.data[0], max);
+    }
+
+    #[test]
+    fn add_spikes_only_touches_spike_positions() {
+        let fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+        let vals = QTensor::from_f32(&[0.0, 0.25, -1.0, 2.0], &[2, 2], fmt);
+        let mut m = SpikeMatrix::zeros(2, 2);
+        m.set(0, 1, true);
+        m.set(1, 0, true);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        let (out, stats) = AdderModule::new().add_spikes(&vals, &enc, &AccelConfig::small());
+        assert_eq!(out.to_f32(), vec![0.0, 1.25, 0.0, 2.0]);
+        assert_eq!(stats.adds, 2);
+        assert_eq!(stats.sops, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_shapes_panic() {
+        let a = QTensor::zeros(&[2], ACT_FRAC);
+        let b = QTensor::zeros(&[3], ACT_FRAC);
+        AdderModule::new().add(&a, &b, &AccelConfig::small());
+    }
+}

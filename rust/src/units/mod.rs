@@ -1,0 +1,22 @@
+//! The accelerator's compute units (paper §III, Figs. 2-5).
+//!
+//! Every unit is implemented *functionally* (it computes the real values,
+//! so the whole network runs end-to-end on the simulator) and charges
+//! cycles/ops per the paper's dataflow into a [`crate::hw::UnitStats`].
+//! The cycle model assumes one operation per lane per cycle at the
+//! configured parallelism — the same assumption behind the paper's
+//! 1,536 neurons/cycle peak.
+
+pub mod adder;
+pub mod sea;
+pub mod slu;
+pub mod smam;
+pub mod smu;
+pub mod tile_engine;
+
+pub use adder::AdderModule;
+pub use sea::SpikeEncodingArray;
+pub use slu::SpikeLinearUnit;
+pub use smam::{SmamOutput, SpikeMaskAddModule};
+pub use smu::SpikeMaxpoolUnit;
+pub use tile_engine::{QuantizedConv, TileEngine};

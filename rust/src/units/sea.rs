@@ -1,0 +1,117 @@
+//! Spike Encoding Array (SEA, Fig. 2): an array of Spike Encoding Units,
+//! each a LIF neuron whose fire decision writes the *current token address*
+//! into the ESS instead of a bitmap bit.
+//!
+//! Cycle model: `lanes` SEUs update in parallel, one neuron-timestep per
+//! lane per cycle; encoded addresses stream to the ESS banks as a side
+//! effect (one SRAM write per spike plus one segment header per new
+//! 256-token segment).
+
+use crate::hw::{AccelConfig, UnitStats};
+use crate::lif::{LifArray, LifParams};
+use crate::spike::EncodedSpikes;
+use crate::util::div_ceil;
+
+/// A bank of SEUs covering a `[channels, tokens]` activation tile.
+#[derive(Clone, Debug)]
+pub struct SpikeEncodingArray {
+    pub channels: usize,
+    pub tokens: usize,
+    lif: LifArray,
+}
+
+impl SpikeEncodingArray {
+    pub fn new(channels: usize, tokens: usize, params: LifParams) -> Self {
+        Self { channels, tokens, lif: LifArray::new(channels * tokens, params) }
+    }
+
+    /// Reset temporal state between images.
+    pub fn reset(&mut self) {
+        self.lif.reset();
+    }
+
+    /// Encode one timestep of spatial input (`[C, L]` row-major, activation
+    /// format). Returns the encoded spikes and the cycle/op record.
+    pub fn encode(&mut self, spa: &[i32], cfg: &AccelConfig) -> (EncodedSpikes, UnitStats) {
+        assert_eq!(spa.len(), self.channels * self.tokens);
+        let mut enc = EncodedSpikes::empty(self.channels, self.tokens);
+        for c in 0..self.channels {
+            for l in 0..self.tokens {
+                let idx = c * self.tokens + l;
+                if self.lif.step_one(idx, spa[idx]) {
+                    enc.push(c, l);
+                }
+            }
+        }
+        let n = spa.len() as u64;
+        let stats = UnitStats {
+            cycles: div_ceil(n, cfg.lanes as u64),
+            adds: n,                                  // Eq. (2) membrane add
+            cmps: n,                                  // Eq. (3) threshold
+            sram_reads: n,                            // spatial input read
+            sram_writes: enc.storage_words() as u64,  // encoded addresses
+            ..Default::default()
+        };
+        (enc, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{QFormat, ACT_FRAC, MEM_BITS};
+
+    fn act(v: f32) -> i32 {
+        QFormat::new(MEM_BITS, ACT_FRAC).from_f32(v)
+    }
+
+    #[test]
+    fn encodes_fired_positions_in_order() {
+        let mut sea = SpikeEncodingArray::new(2, 4, LifParams::default());
+        let spa = vec![
+            act(1.5), act(0.0), act(2.0), act(0.1), // ch0: fires at 0, 2
+            act(0.0), act(1.0), act(0.0), act(0.0), // ch1: fires at 1
+        ];
+        let (enc, stats) = sea.encode(&spa, &AccelConfig::small());
+        assert_eq!(enc.lists[0], vec![0, 2]);
+        assert_eq!(enc.lists[1], vec![1]);
+        assert!(enc.is_well_formed());
+        assert_eq!(stats.adds, 8);
+        assert_eq!(stats.cmps, 8);
+        assert_eq!(stats.cycles, 1); // 8 neurons / 64 lanes
+    }
+
+    #[test]
+    fn temporal_state_carries_across_timesteps() {
+        let mut sea = SpikeEncodingArray::new(1, 1, LifParams::default());
+        let cfg = AccelConfig::small();
+        // 0.6 then 0.6 then 0.6: fires on the third step (0.6,0.9,1.05).
+        let (e1, _) = sea.encode(&[act(0.6)], &cfg);
+        let (e2, _) = sea.encode(&[act(0.6)], &cfg);
+        let (e3, _) = sea.encode(&[act(0.6)], &cfg);
+        assert_eq!(e1.count_spikes(), 0);
+        assert_eq!(e2.count_spikes(), 0);
+        assert_eq!(e3.count_spikes(), 1);
+    }
+
+    #[test]
+    fn cycles_scale_with_lanes() {
+        let mut sea = SpikeEncodingArray::new(48, 64, LifParams::default());
+        let spa = vec![0; 48 * 64];
+        let (_, s_small) = sea.encode(&spa, &AccelConfig::small()); // 64 lanes
+        sea.reset();
+        let (_, s_big) = sea.encode(&spa, &AccelConfig::paper()); // 1536 lanes
+        assert_eq!(s_small.cycles, 48);
+        assert_eq!(s_big.cycles, 2);
+    }
+
+    #[test]
+    fn reset_clears_membranes() {
+        let mut sea = SpikeEncodingArray::new(1, 1, LifParams::default());
+        let cfg = AccelConfig::small();
+        sea.encode(&[act(0.9)], &cfg);
+        sea.reset();
+        let (enc, _) = sea.encode(&[act(0.9)], &cfg);
+        assert_eq!(enc.count_spikes(), 0); // no leftover membrane
+    }
+}

@@ -1,0 +1,258 @@
+//! Spike Mask-Add Module (SMAM, Fig. 4): the dual-spike-input engine for
+//! Spike-Driven Self-Attention.
+//!
+//! Per channel c, the Hadamard product of binary Q_s[:,c] and K_s[:,c]
+//! accumulated along the token dimension equals the size of the
+//! intersection of their encoded address lists. The hardware realises it as
+//! a two-pointer comparator (Fig. 4(a)): take one encoded spike from each
+//! memory; on address match output '1' (one accumulation, Fig. 4(b)) and
+//! advance both; otherwise retain the larger address and advance the
+//! smaller — each comparison consumes exactly one encoded spike, so a
+//! channel finishes in |Q_c| + |K_c| comparator steps. The accumulated
+//! count is compared against the firing threshold to produce the mask bit
+//! S[c]; V_s's per-channel ESS bank is then cleared or retained (Fig. 4(c)).
+
+use crate::hw::{AccelConfig, UnitStats};
+use crate::spike::EncodedSpikes;
+use crate::util::div_ceil;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpikeMaskAddModule {
+    /// Integer firing threshold of the mask neuron (accumulation counts).
+    pub v_th: u32,
+}
+
+/// Result of an SDSA pass.
+#[derive(Clone, Debug)]
+pub struct SmamOutput {
+    /// Per-channel mask S (Fig. 4(b)).
+    pub mask: Vec<bool>,
+    /// Per-channel Q.K intersection counts (the token-dim accumulation).
+    pub acc: Vec<u32>,
+    /// Masked V_s: channels with S=0 cleared, others retained verbatim.
+    pub masked_v: EncodedSpikes,
+}
+
+impl SpikeMaskAddModule {
+    pub fn new(v_th: u32) -> Self {
+        Self { v_th }
+    }
+
+    /// Run SDSA mask-add over encoded Q_s, K_s, V_s (all `[C, L]`).
+    pub fn run(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        cfg: &AccelConfig,
+    ) -> (SmamOutput, UnitStats) {
+        assert_eq!(q.channels, k.channels);
+        assert_eq!(q.channels, v.channels);
+        assert_eq!(q.tokens, k.tokens);
+
+        let c = q.channels;
+        let mut mask = vec![false; c];
+        let mut acc = vec![0u32; c];
+        let mut masked_v = EncodedSpikes::empty(v.channels, v.tokens);
+        let mut comparator_steps: u64 = 0;
+        let mut matches: u64 = 0;
+
+        for ch in 0..c {
+            let (ql, kl) = (&q.lists[ch], &k.lists[ch]);
+            // Two-pointer merge-join; each iteration is one comparator step
+            // consuming one encoded spike (the smaller address, or both on
+            // a match — the hardware still spends one cycle on the pair).
+            let (mut i, mut j) = (0usize, 0usize);
+            let mut count = 0u32;
+            while i < ql.len() && j < kl.len() {
+                comparator_steps += 1;
+                match ql[i].cmp(&kl[j]) {
+                    std::cmp::Ordering::Equal => {
+                        count += 1;
+                        matches += 1;
+                        i += 1;
+                        j += 1;
+                    }
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                }
+            }
+            acc[ch] = count;
+            // Fire determination (threshold compare, Fig. 4(b)).
+            mask[ch] = count >= self.v_th;
+            if mask[ch] {
+                masked_v.lists[ch] = v.lists[ch].clone();
+            }
+        }
+
+        let q_spikes = q.count_spikes() as u64;
+        let k_spikes = k.count_spikes() as u64;
+        let retained = masked_v.count_spikes() as u64;
+        let stats = UnitStats {
+            // comparator steps spread over the comparator array, plus one
+            // threshold compare per channel
+            cycles: div_ceil(comparator_steps, cfg.smam_comparators as u64).max(1)
+                + div_ceil(c as u64, cfg.smam_comparators as u64),
+            // SOPs: every Q/K spike traverses the comparator once; every
+            // retained V spike traverses the mask gate.
+            sops: q_spikes + k_spikes + retained,
+            adds: matches, // token-dim accumulation increments
+            cmps: comparator_steps + c as u64,
+            sram_reads: q_spikes + k_spikes + retained,
+            sram_writes: retained,
+            ..Default::default()
+        };
+        (SmamOutput { mask, acc, masked_v }, stats)
+    }
+
+    /// Dense bitmap baseline: walks all C*L Hadamard positions (ablation A1).
+    pub fn run_dense_baseline(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        cfg: &AccelConfig,
+    ) -> (SmamOutput, UnitStats) {
+        let (qb, kb) = (q.to_bitmap(), k.to_bitmap());
+        let c = q.channels;
+        let l = q.tokens;
+        let mut mask = vec![false; c];
+        let mut acc = vec![0u32; c];
+        let mut masked_v = EncodedSpikes::empty(v.channels, v.tokens);
+        for ch in 0..c {
+            let mut count = 0u32;
+            for t in 0..l {
+                if qb.get(ch, t) && kb.get(ch, t) {
+                    count += 1;
+                }
+            }
+            acc[ch] = count;
+            mask[ch] = count >= self.v_th;
+            if mask[ch] {
+                masked_v.lists[ch] = v.lists[ch].clone();
+            }
+        }
+        let positions = (c * l) as u64;
+        let retained = masked_v.count_spikes() as u64;
+        let stats = UnitStats {
+            cycles: div_ceil(positions, cfg.smam_comparators as u64).max(1)
+                + div_ceil(c as u64, cfg.smam_comparators as u64),
+            sops: q.count_spikes() as u64 + k.count_spikes() as u64 + retained,
+            adds: acc.iter().map(|&x| x as u64).sum(),
+            cmps: positions + c as u64,
+            sram_reads: 2 * positions + retained,
+            sram_writes: retained,
+            ..Default::default()
+        };
+        (SmamOutput { mask, acc, masked_v }, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spike::SpikeMatrix;
+    use crate::util::Prng;
+
+    fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+        let mut m = SpikeMatrix::zeros(c, l);
+        for ci in 0..c {
+            for li in 0..l {
+                if rng.bernoulli(p) {
+                    m.set(ci, li, true);
+                }
+            }
+        }
+        EncodedSpikes::from_bitmap(&m)
+    }
+
+    #[test]
+    fn intersection_counts_match_hadamard_sum() {
+        let mut rng = Prng::new(7);
+        let cfg = AccelConfig::small();
+        let smam = SpikeMaskAddModule::new(2);
+        for &p in &[0.1, 0.3, 0.7] {
+            let q = random_encoded(&mut rng, 6, 64, p);
+            let k = random_encoded(&mut rng, 6, 64, p);
+            let v = random_encoded(&mut rng, 6, 64, p);
+            let (out, _) = smam.run(&q, &k, &v, &cfg);
+            let (qb, kb) = (q.to_bitmap(), k.to_bitmap());
+            for ch in 0..6 {
+                let want: u32 = (0..64).filter(|&t| qb.get(ch, t) && kb.get(ch, t)).count() as u32;
+                assert_eq!(out.acc[ch], want, "channel {ch}");
+                assert_eq!(out.mask[ch], want >= 2);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_v_clears_or_retains_whole_channels() {
+        let mut rng = Prng::new(8);
+        let cfg = AccelConfig::small();
+        let q = random_encoded(&mut rng, 4, 32, 0.5);
+        let k = random_encoded(&mut rng, 4, 32, 0.5);
+        let v = random_encoded(&mut rng, 4, 32, 0.4);
+        let (out, _) = SpikeMaskAddModule::new(3).run(&q, &k, &v, &cfg);
+        for ch in 0..4 {
+            if out.mask[ch] {
+                assert_eq!(out.masked_v.lists[ch], v.lists[ch]);
+            } else {
+                assert!(out.masked_v.lists[ch].is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn dense_baseline_agrees() {
+        let mut rng = Prng::new(9);
+        let cfg = AccelConfig::small();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 8, 64, 0.2);
+        let k = random_encoded(&mut rng, 8, 64, 0.2);
+        let v = random_encoded(&mut rng, 8, 64, 0.2);
+        let (a, s_sparse) = smam.run(&q, &k, &v, &cfg);
+        let (b, s_dense) = smam.run_dense_baseline(&q, &k, &v, &cfg);
+        assert_eq!(a.mask, b.mask);
+        assert_eq!(a.acc, b.acc);
+        assert_eq!(a.masked_v, b.masked_v);
+        // At 80% sparsity the encoded path must be far cheaper.
+        assert!(s_sparse.cycles < s_dense.cycles);
+    }
+
+    #[test]
+    fn comparator_steps_bounded_by_list_lengths() {
+        let mut rng = Prng::new(10);
+        let cfg = AccelConfig::paper();
+        let q = random_encoded(&mut rng, 1, 64, 0.5);
+        let k = random_encoded(&mut rng, 1, 64, 0.5);
+        let v = EncodedSpikes::empty(1, 64);
+        let (_, stats) = SpikeMaskAddModule::new(1).run(&q, &k, &v, &cfg);
+        let bound = (q.count_spikes() + k.count_spikes()) as u64 + 1;
+        assert!(stats.cmps <= bound + 1, "cmps {} > bound {}", stats.cmps, bound);
+    }
+
+    #[test]
+    fn empty_q_or_k_never_fires() {
+        let cfg = AccelConfig::small();
+        let q = EncodedSpikes::empty(3, 16);
+        let mut k = EncodedSpikes::empty(3, 16);
+        k.push(0, 5);
+        let mut v = EncodedSpikes::empty(3, 16);
+        v.push(0, 1);
+        let (out, _) = SpikeMaskAddModule::new(1).run(&q, &k, &v, &cfg);
+        assert!(out.mask.iter().all(|&m| !m));
+        assert_eq!(out.masked_v.count_spikes(), 0);
+    }
+
+    #[test]
+    fn threshold_zero_always_fires() {
+        let cfg = AccelConfig::small();
+        let q = EncodedSpikes::empty(2, 8);
+        let k = EncodedSpikes::empty(2, 8);
+        let mut v = EncodedSpikes::empty(2, 8);
+        v.push(1, 3);
+        let (out, _) = SpikeMaskAddModule::new(0).run(&q, &k, &v, &cfg);
+        assert!(out.mask.iter().all(|&m| m));
+        assert_eq!(out.masked_v.lists[1], vec![3]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Spike Maxpooling Unit (SMU, Fig. 3): maxpooling over binary spikes via
+//! encoded positions. A kernel output is '1' iff its window covers at least
+//! one spike address, so the unit touches only the (few) encoded spikes and
+//! reuses each spike for every overlapping kernel simultaneously — the
+//! "or" of Fig. 3 — instead of comparing all values in every window.
+//!
+//! Cycle model: one encoded spike per SMU per cycle; `smu_units` channels
+//! are pooled concurrently. A conventional (dense) maxpool module for
+//! non-spike input is also provided for the SPS Core's Maxpooling Array and
+//! as the redundancy-elimination baseline (ablation A1).
+
+use crate::hw::{AccelConfig, UnitStats};
+use crate::spike::{EncodedSpikes, TokenGrid};
+use crate::util::div_ceil;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SpikeMaxpoolUnit {
+    pub kernel: usize,
+    pub stride: usize,
+}
+
+impl SpikeMaxpoolUnit {
+    pub fn new(kernel: usize, stride: usize) -> Self {
+        assert!(kernel >= 1 && stride >= 1);
+        Self { kernel, stride }
+    }
+
+    /// Pool `input` (addresses on `grid`) to the pooled grid.
+    pub fn pool(
+        &self,
+        input: &EncodedSpikes,
+        grid: TokenGrid,
+        cfg: &AccelConfig,
+    ) -> (EncodedSpikes, UnitStats) {
+        assert_eq!(input.tokens, grid.tokens(), "grid/token mismatch");
+        let out_grid = grid.pooled(self.kernel, self.stride);
+        let mut out = EncodedSpikes::empty(input.channels, out_grid.tokens());
+        let mut covered = vec![false; out_grid.tokens()];
+        let mut cover_buf = Vec::with_capacity(self.kernel * self.kernel);
+        let mut or_ops: u64 = 0;
+
+        for (c, list) in input.lists.iter().enumerate() {
+            if list.is_empty() {
+                continue;
+            }
+            covered.fill(false);
+            for &addr in list {
+                let (y, x) = grid.coords(addr as usize);
+                grid.covering_outputs(y, x, self.kernel, self.stride, &mut cover_buf);
+                or_ops += cover_buf.len() as u64;
+                for &o in &cover_buf {
+                    covered[o] = true;
+                }
+            }
+            for (o, &hit) in covered.iter().enumerate() {
+                if hit {
+                    out.push(c, o);
+                }
+            }
+        }
+
+        let spikes = input.count_spikes() as u64;
+        let stats = UnitStats {
+            // one spike per SMU per cycle, channels spread over the array
+            cycles: div_ceil(spikes, cfg.smu_units as u64).max(1),
+            sops: spikes,
+            adds: spikes * 2, // window-address arithmetic per spike
+            cmps: or_ops,     // the per-kernel "or" updates
+            sram_reads: spikes,
+            sram_writes: out.storage_words() as u64,
+            ..Default::default()
+        };
+        (out, stats)
+    }
+
+    /// Conventional dense maxpool on a binary bitmap (baseline): every
+    /// window position compares all kernel*kernel values.
+    pub fn pool_dense_baseline(
+        &self,
+        input: &EncodedSpikes,
+        grid: TokenGrid,
+        cfg: &AccelConfig,
+    ) -> (EncodedSpikes, UnitStats) {
+        let bitmap = input.to_bitmap();
+        let out_grid = grid.pooled(self.kernel, self.stride);
+        let mut out = EncodedSpikes::empty(input.channels, out_grid.tokens());
+        let mut cmps: u64 = 0;
+        for c in 0..input.channels {
+            for oy in 0..out_grid.height {
+                for ox in 0..out_grid.width {
+                    let mut any = false;
+                    for ky in 0..self.kernel {
+                        for kx in 0..self.kernel {
+                            cmps += 1;
+                            any |= bitmap.get(c, grid.addr(oy * self.stride + ky, ox * self.stride + kx));
+                        }
+                    }
+                    if any {
+                        out.push(c, out_grid.addr(oy, ox));
+                    }
+                }
+            }
+        }
+        let reads = input.channels as u64 * grid.tokens() as u64;
+        let stats = UnitStats {
+            cycles: div_ceil(cmps, cfg.smu_units as u64).max(1),
+            sops: input.count_spikes() as u64,
+            cmps,
+            sram_reads: reads,
+            sram_writes: out.storage_words() as u64,
+            ..Default::default()
+        };
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spike::SpikeMatrix;
+    use crate::util::Prng;
+
+    fn random_encoded(rng: &mut Prng, c: usize, g: TokenGrid, p: f64) -> EncodedSpikes {
+        let mut m = SpikeMatrix::zeros(c, g.tokens());
+        for ci in 0..c {
+            for l in 0..g.tokens() {
+                if rng.bernoulli(p) {
+                    m.set(ci, l, true);
+                }
+            }
+        }
+        EncodedSpikes::from_bitmap(&m)
+    }
+
+    /// Reference: dense OR-maxpool on the bitmap.
+    fn dense_ref(input: &EncodedSpikes, g: TokenGrid, kernel: usize, stride: usize) -> SpikeMatrix {
+        let bm = input.to_bitmap();
+        let og = g.pooled(kernel, stride);
+        let mut out = SpikeMatrix::zeros(input.channels, og.tokens());
+        for c in 0..input.channels {
+            for oy in 0..og.height {
+                for ox in 0..og.width {
+                    let mut any = false;
+                    for ky in 0..kernel {
+                        for kx in 0..kernel {
+                            any |= bm.get(c, g.addr(oy * stride + ky, ox * stride + kx));
+                        }
+                    }
+                    out.set(c, og.addr(oy, ox), any);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matches_dense_reference_2x2_s2() {
+        let mut rng = Prng::new(3);
+        let g = TokenGrid::new(8, 8);
+        let smu = SpikeMaxpoolUnit::new(2, 2);
+        for &p in &[0.0, 0.1, 0.4, 1.0] {
+            let enc = random_encoded(&mut rng, 5, g, p);
+            let (out, _) = smu.pool(&enc, g, &AccelConfig::small());
+            assert_eq!(out.to_bitmap(), dense_ref(&enc, g, 2, 2));
+            assert!(out.is_well_formed());
+        }
+    }
+
+    #[test]
+    fn matches_dense_reference_2x2_s1_fig3() {
+        // The paper's Fig. 3 configuration: kernel 2x2, stride 1, with
+        // overlap reuse.
+        let mut rng = Prng::new(4);
+        let g = TokenGrid::new(6, 6);
+        let smu = SpikeMaxpoolUnit::new(2, 1);
+        let enc = random_encoded(&mut rng, 3, g, 0.2);
+        let (out, _) = smu.pool(&enc, g, &AccelConfig::small());
+        assert_eq!(out.to_bitmap(), dense_ref(&enc, g, 2, 1));
+    }
+
+    #[test]
+    fn single_spike_covers_multiple_kernels() {
+        // Fig. 3's m01 example: one interior spike lights several outputs.
+        let g = TokenGrid::new(4, 4);
+        let mut m = SpikeMatrix::zeros(1, 16);
+        m.set(0, g.addr(1, 1), true);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        let (out, _) = SpikeMaxpoolUnit::new(2, 1).pool(&enc, g, &AccelConfig::small());
+        assert_eq!(out.count_spikes(), 4); // covered by 4 overlapping kernels
+    }
+
+    #[test]
+    fn sparse_cheaper_than_dense_baseline() {
+        let mut rng = Prng::new(5);
+        let g = TokenGrid::new(16, 16);
+        let smu = SpikeMaxpoolUnit::new(2, 2);
+        let cfg = AccelConfig::small();
+        let enc = random_encoded(&mut rng, 8, g, 0.1); // 90% sparsity
+        let (o1, s_sparse) = smu.pool(&enc, g, &cfg);
+        let (o2, s_dense) = smu.pool_dense_baseline(&enc, g, &cfg);
+        assert_eq!(o1, o2, "sparse and dense must agree");
+        assert!(
+            s_sparse.cycles < s_dense.cycles,
+            "sparse {} !< dense {}",
+            s_sparse.cycles,
+            s_dense.cycles
+        );
+    }
+
+    #[test]
+    fn empty_input_is_one_cycle() {
+        let g = TokenGrid::new(8, 8);
+        let enc = EncodedSpikes::empty(4, 64);
+        let (out, stats) = SpikeMaxpoolUnit::new(2, 2).pool(&enc, g, &AccelConfig::small());
+        assert_eq!(out.count_spikes(), 0);
+        assert_eq!(stats.cycles, 1);
+        assert_eq!(stats.sops, 0);
+    }
+}

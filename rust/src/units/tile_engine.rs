@@ -1,0 +1,341 @@
+//! Tile Engine: the dense convolution engine of the SPS Core (Fig. 1,
+//! after [13]). It performs the Conv-BN (folded) stages of Spiking Patch
+//! Splitting on `tile_macs` parallel MAC units. The first stage consumes
+//! analog pixels; later stages consume binary spike maps (still routed
+//! through the Tile Engine — the paper's encoding optimisations target
+//! maxpool/linear/SDSA, not conv).
+
+use crate::hw::{AccelConfig, UnitStats};
+use crate::quant::{quantize_bias, quantize_weights, QFormat, QTensor, SaturationTruncation, ACT_FRAC, MEM_BITS};
+use crate::util::div_ceil;
+
+/// A BN-folded, quantized 3x3 (or kxk) SAME convolution.
+#[derive(Clone, Debug)]
+pub struct QuantizedConv {
+    pub c_out: usize,
+    pub c_in: usize,
+    pub kh: usize,
+    pub kw: usize,
+    /// `[c_out][c_in][kh][kw]` row-major.
+    pub w: Vec<i32>,
+    /// Scatter layout `[c_in][kh][kw][c_out]` (i64, built once) — the
+    /// contiguous-output-channel view the optimized conv kernel walks.
+    pub wt: Vec<i64>,
+    /// Same scatter layout in i32 (the overflow-checked fast path).
+    pub wt32: Vec<i32>,
+    pub w_frac: i32,
+    pub in_frac: i32,
+    /// Bias at accumulator scale (`w_frac + in_frac`).
+    pub bias: Vec<i64>,
+}
+
+impl QuantizedConv {
+    pub fn from_f32(
+        w: &[f32],
+        bias: &[f32],
+        c_out: usize,
+        c_in: usize,
+        kh: usize,
+        kw: usize,
+        in_frac: i32,
+    ) -> Self {
+        assert_eq!(w.len(), c_out * c_in * kh * kw);
+        assert_eq!(bias.len(), c_out);
+        let (wq, w_frac) = quantize_weights(w);
+        let mut wt = vec![0i64; c_out * c_in * kh * kw];
+        for o in 0..c_out {
+            for i in 0..c_in {
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        wt[((i * kh + ky) * kw + kx) * c_out + o] =
+                            wq[((o * c_in + i) * kh + ky) * kw + kx] as i64;
+                    }
+                }
+            }
+        }
+        let wt32 = wt.iter().map(|&v| v as i32).collect();
+        Self { c_out, c_in, kh, kw, w: wq, wt, wt32, w_frac, in_frac, bias: quantize_bias(bias, w_frac + in_frac) }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TileEngine {
+    pub sat: SaturationTruncation,
+    /// Reused HWC accumulator buffers (perf: avoids per-call allocation).
+    acc: Vec<i64>,
+    acc32: Vec<i32>,
+}
+
+impl TileEngine {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// SAME-padded stride-1 convolution over `input` `[C_in, H, W]`
+    /// (values at `conv.in_frac`). Output `[C_out, H, W]` in the wide
+    /// activation format, ready for the SEA / LIF array.
+    ///
+    /// `spike_input` marks binary inputs: MACs degenerate to adds and SOPs
+    /// are counted as spikes x fan-out, matching the SOP definition.
+    pub fn conv2d(
+        &mut self,
+        input: &QTensor,
+        conv: &QuantizedConv,
+        cfg: &AccelConfig,
+        spike_input: bool,
+    ) -> (QTensor, UnitStats) {
+        assert_eq!(input.shape.len(), 3, "expect [C,H,W]");
+        let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
+        assert_eq!(c_in, conv.c_in, "conv input channel mismatch");
+        assert_eq!(input.frac, conv.in_frac, "input frac mismatch");
+        let (ph, pw) = (conv.kh / 2, conv.kw / 2);
+
+        let mut out = QTensor::zeros(&[conv.c_out, h, w], ACT_FRAC);
+        let out_fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+        let mut nonzero_inputs: u64 = 0;
+
+        // Scatter-form convolution (perf pass, EXPERIMENTS.md §Perf): walk
+        // the (sparse) input once; each nonzero input scatters its w-row
+        // into an HWC-layout accumulator so the inner output-channel loop
+        // is contiguous (SIMD-friendly). Exact i64 accumulation — integer
+        // adds commute, so this is bit-identical to the direct form.
+        let n_out = conv.c_out;
+        // i32 accumulators are 2x SIMD-wider than i64 and provably cannot
+        // overflow here: |acc| <= |bias| (24-bit) + taps * max|in| * max|w|.
+        let max_in = input.data.iter().map(|&v| (v as i64).abs()).max().unwrap_or(0).max(1);
+        let worst = (1i64 << 23) + (c_in * conv.kh * conv.kw) as i64 * max_in * 512;
+        let use_i32 = worst < i32::MAX as i64 / 2;
+        let shift = conv.w_frac + conv.in_frac;
+        let taps = conv.kh * conv.kw;
+
+        if use_i32 {
+            self.acc32.clear();
+            self.acc32.resize(h * w * n_out, 0);
+            let acc = &mut self.acc32;
+            let wt = &conv.wt32;
+            for pos in 0..h * w {
+                for (a, &b) in acc[pos * n_out..(pos + 1) * n_out].iter_mut().zip(&conv.bias) {
+                    *a = b as i32;
+                }
+            }
+            for i in 0..c_in {
+                let plane = &input.data[i * h * w..(i + 1) * h * w];
+                for (pos, &v) in plane.iter().enumerate() {
+                    if v == 0 {
+                        continue;
+                    }
+                    nonzero_inputs += 1;
+                    let (y, x) = (pos / w, pos % w);
+                    for ky in 0..conv.kh {
+                        let oy = y + ph;
+                        if oy < ky || oy - ky >= h {
+                            continue;
+                        }
+                        let oy = oy - ky;
+                        for kx in 0..conv.kw {
+                            let ox = x + pw;
+                            if ox < kx || ox - kx >= w {
+                                continue;
+                            }
+                            let ox = ox - kx;
+                            let dst =
+                                &mut acc[(oy * w + ox) * n_out..(oy * w + ox + 1) * n_out];
+                            let src = &wt[((i * taps) + ky * conv.kw + kx) * n_out
+                                ..((i * taps) + ky * conv.kw + kx + 1) * n_out];
+                            if v == 1 {
+                                for (d, &s) in dst.iter_mut().zip(src) {
+                                    *d += s;
+                                }
+                            } else {
+                                for (d, &s) in dst.iter_mut().zip(src) {
+                                    *d += v * s;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            let sat = &mut self.sat;
+            for o in 0..n_out {
+                for pos in 0..h * w {
+                    out.data[o * h * w + pos] =
+                        sat.convert(acc[pos * n_out + o] as i64, shift, out_fmt);
+                }
+            }
+        } else {
+            self.acc.clear();
+            self.acc.resize(h * w * n_out, 0);
+            let acc = &mut self.acc;
+            let wt = &conv.wt;
+            for pos in 0..h * w {
+                acc[pos * n_out..(pos + 1) * n_out].copy_from_slice(&conv.bias);
+            }
+            for i in 0..c_in {
+                let plane = &input.data[i * h * w..(i + 1) * h * w];
+                for (pos, &v) in plane.iter().enumerate() {
+                    if v == 0 {
+                        continue;
+                    }
+                    nonzero_inputs += 1;
+                    let (y, x) = (pos / w, pos % w);
+                    for ky in 0..conv.kh {
+                        let oy = y + ph;
+                        if oy < ky || oy - ky >= h {
+                            continue;
+                        }
+                        let oy = oy - ky;
+                        for kx in 0..conv.kw {
+                            let ox = x + pw;
+                            if ox < kx || ox - kx >= w {
+                                continue;
+                            }
+                            let ox = ox - kx;
+                            let dst =
+                                &mut acc[(oy * w + ox) * n_out..(oy * w + ox + 1) * n_out];
+                            let src = &wt[((i * taps) + ky * conv.kw + kx) * n_out
+                                ..((i * taps) + ky * conv.kw + kx + 1) * n_out];
+                            let vv = v as i64;
+                            for (d, &s) in dst.iter_mut().zip(src) {
+                                *d += vv * s;
+                            }
+                        }
+                    }
+                }
+            }
+            let sat = &mut self.sat;
+            for o in 0..n_out {
+                for pos in 0..h * w {
+                    out.data[o * h * w + pos] = sat.convert(acc[pos * n_out + o], shift, out_fmt);
+                }
+            }
+        }
+
+        let total_macs = (conv.c_out * h * w * c_in * conv.kh * conv.kw) as u64;
+        let fan_out = (conv.c_out * conv.kh * conv.kw) as u64;
+        let sops = if spike_input { nonzero_inputs * fan_out } else { total_macs };
+        let stats = UnitStats {
+            cycles: div_ceil(total_macs, cfg.tile_macs as u64).max(1),
+            sops,
+            macs: if spike_input { 0 } else { total_macs },
+            adds: if spike_input { total_macs } else { 0 },
+            sram_reads: (input.len() as u64) + total_macs, // acts + weights
+            sram_writes: out.len() as u64,
+            ..Default::default()
+        };
+        (out, stats)
+    }
+}
+
+/// Float reference convolution used by tests.
+pub fn conv2d_f32_reference(
+    input: &[f32],
+    c_in: usize,
+    h: usize,
+    w: usize,
+    wts: &[f32],
+    bias: &[f32],
+    c_out: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let (ph, pw) = (kh / 2, kw / 2);
+    let mut out = vec![0f32; c_out * h * w];
+    for o in 0..c_out {
+        for oy in 0..h {
+            for ox in 0..w {
+                let mut acc = bias[o];
+                for i in 0..c_in {
+                    for ky in 0..kh {
+                        let iy = oy as isize + ky as isize - ph as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix = ox as isize + kx as isize - pw as isize;
+                            if ix < 0 || ix >= w as isize {
+                                continue;
+                            }
+                            acc += input[(i * h + iy as usize) * w + ix as usize]
+                                * wts[((o * c_in + i) * kh + ky) * kw + kx];
+                        }
+                    }
+                }
+                out[(o * h + oy) * w + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn identity_kernel_passthrough() {
+        // 1x1 kernel with weight 1.0 reproduces the input.
+        let conv = QuantizedConv::from_f32(&[1.0], &[0.0], 1, 1, 1, 1, ACT_FRAC);
+        let input = QTensor::from_f32(
+            &[0.5, -0.25, 1.0, 0.0],
+            &[1, 2, 2],
+            QFormat::new(MEM_BITS, ACT_FRAC),
+        );
+        let mut te = TileEngine::new();
+        let (out, _) = te.conv2d(&input, &conv, &AccelConfig::small(), false);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn matches_float_reference_within_quantization() {
+        let mut rng = Prng::new(21);
+        let (c_in, c_out, h, w) = (3, 6, 8, 8);
+        let wts: Vec<f32> = (0..c_out * c_in * 9).map(|_| rng.next_f32_signed() * 0.3).collect();
+        let bias: Vec<f32> = (0..c_out).map(|_| rng.next_f32_signed() * 0.2).collect();
+        let inp: Vec<f32> = (0..c_in * h * w).map(|_| rng.next_f32_signed()).collect();
+
+        let conv = QuantizedConv::from_f32(&wts, &bias, c_out, c_in, 3, 3, ACT_FRAC);
+        let qin = QTensor::from_f32(&inp, &[c_in, h, w], QFormat::new(MEM_BITS, ACT_FRAC));
+        let mut te = TileEngine::new();
+        let (out, _) = te.conv2d(&qin, &conv, &AccelConfig::small(), false);
+
+        // Reference on the *quantized* input, float weights.
+        let want = conv2d_f32_reference(&qin.to_f32(), c_in, h, w, &wts, &bias, c_out, 3, 3);
+        let got = out.to_f32();
+        let mut max_err = 0f32;
+        for (g, t) in got.iter().zip(&want) {
+            max_err = max_err.max((g - t).abs());
+        }
+        // error budget: weight rounding (27 taps) + output rounding
+        let w_scale = 2f32.powi(-conv.w_frac);
+        let budget = 27.0 * w_scale * 0.5 * 1.2 + 2f32.powi(-ACT_FRAC);
+        assert!(max_err <= budget, "max_err {max_err} > budget {budget}");
+    }
+
+    #[test]
+    fn spike_input_counts_sops_by_fanout() {
+        let mut rng = Prng::new(22);
+        let (c_in, c_out, h, w) = (4, 4, 4, 4);
+        let wts: Vec<f32> = (0..c_out * c_in * 9).map(|_| rng.next_f32_signed()).collect();
+        let conv = QuantizedConv::from_f32(&wts, &vec![0.0; c_out], c_out, c_in, 3, 3, 0);
+        let mut data = vec![0i32; c_in * h * w];
+        data[3] = 1;
+        data[20] = 1; // two spikes
+        let qin = QTensor { shape: vec![c_in, h, w], frac: 0, data };
+        let mut te = TileEngine::new();
+        let (_, stats) = te.conv2d(&qin, &conv, &AccelConfig::small(), true);
+        assert_eq!(stats.sops, 2 * (c_out * 9) as u64);
+        assert_eq!(stats.macs, 0);
+    }
+
+    #[test]
+    fn cycles_use_all_macs() {
+        let conv = QuantizedConv::from_f32(&vec![0.1; 8 * 8 * 9], &vec![0.0; 8], 8, 8, 3, 3, 0);
+        let qin = QTensor::zeros(&[8, 16, 16], 0);
+        let mut te = TileEngine::new();
+        let cfg = AccelConfig::small(); // 32 MACs
+        let (_, stats) = te.conv2d(&qin, &conv, &cfg, true);
+        let total = (8 * 16 * 16 * 8 * 9) as u64;
+        assert_eq!(stats.cycles, div_ceil(total, 32));
+    }
+}

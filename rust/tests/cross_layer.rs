@@ -1,0 +1,64 @@
+//! Cross-layer validation of the Fig.-6 measurement: the module sparsities
+//! the *float JAX model* reports (written by `python -m compile.analysis`
+//! during `make artifacts`) must match the rust *quantized* pipeline's
+//! sparsities on the same held-out images within a small quantization
+//! tolerance. This closes the L1/L2 <-> L3 loop on activations, not just
+//! on logits.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use spikeformer_accel::model::{load_model, loader::load_test_split, GoldenExecutor};
+
+fn load_jax_sparsity(path: &Path) -> Option<HashMap<String, f64>> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut map = HashMap::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        if let (Some(k), Some(v)) = (it.next(), it.next()) {
+            map.insert(k.to_string(), v.parse().ok()?);
+        }
+    }
+    Some(map)
+}
+
+#[test]
+fn quantized_sparsity_matches_float_jax_within_tolerance() {
+    let jax_path = Path::new("artifacts/fig6_jax.txt");
+    let wdir = Path::new("artifacts/weights");
+    let (Some(jax), true) = (load_jax_sparsity(jax_path), wdir.join("manifest.txt").exists())
+    else {
+        eprintln!("skip: run `make artifacts` first");
+        return;
+    };
+
+    let model = load_model(wdir).unwrap();
+    let (imgs, shape, _) = load_test_split(wdir).unwrap();
+    let img_len = shape[1] * shape[2] * shape[3];
+    let n = shape[0].min(64); // must match analysis.py --limit
+    let golden = GoldenExecutor::new(&model);
+
+    // accumulate rust-side sparsity over the same images
+    let mut acc: HashMap<String, (f64, usize)> = HashMap::new();
+    for i in 0..n {
+        let r = golden.infer(&imgs[i * img_len..(i + 1) * img_len]);
+        for (name, s) in r.sparsity {
+            let e = acc.entry(name).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += 1;
+        }
+    }
+
+    let mut compared = 0;
+    for (name, jx) in &jax {
+        if let Some((total, count)) = acc.get(name) {
+            let rs = total / *count as f64;
+            assert!(
+                (rs - jx).abs() < 0.08,
+                "{name}: rust quantized {rs:.4} vs jax float {jx:.4}"
+            );
+            compared += 1;
+        }
+    }
+    assert!(compared >= 8, "only {compared} modules compared — name drift?");
+}

@@ -1,0 +1,130 @@
+//! Integration: the encoded-spike accelerator datapath against the dense
+//! golden executor, across configurations, seeds and datapath modes.
+
+use spikeformer_accel::accel::{Accelerator, DatapathMode};
+use spikeformer_accel::hw::{AccelConfig, ResourceModel};
+use spikeformer_accel::model::{GoldenExecutor, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn random_image(seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+#[test]
+fn bit_exact_vs_golden_many_seeds() {
+    let cfg = SdtModelConfig::tiny();
+    for model_seed in [1u64, 2, 3] {
+        let model = QuantizedModel::random(&cfg, model_seed);
+        let golden = GoldenExecutor::new(&model);
+        let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
+        for img_seed in [10u64, 11, 12, 13] {
+            let img = random_image(img_seed);
+            let g = golden.infer(&img);
+            let r = accel.infer(&img).unwrap();
+            assert_eq!(r.logits, g.logits, "model {model_seed}, image {img_seed}");
+        }
+    }
+}
+
+#[test]
+fn bit_exact_vs_golden_multiblock_config() {
+    // A custom config with 2 blocks and more timesteps exercises LIF-state
+    // carry and block chaining.
+    let cfg = SdtModelConfig {
+        name: "test2b".into(),
+        timesteps: 3,
+        num_blocks: 2,
+        ..SdtModelConfig::tiny()
+    };
+    let model = QuantizedModel::random(&cfg, 5);
+    let golden = GoldenExecutor::new(&model);
+    let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
+    let img = random_image(20);
+    assert_eq!(accel.infer(&img).unwrap().logits, golden.infer(&img).logits);
+}
+
+#[test]
+fn sparsity_tables_match_golden() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 7);
+    let golden = GoldenExecutor::new(&model);
+    let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
+    let img = random_image(30);
+    let g = golden.infer(&img);
+    let r = accel.infer(&img).unwrap();
+    for (name, s_accel) in &r.sparsity {
+        if let Some((_, s_gold)) = g.sparsity.iter().find(|(n, _)| n == name) {
+            assert!(
+                (s_accel - s_gold).abs() < 1e-12,
+                "sparsity mismatch for {name}: {s_accel} vs {s_gold}"
+            );
+        }
+    }
+}
+
+#[test]
+fn encoded_strictly_cheaper_than_bitmap_at_realistic_sparsity() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 9);
+    let img = random_image(40);
+    let mut enc = Accelerator::with_mode(model.clone(), AccelConfig::paper(), DatapathMode::Encoded);
+    let mut bmp = Accelerator::with_mode(model, AccelConfig::paper(), DatapathMode::Bitmap);
+    let r1 = enc.infer(&img).unwrap();
+    let r2 = bmp.infer(&img).unwrap();
+    assert_eq!(r1.logits, r2.logits);
+    assert!(r2.total.cycles > r1.total.cycles);
+    // the spike-consuming phases specifically must shrink
+    for phase in ["sdeb.qkv", "sdeb.mlp", "sps.maxpool"] {
+        assert!(
+            r2.phases.get(phase).cycles >= r1.phases.get(phase).cycles,
+            "phase {phase}"
+        );
+    }
+}
+
+#[test]
+fn paper_scale_runs_and_reports() {
+    let cfg = SdtModelConfig::paper();
+    let model = QuantizedModel::random(&cfg, 42);
+    let mut accel = Accelerator::new(model, AccelConfig::paper());
+    let r = accel.infer(&random_image(1)).unwrap();
+    assert_eq!(r.logits.len(), 10);
+    assert!(r.total.cycles > 0);
+    assert!(r.total.sops > 1_000_000, "paper-scale SDT should be >1M SOPs");
+    assert!(r.gsops > 0.0 && r.gsops <= AccelConfig::paper().peak_gsops() + 1e-9);
+    // Fig-6 modules present for both blocks
+    for b in 0..2 {
+        for site in ["q", "k", "v", "sdsa"] {
+            assert!(
+                r.sparsity.iter().any(|(n, _)| n == &format!("block{b}.{site}.spikes")),
+                "missing block{b}.{site}"
+            );
+        }
+    }
+}
+
+#[test]
+fn lane_scaling_monotone() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 3);
+    let img = random_image(2);
+    let mut prev_cycles = u64::MAX;
+    for lanes in [128usize, 512, 1536] {
+        let mut accel = Accelerator::new(model.clone(), AccelConfig::with_lanes(lanes));
+        let r = accel.infer(&img).unwrap();
+        assert!(
+            r.total.cycles <= prev_cycles,
+            "more lanes must not be slower ({lanes} lanes)"
+        );
+        prev_cycles = r.total.cycles;
+    }
+}
+
+#[test]
+fn resource_estimate_matches_paper_at_operating_point() {
+    let r = ResourceModel::default().estimate(&AccelConfig::paper());
+    assert!((r.lut as f64 - 453_266.0).abs() / 453_266.0 < 0.02);
+    assert_eq!(r.ff, 94_120);
+    assert_eq!(r.bram, 784);
+}

@@ -1,0 +1,111 @@
+//! Integration: the L3 coordinator end-to-end — responses match the
+//! reference executor, ordering, batching policy effects, and mixed
+//! worker pools.
+
+use std::time::{Duration, Instant};
+
+use spikeformer_accel::coordinator::{
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, Request, SimulatorBackend,
+};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{GoldenExecutor, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn images(n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Prng::new(seed);
+    (0..n).map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()).collect()
+}
+
+fn golden_factory(model: &QuantizedModel) -> BackendFactory {
+    let m = model.clone();
+    Box::new(move || Ok(Box::new(GoldenBackend::new(m)) as _))
+}
+
+fn sim_factory(model: &QuantizedModel) -> BackendFactory {
+    let m = model.clone();
+    Box::new(move || Ok(Box::new(SimulatorBackend::new(m, AccelConfig::small())) as _))
+}
+
+#[test]
+fn coordinator_results_match_direct_execution() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 31);
+    let imgs = images(12, 1);
+
+    // direct reference
+    let exec = GoldenExecutor::new(&model);
+    let want: Vec<Vec<f32>> = imgs.iter().map(|i| exec.infer(i).logits).collect();
+
+    let started = Instant::now();
+    let mut co = Coordinator::new(
+        vec![golden_factory(&model), golden_factory(&model)],
+        BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+    );
+    for (i, img) in imgs.iter().enumerate() {
+        co.submit(Request { id: i as u64, image: img.clone() });
+    }
+    let (responses, report) = co.finish(started).unwrap();
+    assert_eq!(report.completed, imgs.len());
+    for (i, resp) in responses.iter().enumerate() {
+        assert_eq!(resp.id, i as u64);
+        assert_eq!(resp.logits, want[i], "response {i} wrong");
+    }
+}
+
+#[test]
+fn mixed_simulator_and_golden_workers_agree() {
+    // The simulator is bit-exact vs golden, so a mixed pool must produce
+    // identical logits regardless of which worker served which request.
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 32);
+    let imgs = images(10, 2);
+    let exec = GoldenExecutor::new(&model);
+    let want: Vec<Vec<f32>> = imgs.iter().map(|i| exec.infer(i).logits).collect();
+
+    let started = Instant::now();
+    let mut co = Coordinator::new(
+        vec![sim_factory(&model), golden_factory(&model)],
+        BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+    );
+    for (i, img) in imgs.iter().enumerate() {
+        co.submit(Request { id: i as u64, image: img.clone() });
+    }
+    let (responses, report) = co.finish(started).unwrap();
+    for (i, resp) in responses.iter().enumerate() {
+        assert_eq!(resp.logits, want[i], "response {i}");
+    }
+    assert!(report.modelled_cycles > 0, "simulator worker should have served work");
+}
+
+#[test]
+fn single_request_is_released_by_timeout() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 33);
+    let started = Instant::now();
+    let mut co = Coordinator::new(
+        vec![golden_factory(&model)],
+        BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
+    );
+    co.submit(Request { id: 0, image: images(1, 3).pop().unwrap() });
+    let (responses, _) = co.finish(started).unwrap();
+    assert_eq!(responses.len(), 1);
+}
+
+#[test]
+fn large_burst_all_served() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 34);
+    let imgs = images(40, 4);
+    let started = Instant::now();
+    let mut co = Coordinator::new(
+        vec![golden_factory(&model), golden_factory(&model), golden_factory(&model)],
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
+    );
+    for (i, img) in imgs.iter().enumerate() {
+        co.submit(Request { id: i as u64, image: img.clone() });
+    }
+    let (responses, report) = co.finish(started).unwrap();
+    assert_eq!(responses.len(), 40);
+    assert!(report.mean_batch >= 1.0);
+    assert!(report.latency_p99_s >= report.latency_p50_s);
+}

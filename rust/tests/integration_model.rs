@@ -1,0 +1,83 @@
+//! Integration: trained-artifact loading, quantized accuracy (H1), and the
+//! quantization error budget. Skips gracefully before `make artifacts`.
+
+use std::path::Path;
+
+use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{load_model, loader::load_test_split, GoldenExecutor};
+
+fn artifacts() -> Option<&'static Path> {
+    let dir = Path::new("artifacts/weights");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+#[test]
+fn trained_model_loads_with_expected_shapes() {
+    let Some(dir) = artifacts() else { return };
+    let model = load_model(dir).unwrap();
+    assert_eq!(model.cfg.embed_dim, 64);
+    assert_eq!(model.sps_convs.len(), 5);
+    assert_eq!(model.blocks.len(), model.cfg.num_blocks);
+    for blk in &model.blocks {
+        assert_eq!(blk.q.in_dim, 64);
+        assert_eq!(blk.mlp1.out_dim, model.cfg.mlp_hidden);
+        assert_eq!(blk.mlp2.out_dim, 64);
+    }
+}
+
+#[test]
+fn quantized_accuracy_beats_chance_by_far() {
+    // The paper's H1: quantization costs little accuracy. Our tiny model
+    // hits 100% float on the synthetic corpus; require >= 90% quantized.
+    let Some(dir) = artifacts() else { return };
+    let model = load_model(dir).unwrap();
+    let (imgs, shape, labels) = load_test_split(dir).unwrap();
+    let n = shape[0].min(64);
+    let img_len = shape[1] * shape[2] * shape[3];
+    let golden = GoldenExecutor::new(&model);
+    let mut ok = 0;
+    for i in 0..n {
+        let r = golden.infer(&imgs[i * img_len..(i + 1) * img_len]);
+        let pred = r
+            .logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        ok += (pred == labels[i] as usize) as usize;
+    }
+    let acc = ok as f64 / n as f64;
+    assert!(acc >= 0.9, "quantized accuracy {acc:.3} < 0.9");
+}
+
+#[test]
+fn simulator_bit_exact_on_trained_weights() {
+    let Some(dir) = artifacts() else { return };
+    let model = load_model(dir).unwrap();
+    let (imgs, shape, _) = load_test_split(dir).unwrap();
+    let img_len = shape[1] * shape[2] * shape[3];
+    let golden = GoldenExecutor::new(&model);
+    let mut accel = Accelerator::new(model.clone(), AccelConfig::paper());
+    for i in 0..shape[0].min(8) {
+        let img = &imgs[i * img_len..(i + 1) * img_len];
+        assert_eq!(accel.infer(img).unwrap().logits, golden.infer(img).logits, "image {i}");
+    }
+}
+
+#[test]
+fn trained_activations_are_sparse() {
+    // Fig. 6's premise: trained SNN activations are strongly sparse.
+    let Some(dir) = artifacts() else { return };
+    let model = load_model(dir).unwrap();
+    let (imgs, shape, _) = load_test_split(dir).unwrap();
+    let img_len = shape[1] * shape[2] * shape[3];
+    let golden = GoldenExecutor::new(&model);
+    let r = golden.infer(&imgs[..img_len]);
+    let sdsa = r.sparsity.iter().find(|(n, _)| n == "block0.sdsa.spikes").unwrap().1;
+    assert!(sdsa > 0.5, "SDSA output should be sparse, got {sdsa:.3}");
+    for (name, s) in &r.sparsity {
+        assert!(*s > 0.2, "{name} suspiciously dense: {s:.3}");
+    }
+}

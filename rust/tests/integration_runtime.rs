@@ -1,0 +1,122 @@
+//! Integration: the PJRT runtime against the AOT artifacts — batch
+//! consistency, SDSA kernel equivalence with the rust SMAM, and agreement
+//! between the float JAX model and the quantized pipeline.
+
+use std::path::Path;
+
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{load_model, loader::load_test_split, GoldenExecutor};
+use spikeformer_accel::runtime::PjrtRuntime;
+use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix};
+use spikeformer_accel::units::SpikeMaskAddModule;
+use spikeformer_accel::util::Prng;
+
+fn artifacts() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    dir.join("model.hlo.txt").exists().then_some(dir)
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+}
+
+#[test]
+fn batch1_and_batch8_hlo_agree() {
+    let Some(dir) = artifacts() else { return };
+    if !dir.join("model_b8.hlo.txt").exists() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let b1 = rt.load_hlo(&dir.join("model.hlo.txt")).unwrap();
+    let b8 = rt.load_hlo(&dir.join("model_b8.hlo.txt")).unwrap();
+    let mut rng = Prng::new(33);
+    let imgs: Vec<f32> = (0..8 * 3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+    let o8 = b8.run_f32(&[(&imgs, &[8, 3, 32, 32])]).unwrap();
+    for i in 0..8 {
+        let img = &imgs[i * 3 * 32 * 32..(i + 1) * 3 * 32 * 32];
+        let o1 = b1.run_f32(&[(img, &[1, 3, 32, 32])]).unwrap();
+        for (a, b) in o1[0].iter().zip(&o8[0][i * 10..(i + 1) * 10]) {
+            assert!((a - b).abs() < 1e-4, "image {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn sdsa_hlo_equals_rust_smam_on_random_spikes() {
+    // The L1 Pallas kernel (through AOT + PJRT) and the L3 SMAM must
+    // implement the same SDSA semantics.
+    let Some(dir) = artifacts() else { return };
+    let rt = PjrtRuntime::cpu().unwrap();
+    let sdsa = rt.load_hlo(&dir.join("sdsa.hlo.txt")).unwrap();
+    let (l, c) = (64usize, 64usize);
+    let mut rng = Prng::new(44);
+    for trial in 0..5 {
+        // random binary spike matrices, token-major [L, C] f32 for the HLO
+        let mut q_lc = vec![0f32; l * c];
+        let mut k_lc = vec![0f32; l * c];
+        let mut v_lc = vec![0f32; l * c];
+        let mut qm = SpikeMatrix::zeros(c, l);
+        let mut km = SpikeMatrix::zeros(c, l);
+        let mut vm = SpikeMatrix::zeros(c, l);
+        for tok in 0..l {
+            for ch in 0..c {
+                if rng.bernoulli(0.2) {
+                    q_lc[tok * c + ch] = 1.0;
+                    qm.set(ch, tok, true);
+                }
+                if rng.bernoulli(0.2) {
+                    k_lc[tok * c + ch] = 1.0;
+                    km.set(ch, tok, true);
+                }
+                if rng.bernoulli(0.2) {
+                    v_lc[tok * c + ch] = 1.0;
+                    vm.set(ch, tok, true);
+                }
+            }
+        }
+        let hlo_out =
+            sdsa.run_f32(&[(&q_lc, &[l, c]), (&k_lc, &[l, c]), (&v_lc, &[l, c])]).unwrap();
+
+        let smam = SpikeMaskAddModule::new(2); // tiny config attn_v_th
+        let (out, _) = smam.run(
+            &EncodedSpikes::from_bitmap(&qm),
+            &EncodedSpikes::from_bitmap(&km),
+            &EncodedSpikes::from_bitmap(&vm),
+            &AccelConfig::small(),
+        );
+        let got = out.masked_v.to_bitmap();
+        for tok in 0..l {
+            for ch in 0..c {
+                let want = hlo_out[0][tok * c + ch] != 0.0;
+                assert_eq!(got.get(ch, tok), want, "trial {trial} tok {tok} ch {ch}");
+            }
+        }
+    }
+}
+
+#[test]
+fn float_and_quantized_predictions_agree_on_test_split() {
+    let Some(dir) = artifacts() else { return };
+    let wdir = Path::new("artifacts/weights");
+    if !wdir.join("manifest.txt").exists() {
+        return;
+    }
+    let rt = PjrtRuntime::cpu().unwrap();
+    let float_model = rt.load_hlo(&dir.join("model.hlo.txt")).unwrap();
+    let model = load_model(wdir).unwrap();
+    let golden = GoldenExecutor::new(&model);
+    let (imgs, shape, _) = load_test_split(wdir).unwrap();
+    let img_len = shape[1] * shape[2] * shape[3];
+    let n = shape[0].min(24);
+    let mut agree = 0;
+    for i in 0..n {
+        let img = &imgs[i * img_len..(i + 1) * img_len];
+        let f = float_model.run_f32(&[(img, &[1, 3, 32, 32])]).unwrap();
+        let q = golden.infer(img);
+        agree += (argmax(&f[0]) == argmax(&q.logits)) as usize;
+    }
+    assert!(
+        agree as f64 / n as f64 >= 0.9,
+        "float/quantized agreement too low: {agree}/{n}"
+    );
+}

@@ -1,0 +1,156 @@
+//! Property tests over the spike-encoding substrate and the integer LIF:
+//! round-trips, storage accounting, grid coverage, and the fixed-point
+//! neuron against an exact float reference on the quantization grid.
+
+use spikeformer_accel::lif::{LifArray, LifParams};
+use spikeformer_accel::quant::{QFormat, ACT_FRAC, MEM_BITS, SEGMENT_TOKENS};
+use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix, TokenGrid};
+use spikeformer_accel::util::{proptest::check, Prng};
+use spikeformer_accel::{prop_assert, prop_assert_eq};
+
+fn random_bitmap(rng: &mut Prng, c: usize, l: usize, p: f64) -> SpikeMatrix {
+    let mut m = SpikeMatrix::zeros(c, l);
+    for ci in 0..c {
+        for li in 0..l {
+            if rng.bernoulli(p) {
+                m.set(ci, li, true);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn prop_encoding_roundtrip() {
+    check("bitmap -> encoded -> bitmap", 100, |rng| {
+        let c = rng.gen_range(1, 32);
+        let l = rng.gen_range(1, 1500);
+        let p = rng.next_f64();
+        let m = random_bitmap(rng, c, l, p);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        prop_assert!(enc.is_well_formed(), "not well-formed");
+        prop_assert_eq!(enc.to_bitmap(), m);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_storage_words_bounds() {
+    // words >= spikes (every spike stored) and
+    // words <= spikes + non-empty-segment count (one header per segment).
+    check("storage word bounds", 80, |rng| {
+        let c = rng.gen_range(1, 16);
+        let l = rng.gen_range(1, 2000);
+        let p = rng.next_f64() * 0.5;
+        let m = random_bitmap(rng, c, l, p);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        let spikes = enc.count_spikes();
+        let words = enc.storage_words();
+        prop_assert!(words >= spikes, "words {words} < spikes {spikes}");
+        let max_headers = c * (l.div_ceil(SEGMENT_TOKENS));
+        prop_assert!(
+            words <= spikes + max_headers,
+            "words {words} > spikes {spikes} + headers {max_headers}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparsity_consistent() {
+    check("sparsity agrees between representations", 60, |rng| {
+        let c = rng.gen_range(1, 16);
+        let l = rng.gen_range(1, 500);
+        let p = rng.next_f64();
+        let m = random_bitmap(rng, c, l, p);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        prop_assert!(
+            (m.sparsity() - enc.sparsity()).abs() < 1e-12,
+            "{} vs {}",
+            m.sparsity(),
+            enc.sparsity()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_coverage_matches_bruteforce() {
+    check("covering_outputs == brute force", 60, |rng| {
+        let h = rng.gen_range(2, 14);
+        let w = rng.gen_range(2, 14);
+        let kmax = 4.min(h.min(w));
+        let kernel = rng.gen_range(1, kmax + 1);
+        let stride = rng.gen_range(1, kernel + 1);
+        let g = TokenGrid::new(h, w);
+        let og = g.pooled(kernel, stride);
+        let y = rng.gen_range(0, h);
+        let x = rng.gen_range(0, w);
+        let mut got = Vec::new();
+        g.covering_outputs(y, x, kernel, stride, &mut got);
+        let mut brute = Vec::new();
+        for oy in 0..og.height {
+            for ox in 0..og.width {
+                let (y0, x0) = (oy * stride, ox * stride);
+                if y >= y0 && y < y0 + kernel && x >= x0 && x < x0 + kernel {
+                    brute.push(og.addr(oy, ox));
+                }
+            }
+        }
+        prop_assert_eq!(got, brute);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lif_matches_grid_reference() {
+    // Independent reimplementation of the Eq. (1)-(3) recurrence with the
+    // same grid semantics (decay rounded to the fixed-point grid, ties
+    // away from zero) — the integer LifArray must match it exactly.
+    check("integer LIF == grid reference", 60, |rng| {
+        let params = LifParams::from_f32(1.0, 0.0, 0.5);
+        let mut arr = LifArray::new(1, params);
+        let grid = (1i64 << ACT_FRAC) as f64;
+        let mut temp_f = 0.0f64;
+        for step in 0..100 {
+            let raw = rng.gen_range(0, 513) as i32 - 256; // +-4.0 at Q.6
+            let spa_f = raw as f64 / grid;
+            let mem_f = spa_f + temp_f;
+            let fired_f = mem_f >= 1.0;
+            temp_f = if fired_f {
+                0.0
+            } else {
+                // gamma=0.5 decay, rounded to the grid ties-away-from-zero
+                let half = mem_f * 0.5 * grid;
+                let rounded = if half >= 0.0 { (half + 0.5).floor() } else { (half - 0.5).ceil() };
+                rounded / grid
+            };
+            let fired = arr.step_one(0, raw);
+            prop_assert!(fired == fired_f, "step {step}: int {fired} float {fired_f}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lif_spike_rate_decreasing_in_threshold() {
+    check("lif rate monotone in v_th", 30, |rng| {
+        let n = 256;
+        let spa: Vec<i32> = (0..n)
+            .map(|_| {
+                let fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+                fmt.from_f32(rng.next_f32_signed() * 2.0)
+            })
+            .collect();
+        let mut prev = usize::MAX;
+        for v_th in [0.25f32, 0.5, 1.0, 2.0] {
+            let mut arr = LifArray::new(n, LifParams::from_f32(v_th, 0.0, 0.5));
+            let mut fired = Vec::new();
+            arr.step(&spa, &mut fired);
+            let count = fired.iter().filter(|&&f| f).count();
+            prop_assert!(count <= prev, "v_th {v_th}: {count} > {prev}");
+            prev = count;
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,160 @@
+//! Property tests over the compute units (own harness; proptest is
+//! unavailable offline): for random spike tensors, layer shapes and
+//! hardware configs, every encoded-path unit must equal its dense oracle.
+
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::quant::{rshift_round, sat, QuantizedLinear, ACT_FRAC, MEM_BITS};
+use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix, TokenGrid};
+use spikeformer_accel::units::{
+    slu::dense_reference, SpikeLinearUnit, SpikeMaskAddModule, SpikeMaxpoolUnit,
+};
+use spikeformer_accel::util::{proptest::check, Prng};
+use spikeformer_accel::{prop_assert, prop_assert_eq};
+
+fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+    let mut m = SpikeMatrix::zeros(c, l);
+    for ci in 0..c {
+        for li in 0..l {
+            if rng.bernoulli(p) {
+                m.set(ci, li, true);
+            }
+        }
+    }
+    EncodedSpikes::from_bitmap(&m)
+}
+
+fn random_hw(rng: &mut Prng) -> AccelConfig {
+    let lanes = [16, 64, 256, 1536][rng.gen_range(0, 4)];
+    AccelConfig::with_lanes(lanes)
+}
+
+#[test]
+fn prop_smu_equals_dense_or_pool() {
+    check("smu == dense OR pool", 60, |rng| {
+        let h = rng.gen_range(2, 12);
+        let w = rng.gen_range(2, 12);
+        let kernel = rng.gen_range(1, 3.min(h.min(w)) + 1);
+        let stride = rng.gen_range(1, kernel + 1);
+        let grid = TokenGrid::new(h, w);
+        let channels = rng.gen_range(1, 8);
+        let p = rng.next_f64();
+        let enc = random_encoded(rng, channels, grid.tokens(), p);
+        let smu = SpikeMaxpoolUnit::new(kernel, stride);
+        let hw = random_hw(rng);
+        let (sparse, _) = smu.pool(&enc, grid, &hw);
+        let (dense, _) = smu.pool_dense_baseline(&enc, grid, &hw);
+        prop_assert_eq!(sparse, dense);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smam_equals_bitmap_intersection() {
+    check("smam == bitmap hadamard-sum", 60, |rng| {
+        let c = rng.gen_range(1, 24);
+        let l = rng.gen_range(1, 200);
+        let v_th = rng.gen_range(0, 5) as u32;
+        let (pq, pk, pv) = (rng.next_f64(), rng.next_f64(), rng.next_f64());
+        let q = random_encoded(rng, c, l, pq);
+        let k = random_encoded(rng, c, l, pk);
+        let v = random_encoded(rng, c, l, pv);
+        let smam = SpikeMaskAddModule::new(v_th);
+        let hw = random_hw(rng);
+        let (a, sa) = smam.run(&q, &k, &v, &hw);
+        let (b, sb) = smam.run_dense_baseline(&q, &k, &v, &hw);
+        prop_assert_eq!(a.mask, b.mask);
+        prop_assert_eq!(a.acc, b.acc);
+        prop_assert_eq!(a.masked_v, b.masked_v);
+        prop_assert!(
+            sa.cycles <= sb.cycles + 1,
+            "encoded may never be slower: {} vs {}",
+            sa.cycles,
+            sb.cycles
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slu_equals_dense_linear() {
+    check("slu == dense linear", 40, |rng| {
+        let c_in = rng.gen_range(1, 48);
+        let c_out = rng.gen_range(1, 48);
+        let l = rng.gen_range(1, 32);
+        let px = rng.next_f64();
+        let x = random_encoded(rng, c_in, l, px);
+        let w: Vec<f32> = (0..c_in * c_out).map(|_| rng.next_f32_signed()).collect();
+        let b: Vec<f32> = (0..c_out).map(|_| rng.next_f32_signed()).collect();
+        let layer = QuantizedLinear::from_f32(&w, &b, c_in, c_out, 0);
+        let mut slu = SpikeLinearUnit::new();
+        let hw = random_hw(rng);
+        let (out, stats) = slu.forward(&x, &layer, &hw);
+        let want = dense_reference(&x, &layer);
+        for (i, (&got, &acc)) in out.data.iter().zip(want.iter()).enumerate() {
+            let expect = sat(rshift_round(acc, layer.acc_frac() - ACT_FRAC), MEM_BITS);
+            prop_assert!(got == expect, "element {i}: {got} != {expect}");
+        }
+        let spikes = x.count_spikes() as u64;
+        prop_assert!(stats.sops == spikes * c_out as u64, "sop count wrong");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smam_mask_monotone_in_threshold() {
+    // Raising v_th can only clear more channels, never fire more.
+    check("smam mask monotone in v_th", 40, |rng| {
+        let c = rng.gen_range(1, 16);
+        let l = rng.gen_range(1, 100);
+        let q = random_encoded(rng, c, l, 0.4);
+        let k = random_encoded(rng, c, l, 0.4);
+        let v = random_encoded(rng, c, l, 0.4);
+        let hw = AccelConfig::small();
+        let mut prev_fired = usize::MAX;
+        for v_th in 0..6u32 {
+            let (out, _) = SpikeMaskAddModule::new(v_th).run(&q, &k, &v, &hw);
+            let fired = out.mask.iter().filter(|&&m| m).count();
+            prop_assert!(fired <= prev_fired, "v_th {v_th}: {fired} > {prev_fired}");
+            prev_fired = fired;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_slu_cycles_monotone_in_spike_count() {
+    check("slu cycles monotone in spikes", 30, |rng| {
+        let c_in = 32;
+        let c_out = 32;
+        let l = 32;
+        let w: Vec<f32> = (0..c_in * c_out).map(|_| rng.next_f32_signed()).collect();
+        let layer = QuantizedLinear::from_f32(&w, &vec![0.0; c_out], c_in, c_out, 0);
+        let hw = AccelConfig::paper();
+        let p1 = rng.next_f64() * 0.5;
+        let p2 = p1 + 0.4;
+        let sparse = random_encoded(rng, c_in, l, p1);
+        let dense = random_encoded(rng, c_in, l, p2);
+        if dense.count_spikes() <= sparse.count_spikes() {
+            return Ok(()); // rare sampling inversion: vacuous case
+        }
+        let mut slu = SpikeLinearUnit::new();
+        let (_, s1) = slu.forward(&sparse, &layer, &hw);
+        let (_, s2) = slu.forward(&dense, &layer, &hw);
+        prop_assert!(s2.cycles >= s1.cycles, "{} < {}", s2.cycles, s1.cycles);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smu_output_well_formed() {
+    check("smu output is well-formed encoding", 40, |rng| {
+        let h = rng.gen_range(2, 16);
+        let w = rng.gen_range(2, 16);
+        let grid = TokenGrid::new(h, w);
+        let (nc, pe) = (rng.gen_range(1, 6), rng.next_f64());
+        let enc = random_encoded(rng, nc, grid.tokens(), pe);
+        let (out, _) = SpikeMaxpoolUnit::new(2, 1).pool(&enc, grid, &AccelConfig::small());
+        prop_assert!(out.is_well_formed(), "malformed output encoding");
+        Ok(())
+    });
+}
