@@ -1,20 +1,25 @@
 //! Bench U1 — per-unit microbenchmarks: modelled cycles AND host wall-time
 //! for the SMU, SMAM, and SLU against their dense/bitmap baselines across
-//! a sparsity sweep. This is the unit-level version of the paper's
-//! redundancy-elimination claim.
+//! a sparsity sweep, plus an encode+SDSA case comparing the flat CSR
+//! spike-stream arena against the previous list-of-lists representation.
+//! This is the unit-level version of the paper's redundancy-elimination
+//! claim.
 //!
 //! ```bash
-//! cargo bench --bench units_micro
+//! cargo bench --bench units_micro              # full sweep
+//! cargo bench --bench units_micro -- --quick   # CI smoke mode
+//! cargo bench --bench units_micro -- --json    # also write BENCH_encoding.json
 //! ```
 
-use spikeformer_accel::benchlib::{bench, black_box, section};
-use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::benchlib::{bench, black_box, section, BenchResult};
+use spikeformer_accel::hw::{AccelConfig, UnitStats};
+use spikeformer_accel::model::SdtModelConfig;
 use spikeformer_accel::quant::QuantizedLinear;
 use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix, TokenGrid};
 use spikeformer_accel::units::{SpikeLinearUnit, SpikeMaskAddModule, SpikeMaxpoolUnit};
-use spikeformer_accel::util::Prng;
+use spikeformer_accel::util::{div_ceil, Prng};
 
-fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+fn random_bitmap(rng: &mut Prng, c: usize, l: usize, p: f64) -> SpikeMatrix {
     let mut m = SpikeMatrix::zeros(c, l);
     for ci in 0..c {
         for li in 0..l {
@@ -23,12 +28,198 @@ fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
             }
         }
     }
-    EncodedSpikes::from_bitmap(&m)
+    m
+}
+
+fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+    EncodedSpikes::from_bitmap(&random_bitmap(rng, c, l, p))
+}
+
+// ---------------------------------------------------------------------------
+// The seed's list-of-lists representation, kept here as the "before"
+// baseline for the CSR arena: one heap Vec per channel, per-channel clones
+// through the SDSA mask gate. `sdsa` mirrors the seed `SpikeMaskAddModule::
+// run` line for line (comparator/match counters, acc vector, UnitStats
+// construction) so the two bench closures time identical modelled work and
+// differ only in the spike-stream representation.
+// ---------------------------------------------------------------------------
+
+struct LegacyEncoded {
+    channels: usize,
+    lists: Vec<Vec<u16>>,
+}
+
+impl LegacyEncoded {
+    fn from_bitmap(m: &SpikeMatrix) -> Self {
+        let mut lists = vec![Vec::new(); m.channels];
+        for (c, list) in lists.iter_mut().enumerate() {
+            for (l, &fired) in m.channel(c).iter().enumerate() {
+                if fired {
+                    list.push(l as u16);
+                }
+            }
+        }
+        Self { channels: m.channels, lists }
+    }
+
+    fn count_spikes(&self) -> usize {
+        self.lists.iter().map(Vec::len).sum()
+    }
+
+    /// The seed SMAM: two-pointer merge-join per channel with the same
+    /// stats accounting as `SpikeMaskAddModule::run`, then clone-or-clear
+    /// V's per-channel list.
+    fn sdsa(
+        &self,
+        k: &LegacyEncoded,
+        v: &LegacyEncoded,
+        v_th: u32,
+        cfg: &AccelConfig,
+    ) -> (Vec<bool>, Vec<u32>, Vec<Vec<u16>>, UnitStats) {
+        let c = self.channels;
+        let mut mask = vec![false; c];
+        let mut acc = vec![0u32; c];
+        let mut masked_v: Vec<Vec<u16>> = vec![Vec::new(); c];
+        let mut comparator_steps: u64 = 0;
+        let mut matches: u64 = 0;
+        for ch in 0..c {
+            let (ql, kl) = (&self.lists[ch], &k.lists[ch]);
+            let (mut i, mut j) = (0usize, 0usize);
+            let mut count = 0u32;
+            while i < ql.len() && j < kl.len() {
+                comparator_steps += 1;
+                match ql[i].cmp(&kl[j]) {
+                    std::cmp::Ordering::Equal => {
+                        count += 1;
+                        matches += 1;
+                        i += 1;
+                        j += 1;
+                    }
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                }
+            }
+            acc[ch] = count;
+            mask[ch] = count >= v_th;
+            if mask[ch] {
+                masked_v[ch] = v.lists[ch].clone();
+            }
+        }
+        let q_spikes = self.count_spikes() as u64;
+        let k_spikes = k.count_spikes() as u64;
+        let retained: u64 = masked_v.iter().map(|l| l.len() as u64).sum();
+        let stats = UnitStats {
+            cycles: div_ceil(comparator_steps, cfg.smam_comparators as u64).max(1)
+                + div_ceil(c as u64, cfg.smam_comparators as u64),
+            sops: q_spikes + k_spikes + retained,
+            adds: matches,
+            cmps: comparator_steps + c as u64,
+            sram_reads: q_spikes + k_spikes + retained,
+            sram_writes: retained,
+            ..Default::default()
+        };
+        (mask, acc, masked_v, stats)
+    }
+}
+
+struct EncodeSdsaRow {
+    sparsity: f64,
+    csr: BenchResult,
+    legacy: BenchResult,
+}
+
+/// The measured operating point, recorded alongside the numbers so the
+/// emitted JSON can never claim a config that was not run.
+struct EncodeSdsaCase {
+    channels: usize,
+    tokens: usize,
+    attn_v_th: u32,
+    rows: Vec<EncodeSdsaRow>,
+}
+
+fn encode_sdsa_case(quick: bool) -> EncodeSdsaCase {
+    // Paper operating point: D=384 channels, 64 tokens per head tensor.
+    let model_cfg = SdtModelConfig::paper();
+    let (c, l) = (model_cfg.embed_dim, model_cfg.num_tokens());
+    let hw = AccelConfig::paper();
+    let smam = SpikeMaskAddModule::new(model_cfg.attn_v_th);
+    let (warmup, iters) = if quick { (1, 3) } else { (3, 50) };
+    // Fig-6 regime: the paper reports SDSA/linear sparsities of ~0.8-0.97.
+    let sparsities: &[f64] = if quick { &[0.9] } else { &[0.8, 0.9, 0.95] };
+
+    section(&format!(
+        "encode + SDSA: CSR arena vs list-of-lists ({c}ch, {l} tok, paper config)"
+    ));
+    let mut rows = Vec::new();
+    let mut rng = Prng::new(23);
+    for &s in sparsities {
+        let p = 1.0 - s;
+        let qm = random_bitmap(&mut rng, c, l, p);
+        let km = random_bitmap(&mut rng, c, l, p);
+        let vm = random_bitmap(&mut rng, c, l, p);
+
+        let csr = bench(&format!("csr    encode+sdsa @{s:.2} sparsity"), warmup, iters, || {
+            let q = EncodedSpikes::from_bitmap(&qm);
+            let k = EncodedSpikes::from_bitmap(&km);
+            let v = EncodedSpikes::from_bitmap(&vm);
+            let (out, stats) = smam.run(&q, &k, &v, &hw);
+            black_box((out, stats));
+        });
+        let legacy = bench(&format!("legacy encode+sdsa @{s:.2} sparsity"), warmup, iters, || {
+            let q = LegacyEncoded::from_bitmap(&qm);
+            let k = LegacyEncoded::from_bitmap(&km);
+            let v = LegacyEncoded::from_bitmap(&vm);
+            let out = q.sdsa(&k, &v, model_cfg.attn_v_th, &hw);
+            black_box(out);
+        });
+        println!(
+            "  -> csr/legacy median ratio {:.2}x",
+            legacy.median_s / csr.median_s.max(1e-12)
+        );
+        rows.push(EncodeSdsaRow { sparsity: s, csr, legacy });
+    }
+    EncodeSdsaCase {
+        channels: c,
+        tokens: l,
+        attn_v_th: model_cfg.attn_v_th,
+        rows,
+    }
+}
+
+fn write_json(case: &EncodeSdsaCase) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_encoding.json");
+    let mut out = String::from("{\n  \"bench\": \"encode+sdsa\",\n");
+    out.push_str(&format!(
+        "  \"config\": {{\"channels\": {}, \"tokens\": {}, \"accel\": \"paper\", \"attn_v_th\": {}}},\n",
+        case.channels, case.tokens, case.attn_v_th
+    ));
+    out.push_str("  \"units\": \"seconds (median wall time per iteration, release build)\",\n");
+    out.push_str("  \"results\": [\n");
+    for (i, r) in case.rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"sparsity\": {:.2}, \"csr_arena_s\": {:.9}, \"list_of_lists_s\": {:.9}, \"speedup\": {:.3}}}{}\n",
+            r.sparsity,
+            r.csr.median_s,
+            r.legacy.median_s,
+            r.legacy.median_s / r.csr.median_s.max(1e-12),
+            if i + 1 == case.rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    match std::fs::write(path, out) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json = args.iter().any(|a| a == "--json");
+
     let cfg = AccelConfig::paper();
     let mut rng = Prng::new(11);
+    let sweep: &[f64] = if quick { &[0.1] } else { &[0.05, 0.1, 0.2, 0.3, 0.5] };
 
     section("SMU: spike maxpool vs dense maxpool (384ch, 32x32, k2s2)");
     let grid = TokenGrid::new(32, 32);
@@ -37,7 +228,7 @@ fn main() {
         "{:<12}{:>16}{:>16}{:>10}",
         "sparsity", "enc cycles", "dense cycles", "saving"
     );
-    for &p in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+    for &p in sweep {
         let enc = random_encoded(&mut rng, 384, 1024, p);
         let (_, s1) = smu.pool(&enc, grid, &cfg);
         let (_, s2) = smu.pool_dense_baseline(&enc, grid, &cfg);
@@ -56,7 +247,7 @@ fn main() {
         "{:<12}{:>16}{:>16}{:>10}",
         "sparsity", "enc cycles", "dense cycles", "saving"
     );
-    for &p in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+    for &p in sweep {
         let q = random_encoded(&mut rng, 384, 64, p);
         let k = random_encoded(&mut rng, 384, 64, p);
         let v = random_encoded(&mut rng, 384, 64, p);
@@ -78,7 +269,7 @@ fn main() {
         "{:<12}{:>14}{:>14}{:>14}{:>12}{:>12}",
         "sparsity", "enc cycles", "bitmap cyc", "dense cyc", "vs bitmap", "vs dense"
     );
-    for &p in &[0.05, 0.1, 0.2, 0.3, 0.5] {
+    for &p in sweep {
         let x = random_encoded(&mut rng, 384, 64, p);
         let mut slu = SpikeLinearUnit::new();
         let (_, s1) = slu.forward(&x, &layer, &cfg);
@@ -93,6 +284,17 @@ fn main() {
             s2.cycles as f64 / s1.cycles as f64,
             s3.cycles as f64 / s1.cycles as f64
         );
+    }
+
+    // The CSR-vs-legacy before/after case (perf trajectory anchor).
+    let case = encode_sdsa_case(quick);
+    if json {
+        write_json(&case);
+    }
+
+    if quick {
+        println!("\n--quick: skipping host wall-time section");
+        return;
     }
 
     section("host wall-time (release): the simulator's own hot paths");

@@ -118,8 +118,8 @@ impl Accelerator {
             let (s_out, st) = self.sea_head.encode(&u_cl, &self.hw);
             sink.add("head.encode", st);
             sink.sparsity("head.in.spikes", &s_out);
-            for (c, list) in s_out.lists.iter().enumerate() {
-                head_counts[c] += list.len() as u64;
+            for (c, count) in head_counts.iter_mut().enumerate() {
+                *count += s_out.channel_len(c) as u64;
             }
         }
 

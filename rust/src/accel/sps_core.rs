@@ -87,16 +87,19 @@ impl SpsCore {
             sink.sparsity(&format!("sps.stage{i}.spikes"), &enc);
             buffers.store_encoded(&enc, false)?;
 
-            // Next conv consumes the spike map as a dense binary tensor.
-            let bm = enc.to_bitmap();
-            let s = if i == 1 { side / 2 } else if i == 3 { side / 2 } else { side };
-            cur = QTensor {
-                shape: vec![self.dims[i], s, s],
-                frac: 0,
-                data: (0..bm.channels * bm.tokens)
-                    .map(|j| bm.channel(j / bm.tokens)[j % bm.tokens] as i32)
-                    .collect(),
-            };
+            // Next conv consumes the spike map as a dense binary tensor;
+            // scatter the encoded addresses straight into a zeroed buffer
+            // instead of round-tripping through a bitmap object.
+            let s = if i == 1 || i == 3 { side / 2 } else { side };
+            debug_assert_eq!(enc.tokens, s * s);
+            let mut data = vec![0i32; self.dims[i] * enc.tokens];
+            for c in 0..enc.channels {
+                let base = c * enc.tokens;
+                for &a in enc.channel_addrs(c) {
+                    data[base + a as usize] = 1;
+                }
+            }
+            cur = QTensor { shape: vec![self.dims[i], s, s], frac: 0, data };
             enc_prev = Some(enc);
         }
 

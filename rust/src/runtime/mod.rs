@@ -5,6 +5,10 @@
 //! float-vs-quantized logits are compared in `examples/cifar_inference`.
 //!
 //! Interchange is HLO *text* (see `python/compile/aot.py` for why).
+//!
+//! The `xla` crate is unavailable in the offline build, so the real client
+//! is gated behind the `xla` cargo feature; the default build exposes an
+//! API-identical stub whose constructor errors (DESIGN.md).
 
 pub mod pjrt;
 

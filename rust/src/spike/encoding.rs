@@ -1,4 +1,15 @@
 //! Bitmap and position-encoded spike matrices + round-trip conversion.
+//!
+//! [`EncodedSpikes`] stores the position-encoded stream as a flat CSR-style
+//! arena: one contiguous address vector for all channels plus a channel
+//! offset table, mirroring how the ESS banks hold one packed stream of
+//! 8-bit addresses + segment headers rather than per-channel heap objects
+//! (DESIGN.md "ESS layout"). Consumers borrow per-channel slices via
+//! [`EncodedSpikes::channel_addrs`]; producers append in channel-major
+//! order via [`EncodedSpikes::push`] / [`EncodedSpikesBuilder`].
+
+use std::fmt;
+use std::ops::Range;
 
 use crate::quant::SEGMENT_TOKENS;
 
@@ -52,19 +63,74 @@ impl SpikeMatrix {
     }
 }
 
-/// Position-encoded spikes: per channel, sorted token addresses (§III-A).
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// Position-encoded spikes (§III-A): per channel, the sorted token
+/// addresses of the spikes, stored as one flat CSR arena.
+///
+/// Layout invariants:
+/// * `addrs` holds every channel's addresses back to back, channel-major;
+/// * channel `c` occupies `channel_range(c)`, strictly increasing within;
+/// * `seg_headers[c]` is the number of distinct 256-token segments channel
+///   `c` touches (one stored header word each, see [`Self::storage_words`]).
+///
+/// The offset table is finalized lazily: entries for channels at or before
+/// the build cursor are exact, later entries are implicitly `addrs.len()`
+/// (all-empty tail). Every accessor goes through [`Self::offset`], so the
+/// laziness is invisible to consumers.
+#[derive(Clone)]
 pub struct EncodedSpikes {
     pub channels: usize,
     pub tokens: usize,
-    /// `lists[c]` = strictly increasing token addresses of channel c.
-    pub lists: Vec<Vec<u16>>,
+    /// Flat token-address stream, all channels back to back.
+    addrs: Vec<u16>,
+    /// Channel start offsets (`channels + 1` entries); entries after `cur`
+    /// are stale and resolved by `offset()`.
+    offsets: Vec<u32>,
+    /// Per-channel segment-header word counts (precomputed on push so
+    /// `storage_words()` is O(channels)).
+    seg_headers: Vec<u32>,
+    /// Highest channel appended so far (build cursor).
+    cur: usize,
 }
 
 impl EncodedSpikes {
     pub fn empty(channels: usize, tokens: usize) -> Self {
         assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16");
-        Self { channels, tokens, lists: vec![Vec::new(); channels] }
+        Self {
+            channels,
+            tokens,
+            addrs: Vec::new(),
+            offsets: vec![0; channels + 1],
+            seg_headers: vec![0; channels],
+            cur: 0,
+        }
+    }
+
+    /// Start a builder over a `[channels, tokens]` tile.
+    pub fn builder(channels: usize, tokens: usize) -> EncodedSpikesBuilder {
+        EncodedSpikesBuilder { enc: Self::empty(channels, tokens) }
+    }
+
+    /// Resolve an offset-table entry, treating entries past the build
+    /// cursor as the current end of the arena (empty trailing channels).
+    #[inline]
+    fn offset(&self, i: usize) -> usize {
+        if i > self.cur {
+            self.addrs.len()
+        } else {
+            self.offsets[i] as usize
+        }
+    }
+
+    /// Finalize offsets up to channel `c` and move the cursor there.
+    #[inline]
+    fn advance_to(&mut self, c: usize) {
+        if c > self.cur {
+            let end = self.addrs.len() as u32;
+            for o in &mut self.offsets[self.cur + 1..=c] {
+                *o = end;
+            }
+            self.cur = c;
+        }
     }
 
     /// Encode a bitmap — the software mirror of the SEA (Fig. 2), which in
@@ -72,11 +138,9 @@ impl EncodedSpikes {
     pub fn from_bitmap(m: &SpikeMatrix) -> Self {
         let mut enc = Self::empty(m.channels, m.tokens);
         for c in 0..m.channels {
-            let ch = m.channel(c);
-            let list = &mut enc.lists[c];
-            for (l, &fired) in ch.iter().enumerate() {
+            for (l, &fired) in m.channel(c).iter().enumerate() {
                 if fired {
-                    list.push(l as u16);
+                    enc.push(c, l);
                 }
             }
         }
@@ -86,16 +150,51 @@ impl EncodedSpikes {
     /// Decode back to a bitmap (used by tests and the baseline datapath).
     pub fn to_bitmap(&self) -> SpikeMatrix {
         let mut m = SpikeMatrix::zeros(self.channels, self.tokens);
-        for (c, list) in self.lists.iter().enumerate() {
-            for &l in list {
+        for c in 0..self.channels {
+            for &l in self.channel_addrs(c) {
                 m.set(c, l as usize, true);
             }
         }
         m
     }
 
+    /// Arena index range of channel `c`.
+    ///
+    /// Real (not debug) bounds check: `offset()` would silently resolve an
+    /// out-of-range channel to an empty slice, hiding shape mismatches the
+    /// old per-channel `Vec` indexing made loud.
+    #[inline]
+    pub fn channel_range(&self, c: usize) -> Range<usize> {
+        assert!(c < self.channels, "channel {c} out of range ({} channels)", self.channels);
+        self.offset(c)..self.offset(c + 1)
+    }
+
+    /// Borrowed, strictly increasing token addresses of channel `c`.
+    #[inline]
+    pub fn channel_addrs(&self, c: usize) -> &[u16] {
+        &self.addrs[self.channel_range(c)]
+    }
+
+    /// Spike count of channel `c` (O(1)).
+    #[inline]
+    pub fn channel_len(&self, c: usize) -> usize {
+        self.channel_range(c).len()
+    }
+
+    /// The whole flat address arena (all channels back to back).
+    #[inline]
+    pub fn addrs(&self) -> &[u16] {
+        &self.addrs
+    }
+
+    /// Iterate per-channel address slices in channel order.
+    pub fn iter_channels(&self) -> impl Iterator<Item = &[u16]> + '_ {
+        (0..self.channels).map(move |c| self.channel_addrs(c))
+    }
+
+    #[inline]
     pub fn count_spikes(&self) -> usize {
-        self.lists.iter().map(Vec::len).sum()
+        self.addrs.len()
     }
 
     pub fn sparsity(&self) -> f64 {
@@ -106,42 +205,163 @@ impl EncodedSpikes {
         1.0 - self.count_spikes() as f64 / total as f64
     }
 
-    /// Push a spike; addresses must arrive in increasing token order (the
-    /// SEA scans addresses sequentially, §III-A: "stored sequentially
-    /// according to address order").
+    /// Push a spike. Spikes must arrive channel-major and in increasing
+    /// token order within a channel (the SEA scans addresses sequentially,
+    /// §III-A: "stored sequentially according to address order") — exactly
+    /// the order every producer in the datapath already emits.
     pub fn push(&mut self, c: usize, l: usize) {
-        debug_assert!(l < self.tokens);
-        let list = &mut self.lists[c];
-        debug_assert!(list.last().map_or(true, |&last| (last as usize) < l), "out-of-order push");
-        list.push(l as u16);
+        assert!(c < self.channels, "channel {c} out of range");
+        assert!(c >= self.cur, "channel-major push order violated: {c} < {}", self.cur);
+        debug_assert!(l < self.tokens, "address {l} out of token range {}", self.tokens);
+        self.advance_to(c);
+        let start = self.offsets[c] as usize;
+        let seg = l / SEGMENT_TOKENS;
+        if self.addrs.len() == start {
+            self.seg_headers[c] += 1; // first spike of the channel
+        } else {
+            let last = *self.addrs.last().unwrap() as usize;
+            debug_assert!(last < l, "out-of-order push: {last} >= {l}");
+            if last / SEGMENT_TOKENS != seg {
+                self.seg_headers[c] += 1; // channel enters a new segment
+            }
+        }
+        self.addrs.push(l as u16);
+    }
+
+    /// Bulk-append a strictly increasing address slice to channel `c`
+    /// (same ordering contract as [`Self::push`]).
+    pub fn extend_channel(&mut self, c: usize, new: &[u16]) {
+        assert!(c < self.channels, "channel {c} out of range");
+        assert!(c >= self.cur, "channel-major extend order violated");
+        self.advance_to(c);
+        let start = self.offsets[c] as usize;
+        let mut prev: Option<u16> = self.addrs.get(start..).and_then(|s| s.last().copied());
+        let mut prev_seg = prev.map_or(usize::MAX, |p| p as usize / SEGMENT_TOKENS);
+        for &a in new {
+            debug_assert!((a as usize) < self.tokens, "address {a} out of range");
+            debug_assert!(prev.map_or(true, |p| p < a), "out-of-order extend");
+            let seg = a as usize / SEGMENT_TOKENS;
+            if seg != prev_seg {
+                self.seg_headers[c] += 1;
+                prev_seg = seg;
+            }
+            prev = Some(a);
+        }
+        self.addrs.extend_from_slice(new);
+    }
+
+    /// Copy channel `src_c` of `src` into (empty) channel `c` of `self` as
+    /// one offset-range copy out of the source arena — the SMAM mask gate's
+    /// retain path (Fig. 4(c)) without per-channel clones or re-scans: the
+    /// precomputed segment-header count travels with the slice.
+    pub fn extend_channel_from(&mut self, c: usize, src: &EncodedSpikes, src_c: usize) {
+        assert!(c < self.channels, "channel {c} out of range");
+        assert!(c >= self.cur, "channel-major extend order violated");
+        assert_eq!(self.tokens, src.tokens, "token-space mismatch");
+        self.advance_to(c);
+        assert_eq!(
+            self.offsets[c] as usize,
+            self.addrs.len(),
+            "extend_channel_from target channel must be empty"
+        );
+        let range = src.channel_range(src_c);
+        self.addrs.extend_from_slice(&src.addrs[range]);
+        self.seg_headers[c] += src.seg_headers[src_c];
     }
 
     /// Number of 8-bit words the ESS stores for this tensor, including one
     /// segment-header word per non-empty 256-token segment of each channel
-    /// (how 8-bit addresses cover token spaces > 256; DESIGN.md).
+    /// (how 8-bit addresses cover token spaces > 256; DESIGN.md). O(channels):
+    /// header counts are maintained incrementally on push.
     pub fn storage_words(&self) -> usize {
-        let mut words = 0;
-        for list in &self.lists {
-            words += list.len();
-            let mut seg_prev = usize::MAX;
-            for &l in list {
-                let seg = l as usize / SEGMENT_TOKENS;
-                if seg != seg_prev {
-                    words += 1; // segment header
-                    seg_prev = seg;
-                }
-            }
-        }
-        words
+        self.addrs.len() + self.seg_headers.iter().map(|&h| h as usize).sum::<usize>()
     }
 
-    /// Validity check used by property tests: strictly sorted, in range.
+    /// Validity check used by property tests: offsets contiguous and
+    /// monotone, addresses strictly sorted and in range per channel, and
+    /// segment-header counts consistent with the addresses.
     pub fn is_well_formed(&self) -> bool {
-        self.lists.len() == self.channels
-            && self.lists.iter().all(|list| {
-                list.windows(2).all(|w| w[0] < w[1])
-                    && list.iter().all(|&l| (l as usize) < self.tokens)
-            })
+        if self.offsets.len() != self.channels + 1 || self.seg_headers.len() != self.channels {
+            return false;
+        }
+        if self.offset(0) != 0 {
+            return false;
+        }
+        let mut prev_end = 0usize;
+        for c in 0..self.channels {
+            let (s, e) = (self.offset(c), self.offset(c + 1));
+            if s != prev_end || e < s || e > self.addrs.len() {
+                return false;
+            }
+            prev_end = e;
+            let list = &self.addrs[s..e];
+            if !list.windows(2).all(|w| w[0] < w[1]) {
+                return false;
+            }
+            if !list.iter().all(|&l| (l as usize) < self.tokens) {
+                return false;
+            }
+            let mut segs = 0u32;
+            let mut prev_seg = usize::MAX;
+            for &l in list {
+                let seg = l as usize / SEGMENT_TOKENS;
+                if seg != prev_seg {
+                    segs += 1;
+                    prev_seg = seg;
+                }
+            }
+            if segs != self.seg_headers[c] {
+                return false;
+            }
+        }
+        prev_end == self.addrs.len()
+    }
+}
+
+impl PartialEq for EncodedSpikes {
+    fn eq(&self, other: &Self) -> bool {
+        // Stale offset entries differ between construction histories, so
+        // compare the resolved channel boundaries, not the raw tables.
+        self.channels == other.channels
+            && self.tokens == other.tokens
+            && self.addrs == other.addrs
+            && (0..=self.channels).all(|i| self.offset(i) == other.offset(i))
+    }
+}
+
+impl Eq for EncodedSpikes {}
+
+impl fmt::Debug for EncodedSpikes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("EncodedSpikes")
+            .field("channels", &self.channels)
+            .field("tokens", &self.tokens)
+            .field("channel_addrs", &self.iter_channels().collect::<Vec<_>>())
+            .finish()
+    }
+}
+
+/// Incremental builder over the CSR arena; same ordering contract as
+/// [`EncodedSpikes::push`], separated out so call sites that construct a
+/// tensor in one pass read as build-then-freeze.
+#[derive(Clone, Debug)]
+pub struct EncodedSpikesBuilder {
+    enc: EncodedSpikes,
+}
+
+impl EncodedSpikesBuilder {
+    pub fn push(&mut self, c: usize, l: usize) -> &mut Self {
+        self.enc.push(c, l);
+        self
+    }
+
+    pub fn extend_channel(&mut self, c: usize, addrs: &[u16]) -> &mut Self {
+        self.enc.extend_channel(c, addrs);
+        self
+    }
+
+    pub fn finish(self) -> EncodedSpikes {
+        self.enc
     }
 }
 
@@ -209,7 +429,77 @@ mod tests {
         enc.push(0, 2);
         enc.push(0, 9);
         assert!(enc.is_well_formed());
-        assert_eq!(enc.lists[0], vec![2, 9]);
+        assert_eq!(enc.channel_addrs(0), &[2u16, 9][..]);
+    }
+
+    #[test]
+    fn arena_is_flat_and_channel_slices_borrow_it() {
+        let mut enc = EncodedSpikes::empty(4, 32);
+        enc.push(0, 1);
+        enc.push(0, 7);
+        enc.push(2, 3); // channel 1 stays empty
+        assert_eq!(enc.addrs(), &[1u16, 7, 3][..]);
+        assert_eq!(enc.channel_range(0), 0..2);
+        assert_eq!(enc.channel_addrs(1), &[][..]);
+        assert_eq!(enc.channel_range(2), 2..3);
+        assert_eq!(enc.channel_addrs(3), &[][..]);
+        assert_eq!(enc.channel_len(2), 1);
+        assert!(enc.is_well_formed());
+    }
+
+    #[test]
+    fn builder_equals_from_bitmap() {
+        let mut rng = Prng::new(3);
+        let m = random_bitmap(&mut rng, 5, 40, 0.3);
+        let mut b = EncodedSpikes::builder(5, 40);
+        for c in 0..5 {
+            for l in 0..40 {
+                if m.get(c, l) {
+                    b.push(c, l);
+                }
+            }
+        }
+        assert_eq!(b.finish(), EncodedSpikes::from_bitmap(&m));
+    }
+
+    #[test]
+    fn extend_channel_from_copies_slice_and_headers() {
+        let mut src = EncodedSpikes::empty(2, 1024);
+        src.push(1, 5);
+        src.push(1, 700); // two segments
+        let mut dst = EncodedSpikes::empty(2, 1024);
+        dst.extend_channel_from(1, &src, 1);
+        assert_eq!(dst.channel_addrs(1), src.channel_addrs(1));
+        assert_eq!(dst.storage_words(), src.storage_words());
+        assert!(dst.is_well_formed());
+    }
+
+    #[test]
+    fn extend_channel_appends_in_order() {
+        let mut enc = EncodedSpikes::empty(3, 64);
+        enc.extend_channel(0, &[1, 4]);
+        enc.extend_channel(0, &[9]);
+        enc.extend_channel(2, &[0, 63]);
+        assert_eq!(enc.channel_addrs(0), &[1u16, 4, 9][..]);
+        assert_eq!(enc.channel_addrs(2), &[0u16, 63][..]);
+        assert!(enc.is_well_formed());
+    }
+
+    #[test]
+    #[should_panic(expected = "channel-major")]
+    fn earlier_channel_push_panics() {
+        let mut enc = EncodedSpikes::empty(4, 16);
+        enc.push(2, 0);
+        enc.push(1, 0);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "out-of-order")]
+    fn out_of_order_address_push_panics() {
+        let mut enc = EncodedSpikes::empty(1, 16);
+        enc.push(0, 5);
+        enc.push(0, 3);
     }
 
     #[test]

@@ -5,12 +5,14 @@
 //! * [`SpikeMatrix`] — the conventional bitmap a baseline accelerator
 //!   would stream;
 //! * [`EncodedSpikes`] — the paper's format: per channel, the *sorted token
-//!   addresses* of the spikes, stored bank-per-channel in the ESS. Encoded
-//!   addresses are 8-bit; token spaces larger than 256 are split into
-//!   segments (DESIGN.md), which the storage model accounts for.
+//!   addresses* of the spikes. Stored as one flat CSR-style arena (a single
+//!   contiguous address stream plus a channel offset table), matching the
+//!   ESS's packed banks of 8-bit addresses; token spaces larger than 256
+//!   are split into segments with one header word each (DESIGN.md), which
+//!   the storage model accounts for.
 
 pub mod encoding;
 pub mod grid;
 
-pub use encoding::{EncodedSpikes, SpikeMatrix};
+pub use encoding::{EncodedSpikes, EncodedSpikesBuilder, SpikeMatrix};
 pub use grid::TokenGrid;

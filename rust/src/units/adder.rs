@@ -51,7 +51,8 @@ impl AdderModule {
         let one = 1i64 << ACT_FRAC;
         let mut out = values.clone();
         let mut n_spikes: u64 = 0;
-        for (c, list) in spikes.lists.iter().enumerate() {
+        for c in 0..spikes.channels {
+            let list = spikes.channel_addrs(c);
             n_spikes += list.len() as u64;
             for &l in list {
                 let idx = c * spikes.tokens + l as usize;

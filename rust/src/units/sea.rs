@@ -73,8 +73,8 @@ mod tests {
             act(0.0), act(1.0), act(0.0), act(0.0), // ch1: fires at 1
         ];
         let (enc, stats) = sea.encode(&spa, &AccelConfig::small());
-        assert_eq!(enc.lists[0], vec![0, 2]);
-        assert_eq!(enc.lists[1], vec![1]);
+        assert_eq!(enc.channel_addrs(0), &[0u16, 2][..]);
+        assert_eq!(enc.channel_addrs(1), &[1u16][..]);
         assert!(enc.is_well_formed());
         assert_eq!(stats.adds, 8);
         assert_eq!(stats.cmps, 8);

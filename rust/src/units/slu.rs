@@ -50,7 +50,8 @@ impl SpikeLinearUnit {
         let acc = &mut self.acc;
 
         let mut total_spikes: u64 = 0;
-        for (c, list) in x.lists.iter().enumerate() {
+        for c in 0..x.channels {
+            let list = x.channel_addrs(c);
             if list.is_empty() {
                 continue;
             }

@@ -11,6 +11,8 @@
 //! channel finishes in |Q_c| + |K_c| comparator steps. The accumulated
 //! count is compared against the firing threshold to produce the mask bit
 //! S[c]; V_s's per-channel ESS bank is then cleared or retained (Fig. 4(c)).
+//! Retention is an offset-range copy out of V's CSR arena — no per-channel
+//! heap clones.
 
 use crate::hw::{AccelConfig, UnitStats};
 use crate::spike::EncodedSpikes;
@@ -38,6 +40,15 @@ impl SpikeMaskAddModule {
         Self { v_th }
     }
 
+    fn check_shapes(q: &EncodedSpikes, k: &EncodedSpikes, v: &EncodedSpikes) {
+        assert_eq!(q.channels, k.channels);
+        assert_eq!(q.channels, v.channels);
+        assert_eq!(q.tokens, k.tokens);
+        // A mismatched V token space would silently produce a masked_v
+        // whose declared token range disagrees with Q/K's address space.
+        assert_eq!(q.tokens, v.tokens, "SMAM V token space mismatch");
+    }
+
     /// Run SDSA mask-add over encoded Q_s, K_s, V_s (all `[C, L]`).
     pub fn run(
         &self,
@@ -46,9 +57,7 @@ impl SpikeMaskAddModule {
         v: &EncodedSpikes,
         cfg: &AccelConfig,
     ) -> (SmamOutput, UnitStats) {
-        assert_eq!(q.channels, k.channels);
-        assert_eq!(q.channels, v.channels);
-        assert_eq!(q.tokens, k.tokens);
+        Self::check_shapes(q, k, v);
 
         let c = q.channels;
         let mut mask = vec![false; c];
@@ -58,7 +67,7 @@ impl SpikeMaskAddModule {
         let mut matches: u64 = 0;
 
         for ch in 0..c {
-            let (ql, kl) = (&q.lists[ch], &k.lists[ch]);
+            let (ql, kl) = (q.channel_addrs(ch), k.channel_addrs(ch));
             // Two-pointer merge-join; each iteration is one comparator step
             // consuming one encoded spike (the smaller address, or both on
             // a match — the hardware still spends one cycle on the pair).
@@ -81,7 +90,7 @@ impl SpikeMaskAddModule {
             // Fire determination (threshold compare, Fig. 4(b)).
             mask[ch] = count >= self.v_th;
             if mask[ch] {
-                masked_v.lists[ch] = v.lists[ch].clone();
+                masked_v.extend_channel_from(ch, v, ch);
             }
         }
 
@@ -113,6 +122,7 @@ impl SpikeMaskAddModule {
         v: &EncodedSpikes,
         cfg: &AccelConfig,
     ) -> (SmamOutput, UnitStats) {
+        Self::check_shapes(q, k, v);
         let (qb, kb) = (q.to_bitmap(), k.to_bitmap());
         let c = q.channels;
         let l = q.tokens;
@@ -129,7 +139,7 @@ impl SpikeMaskAddModule {
             acc[ch] = count;
             mask[ch] = count >= self.v_th;
             if mask[ch] {
-                masked_v.lists[ch] = v.lists[ch].clone();
+                masked_v.extend_channel_from(ch, v, ch);
             }
         }
         let positions = (c * l) as u64;
@@ -195,9 +205,9 @@ mod tests {
         let (out, _) = SpikeMaskAddModule::new(3).run(&q, &k, &v, &cfg);
         for ch in 0..4 {
             if out.mask[ch] {
-                assert_eq!(out.masked_v.lists[ch], v.lists[ch]);
+                assert_eq!(out.masked_v.channel_addrs(ch), v.channel_addrs(ch));
             } else {
-                assert!(out.masked_v.lists[ch].is_empty());
+                assert!(out.masked_v.channel_addrs(ch).is_empty());
             }
         }
     }
@@ -253,6 +263,27 @@ mod tests {
         v.push(1, 3);
         let (out, _) = SpikeMaskAddModule::new(0).run(&q, &k, &v, &cfg);
         assert!(out.mask.iter().all(|&m| m));
-        assert_eq!(out.masked_v.lists[1], vec![3]);
+        assert_eq!(out.masked_v.channel_addrs(1), &[3u16][..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "SMAM V token space mismatch")]
+    fn mismatched_v_token_space_panics() {
+        let cfg = AccelConfig::small();
+        let q = EncodedSpikes::empty(2, 16);
+        let k = EncodedSpikes::empty(2, 16);
+        let mut v = EncodedSpikes::empty(2, 8); // wrong token space
+        v.push(0, 7);
+        SpikeMaskAddModule::new(0).run(&q, &k, &v, &cfg);
+    }
+
+    #[test]
+    #[should_panic(expected = "SMAM V token space mismatch")]
+    fn dense_baseline_checks_v_token_space_too() {
+        let cfg = AccelConfig::small();
+        let q = EncodedSpikes::empty(2, 16);
+        let k = EncodedSpikes::empty(2, 16);
+        let v = EncodedSpikes::empty(2, 32);
+        SpikeMaskAddModule::new(0).run_dense_baseline(&q, &k, &v, &cfg);
     }
 }

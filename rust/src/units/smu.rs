@@ -39,7 +39,8 @@ impl SpikeMaxpoolUnit {
         let mut cover_buf = Vec::with_capacity(self.kernel * self.kernel);
         let mut or_ops: u64 = 0;
 
-        for (c, list) in input.lists.iter().enumerate() {
+        for c in 0..input.channels {
+            let list = input.channel_addrs(c);
             if list.is_empty() {
                 continue;
             }

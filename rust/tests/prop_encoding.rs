@@ -34,6 +34,126 @@ fn prop_encoding_roundtrip() {
     });
 }
 
+/// Seed-semantics reference: per-channel lists plus a per-channel segment
+/// scan, exactly what the pre-CSR `Vec<Vec<u16>>` representation computed.
+fn reference_lists(m: &SpikeMatrix) -> Vec<Vec<u16>> {
+    (0..m.channels)
+        .map(|c| {
+            m.channel(c)
+                .iter()
+                .enumerate()
+                .filter_map(|(l, &f)| f.then_some(l as u16))
+                .collect()
+        })
+        .collect()
+}
+
+fn reference_storage_words(lists: &[Vec<u16>]) -> usize {
+    let mut words = 0;
+    for list in lists {
+        words += list.len();
+        let mut seg_prev = usize::MAX;
+        for &l in list {
+            let seg = l as usize / SEGMENT_TOKENS;
+            if seg != seg_prev {
+                words += 1;
+                seg_prev = seg;
+            }
+        }
+    }
+    words
+}
+
+#[test]
+fn prop_csr_arena_matches_list_of_lists_semantics() {
+    // The flat arena must expose exactly the per-channel slices the seed's
+    // Vec<Vec<u16>> held, with the flat stream being their concatenation
+    // and storage_words matching the seed's per-channel segment scan —
+    // including multi-segment token spaces (l up to ~6 segments).
+    check("csr arena == list-of-lists semantics", 80, |rng| {
+        let c = rng.gen_range(1, 24);
+        let l = rng.gen_range(1, 1600);
+        let p = rng.next_f64();
+        let m = random_bitmap(rng, c, l, p);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        let reference = reference_lists(&m);
+        let flat: Vec<u16> = reference.iter().flatten().copied().collect();
+        prop_assert_eq!(enc.addrs(), &flat[..]);
+        for (ci, want) in reference.iter().enumerate() {
+            prop_assert_eq!(enc.channel_addrs(ci), &want[..]);
+            prop_assert!(
+                enc.channel_len(ci) == want.len(),
+                "channel {ci} len {} != {}",
+                enc.channel_len(ci),
+                want.len()
+            );
+        }
+        prop_assert_eq!(enc.storage_words(), reference_storage_words(&reference));
+        prop_assert_eq!(enc.count_spikes(), m.count_spikes());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_builder_pushes_equal_from_bitmap() {
+    // Building the arena spike by spike through the Builder/push API must
+    // be indistinguishable from the one-shot bitmap encode, and stay
+    // well-formed at every step (adversarial-but-legal push sequences:
+    // random gaps of empty channels, random segment jumps).
+    check("builder pushes == from_bitmap", 60, |rng| {
+        let c = rng.gen_range(1, 16);
+        let l = rng.gen_range(1, 1200);
+        let p = rng.next_f64() * 0.3;
+        let m = random_bitmap(rng, c, l, p);
+        let mut b = EncodedSpikes::builder(c, l);
+        for ci in 0..c {
+            for li in 0..l {
+                if m.get(ci, li) {
+                    b.push(ci, li);
+                }
+            }
+        }
+        let enc = b.finish();
+        prop_assert!(enc.is_well_formed(), "builder output malformed");
+        prop_assert_eq!(enc, EncodedSpikes::from_bitmap(&m));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_extend_channel_from_preserves_well_formedness() {
+    // The SMAM retain path: copying random channel subsets out of a source
+    // arena must keep the destination well-formed with exact storage
+    // accounting (the header counts travel with the slice).
+    check("extend_channel_from well-formed", 60, |rng| {
+        let c = rng.gen_range(1, 16);
+        let l = rng.gen_range(1, 1500);
+        let p = rng.next_f64() * 0.5;
+        let src = EncodedSpikes::from_bitmap(&random_bitmap(rng, c, l, p));
+        let mut dst = EncodedSpikes::empty(c, l);
+        let mut kept_words = 0usize;
+        for ch in 0..c {
+            if rng.bernoulli(0.5) {
+                dst.extend_channel_from(ch, &src, ch);
+                kept_words += src.channel_len(ch);
+                let list = src.channel_addrs(ch);
+                let mut seg_prev = usize::MAX;
+                for &a in list {
+                    let seg = a as usize / SEGMENT_TOKENS;
+                    if seg != seg_prev {
+                        kept_words += 1;
+                        seg_prev = seg;
+                    }
+                }
+                prop_assert_eq!(dst.channel_addrs(ch), list);
+            }
+        }
+        prop_assert!(dst.is_well_formed(), "destination malformed");
+        prop_assert_eq!(dst.storage_words(), kept_words);
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_storage_words_bounds() {
     // words >= spikes (every spike stored) and
