@@ -1,10 +1,12 @@
 //! Batched serving demo (experiment E1): drive the L3 coordinator with a
-//! stream of inference requests against (a) golden-executor workers and
-//! (b) the PJRT float model, comparing latency/throughput under different
-//! batching policies.
+//! stream of inference requests against (a) golden-executor workers,
+//! (b) cycle-simulator workers running the overlapped two-core pipeline
+//! (`--serial` switches them to serial charging), and (c) the PJRT float
+//! model, comparing latency/throughput under different batching policies.
 //!
 //! ```bash
 //! cargo run --release --example serve_batched
+//! cargo run --release --example serve_batched -- --serial
 //! ```
 
 use std::path::Path;
@@ -12,9 +14,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use spikeformer_accel::accel::{DatapathMode, ExecMode};
 use spikeformer_accel::coordinator::{
     BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, PjrtBackend, Request,
+    SimulatorBackend,
 };
+use spikeformer_accel::hw::AccelConfig;
 use spikeformer_accel::model::{load_model, QuantizedModel, SdtModelConfig};
 use spikeformer_accel::util::Prng;
 
@@ -37,6 +42,9 @@ fn run_session(
     let (responses, report) = co.finish(started)?;
     assert_eq!(responses.len(), imgs.len());
     println!("{label:<44} {}", report.summary());
+    if report.modelled_cycles > 0 {
+        println!("{:<44} modelled accelerator cycles: {}", "", report.modelled_cycles);
+    }
     Ok(())
 }
 
@@ -51,15 +59,28 @@ fn main() -> Result<()> {
 
     println!("== golden workers, batching policy sweep ==");
     for (workers, batch) in [(1usize, 1usize), (1, 8), (2, 8), (4, 8), (4, 16)] {
-        let factories: Vec<BackendFactory> = (0..workers)
-            .map(|_| {
-                let m = model.clone();
-                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> { Ok(Box::new(GoldenBackend::new(m))) }) as BackendFactory
-            })
-            .collect();
+        let factories = GoldenBackend::factories(workers, &model);
         let policy =
             BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(1) };
         run_session(&format!("golden workers={workers} max_batch={batch}"), factories, policy, &imgs)?;
+    }
+
+    let exec = if std::env::args().any(|a| a == "--serial") {
+        ExecMode::Serial
+    } else {
+        ExecMode::Overlapped
+    };
+    println!("\n== simulator workers (modelled cycles, exec={exec:?}) ==");
+    for workers in [1usize, 2] {
+        let factories = SimulatorBackend::factories(
+            workers,
+            &model,
+            AccelConfig::paper(),
+            DatapathMode::Encoded,
+            exec,
+        );
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        run_session(&format!("simulator workers={workers} max_batch=8"), factories, policy, &imgs)?;
     }
 
     if Path::new("artifacts/model.hlo.txt").exists() {

@@ -1,16 +1,22 @@
 //! Bench E1 — end-to-end serving: the L3 coordinator under load with
 //! golden and simulator workers, across worker counts and batch policies.
-//! Reports host throughput/latency plus the modelled accelerator cycles.
+//! Reports host throughput/latency plus the modelled accelerator cycles —
+//! which, for the default simulator workers, are the **executed** two-core
+//! overlapped pipeline's wall cycles (pass `--serial` for the serial
+//! charging ablation).
 //!
 //! ```bash
-//! cargo bench --bench e2e_throughput
+//! cargo bench --bench e2e_throughput            # full sweep
+//! cargo bench --bench e2e_throughput -- --quick # CI smoke mode
+//! cargo bench --bench e2e_throughput -- --serial# serial-charging ablation
 //! ```
 
 use std::time::{Duration, Instant};
 
+use spikeformer_accel::accel::{DatapathMode, ExecMode};
 use spikeformer_accel::benchlib::section;
 use spikeformer_accel::coordinator::{
-    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, Request, SimulatorBackend,
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, Request, SimulatorBackend,
 };
 use spikeformer_accel::hw::AccelConfig;
 use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
@@ -21,77 +27,90 @@ fn images(n: usize) -> Vec<Vec<f32>> {
     (0..n).map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()).collect()
 }
 
+fn drive(
+    factories: Vec<BackendFactory>,
+    policy: BatchPolicy,
+    imgs: &[Vec<f32>],
+) -> anyhow::Result<spikeformer_accel::coordinator::ServeReport> {
+    let started = Instant::now();
+    let mut co = Coordinator::new(factories, policy);
+    for (i, img) in imgs.iter().enumerate() {
+        co.submit(Request { id: i as u64, image: img.clone() });
+    }
+    let (_, report) = co.finish(started)?;
+    Ok(report)
+}
+
 fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let serial = std::env::args().any(|a| a == "--serial");
+    let exec = if serial { ExecMode::Serial } else { ExecMode::Overlapped };
+
     let cfg = SdtModelConfig::tiny();
     let model = QuantizedModel::random(&cfg, 42);
-    let imgs = images(96);
+    let imgs = images(if quick { 24 } else { 96 });
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
 
     section("golden workers (host-throughput scaling)");
-    for workers in [1usize, 2, 4, 8] {
-        let factories: Vec<BackendFactory> = (0..workers)
-            .map(|_| {
-                let m = model.clone();
-                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> { Ok(Box::new(GoldenBackend::new(m))) }) as BackendFactory
-            })
-            .collect();
-        let started = Instant::now();
-        let mut co = Coordinator::new(
-            factories,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        );
-        for (i, img) in imgs.iter().enumerate() {
-            co.submit(Request { id: i as u64, image: img.clone() });
-        }
-        let (_, report) = co.finish(started)?;
+    let worker_counts: &[usize] = if quick { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &workers in worker_counts {
+        let report = drive(GoldenBackend::factories(workers, &model), policy, &imgs)?;
         println!("workers={workers}  {}", report.summary());
     }
 
-    section("simulator workers (modelled accelerator throughput)");
-    for workers in [1usize, 2, 4] {
-        let factories: Vec<BackendFactory> = (0..workers)
-            .map(|_| {
-                let m = model.clone();
-                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> {
-                    Ok(Box::new(SimulatorBackend::new(m, AccelConfig::paper())))
-                }) as BackendFactory
-            })
-            .collect();
-        let started = Instant::now();
-        let mut co = Coordinator::new(
-            factories,
-            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
-        );
-        for (i, img) in imgs.iter().enumerate() {
-            co.submit(Request { id: i as u64, image: img.clone() });
-        }
-        let (_, report) = co.finish(started)?;
-        let hw = AccelConfig::paper();
+    section("simulator workers (modelled accelerator throughput, overlapped pipeline)");
+    let hw = AccelConfig::paper();
+    let sim_counts: &[usize] = if quick { &[1] } else { &[1, 2, 4] };
+    for &workers in sim_counts {
+        let report = drive(
+            SimulatorBackend::factories(workers, &model, hw, DatapathMode::Encoded, exec),
+            policy,
+            &imgs,
+        )?;
         let modelled_s = report.modelled_cycles as f64 / (hw.freq_mhz * 1e6);
         println!(
-            "workers={workers}  {}  modelled={:.3}ms total ({:.3}ms/img @200MHz)",
+            "workers={workers} exec={exec:?}  {}  modelled={:.3}ms total ({:.3}ms/img @200MHz)",
             report.summary(),
             modelled_s * 1e3,
             modelled_s * 1e3 / imgs.len() as f64
         );
     }
 
+    section("overlapped vs serial charging (single simulator worker)");
+    let sample = &imgs[..imgs.len().min(8)];
+    let over = drive(
+        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Overlapped),
+        policy,
+        sample,
+    )?;
+    let ser = drive(
+        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Serial),
+        policy,
+        sample,
+    )?;
+    println!(
+        "overlapped: {} modelled cycles   serial: {} modelled cycles   speedup: {:.2}x",
+        over.modelled_cycles,
+        ser.modelled_cycles,
+        ser.modelled_cycles as f64 / over.modelled_cycles.max(1) as f64
+    );
+    assert!(
+        over.modelled_cycles < ser.modelled_cycles,
+        "overlapped executor must beat serial charging"
+    );
+
+    if quick {
+        println!("\n--quick: skipping batch-policy sensitivity section");
+        return Ok(());
+    }
+
     section("batch-policy sensitivity (2 golden workers)");
     for (batch, wait_ms) in [(1usize, 0u64), (4, 1), (8, 1), (16, 2), (32, 4)] {
-        let factories: Vec<BackendFactory> = (0..2)
-            .map(|_| {
-                let m = model.clone();
-                Box::new(move || -> anyhow::Result<Box<dyn InferBackend>> { Ok(Box::new(GoldenBackend::new(m))) }) as BackendFactory
-            })
-            .collect();
-        let started = Instant::now();
-        let mut co = Coordinator::new(
-            factories,
+        let report = drive(
+            GoldenBackend::factories(2, &model),
             BatchPolicy { max_batch: batch, max_wait: Duration::from_millis(wait_ms) },
-        );
-        for (i, img) in imgs.iter().enumerate() {
-            co.submit(Request { id: i as u64, image: img.clone() });
-        }
-        let (_, report) = co.finish(started)?;
+            &imgs,
+        )?;
         println!("max_batch={batch:<3} max_wait={wait_ms}ms  {}", report.summary());
     }
     Ok(())

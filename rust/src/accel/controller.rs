@@ -1,16 +1,29 @@
 //! The Controller (Fig. 1): sequences the SPS Core, the SDEB Cores and the
 //! head over all timesteps of an inference, owns the buffer complement, and
 //! assembles the final [`RunReport`].
+//!
+//! Two execution strategies are available ([`ExecMode`]):
+//!
+//! * **Overlapped** (default) — the two-core pipeline the paper's Fig. 1
+//!   implies: the SPS stage of timestep `t+1` runs concurrently with the
+//!   SDEB stage of timestep `t` against ping/pong buffer halves, and each
+//!   block's SDSA heads are sharded across the SDEB cores' comparator
+//!   arrays. Executed by [`super::executor`]; the report carries the
+//!   executed [`PipelineExecution`](super::executor::PipelineExecution).
+//! * **Serial** — every phase charged back to back on one timeline (the
+//!   conservative accounting this repo used originally). Kept as the
+//!   ablation baseline; logits are bit-identical to the overlapped path.
 
 use anyhow::Result;
 
 use crate::hw::{AccelConfig, EnergyModel, UnitStats};
 use crate::quant::{QFormat, QTensor, ACT_FRAC, MEM_BITS};
-use crate::units::SpikeEncodingArray;
+use crate::units::{HeadShard, SpikeEncodingArray};
 use crate::model::QuantizedModel;
 use crate::util::div_ceil;
 
 use super::buffers::BufferSet;
+use super::executor::{self, PipelineExecution};
 use super::report::{RunReport, StatSink};
 use super::sdeb_core::SdebCore;
 use super::sps_core::SpsCore;
@@ -24,11 +37,26 @@ pub enum DatapathMode {
     Bitmap,
 }
 
+/// How the controller schedules the cores over timesteps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// Two-core overlapped pipeline with per-head SDEB sharding (default).
+    #[default]
+    Overlapped,
+    /// Serial phase charging (the `--serial` ablation escape hatch).
+    Serial,
+}
+
 /// A full accelerator instance bound to one quantized model.
 pub struct Accelerator {
+    /// Structural hardware parameters of this instance.
     pub hw: AccelConfig,
+    /// Per-operation energy model used for the report's power numbers.
     pub energy: EnergyModel,
+    /// Datapath selection (encoded vs bitmap baseline).
     pub mode: DatapathMode,
+    /// Execution strategy (overlapped pipeline vs serial charging).
+    pub exec: ExecMode,
     model: QuantizedModel,
     sps: SpsCore,
     sdebs: Vec<SdebCore>,
@@ -36,11 +64,23 @@ pub struct Accelerator {
 }
 
 impl Accelerator {
+    /// Overlapped, encoded-datapath instance (the default configuration).
     pub fn new(model: QuantizedModel, hw: AccelConfig) -> Self {
-        Self::with_mode(model, hw, DatapathMode::Encoded)
+        Self::with_modes(model, hw, DatapathMode::Encoded, ExecMode::Overlapped)
     }
 
+    /// Choose the datapath, keeping the overlapped executor.
     pub fn with_mode(model: QuantizedModel, hw: AccelConfig, mode: DatapathMode) -> Self {
+        Self::with_modes(model, hw, mode, ExecMode::Overlapped)
+    }
+
+    /// Choose both the datapath and the execution strategy.
+    pub fn with_modes(
+        model: QuantizedModel,
+        hw: AccelConfig,
+        mode: DatapathMode,
+        exec: ExecMode,
+    ) -> Self {
         let cfg = &model.cfg;
         let params = cfg.lif_params();
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
@@ -49,11 +89,20 @@ impl Accelerator {
             .map(|i| SdebCore::new(i, l, d, cfg.mlp_hidden, cfg.attn_v_th, params))
             .collect();
         let sea_head = SpikeEncodingArray::new(d, l, params);
-        Self { hw, energy: EnergyModel::default(), mode, model, sps, sdebs, sea_head }
+        Self { hw, energy: EnergyModel::default(), mode, exec, model, sps, sdebs, sea_head }
     }
 
+    /// The quantized model this instance is bound to.
     pub fn model(&self) -> &QuantizedModel {
         &self.model
+    }
+
+    /// The head-to-core shard plan the overlapped executor uses.
+    pub fn shard_plan(&self) -> HeadShard {
+        HeadShard {
+            heads: self.model.cfg.num_heads.max(1),
+            cores: self.sdebs.len().max(1),
+        }
     }
 
     fn reset(&mut self) {
@@ -75,55 +124,39 @@ impl Accelerator {
 
         // External input transfer: 10-bit activations packed 2 B/value.
         let in_bytes = image.len() * 2;
-        let st = buffers.load_external(in_bytes, &self.hw)?;
-        sink.add("io.input", st);
+        let io_in = buffers.load_external(in_bytes, &self.hw)?;
+        let io_in_cycles = io_in.cycles;
+        sink.add("io.input", io_in);
 
         let act = QFormat::new(MEM_BITS, ACT_FRAC);
         let qimg =
             QTensor::from_f32(image, &[cfg.in_channels, cfg.img_size, cfg.img_size], act);
 
-        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
-        let mut head_counts = vec![0u64; d];
-
-        for _t in 0..cfg.timesteps {
-            let (u0_cl, _enc3) =
-                self.sps.run_timestep(&self.model, &qimg, &self.hw, self.mode, &mut buffers, &mut sink)?;
-
-            // [D, L] -> [L, D] for the SDEB residual stream.
-            let mut u = QTensor::zeros(&[l, d], ACT_FRAC);
-            for c in 0..d {
-                for tok in 0..l {
-                    u.data[tok * d + c] = u0_cl.data[c * l + tok];
-                }
-            }
-
-            for (bi, core) in self.sdebs.iter_mut().enumerate() {
-                u = core.run_timestep(
-                    &self.model.blocks[bi],
-                    u,
+        let (head_counts, execution) = match self.exec {
+            ExecMode::Overlapped => {
+                let shard = self.shard_plan();
+                let outcome = executor::run_overlapped(
+                    &self.model,
                     &self.hw,
                     self.mode,
+                    shard,
+                    &mut self.sps,
+                    &mut self.sdebs,
+                    &mut self.sea_head,
                     &mut buffers,
-                    &mut sink,
+                    &qimg,
                 )?;
+                sink.absorb(outcome.sink);
+                (outcome.head_counts, Some((outcome.sps_per_timestep, outcome.sdeb_per_timestep)))
             }
-
-            // Head LIF + pooled spike counting (output side).
-            let mut u_cl = vec![0i32; d * l];
-            for tok in 0..l {
-                for c in 0..d {
-                    u_cl[c * l + tok] = u.data[tok * d + c];
-                }
+            ExecMode::Serial => {
+                let counts = self.run_serial(&qimg, &mut buffers, &mut sink)?;
+                (counts, None)
             }
-            let (s_out, st) = self.sea_head.encode(&u_cl, &self.hw);
-            sink.add("head.encode", st);
-            sink.sparsity("head.in.spikes", &s_out);
-            for (c, count) in head_counts.iter_mut().enumerate() {
-                *count += s_out.channel_len(c) as u64;
-            }
-        }
+        };
 
         // Host/output-side classification head on pooled rates.
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
         let denom = (cfg.timesteps * l) as f32;
         let mut logits = self.model.head_b.clone();
         for c in 0..d {
@@ -137,16 +170,73 @@ impl Accelerator {
 
         // Output transfer (logits as f32).
         let out_bytes = cfg.num_classes * 4;
-        sink.add(
-            "io.output",
-            UnitStats {
-                cycles: div_ceil(out_bytes as u64, self.hw.dram_bytes_per_cycle as u64),
-                dram_bytes: out_bytes as u64,
-                ..Default::default()
-            },
-        );
+        let io_out = UnitStats {
+            cycles: div_ceil(out_bytes as u64, self.hw.dram_bytes_per_cycle as u64),
+            dram_bytes: out_bytes as u64,
+            ..Default::default()
+        };
+        let io_out_cycles = io_out.cycles;
+        sink.add("io.output", io_out);
 
-        Ok(RunReport::from_sink(logits, sink, &self.hw, &self.energy))
+        Ok(match execution {
+            Some((sps_per, sdeb_per)) => {
+                let exec =
+                    PipelineExecution::new(io_in_cycles, io_out_cycles, sps_per, sdeb_per);
+                RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy)
+            }
+            None => RunReport::from_sink(logits, sink, &self.hw, &self.energy),
+        })
+    }
+
+    /// The serial timestep loop: every phase charged back to back, no
+    /// head sharding — the original conservative accounting.
+    fn run_serial(
+        &mut self,
+        qimg: &QTensor,
+        buffers: &mut BufferSet,
+        sink: &mut StatSink,
+    ) -> Result<Vec<u64>> {
+        let cfg = &self.model.cfg;
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+        let mut head_counts = vec![0u64; d];
+
+        for t in 0..cfg.timesteps {
+            let pong = t % 2 == 1;
+            let (u0_cl, _enc3) = self.sps.run_timestep(
+                &self.model,
+                qimg,
+                &self.hw,
+                self.mode,
+                pong,
+                &mut buffers.sps,
+                sink,
+            )?;
+
+            let mut u = executor::u0_to_token_major(&u0_cl, l, d);
+            for (bi, core) in self.sdebs.iter_mut().enumerate() {
+                u = core.run_timestep(
+                    &self.model.blocks[bi],
+                    u,
+                    &self.hw,
+                    self.mode,
+                    pong,
+                    None,
+                    &mut buffers.sdeb,
+                    sink,
+                )?;
+            }
+
+            executor::head_readout(
+                &mut self.sea_head,
+                &u,
+                l,
+                d,
+                &self.hw,
+                sink,
+                &mut head_counts,
+            );
+        }
+        Ok(head_counts)
     }
 }
 
@@ -169,6 +259,7 @@ mod tests {
         let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
         let report = accel.infer(&random_image(4)).unwrap();
         assert_eq!(report.logits, golden.logits, "encoded datapath != golden");
+        assert!(report.pipeline.is_some(), "default path must execute the overlap");
     }
 
     #[test]
@@ -180,6 +271,7 @@ mod tests {
         let b = accel.infer(&random_image(5)).unwrap();
         assert_eq!(a.logits, b.logits);
         assert_eq!(a.total.cycles, b.total.cycles);
+        assert_eq!(a.wall_cycles(), b.wall_cycles(), "overlap schedule must be deterministic");
     }
 
     #[test]
@@ -212,5 +304,20 @@ mod tests {
         }
         assert!(r.gsops > 0.0);
         assert!(r.gsop_per_w > 0.0);
+    }
+
+    #[test]
+    fn serial_mode_has_no_pipeline_record() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let mut accel = Accelerator::with_modes(
+            model,
+            AccelConfig::small(),
+            DatapathMode::Encoded,
+            ExecMode::Serial,
+        );
+        let r = accel.infer(&random_image(8)).unwrap();
+        assert!(r.pipeline.is_none());
+        assert_eq!(r.wall_cycles(), r.total.cycles);
     }
 }

@@ -1,0 +1,356 @@
+//! The overlapped two-core pipeline executor (Fig. 1's throughput trick,
+//! executed rather than estimated).
+//!
+//! The real accelerator double-buffers between the SPS Core and the SDEB
+//! Cores: while the SDEB stage consumes timestep `t` out of one ESS half,
+//! the SPS stage already produces timestep `t+1` into the other half. This
+//! module *runs* that schedule — the SPS stage on a producer thread, the
+//! SDEB + head stage on the consumer side, a bounded rendezvous channel
+//! standing in for the ping/pong handoff — and records per-timestep stage
+//! cycles so the executed schedule ([`PipelineExecution`]) can be
+//! reconciled against the analytic [`PipelineEstimate`](super::pipeline::PipelineEstimate),
+//! which is now a cross-check rather than the only source of truth.
+//!
+//! Within the SDEB stage, the SDSA pass shards attention heads across the
+//! cores' SMAM comparator arrays ([`HeadShard`]) instead of walking all
+//! channels on one array — the FireFly-T-style dual-engine overlap plus
+//! Bishop-style heterogeneous-core scheduling named in the ROADMAP.
+//!
+//! All cycle numbers come from [`UnitStats`](crate::hw::UnitStats)
+//! accounting, never from host wall clocks, so overlapped runs stay
+//! bit-deterministic: same image, same model, same report.
+
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use crate::hw::AccelConfig;
+use crate::model::QuantizedModel;
+use crate::quant::{QTensor, ACT_FRAC};
+use crate::units::{HeadShard, SpikeEncodingArray};
+
+use super::buffers::BufferSet;
+use super::controller::DatapathMode;
+use super::report::StatSink;
+use super::sdeb_core::SdebCore;
+use super::sps_core::SpsCore;
+
+/// The executed two-core overlap schedule of one inference: per-timestep
+/// stage cycles plus the resulting finish time under double buffering.
+///
+/// The schedule recurrence models a depth-2 (ping/pong) pipeline: the SPS
+/// stage of timestep `i` may start once its own previous timestep is done
+/// *and* the ESS half it writes has been drained (the SDEB stage of
+/// timestep `i - 2`); the SDEB stage of timestep `i` may start once its
+/// input is produced and its own previous timestep is done. External input
+/// precedes the first SPS timestep; output transfer follows the last SDEB
+/// timestep.
+#[derive(Clone, Debug)]
+pub struct PipelineExecution {
+    /// Number of timesteps executed.
+    pub timesteps: usize,
+    /// Cycles of the external input transfer (before the first timestep).
+    pub io_input_cycles: u64,
+    /// Cycles of the external output transfer (after the last timestep).
+    pub io_output_cycles: u64,
+    /// Per-timestep SPS-stage cycles (`sps.*` phases).
+    pub sps_per_timestep: Vec<u64>,
+    /// Per-timestep SDEB-stage cycles (`sdeb.*` + `head.*` phases).
+    pub sdeb_per_timestep: Vec<u64>,
+    /// Finish time of the overlapped schedule, in cycles.
+    pub executed_cycles: u64,
+    /// What the same work costs charged serially (sum of all stages).
+    pub serialized_cycles: u64,
+}
+
+impl PipelineExecution {
+    /// Build the execution record and run the schedule recurrence.
+    pub fn new(
+        io_input_cycles: u64,
+        io_output_cycles: u64,
+        sps_per_timestep: Vec<u64>,
+        sdeb_per_timestep: Vec<u64>,
+    ) -> Self {
+        assert_eq!(sps_per_timestep.len(), sdeb_per_timestep.len(), "stage trace length mismatch");
+        let t = sps_per_timestep.len();
+        let mut sps_done = vec![0u64; t];
+        let mut sdeb_done = vec![0u64; t];
+        for i in 0..t {
+            // Ping/pong: the half written at timestep i was last written at
+            // i-2 and must have been consumed by SDEB(i-2) by now.
+            let buffer_free = if i >= 2 { sdeb_done[i - 2] } else { 0 };
+            let prev_sps = if i > 0 { sps_done[i - 1] } else { io_input_cycles };
+            sps_done[i] = prev_sps.max(buffer_free) + sps_per_timestep[i];
+            let prev_sdeb = if i > 0 { sdeb_done[i - 1] } else { 0 };
+            sdeb_done[i] = sps_done[i].max(prev_sdeb) + sdeb_per_timestep[i];
+        }
+        let executed_cycles =
+            sdeb_done.last().copied().unwrap_or(io_input_cycles) + io_output_cycles;
+        let serialized_cycles = io_input_cycles
+            + io_output_cycles
+            + sps_per_timestep.iter().sum::<u64>()
+            + sdeb_per_timestep.iter().sum::<u64>();
+        Self {
+            timesteps: t,
+            io_input_cycles,
+            io_output_cycles,
+            sps_per_timestep,
+            sdeb_per_timestep,
+            executed_cycles,
+            serialized_cycles,
+        }
+    }
+
+    /// Total SPS-stage cycles across timesteps.
+    pub fn sps_cycles(&self) -> u64 {
+        self.sps_per_timestep.iter().sum()
+    }
+
+    /// Total SDEB-stage cycles across timesteps.
+    pub fn sdeb_cycles(&self) -> u64 {
+        self.sdeb_per_timestep.iter().sum()
+    }
+
+    /// The slower stage's total — the steady-state lower bound on the
+    /// executed schedule.
+    pub fn bottleneck_cycles(&self) -> u64 {
+        self.sps_cycles().max(self.sdeb_cycles())
+    }
+
+    /// Which stage bounds the executed schedule.
+    pub fn bottleneck(&self) -> &'static str {
+        if self.sdeb_cycles() >= self.sps_cycles() {
+            "sdeb"
+        } else {
+            "sps"
+        }
+    }
+
+    /// Cycles the executed schedule spends beyond the bottleneck stage's
+    /// own total (pipeline fill + drain + I/O).
+    pub fn fill_cycles(&self) -> u64 {
+        self.executed_cycles.saturating_sub(self.bottleneck_cycles())
+    }
+
+    /// Speedup of the executed schedule over serial charging.
+    pub fn speedup(&self) -> f64 {
+        if self.executed_cycles == 0 {
+            return 1.0;
+        }
+        self.serialized_cycles as f64 / self.executed_cycles as f64
+    }
+
+    /// Modelled wall-clock seconds of the executed schedule at `cfg`'s
+    /// frequency.
+    pub fn wall_seconds(&self, cfg: &AccelConfig) -> f64 {
+        cfg.seconds(self.executed_cycles)
+    }
+
+    /// The fill-latency bound used to reconcile executed cycles against
+    /// the analytic estimator: both lie in `[bottleneck, serialized]`, and
+    /// they may differ by at most the I/O transfers plus one worst-case
+    /// timestep of each stage entering/draining the pipe.
+    pub fn fill_latency_bound(&self) -> u64 {
+        self.io_input_cycles
+            + self.io_output_cycles
+            + self.sps_per_timestep.iter().copied().max().unwrap_or(0)
+            + self.sdeb_per_timestep.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Does the executed schedule agree with the analytic re-timer within
+    /// the fill-latency bound? The estimator amortises fill as an average
+    /// timestep while the executed schedule pays the actual first/last
+    /// timesteps, so exact equality is not expected — but a disagreement
+    /// beyond one worst-case timestep of each stage plus I/O means one of
+    /// the two models is wrong.
+    pub fn reconciles_with(&self, est: &super::pipeline::PipelineEstimate) -> bool {
+        self.executed_cycles.abs_diff(est.pipelined_cycles) <= self.fill_latency_bound()
+    }
+}
+
+/// Everything the overlapped run hands back to the controller.
+pub(crate) struct OverlapOutcome {
+    /// Merged stage sinks (SPS phases first, then SDEB/head), ready for
+    /// the controller to wrap with the I/O phases.
+    pub sink: StatSink,
+    /// Per-output-channel pooled spike counts from the head LIF.
+    pub head_counts: Vec<u64>,
+    /// Per-timestep SPS-stage cycles.
+    pub sps_per_timestep: Vec<u64>,
+    /// Per-timestep SDEB-stage cycles (including the head readout).
+    pub sdeb_per_timestep: Vec<u64>,
+}
+
+/// Transpose the SPS core's `[D, L]` channel-major output into the
+/// `[L, D]` token-major residual stream the SDEB cores consume.
+pub(crate) fn u0_to_token_major(u0_cl: &QTensor, l: usize, d: usize) -> QTensor {
+    let mut u = QTensor::zeros(&[l, d], ACT_FRAC);
+    for c in 0..d {
+        for tok in 0..l {
+            u.data[tok * d + c] = u0_cl.data[c * l + tok];
+        }
+    }
+    u
+}
+
+/// Head LIF + pooled spike counting on the final residual stream of one
+/// timestep (shared by the serial and overlapped paths).
+pub(crate) fn head_readout(
+    sea_head: &mut SpikeEncodingArray,
+    u: &QTensor,
+    l: usize,
+    d: usize,
+    hw: &AccelConfig,
+    sink: &mut StatSink,
+    head_counts: &mut [u64],
+) {
+    let mut u_cl = vec![0i32; d * l];
+    for tok in 0..l {
+        for c in 0..d {
+            u_cl[c * l + tok] = u.data[tok * d + c];
+        }
+    }
+    let (s_out, st) = sea_head.encode(&u_cl, hw);
+    sink.add("head.encode", st);
+    sink.sparsity("head.in.spikes", &s_out);
+    for (c, count) in head_counts.iter_mut().enumerate() {
+        *count += s_out.channel_len(c) as u64;
+    }
+}
+
+/// Run all timesteps with the SPS stage of timestep `t+1` overlapping the
+/// SDEB stage of timestep `t`.
+///
+/// The SPS producer runs on its own scoped thread against its half of the
+/// ping/pong `BufferSet`; the SDEB consumer runs on the calling thread
+/// against the other half, sharding each block's SDSA heads across the
+/// core array per `shard`. A rendezvous channel of capacity 1 enforces
+/// the double-buffer depth. Stage sinks are merged in a fixed order, so
+/// the result is deterministic regardless of thread interleaving.
+pub(crate) fn run_overlapped(
+    model: &QuantizedModel,
+    hw: &AccelConfig,
+    mode: DatapathMode,
+    shard: HeadShard,
+    sps: &mut SpsCore,
+    sdebs: &mut [SdebCore],
+    sea_head: &mut SpikeEncodingArray,
+    buffers: &mut BufferSet,
+    qimg: &QTensor,
+) -> Result<OverlapOutcome> {
+    let cfg = &model.cfg;
+    let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+    let timesteps = cfg.timesteps;
+
+    let BufferSet { sps: sps_buf, sdeb: sdeb_buf, .. } = buffers;
+    let (tx, rx) = mpsc::sync_channel::<QTensor>(1);
+
+    let (producer_res, consumer_res) = std::thread::scope(|s| {
+        let producer = s.spawn(move || -> Result<(StatSink, Vec<u64>)> {
+            let mut sink = StatSink::new();
+            let mut per_t = Vec::with_capacity(timesteps);
+            for t in 0..timesteps {
+                let before = sink.phases.total().cycles;
+                let (u0_cl, _enc3) =
+                    sps.run_timestep(model, qimg, hw, mode, t % 2 == 1, sps_buf, &mut sink)?;
+                per_t.push(sink.phases.total().cycles - before);
+                if tx.send(u0_to_token_major(&u0_cl, l, d)).is_err() {
+                    break; // consumer bailed; surface its error below
+                }
+            }
+            Ok((sink, per_t))
+        });
+
+        // Consumer: the SDEB stage + head readout on the calling thread.
+        let consumer_res = (|| -> Result<(StatSink, Vec<u64>, Vec<u64>)> {
+            let mut sink = StatSink::new();
+            let mut per_t = Vec::with_capacity(timesteps);
+            let mut head_counts = vec![0u64; d];
+            for t in 0..timesteps {
+                let Ok(mut u) = rx.recv() else {
+                    break; // producer failed; its error takes precedence
+                };
+                let before = sink.phases.total().cycles;
+                for (bi, core) in sdebs.iter_mut().enumerate() {
+                    u = core.run_timestep(
+                        &model.blocks[bi],
+                        u,
+                        hw,
+                        mode,
+                        t % 2 == 1,
+                        Some(shard),
+                        sdeb_buf,
+                        &mut sink,
+                    )?;
+                }
+                head_readout(sea_head, &u, l, d, hw, &mut sink, &mut head_counts);
+                per_t.push(sink.phases.total().cycles - before);
+            }
+            Ok((sink, per_t, head_counts))
+        })();
+        // Unblock a producer stuck in `send` if the consumer bailed early.
+        drop(rx);
+        (producer.join(), consumer_res)
+    });
+
+    let (sps_sink, sps_per_timestep) =
+        producer_res.map_err(|_| anyhow!("SPS pipeline stage panicked"))??;
+    let (sdeb_sink, sdeb_per_timestep, head_counts) = consumer_res?;
+    debug_assert_eq!(sps_per_timestep.len(), timesteps);
+    debug_assert_eq!(sdeb_per_timestep.len(), timesteps);
+
+    // Deterministic merge: SPS phases first (the order the serial
+    // controller would have recorded them), then SDEB/head.
+    let mut sink = StatSink::new();
+    sink.absorb(sps_sink);
+    sink.absorb(sdeb_sink);
+    Ok(OverlapOutcome { sink, head_counts, sps_per_timestep, sdeb_per_timestep })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_balanced_two_stage() {
+        // Two equal stages, 4 timesteps, no I/O: steady state is one
+        // stage's total plus one fill timestep of the other.
+        let e = PipelineExecution::new(0, 0, vec![100; 4], vec![100; 4]);
+        assert_eq!(e.serialized_cycles, 800);
+        assert_eq!(e.executed_cycles, 500); // 100 fill + 4*100 steady
+        assert_eq!(e.fill_cycles(), 100);
+        assert!((e.speedup() - 1.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schedule_bottleneck_bounds() {
+        let e = PipelineExecution::new(10, 5, vec![50, 60, 55], vec![500, 480, 510]);
+        assert_eq!(e.bottleneck(), "sdeb");
+        assert!(e.executed_cycles >= e.bottleneck_cycles());
+        assert!(e.executed_cycles <= e.serialized_cycles);
+        // SDEB dominates: executed = io_in + sps[0] + sum(sdeb) + io_out.
+        assert_eq!(e.executed_cycles, 10 + 50 + 1490 + 5);
+    }
+
+    #[test]
+    fn schedule_ping_pong_depth_limits_runahead() {
+        // A fast producer may run at most 2 timesteps ahead of the
+        // consumer: sps[2] must wait for sdeb[0] to free its half.
+        let e = PipelineExecution::new(0, 0, vec![1, 1, 1], vec![100, 100, 100]);
+        // sps_done = [1, 2, 102]; sdeb_done = [101, 201, 301].
+        assert_eq!(e.executed_cycles, 301);
+    }
+
+    #[test]
+    fn schedule_single_timestep_is_serial() {
+        let e = PipelineExecution::new(7, 3, vec![40], vec![90]);
+        assert_eq!(e.executed_cycles, e.serialized_cycles);
+        assert!((e.speedup() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fill_latency_bound_is_io_plus_worst_timesteps() {
+        let e = PipelineExecution::new(10, 5, vec![50, 60], vec![70, 80]);
+        assert_eq!(e.fill_latency_bound(), 10 + 5 + 60 + 80);
+    }
+}

@@ -4,15 +4,25 @@
 //! buffer/SRAM complement. [`Accelerator::infer`] runs a full quantized
 //! Spike-driven Transformer inference with cycle/energy/sparsity accounting
 //! and returns the same logits as the dense golden executor — bit-exactly.
+//!
+//! By default the controller **executes** the paper's two-core overlap:
+//! the SPS stage of timestep `t+1` runs concurrently with the SDEB stage
+//! of timestep `t` ([`executor`]), with attention heads sharded across the
+//! SDEB cores and the ESS modelled as explicit ping/pong halves
+//! ([`buffers::CoreBuffers`]). The analytic re-timer ([`pipeline`])
+//! remains as a cross-check on the executed schedule. `ExecMode::Serial`
+//! preserves the original serial charging for ablations.
 
 pub mod buffers;
 pub mod controller;
+pub mod executor;
 pub mod pipeline;
 pub mod report;
 pub mod sdeb_core;
 pub mod sps_core;
 
-pub use controller::{Accelerator, DatapathMode};
+pub use controller::{Accelerator, DatapathMode, ExecMode};
+pub use executor::PipelineExecution;
 pub use pipeline::{estimate as pipeline_estimate, PipelineEstimate};
 pub use report::RunReport;
 pub use sdeb_core::SdebCore;

@@ -1,12 +1,16 @@
-//! Pipelined-schedule estimator.
+//! Analytic pipelined-schedule estimator (cross-check).
 //!
-//! The controller in this repo charges phases *serially* (conservative).
 //! The real accelerator double-buffers between the SPS Core and the SDEB
 //! Core (Fig. 1: each core has its own SEA/ESS pair), so timestep t+1's
 //! SPS work overlaps timestep t's SDEB work, and the external I/O overlaps
-//! compute. This module re-times a recorded [`PhaseStats`] under that
-//! overlap model and reports the pipelined cycle count and speedup — the
-//! number an RTL implementation would actually see.
+//! compute. Since the overlapped [`executor`](super::executor) landed, the
+//! controller **executes** that schedule and reports the measured
+//! [`PipelineExecution`](super::executor::PipelineExecution); this module
+//! re-times a recorded [`PhaseStats`] under a closed-form steady-state
+//! model and serves as the independent cross-check — the executed and
+//! estimated pipelined cycle counts must agree within the fill-latency
+//! bound (see `PipelineExecution::reconciles_with`, enforced by
+//! `tests/pipeline_overlap.rs`).
 
 use crate::hw::stats::PhaseStats;
 
@@ -31,16 +35,21 @@ enum Stage {
 /// Result of re-timing a run under the two-core overlap model.
 #[derive(Clone, Copy, Debug)]
 pub struct PipelineEstimate {
+    /// Total cycles charged serially.
     pub serialized_cycles: u64,
     /// max(io, sps, sdeb) + pipeline fill (one stage latency of each
     /// non-bottleneck stage, amortised over timesteps).
     pub pipelined_cycles: u64,
+    /// The I/O stage's total cycles.
     pub io_cycles: u64,
+    /// The SPS stage's total cycles.
     pub sps_cycles: u64,
+    /// The SDEB stage's total cycles.
     pub sdeb_cycles: u64,
 }
 
 impl PipelineEstimate {
+    /// Serialized over pipelined cycles.
     pub fn speedup(&self) -> f64 {
         if self.pipelined_cycles == 0 {
             return 1.0;

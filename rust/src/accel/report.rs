@@ -5,19 +5,24 @@ use crate::hw::stats::PhaseStats;
 use crate::hw::{AccelConfig, EnergyModel, UnitStats};
 use crate::spike::EncodedSpikes;
 
+use super::executor::PipelineExecution;
+
 /// Collects stats and sparsity during a run (borrowed by the cores).
 #[derive(Clone, Debug, Default)]
 pub struct StatSink {
+    /// Phase-tagged stats.
     pub phases: PhaseStats,
     /// (module, zeros, total) accumulated over timesteps.
     sparsity_acc: Vec<(String, u64, u64)>,
 }
 
 impl StatSink {
+    /// Empty sink.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulate `stats` under `phase`.
     pub fn add(&mut self, phase: &str, stats: UnitStats) {
         self.phases.add(phase, stats);
     }
@@ -34,6 +39,24 @@ impl StatSink {
         }
     }
 
+    /// Merge another sink into this one (phases via [`PhaseStats::add`],
+    /// sparsity accumulators by name). Used by the overlapped executor to
+    /// combine per-stage sinks in a deterministic order.
+    pub fn absorb(&mut self, other: StatSink) {
+        for (name, st) in other.phases.phases {
+            self.phases.add(&name, st);
+        }
+        for (name, zeros, total) in other.sparsity_acc {
+            if let Some(r) = self.sparsity_acc.iter_mut().find(|r| r.0 == name) {
+                r.1 += zeros;
+                r.2 += total;
+            } else {
+                self.sparsity_acc.push((name, zeros, total));
+            }
+        }
+    }
+
+    /// `(name, sparsity)` rows accumulated so far — the Fig. 6 measurement.
     pub fn sparsity_table(&self) -> Vec<(String, f64)> {
         self.sparsity_acc
             .iter()
@@ -45,26 +68,58 @@ impl StatSink {
 /// Final report for one inference (or one batch).
 #[derive(Clone, Debug)]
 pub struct RunReport {
+    /// Classification logits (bit-identical to the golden executor).
     pub logits: Vec<f32>,
+    /// Per-phase stat breakdown.
     pub phases: PhaseStats,
+    /// Summed unit-busy stats across phases (the serial-equivalent cost;
+    /// see [`Self::wall_cycles`] for the overlapped finish time).
     pub total: UnitStats,
-    /// Modelled wall-clock at the configured frequency.
+    /// Modelled busy time (serial-equivalent) at the configured frequency.
     pub seconds: f64,
-    /// Achieved throughput in GSOP/s.
+    /// Achieved throughput in GSOP/s over the busy time.
     pub gsops: f64,
-    /// Modelled average power (W) and efficiency (GSOP/W).
+    /// Modelled average power (W).
     pub power_w: f64,
+    /// Modelled efficiency (GSOP/W).
     pub gsop_per_w: f64,
     /// (module, sparsity) — the Fig. 6 measurement.
     pub sparsity: Vec<(String, f64)>,
+    /// The executed two-core overlap schedule (`None` for serial-mode
+    /// runs): per-stage traces, executed finish cycles and speedup.
+    pub pipeline: Option<PipelineExecution>,
 }
 
 impl RunReport {
+    /// Assemble a serial-mode report (no overlap schedule).
     pub fn from_sink(
         logits: Vec<f32>,
         sink: StatSink,
         cfg: &AccelConfig,
         energy: &EnergyModel,
+    ) -> Self {
+        Self::assemble(logits, sink, cfg, energy, None)
+    }
+
+    /// Assemble a report for an overlapped run, attaching the executed
+    /// pipeline schedule produced by the
+    /// [`executor`](super::executor).
+    pub fn from_sink_pipelined(
+        logits: Vec<f32>,
+        sink: StatSink,
+        execution: PipelineExecution,
+        cfg: &AccelConfig,
+        energy: &EnergyModel,
+    ) -> Self {
+        Self::assemble(logits, sink, cfg, energy, Some(execution))
+    }
+
+    fn assemble(
+        logits: Vec<f32>,
+        sink: StatSink,
+        cfg: &AccelConfig,
+        energy: &EnergyModel,
+        pipeline: Option<PipelineExecution>,
     ) -> Self {
         let total = sink.phases.total();
         let seconds = cfg.seconds(total.cycles);
@@ -80,9 +135,38 @@ impl RunReport {
             gsops,
             power_w,
             gsop_per_w,
+            pipeline,
         }
     }
 
+    /// Modelled wall-clock cycles of the run: the executed overlap
+    /// schedule's finish time when one was run, otherwise the serial sum.
+    pub fn wall_cycles(&self) -> u64 {
+        self.pipeline.as_ref().map(|p| p.executed_cycles).unwrap_or(self.total.cycles)
+    }
+
+    /// Modelled wall-clock seconds (executed overlap when present; equal
+    /// to [`Self::seconds`] for serial runs).
+    pub fn wall_seconds(&self) -> f64 {
+        if self.total.cycles == 0 {
+            return self.seconds;
+        }
+        self.seconds * self.wall_cycles() as f64 / self.total.cycles as f64
+    }
+
+    /// Achieved GSOP/s over the wall clock — the overlapped-schedule
+    /// throughput basis, vs [`Self::gsops`]'s serial-equivalent busy-time
+    /// basis. Identical for serial runs.
+    pub fn wall_gsops(&self) -> f64 {
+        let s = self.wall_seconds();
+        if s > 0.0 {
+            self.total.sops as f64 / s / 1e9
+        } else {
+            0.0
+        }
+    }
+
+    /// Index of the winning logit.
     pub fn argmax(&self) -> usize {
         self.logits
             .iter()
@@ -103,6 +187,17 @@ impl RunReport {
             self.power_w,
             self.gsop_per_w
         );
+        if let Some(p) = &self.pipeline {
+            s.push_str(&format!(
+                "pipelined: executed={} cycles  serial-equivalent={}  speedup={:.2}x  bottleneck={} (fill={})  wall={:.2} GSOP/s\n",
+                p.executed_cycles,
+                p.serialized_cycles,
+                p.speedup(),
+                p.bottleneck(),
+                p.fill_cycles(),
+                self.wall_gsops()
+            ));
+        }
         for (name, st) in &self.phases.phases {
             s.push_str(&format!(
                 "  {:<16} cycles={:<10} sops={:<12} reads={:<12} writes={}\n",

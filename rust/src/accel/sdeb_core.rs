@@ -9,13 +9,15 @@ use crate::hw::{AccelConfig, UnitStats};
 use crate::lif::LifParams;
 use crate::quant::QTensor;
 use crate::spike::EncodedSpikes;
-use crate::units::{AdderModule, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule};
+use crate::units::{AdderModule, HeadShard, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule};
 use crate::model::QuantizedBlock;
 
-use super::buffers::BufferSet;
+use super::buffers::CoreBuffers;
 use super::controller::DatapathMode;
 use super::report::StatSink;
 
+/// One encoder block's SDEB core: SEAs for every encode site, the SLU,
+/// the SMAM and the residual Adder, with persistent LIF state.
 pub struct SdebCore {
     index: usize,
     sea_in: SpikeEncodingArray,
@@ -32,6 +34,7 @@ pub struct SdebCore {
 }
 
 impl SdebCore {
+    /// Build the block's unit complement.
     pub fn new(
         index: usize,
         tokens: usize,
@@ -56,6 +59,7 @@ impl SdebCore {
         }
     }
 
+    /// Clear every encode site's LIF membrane state (between inferences).
     pub fn reset(&mut self) {
         self.sea_in.reset();
         self.sea_q.reset();
@@ -94,13 +98,21 @@ impl SdebCore {
 
     /// One timestep of the block. `u` is the `[L, D]` residual-stream value
     /// tensor (token-major); updated in place (returned).
+    ///
+    /// `pong` is the timestep parity selecting the ESS half of `buffers`.
+    /// `shard` — when `Some` and the datapath is encoded — runs the SDSA
+    /// pass with heads sharded across SDEB-core comparator arrays
+    /// ([`SpikeMaskAddModule::run_sharded`]); `None` keeps the serial
+    /// single-array accounting. Values are bit-identical either way.
     pub fn run_timestep(
         &mut self,
         blk: &QuantizedBlock,
         u: QTensor,
         cfg: &AccelConfig,
         mode: DatapathMode,
-        buffers: &mut BufferSet,
+        pong: bool,
+        shard: Option<HeadShard>,
+        buffers: &mut CoreBuffers,
         sink: &mut StatSink,
     ) -> Result<QTensor> {
         let bi = self.index;
@@ -111,7 +123,7 @@ impl SdebCore {
         let (s_in, st) = self.sea_in.encode(&u_cl, cfg);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.in.spikes"), &s_in);
-        buffers.store_encoded(&s_in, true)?;
+        buffers.store_encoded(&s_in, pong)?;
 
         // Q/K/V projections on the Spike Linear Array + SEA fire.
         let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, mode);
@@ -129,14 +141,16 @@ impl SdebCore {
         sink.sparsity(&format!("block{bi}.q.spikes"), &q_s);
         sink.sparsity(&format!("block{bi}.k.spikes"), &k_s);
         sink.sparsity(&format!("block{bi}.v.spikes"), &v_s);
-        buffers.store_encoded(&q_s, true)?;
-        buffers.store_encoded(&k_s, true)?;
-        buffers.store_encoded(&v_s, true)?;
+        buffers.store_encoded(&q_s, pong)?;
+        buffers.store_encoded(&k_s, pong)?;
+        buffers.store_encoded(&v_s, pong)?;
 
-        // SMAM: dual-spike mask-add (the SDSA engine).
-        let (smam_out, st) = match mode {
-            DatapathMode::Encoded => self.smam.run(&q_s, &k_s, &v_s, cfg),
-            DatapathMode::Bitmap => self.smam.run_dense_baseline(&q_s, &k_s, &v_s, cfg),
+        // SMAM: dual-spike mask-add (the SDSA engine), optionally with
+        // heads sharded across the idle cores' comparator arrays.
+        let (smam_out, st) = match (mode, shard) {
+            (DatapathMode::Encoded, Some(sh)) => self.smam.run_sharded(&q_s, &k_s, &v_s, cfg, sh),
+            (DatapathMode::Encoded, None) => self.smam.run(&q_s, &k_s, &v_s, cfg),
+            (DatapathMode::Bitmap, _) => self.smam.run_dense_baseline(&q_s, &k_s, &v_s, cfg),
         };
         sink.add("sdeb.smam", st);
         sink.sparsity(&format!("block{bi}.sdsa.spikes"), &smam_out.masked_v);
@@ -151,14 +165,14 @@ impl SdebCore {
         let (s2, st) = self.sea_mlp_in.encode(&self.to_cl(&u, d), cfg);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.mlp.in.spikes"), &s2);
-        buffers.store_encoded(&s2, true)?;
+        buffers.store_encoded(&s2, pong)?;
         let (hv, st) = self.slu_forward(&s2, &blk.mlp1, cfg, mode);
         sink.add("sdeb.mlp", st);
         let h = blk.mlp1.out_dim;
         let (s3, st) = self.sea_mlp_hidden.encode(&self.to_cl(&hv, h), cfg);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.mlp.hidden.spikes"), &s3);
-        buffers.store_encoded(&s3, true)?;
+        buffers.store_encoded(&s3, pong)?;
         let (m2, st) = self.slu_forward(&s3, &blk.mlp2, cfg, mode);
         sink.add("sdeb.mlp", st);
         let (u, st) = self.adder.add(&u, &m2, cfg);
@@ -171,6 +185,7 @@ impl SdebCore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::buffers::BufferSet;
     use crate::model::{QuantizedModel, SdtModelConfig};
     use crate::quant::{QFormat, ACT_FRAC, MEM_BITS};
     use crate::util::Prng;
@@ -193,7 +208,7 @@ mod tests {
         let mut buffers = BufferSet::new(&hw);
         let mut sink = StatSink::new();
         let out = core
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
             .unwrap();
         assert_eq!(out.shape, vec![64, 64]);
         assert_eq!(out.frac, ACT_FRAC);
@@ -213,10 +228,10 @@ mod tests {
         let mut s1 = StatSink::new();
         let mut s2 = StatSink::new();
         let o1 = c1
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, &mut b1, &mut s1)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, &mut b1.sdeb, &mut s1)
             .unwrap();
         let o2 = c2
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, &mut b2, &mut s2)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, false, None, &mut b2.sdeb, &mut s2)
             .unwrap();
         assert_eq!(o1, o2);
     }
@@ -230,15 +245,15 @@ mod tests {
         let mut buffers = BufferSet::new(&hw);
         let mut sink = StatSink::new();
         let o1 = core
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
             .unwrap();
         // Same input, different membrane state -> (almost surely) different output.
         let o2 = core
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
             .unwrap();
         core.reset();
         let o3 = core
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
             .unwrap();
         assert_eq!(o1, o3, "reset must restore t=0 behaviour");
         let _ = o2;

@@ -11,10 +11,13 @@ use crate::spike::{EncodedSpikes, TokenGrid};
 use crate::units::{AdderModule, SpikeEncodingArray, SpikeMaxpoolUnit, TileEngine};
 use crate::model::QuantizedModel;
 
-use super::buffers::BufferSet;
+use super::buffers::CoreBuffers;
 use super::controller::DatapathMode;
 use super::report::StatSink;
 
+/// The SPS Core: owns the Tile Engine, per-stage SEAs, the Maxpooling
+/// Array and the residual Adder, with persistent LIF state across
+/// timesteps.
 pub struct SpsCore {
     tile: TileEngine,
     seas: Vec<SpikeEncodingArray>,
@@ -25,6 +28,7 @@ pub struct SpsCore {
 }
 
 impl SpsCore {
+    /// Build the core's unit complement for one model's stage geometry.
     pub fn new(model: &QuantizedModel, params: LifParams) -> Self {
         let cfg = &model.cfg;
         let dims = cfg.stage_dims();
@@ -42,6 +46,7 @@ impl SpsCore {
         }
     }
 
+    /// Clear all per-stage LIF membrane state (between inferences).
     pub fn reset(&mut self) {
         for sea in &mut self.seas {
             sea.reset();
@@ -50,6 +55,8 @@ impl SpsCore {
 
     /// Run one timestep of SPS on the quantized input image.
     ///
+    /// `pong` is the timestep parity selecting which ESS half of `buffers`
+    /// (this core's double-buffered pair) receives the encoded tensors.
     /// Returns `u0` as `[D, L]` channel-major values plus the stage-3
     /// output spikes (needed by the controller for sparsity reporting).
     pub fn run_timestep(
@@ -58,7 +65,8 @@ impl SpsCore {
         image: &QTensor,
         cfg: &AccelConfig,
         mode: DatapathMode,
-        buffers: &mut BufferSet,
+        pong: bool,
+        buffers: &mut CoreBuffers,
         sink: &mut StatSink,
     ) -> Result<(QTensor, EncodedSpikes)> {
         let mut cur = image.clone();
@@ -85,7 +93,7 @@ impl SpsCore {
             // Post-pool sparsity: matches the golden executor and the JAX
             // model's aux records (Fig. 6 measures what later layers see).
             sink.sparsity(&format!("sps.stage{i}.spikes"), &enc);
-            buffers.store_encoded(&enc, false)?;
+            buffers.store_encoded(&enc, pong)?;
 
             // Next conv consumes the spike map as a dense binary tensor;
             // scatter the encoded addresses straight into a zeroed buffer
@@ -121,6 +129,7 @@ impl SpsCore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::accel::buffers::BufferSet;
     use crate::model::SdtModelConfig;
     use crate::quant::{QFormat, MEM_BITS};
     use crate::util::Prng;
@@ -142,7 +151,7 @@ mod tests {
         let mut buffers = BufferSet::new(&hw);
         let mut sink = StatSink::new();
         let (u0, enc3) = core
-            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, &mut buffers, &mut sink)
+            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, false, &mut buffers.sps, &mut sink)
             .unwrap();
         assert_eq!(u0.shape, vec![64, 64]);
         assert_eq!(enc3.channels, 64);
@@ -162,10 +171,10 @@ mod tests {
         let mut c1 = SpsCore::new(&model, model.cfg.lif_params());
         let mut c2 = SpsCore::new(&model, model.cfg.lif_params());
         let (u1, _) = c1
-            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, &mut b1, &mut s1)
+            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, false, &mut b1.sps, &mut s1)
             .unwrap();
         let (u2, _) = c2
-            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, &mut b2, &mut s2)
+            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, false, &mut b2.sps, &mut s2)
             .unwrap();
         assert_eq!(u1, u2, "datapath modes must agree on values");
         assert!(s2.phases.get("sps.maxpool").cycles >= s1.phases.get("sps.maxpool").cycles);

@@ -15,13 +15,16 @@ use crate::util::{div_ceil, Prng};
 /// ISCAS'22 [14]: `lanes` parallel accumulators, one weight row per spike.
 #[derive(Clone, Debug)]
 pub struct EventDrivenFcModel {
+    /// Parallel event lanes.
     pub lanes: usize,
+    /// Clock frequency, MHz.
     pub freq_mhz: f64,
     /// Layer widths, e.g. [784, 512, 256, 10] for MNIST.
     pub layers: Vec<usize>,
 }
 
 impl EventDrivenFcModel {
+    /// The ISCAS'22-like operating point.
     pub fn iscas22_like() -> Self {
         Self { lanes: 1280, freq_mhz: 140.0, layers: vec![784, 512, 256, 10] }
     }
@@ -60,11 +63,13 @@ impl EventDrivenFcModel {
         stats
     }
 
+    /// Achieved GSOP/s for a run.
     pub fn gsops(&self, stats: &UnitStats) -> f64 {
         let secs = stats.cycles as f64 / (self.freq_mhz * 1e6);
         stats.sops as f64 / secs / 1e9
     }
 
+    /// Achieved GSOP/W for a run.
     pub fn gsop_per_w(&self, stats: &UnitStats, energy: &EnergyModel) -> f64 {
         let secs = stats.cycles as f64 / (self.freq_mhz * 1e6);
         energy.gsop_per_w(stats, secs)
@@ -75,13 +80,16 @@ impl EventDrivenFcModel {
 /// accelerator: channel-parallel convolution over bitmap spike maps.
 #[derive(Clone, Debug)]
 pub struct SkydiverCnnModel {
+    /// Dense MAC units.
     pub macs: usize,
+    /// Clock frequency, MHz.
     pub freq_mhz: f64,
     /// (c_in, c_out, side) per conv layer, 3x3 kernels.
     pub convs: Vec<(usize, usize, usize)>,
 }
 
 impl SkydiverCnnModel {
+    /// The Skydiver-like operating point.
     pub fn tcad22_like() -> Self {
         Self {
             macs: 128,
@@ -90,6 +98,7 @@ impl SkydiverCnnModel {
         }
     }
 
+    /// Simulate `timesteps` at spike `rate` (seeded).
     pub fn run(&self, timesteps: usize, rate: f64, seed: u64) -> UnitStats {
         let mut rng = Prng::new(seed);
         let mut stats = UnitStats::default();
@@ -121,6 +130,7 @@ impl SkydiverCnnModel {
         stats
     }
 
+    /// Achieved GSOP/s for a run.
     pub fn gsops(&self, stats: &UnitStats) -> f64 {
         let secs = stats.cycles as f64 / (self.freq_mhz * 1e6);
         stats.sops as f64 / secs / 1e9

@@ -7,14 +7,20 @@ use std::time::Instant;
 /// Result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name as printed.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Fastest iteration, seconds.
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// One-line tabular rendering.
     pub fn line(&self) -> String {
         format!(
             "{:<40} iters={:<4} median={:>12}  mean={:>12}  min={:>12}",

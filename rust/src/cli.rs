@@ -6,9 +6,13 @@ use std::collections::HashMap;
 use anyhow::{bail, Result};
 
 #[derive(Clone, Debug, Default)]
+/// Parsed command line: a subcommand plus options and flags.
 pub struct Args {
+    /// The subcommand (first positional).
     pub command: String,
+    /// `--key value` pairs.
     pub options: HashMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
@@ -34,18 +38,22 @@ impl Args {
         Ok(Self { command, options, flags })
     }
 
+    /// Parse from the process arguments.
     pub fn from_env() -> Result<Self> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Look up an option value.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(String::as_str)
     }
 
+    /// Option value, or a default when absent.
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Option parsed as `usize`, or a default when absent.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             Some(v) => Ok(v.parse()?),
@@ -53,11 +61,13 @@ impl Args {
         }
     }
 
+    /// Was the bare flag passed?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 }
 
+/// The `help` text.
 pub const USAGE: &str = "\
 sdt-accel — sparse accelerator for the Spike-driven Transformer
 
@@ -68,6 +78,8 @@ COMMANDS:
              --weights DIR   use trained artifacts (default artifacts/weights)
              --config tiny|paper   model scale with random weights
              --seed N        image seed
+             --serial        charge phases serially instead of executing
+                             the two-core overlapped pipeline (ablation)
   accuracy   held-out accuracy: quantized simulator vs float PJRT model
              --weights DIR   --limit N
   table1     regenerate Table I (comparison with SNN accelerators)
@@ -75,6 +87,7 @@ COMMANDS:
              --weights DIR   --limit N
   serve      batched serving demo through the coordinator
              --workers N --requests N --backend sim|golden|pjrt --batch N
+             --serial        serial-charging simulator workers (ablation)
   sweep      lane-count parallelism sweep (ablation A2)
   help       this message
 ";

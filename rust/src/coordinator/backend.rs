@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::accel::{Accelerator, DatapathMode};
+use crate::accel::{Accelerator, DatapathMode, ExecMode};
 use crate::hw::AccelConfig;
 use crate::model::{GoldenExecutor, QuantizedModel};
 use crate::runtime::{LoadedHlo, PjrtRuntime};
@@ -15,8 +15,10 @@ use crate::runtime::{LoadedHlo, PjrtRuntime};
 /// thread-local handles, so the coordinator constructs each worker's
 /// backend *inside* its thread via a [`BackendFactory`].
 pub trait InferBackend {
+    /// Short backend identifier for logs and reports.
     fn name(&self) -> &'static str;
 
+    /// Run a batch of CHW f32 images, returning per-image logits.
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>>;
 
     /// Modelled accelerator cycles spent so far (simulator backend only).
@@ -28,32 +30,70 @@ pub trait InferBackend {
 /// Constructor run inside the worker thread that will own the backend.
 pub type BackendFactory = Box<dyn FnOnce() -> Result<Box<dyn InferBackend>> + Send>;
 
-/// The cycle-level accelerator simulator (the paper's datapath).
+/// The cycle-level accelerator simulator (the paper's datapath), running
+/// the overlapped two-core pipeline by default; modelled cycles are the
+/// executed overlap schedule's wall cycles (serial sums in serial mode).
 pub struct SimulatorBackend {
     accel: Accelerator,
     cycles: u64,
 }
 
 impl SimulatorBackend {
+    /// Overlapped, encoded-datapath simulator (the default serving path).
     pub fn new(model: QuantizedModel, hw: AccelConfig) -> Self {
         Self { accel: Accelerator::new(model, hw), cycles: 0 }
     }
 
+    /// Choose the datapath, keeping the overlapped executor.
     pub fn with_mode(model: QuantizedModel, hw: AccelConfig, mode: DatapathMode) -> Self {
         Self { accel: Accelerator::with_mode(model, hw, mode), cycles: 0 }
+    }
+
+    /// Choose both datapath and execution strategy (the `--serial`
+    /// escape hatch goes through here).
+    pub fn with_modes(
+        model: QuantizedModel,
+        hw: AccelConfig,
+        mode: DatapathMode,
+        exec: ExecMode,
+    ) -> Self {
+        Self { accel: Accelerator::with_modes(model, hw, mode, exec), cycles: 0 }
+    }
+
+    /// `n` identical worker factories for the [`Coordinator`](super::Coordinator)
+    /// (each worker constructs its own simulator in-thread). Shared by the
+    /// CLI `serve` command, the serving example and the e2e bench.
+    pub fn factories(
+        n: usize,
+        model: &QuantizedModel,
+        hw: AccelConfig,
+        mode: DatapathMode,
+        exec: ExecMode,
+    ) -> Vec<BackendFactory> {
+        (0..n)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || {
+                    Ok(Box::new(Self::with_modes(m, hw, mode, exec)) as Box<dyn InferBackend>)
+                }) as BackendFactory
+            })
+            .collect()
     }
 }
 
 impl InferBackend for SimulatorBackend {
     fn name(&self) -> &'static str {
-        "simulator"
+        match self.accel.exec {
+            ExecMode::Overlapped => "simulator",
+            ExecMode::Serial => "simulator-serial",
+        }
     }
 
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let mut out = Vec::with_capacity(images.len());
         for img in images {
             let r = self.accel.infer(img)?;
-            self.cycles += r.total.cycles;
+            self.cycles += r.wall_cycles();
             out.push(r.logits);
         }
         Ok(out)
@@ -70,8 +110,22 @@ pub struct GoldenBackend {
 }
 
 impl GoldenBackend {
+    /// Wrap a model.
     pub fn new(model: QuantizedModel) -> Self {
         Self { model }
+    }
+
+    /// `n` identical worker factories for the
+    /// [`Coordinator`](super::Coordinator) (mirrors
+    /// [`SimulatorBackend::factories`]).
+    pub fn factories(n: usize, model: &QuantizedModel) -> Vec<BackendFactory> {
+        (0..n)
+            .map(|_| {
+                let m = model.clone();
+                Box::new(move || Ok(Box::new(Self::new(m)) as Box<dyn InferBackend>))
+                    as BackendFactory
+            })
+            .collect()
     }
 }
 
@@ -96,6 +150,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Load the AOT-compiled HLO artifacts from `dir`.
     pub fn from_artifacts(dir: &Path, img_len: usize, classes: usize) -> Result<Self> {
         let rt = PjrtRuntime::cpu()?;
         let b1 = rt.load_hlo(&dir.join("model.hlo.txt"))?;
@@ -164,6 +219,31 @@ mod tests {
         let b = gold.infer_batch(&imgs).unwrap();
         assert_eq!(a, b);
         assert!(sim.modelled_cycles() > 0);
+    }
+
+    #[test]
+    fn overlapped_backend_fewer_modelled_cycles_same_logits() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 18);
+        let imgs = images(2);
+        let mut over = SimulatorBackend::new(model.clone(), AccelConfig::small());
+        let mut serial = SimulatorBackend::with_modes(
+            model,
+            AccelConfig::small(),
+            crate::accel::DatapathMode::Encoded,
+            crate::accel::ExecMode::Serial,
+        );
+        assert_eq!(over.name(), "simulator");
+        assert_eq!(serial.name(), "simulator-serial");
+        let a = over.infer_batch(&imgs).unwrap();
+        let b = serial.infer_batch(&imgs).unwrap();
+        assert_eq!(a, b, "execution strategy must not change logits");
+        assert!(
+            over.modelled_cycles() < serial.modelled_cycles(),
+            "overlap {} !< serial {}",
+            over.modelled_cycles(),
+            serial.modelled_cycles()
+        );
     }
 
     #[test]

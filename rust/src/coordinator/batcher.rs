@@ -8,8 +8,11 @@ use std::time::{Duration, Instant};
 use super::Request;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
+/// When to close a batch: a size cap and a maximum queue wait.
 pub struct BatchPolicy {
+    /// Largest batch dispatched.
     pub max_batch: usize,
+    /// Longest a request may wait before a partial batch closes.
     pub max_wait: Duration,
 }
 
@@ -23,16 +26,19 @@ impl Default for BatchPolicy {
 /// mutex. Timestamps travel with the requests for latency accounting.
 #[derive(Debug)]
 pub struct DynamicBatcher {
+    /// The active batching policy.
     pub policy: BatchPolicy,
     queue: VecDeque<(Request, Instant)>,
 }
 
 impl DynamicBatcher {
+    /// Empty queue under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         Self { policy, queue: VecDeque::new() }
     }
 
+    /// Enqueue a request (timestamped now).
     pub fn push(&mut self, req: Request) {
         self.queue.push_back((req, Instant::now()));
     }
@@ -43,10 +49,12 @@ impl DynamicBatcher {
         self.queue.push_back(item);
     }
 
+    /// Queued request count.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

@@ -19,6 +19,7 @@ pub use server::{Coordinator, ServeReport};
 /// A single inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen request id (responses are sorted by it).
     pub id: u64,
     /// CHW f32 pixels.
     pub image: Vec<f32>,
@@ -27,8 +28,11 @@ pub struct Request {
 /// The completed response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The originating request's id.
     pub id: u64,
+    /// Model output logits.
     pub logits: Vec<f32>,
+    /// Argmax class.
     pub predicted: usize,
     /// Host wall-clock latency (queue + compute), seconds.
     pub latency_s: f64,

@@ -22,19 +22,28 @@ use super::{Request, Response};
 /// Serving statistics over one session.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
+    /// Requests completed.
     pub completed: usize,
+    /// Wall-clock seconds of the session.
     pub wall_s: f64,
+    /// Completed requests per second.
     pub throughput_rps: f64,
+    /// Mean request latency, seconds.
     pub latency_mean_s: f64,
+    /// Median request latency, seconds.
     pub latency_p50_s: f64,
+    /// p99 request latency, seconds.
     pub latency_p99_s: f64,
+    /// Batches dispatched.
     pub batches: usize,
+    /// Mean batch size.
     pub mean_batch: f64,
     /// Modelled accelerator cycles (simulator backends), summed over workers.
     pub modelled_cycles: u64,
 }
 
 impl ServeReport {
+    /// One-line rendering for logs and benches.
     pub fn summary(&self) -> String {
         format!(
             "completed={}  wall={:.3}s  throughput={:.1} req/s  latency mean={:.2}ms p50={:.2}ms p99={:.2}ms  batches={} (mean size {:.2})",

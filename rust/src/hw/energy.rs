@@ -10,6 +10,7 @@
 use super::stats::UnitStats;
 
 #[derive(Clone, Copy, Debug)]
+/// Per-operation energy costs (pJ) plus static power.
 pub struct EnergyModel {
     /// 10-bit add (SLU accumulate, residual adder, membrane update), pJ.
     pub pj_add: f64,
@@ -19,6 +20,7 @@ pub struct EnergyModel {
     pub pj_mac: f64,
     /// On-chip SRAM read/write (per word), pJ.
     pub pj_sram_read: f64,
+    /// On-chip SRAM write (per word), pJ.
     pub pj_sram_write: f64,
     /// External memory, pJ per byte.
     pub pj_dram_byte: f64,

@@ -12,26 +12,44 @@
 use super::config::AccelConfig;
 
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
+/// FPGA resource totals.
 pub struct Resources {
+    /// Lookup tables.
     pub lut: u64,
+    /// Flip-flops.
     pub ff: u64,
+    /// Block RAMs (36 Kb).
     pub bram: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
+/// Per-structure FPGA cost model calibrated against Table I.
 pub struct ResourceModel {
+    /// LUTs per Tile Engine MAC.
     pub lut_per_mac: u64,
+    /// LUTs per SLA adder lane.
     pub lut_per_sla_lane: u64,
+    /// LUTs per spike-encoding unit.
     pub lut_per_seu: u64,
+    /// LUTs per SMAM comparator.
     pub lut_per_smam_cmp: u64,
+    /// LUTs per maxpooling unit.
     pub lut_per_smu: u64,
+    /// Fixed control/interconnect LUTs.
     pub lut_overhead: u64,
+    /// FFs per neuron lane.
     pub ff_per_lane: u64,
+    /// FFs per MAC.
     pub ff_per_mac: u64,
+    /// Fixed control FFs.
     pub ff_overhead: u64,
+    /// BRAMs per ESS bank.
     pub bram_per_ess_bank: u64,
+    /// BRAMs for the weight buffer.
     pub bram_weight_buffer: u64,
+    /// BRAMs for the I/O buffers.
     pub bram_io_buffers: u64,
+    /// BRAMs for the ResBuffer.
     pub bram_res_buffer: u64,
 }
 

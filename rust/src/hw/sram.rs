@@ -7,19 +7,24 @@
 use anyhow::{bail, Result};
 
 #[derive(Clone, Debug)]
+/// One SRAM bank (or bank group) with occupancy and access counters.
 pub struct SramBank {
+    /// Bank name (for overflow errors and reports).
     pub name: String,
     /// Capacity in words (one word = one encoded spike or one activation).
     pub words: usize,
     /// Current occupancy in words.
     pub used: usize,
+    /// Word reads so far.
     pub reads: u64,
+    /// Word writes so far.
     pub writes: u64,
     /// High-water mark of occupancy (for utilisation reports).
     pub peak_used: usize,
 }
 
 impl SramBank {
+    /// A bank of `words` capacity.
     pub fn new(name: &str, words: usize) -> Self {
         Self { name: name.to_string(), words, used: 0, reads: 0, writes: 0, peak_used: 0 }
     }
@@ -52,6 +57,7 @@ impl SramBank {
         self.reads += n as u64;
     }
 
+    /// Peak occupancy fraction.
     pub fn utilization(&self) -> f64 {
         if self.words == 0 {
             0.0
@@ -60,6 +66,7 @@ impl SramBank {
         }
     }
 
+    /// Clear access counters between runs.
     pub fn reset_counters(&mut self) {
         self.reads = 0;
         self.writes = 0;

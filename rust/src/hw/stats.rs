@@ -5,6 +5,7 @@
 use std::ops::{Add, AddAssign};
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// One unit's cycle/operation accounting record.
 pub struct UnitStats {
     /// Cycles the unit was busy (its own pipeline view).
     pub cycles: u64,
@@ -17,13 +18,16 @@ pub struct UnitStats {
     pub cmps: u64,
     /// Dense multiply-accumulates (Tile Engine only).
     pub macs: u64,
+    /// On-chip SRAM word reads.
     pub sram_reads: u64,
+    /// On-chip SRAM word writes.
     pub sram_writes: u64,
     /// External-memory traffic in bytes (Input/Output Buffer side).
     pub dram_bytes: u64,
 }
 
 impl UnitStats {
+    /// All-zero record.
     pub fn new() -> Self {
         Self::default()
     }
@@ -59,14 +63,17 @@ impl AddAssign for UnitStats {
 /// A named breakdown of stats per pipeline phase (SPS conv, SMU, SDSA, ...).
 #[derive(Clone, Debug, Default)]
 pub struct PhaseStats {
+    /// `(phase name, accumulated stats)` in first-recorded order.
     pub phases: Vec<(String, UnitStats)>,
 }
 
 impl PhaseStats {
+    /// An empty breakdown.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Accumulate `stats` into `phase` (created on first use, order kept).
     pub fn add(&mut self, phase: &str, stats: UnitStats) {
         if let Some((_, s)) = self.phases.iter_mut().find(|(n, _)| n == phase) {
             *s += stats;
@@ -75,16 +82,30 @@ impl PhaseStats {
         }
     }
 
+    /// Sum of every phase's stats.
     pub fn total(&self) -> UnitStats {
         self.phases.iter().fold(UnitStats::new(), |acc, (_, s)| acc + *s)
     }
 
+    /// One phase's stats (zeros when the phase never ran).
     pub fn get(&self, phase: &str) -> UnitStats {
         self.phases
             .iter()
             .find(|(n, _)| n == phase)
             .map(|(_, s)| *s)
             .unwrap_or_default()
+    }
+
+    /// Summed cycles of every phase whose name starts with `prefix` —
+    /// e.g. `cycles_matching("sdeb.")` is the SDEB pipeline stage's total,
+    /// which the executed-vs-estimated reconciliation tests compare
+    /// against the per-timestep stage traces.
+    pub fn cycles_matching(&self, prefix: &str) -> u64 {
+        self.phases
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, s)| s.cycles)
+            .sum()
     }
 }
 
@@ -116,5 +137,16 @@ mod tests {
         assert_eq!(p.get("slu").cycles, 12);
         assert_eq!(p.total().cycles, 13);
         assert_eq!(p.phases.len(), 2);
+    }
+
+    #[test]
+    fn cycles_matching_sums_prefixed_phases() {
+        let mut p = PhaseStats::new();
+        p.add("sdeb.qkv", UnitStats { cycles: 5, ..Default::default() });
+        p.add("sdeb.mlp", UnitStats { cycles: 7, ..Default::default() });
+        p.add("sps.conv", UnitStats { cycles: 100, ..Default::default() });
+        assert_eq!(p.cycles_matching("sdeb."), 12);
+        assert_eq!(p.cycles_matching("sps."), 100);
+        assert_eq!(p.cycles_matching("io."), 0);
     }
 }

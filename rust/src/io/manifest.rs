@@ -17,20 +17,27 @@ use super::npy::NpyArray;
 /// One manifest entry.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Entry {
+    /// Tensor name.
     pub name: String,
+    /// Element dtype (e.g. `f32`).
     pub dtype: String,
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Relative `.npy` file name.
     pub file: String,
 }
 
 /// Parsed weight manifest bound to its directory.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Manifest rows.
     pub entries: Vec<Entry>,
 }
 
 impl Manifest {
+    /// Read `manifest.txt` from `dir`.
     pub fn load(dir: &Path) -> Result<Self> {
         let text = fs::read_to_string(dir.join("manifest.txt"))
             .with_context(|| format!("reading manifest in {}", dir.display()))?;
@@ -62,6 +69,7 @@ impl Manifest {
         Ok(Self { dir: dir.to_path_buf(), entries })
     }
 
+    /// Look up an entry by tensor name.
     pub fn get(&self, name: &str) -> Result<&Entry> {
         self.entries
             .iter()
@@ -79,6 +87,7 @@ impl Manifest {
         Ok(arr)
     }
 
+    /// Load an entry's data and shape as f32.
     pub fn load_f32(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
         let arr = self.load_array(name)?;
         Ok((arr.as_f32()?, arr.shape))
@@ -88,16 +97,19 @@ impl Manifest {
 /// Parsed `config.txt` key/value file.
 #[derive(Clone, Debug)]
 pub struct ModelConfigFile {
+    /// Raw key/value pairs.
     pub kv: HashMap<String, String>,
 }
 
 impl ModelConfigFile {
+    /// Read `config.txt` from `dir`.
     pub fn load(dir: &Path) -> Result<Self> {
         let text = fs::read_to_string(dir.join("config.txt"))
             .with_context(|| format!("reading config in {}", dir.display()))?;
         Ok(Self::parse(&text))
     }
 
+    /// Parse from text.
     pub fn parse(text: &str) -> Self {
         let mut kv = HashMap::new();
         for line in text.lines() {
@@ -109,6 +121,7 @@ impl ModelConfigFile {
         Self { kv }
     }
 
+    /// A key parsed as `usize`.
     pub fn usize(&self, key: &str) -> Result<usize> {
         self.kv
             .get(key)
@@ -117,6 +130,7 @@ impl ModelConfigFile {
             .with_context(|| format!("config key `{key}` not an integer"))
     }
 
+    /// A key parsed as `f32`.
     pub fn f32(&self, key: &str) -> Result<f32> {
         self.kv
             .get(key)

@@ -9,17 +9,21 @@ use anyhow::{bail, Context, Result};
 /// A loaded array: shape + data (converted to f32 or i32 as requested).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NpyArray {
+    /// Tensor shape from the header.
     pub shape: Vec<usize>,
+    /// Numpy dtype descriptor.
     pub dtype: String,
     raw: Vec<u8>,
 }
 
 impl NpyArray {
+    /// Read a `.npy` file.
     pub fn load(path: &Path) -> Result<Self> {
         let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
         Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
     }
 
+    /// Parse from raw bytes.
     pub fn parse(bytes: &[u8]) -> Result<Self> {
         if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
             bail!("not an npy file (bad magic)");
@@ -60,14 +64,17 @@ impl NpyArray {
         Ok(Self { shape, dtype, raw: data[..n * elem].to_vec() })
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// True when the array is empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Elements decoded as f32.
     pub fn as_f32(&self) -> Result<Vec<f32>> {
         match self.dtype.as_str() {
             "<f4" => Ok(self
@@ -84,6 +91,7 @@ impl NpyArray {
         }
     }
 
+    /// Elements decoded as i32.
     pub fn as_i32(&self) -> Result<Vec<i32>> {
         match self.dtype.as_str() {
             "<i4" => Ok(self

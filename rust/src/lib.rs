@@ -8,10 +8,20 @@
 //! PJRT runtime that cross-checks numerics against the AOT-compiled JAX
 //! model (see `python/compile/`).
 //!
+//! The accelerator controller **executes** the paper's two-core overlap by
+//! default: the SPS stage of timestep `t+1` runs concurrently with the
+//! SDEB stage of timestep `t` against double-buffered ESS halves, with
+//! attention heads sharded across the SDEB cores
+//! ([`accel::executor`]); serial charging stays available as an ablation
+//! (`ExecMode::Serial`). See `ARCHITECTURE.md` for the paper-to-code map
+//! and `DESIGN.md` for layer/substitution details.
+//!
 //! Layer map (DESIGN.md):
 //! * L3 — this crate: coordinator, simulator, metrics, benches.
 //! * L2 — JAX model lowered to `artifacts/*.hlo.txt` at build time.
 //! * L1 — Pallas kernels inlined into the same HLO.
+
+#![warn(missing_docs)]
 
 pub mod util;
 pub mod quant;

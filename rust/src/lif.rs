@@ -23,6 +23,7 @@ pub struct LifParams {
 }
 
 impl LifParams {
+    /// Quantize float LIF parameters into the integer domain.
     pub fn from_f32(v_th: f32, v_reset: f32, gamma: f32) -> Self {
         let act = QFormat::new(MEM_BITS, ACT_FRAC);
         Self {
@@ -42,20 +43,24 @@ impl Default for LifParams {
 /// A bank of LIF neurons with persistent temporal state Temp[t-1].
 #[derive(Clone, Debug)]
 pub struct LifArray {
+    /// Shared neuron parameters.
     pub params: LifParams,
     /// Temp[t-1] per neuron, activation format, wide accumulator.
     temp: Vec<i32>,
 }
 
 impl LifArray {
+    /// A bank of `n` neurons at rest.
     pub fn new(n: usize, params: LifParams) -> Self {
         Self { params, temp: vec![0; n] }
     }
 
+    /// Number of neurons.
     pub fn len(&self) -> usize {
         self.temp.len()
     }
 
+    /// True when the bank has no neurons.
     pub fn is_empty(&self) -> bool {
         self.temp.is_empty()
     }

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use spikeformer_accel::accel::Accelerator;
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode};
 use spikeformer_accel::baselines::{aicas23_row, iscas22_row, tcad22_row};
 use spikeformer_accel::cli::{Args, USAGE};
 use spikeformer_accel::coordinator::{
@@ -55,14 +55,24 @@ fn random_image(seed: u64) -> Vec<f32> {
     (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
 }
 
+fn exec_mode(args: &Args) -> ExecMode {
+    if args.has_flag("serial") {
+        ExecMode::Serial
+    } else {
+        ExecMode::Overlapped
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let model = get_model(args)?;
     let seed = args.usize_or("seed", 1)? as u64;
+    let exec = exec_mode(args);
     println!(
-        "model `{}`: D={} T={} blocks={}",
+        "model `{}`: D={} T={} blocks={} exec={exec:?}",
         model.cfg.name, model.cfg.embed_dim, model.cfg.timesteps, model.cfg.num_blocks
     );
-    let mut accel = Accelerator::new(model, AccelConfig::paper());
+    let mut accel =
+        Accelerator::with_modes(model, AccelConfig::paper(), DatapathMode::Encoded, exec);
     let report = accel.infer(&random_image(seed))?;
     println!("{}", report.summary());
     println!("predicted class: {}", report.argmax());
@@ -172,22 +182,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = args.get_or("backend", "golden");
     let model = get_model(args)?;
 
-    let mut factories: Vec<BackendFactory> = Vec::new();
-    for _ in 0..workers {
-        let m = model.clone();
-        let f: BackendFactory = match backend.as_str() {
-            "sim" => Box::new(move || {
-                Ok(Box::new(SimulatorBackend::new(m, AccelConfig::paper())) as _)
-            }),
-            "golden" => Box::new(move || Ok(Box::new(GoldenBackend::new(m)) as _)),
-            "pjrt" => Box::new(move || {
-                Ok(Box::new(PjrtBackend::from_artifacts(Path::new("artifacts"), 3 * 32 * 32, 10)?)
-                    as _)
-            }),
-            other => bail!("unknown backend `{other}`"),
-        };
-        factories.push(f);
-    }
+    let exec = exec_mode(args);
+    let factories: Vec<BackendFactory> = match backend.as_str() {
+        "sim" => SimulatorBackend::factories(
+            workers,
+            &model,
+            AccelConfig::paper(),
+            DatapathMode::Encoded,
+            exec,
+        ),
+        "golden" => GoldenBackend::factories(workers, &model),
+        "pjrt" => (0..workers)
+            .map(|_| {
+                Box::new(move || {
+                    Ok(Box::new(PjrtBackend::from_artifacts(
+                        Path::new("artifacts"),
+                        3 * 32 * 32,
+                        10,
+                    )?) as _)
+                }) as BackendFactory
+            })
+            .collect(),
+        other => bail!("unknown backend `{other}`"),
+    };
 
     let policy = BatchPolicy { max_batch: batch, ..Default::default() };
     let started = Instant::now();

@@ -3,16 +3,27 @@
 /// One column of Table I.
 #[derive(Clone, Debug, PartialEq)]
 pub struct AccelRow {
+    /// Accelerator name.
     pub name: String,
+    /// Publication year.
     pub year: u32,
+    /// Workload network family.
     pub network: String,
+    /// Evaluation dataset.
     pub dataset: String,
+    /// FPGA platform.
     pub platform: String,
+    /// LUT usage.
     pub lut: u64,
+    /// Flip-flop usage.
     pub ff: u64,
+    /// BRAM usage.
     pub bram: u64,
+    /// Clock frequency, MHz.
     pub freq_mhz: f64,
+    /// Peak throughput, GSOP/s.
     pub gsops: f64,
+    /// Peak efficiency, GSOP/W.
     pub gsop_per_w: f64,
 }
 

@@ -7,20 +7,33 @@ use crate::io::ModelConfigFile;
 use crate::lif::LifParams;
 
 #[derive(Clone, Debug, PartialEq)]
+/// Hyper-parameters of one Spike-driven Transformer model.
 pub struct SdtModelConfig {
+    /// Config name (`tiny`, `paper`, ...).
     pub name: String,
+    /// Input image side in pixels.
     pub img_size: usize,
+    /// Input image channels.
     pub in_channels: usize,
+    /// Classifier output classes.
     pub num_classes: usize,
+    /// SNN timesteps per inference (T).
     pub timesteps: usize,
+    /// Token embedding width (D).
     pub embed_dim: usize,
+    /// Encoder blocks (one SDEB core each).
     pub num_blocks: usize,
+    /// Attention heads (sharded across SDEB cores by the overlapped executor).
     pub num_heads: usize,
+    /// MLP hidden width.
     pub mlp_hidden: usize,
     /// SDSA mask-neuron threshold as an integer accumulation count.
     pub attn_v_th: u32,
+    /// LIF firing threshold.
     pub lif_v_th: f32,
+    /// LIF reset potential.
     pub lif_v_reset: f32,
+    /// LIF leak factor.
     pub lif_gamma: f32,
 }
 
@@ -63,6 +76,7 @@ impl SdtModelConfig {
         }
     }
 
+    /// Parse from the exported `config.txt` representation.
     pub fn from_file(f: &ModelConfigFile) -> Result<Self> {
         Ok(Self {
             name: f.kv.get("name").cloned().unwrap_or_else(|| "custom".into()),
@@ -81,6 +95,7 @@ impl SdtModelConfig {
         })
     }
 
+    /// The integer LIF parameters of this config.
     pub fn lif_params(&self) -> LifParams {
         LifParams::from_f32(self.lif_v_th, self.lif_v_reset, self.lif_gamma)
     }
@@ -98,10 +113,12 @@ impl SdtModelConfig {
         [s, s, s / 2, s / 2]
     }
 
+    /// Token-grid side after SPS downsampling (img_size / 4).
     pub fn tokens_side(&self) -> usize {
         self.img_size / 4
     }
 
+    /// L = tokens_side squared.
     pub fn num_tokens(&self) -> usize {
         self.tokens_side() * self.tokens_side()
     }

@@ -14,6 +14,7 @@ use super::weights::QuantizedModel;
 /// Result of a golden inference.
 #[derive(Clone, Debug)]
 pub struct GoldenResult {
+    /// Classification logits.
     pub logits: Vec<f32>,
     /// (module name, spike sparsity averaged over timesteps).
     pub sparsity: Vec<(String, f64)>,
@@ -21,7 +22,9 @@ pub struct GoldenResult {
     pub total_spikes: u64,
 }
 
+/// Dense reference executor over a borrowed model — the bit-exactness oracle.
 pub struct GoldenExecutor<'m> {
+    /// The quantized model being executed.
     pub model: &'m QuantizedModel,
 }
 
@@ -53,6 +56,7 @@ impl SparsityAcc {
 }
 
 impl<'m> GoldenExecutor<'m> {
+    /// Bind to a model.
     pub fn new(model: &'m QuantizedModel) -> Self {
         Self { model }
     }

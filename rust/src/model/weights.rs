@@ -11,23 +11,32 @@ use super::config::SdtModelConfig;
 /// One Spike-driven Encoder Block's linear layers.
 #[derive(Clone, Debug)]
 pub struct QuantizedBlock {
+    /// Q projection.
     pub q: QuantizedLinear,
+    /// K projection.
     pub k: QuantizedLinear,
+    /// V projection.
     pub v: QuantizedLinear,
+    /// Attention output projection.
     pub o: QuantizedLinear,
+    /// First MLP layer.
     pub mlp1: QuantizedLinear,
+    /// Second MLP layer.
     pub mlp2: QuantizedLinear,
 }
 
 /// The full BN-folded, quantized Spike-driven Transformer.
 #[derive(Clone, Debug)]
 pub struct QuantizedModel {
+    /// Model hyper-parameters.
     pub cfg: SdtModelConfig,
     /// stage0..3 then rpe.
     pub sps_convs: Vec<QuantizedConv>,
+    /// Encoder blocks.
     pub blocks: Vec<QuantizedBlock>,
     /// Classification head (runs host-side on pooled spike rates).
     pub head_w: Vec<f32>, // [D, classes]
+    /// Classifier bias.
     pub head_b: Vec<f32>,
 }
 

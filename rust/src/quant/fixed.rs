@@ -28,11 +28,14 @@ pub fn rshift_round(v: i64, shift: i32) -> i64 {
 /// A power-of-two-scaled signed fixed-point format: value = raw * 2^-frac.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct QFormat {
+    /// Total bits.
     pub bits: u32,
+    /// Fraction bits.
     pub frac: i32,
 }
 
 impl QFormat {
+    /// A format with `bits` total and `frac` fraction bits.
     pub const fn new(bits: u32, frac: i32) -> Self {
         Self { bits, frac }
     }
@@ -42,6 +45,7 @@ impl QFormat {
         (((1i64 << (self.bits - 1)) - 1) as f64) * self.scale()
     }
 
+    /// Value of one LSB step (2^-frac).
     pub fn scale(&self) -> f64 {
         2f64.powi(-self.frac)
     }
@@ -52,6 +56,7 @@ impl QFormat {
         sat(raw, self.bits)
     }
 
+    /// Decode a raw integer value.
     pub fn to_f32(&self, raw: i32) -> f32 {
         (raw as f64 * self.scale()) as f32
     }
@@ -62,11 +67,14 @@ impl QFormat {
 /// (useful for quantization debugging and the paper's bit-width ablation).
 #[derive(Clone, Debug, Default)]
 pub struct SaturationTruncation {
+    /// Conversions that clipped.
     pub saturations: u64,
+    /// Total conversions.
     pub conversions: u64,
 }
 
 impl SaturationTruncation {
+    /// Zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -83,6 +91,7 @@ impl SaturationTruncation {
         clamped
     }
 
+    /// Fraction of conversions that clipped.
     pub fn saturation_rate(&self) -> f64 {
         if self.conversions == 0 {
             0.0

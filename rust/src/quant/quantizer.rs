@@ -40,18 +40,23 @@ pub fn quantize_bias(bias: &[f32], acc_frac: i32) -> Vec<i64> {
 /// drop the result back into the activation format.
 #[derive(Clone, Debug)]
 pub struct QuantizedLinear {
+    /// Input width.
     pub in_dim: usize,
+    /// Output width.
     pub out_dim: usize,
     /// Row-major `[in_dim][out_dim]` — row `c` is the weight row the SLU
     /// accumulates when input channel `c` spikes (Fig. 5).
     pub w: Vec<i32>,
+    /// Weight fraction bits.
     pub w_frac: i32,
     /// Input fractional bits (0 for binary spike inputs).
     pub in_frac: i32,
+    /// Bias at accumulator scale.
     pub bias: Vec<i64>,
 }
 
 impl QuantizedLinear {
+    /// Quantize a float linear layer.
     pub fn from_f32(w: &[f32], bias: &[f32], in_dim: usize, out_dim: usize, in_frac: i32) -> Self {
         assert_eq!(w.len(), in_dim * out_dim);
         assert_eq!(bias.len(), out_dim);
@@ -73,6 +78,7 @@ impl QuantizedLinear {
     }
 
     #[inline]
+    /// Weight row of input channel `c`.
     pub fn row(&self, c: usize) -> &[i32] {
         &self.w[c * self.out_dim..(c + 1) * self.out_dim]
     }

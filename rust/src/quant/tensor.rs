@@ -5,17 +5,22 @@ use super::fixed::QFormat;
 /// A dense row-major integer tensor with a shared Q-format.
 #[derive(Clone, Debug, PartialEq)]
 pub struct QTensor {
+    /// Tensor shape.
     pub shape: Vec<usize>,
+    /// Fraction bits of the fixed-point values.
     pub frac: i32,
+    /// Raw fixed-point values, row-major.
     pub data: Vec<i32>,
 }
 
 impl QTensor {
+    /// All-zero tensor.
     pub fn zeros(shape: &[usize], frac: i32) -> Self {
         let n: usize = shape.iter().product();
         Self { shape: shape.to_vec(), frac, data: vec![0; n] }
     }
 
+    /// Quantize float values into `fmt`.
     pub fn from_f32(values: &[f32], shape: &[usize], fmt: QFormat) -> Self {
         let n: usize = shape.iter().product();
         assert_eq!(values.len(), n, "shape/value mismatch");
@@ -26,14 +31,17 @@ impl QTensor {
         }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor is empty.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Decode back to floats.
     pub fn to_f32(&self) -> Vec<f32> {
         let scale = 2f32.powi(-self.frac);
         self.data.iter().map(|&v| v as f32 * scale).collect()

@@ -23,15 +23,18 @@ mod enabled {
     }
 
     impl PjrtRuntime {
+        /// Construct the CPU client.
         pub fn cpu() -> Result<Self> {
             let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
             Ok(Self { client })
         }
 
+        /// Platform name.
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
 
+        /// Visible device count.
         pub fn device_count(&self) -> usize {
             self.client.device_count()
         }
@@ -101,18 +104,22 @@ mod disabled {
     }
 
     impl PjrtRuntime {
+        /// Construct the CPU client (stub: errors without the `xla` feature).
         pub fn cpu() -> Result<Self> {
             bail!(UNAVAILABLE)
         }
 
+        /// Platform name.
         pub fn platform(&self) -> String {
             "unavailable".to_string()
         }
 
+        /// Visible device count.
         pub fn device_count(&self) -> usize {
             0
         }
 
+        /// Load and compile an HLO text file.
         pub fn load_hlo(&self, path: &Path) -> Result<LoadedHlo> {
             bail!("cannot load {}: {UNAVAILABLE}", path.display())
         }
@@ -125,6 +132,7 @@ mod disabled {
     }
 
     impl LoadedHlo {
+        /// Execute with f32 inputs, returning f32 outputs.
         pub fn run_f32(&self, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
             bail!(UNAVAILABLE)
         }

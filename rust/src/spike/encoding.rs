@@ -16,12 +16,15 @@ use crate::quant::SEGMENT_TOKENS;
 /// Conventional binary spike matrix, channel-major `[C, L]`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SpikeMatrix {
+    /// Channel count (C).
     pub channels: usize,
+    /// Token count (L).
     pub tokens: usize,
     data: Vec<bool>,
 }
 
 impl SpikeMatrix {
+    /// All-zero matrix.
     pub fn zeros(channels: usize, tokens: usize) -> Self {
         Self { channels, tokens, data: vec![false; channels * tokens] }
     }
@@ -37,15 +40,18 @@ impl SpikeMatrix {
     }
 
     #[inline]
+    /// Read one position.
     pub fn get(&self, c: usize, l: usize) -> bool {
         self.data[c * self.tokens + l]
     }
 
     #[inline]
+    /// Set one position.
     pub fn set(&mut self, c: usize, l: usize, v: bool) {
         self.data[c * self.tokens + l] = v;
     }
 
+    /// Number of set positions.
     pub fn count_spikes(&self) -> usize {
         self.data.iter().filter(|&&b| b).count()
     }
@@ -58,6 +64,7 @@ impl SpikeMatrix {
         1.0 - self.count_spikes() as f64 / self.data.len() as f64
     }
 
+    /// One channel's bitmap row.
     pub fn channel(&self, c: usize) -> &[bool] {
         &self.data[c * self.tokens..(c + 1) * self.tokens]
     }
@@ -78,7 +85,9 @@ impl SpikeMatrix {
 /// laziness is invisible to consumers.
 #[derive(Clone)]
 pub struct EncodedSpikes {
+    /// Channel count (C).
     pub channels: usize,
+    /// Token space size (L).
     pub tokens: usize,
     /// Flat token-address stream, all channels back to back.
     addrs: Vec<u16>,
@@ -93,6 +102,7 @@ pub struct EncodedSpikes {
 }
 
 impl EncodedSpikes {
+    /// An encoded tensor with no spikes.
     pub fn empty(channels: usize, tokens: usize) -> Self {
         assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16");
         Self {
@@ -193,10 +203,12 @@ impl EncodedSpikes {
     }
 
     #[inline]
+    /// Total spikes (O(1): the arena length).
     pub fn count_spikes(&self) -> usize {
         self.addrs.len()
     }
 
+    /// Fraction of zeros — the Fig. 6 measurement.
     pub fn sparsity(&self) -> f64 {
         let total = self.channels * self.tokens;
         if total == 0 {
@@ -350,16 +362,19 @@ pub struct EncodedSpikesBuilder {
 }
 
 impl EncodedSpikesBuilder {
+    /// Append one spike (channel-major, increasing address order).
     pub fn push(&mut self, c: usize, l: usize) -> &mut Self {
         self.enc.push(c, l);
         self
     }
 
+    /// Bulk-append one channel's sorted addresses.
     pub fn extend_channel(&mut self, c: usize, addrs: &[u16]) -> &mut Self {
         self.enc.extend_channel(c, addrs);
         self
     }
 
+    /// Finalize into the built tensor.
     pub fn finish(self) -> EncodedSpikes {
         self.enc
     }

@@ -4,27 +4,33 @@
 /// A 2-D token grid flattened row-major into L = H*W addresses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TokenGrid {
+    /// Grid height.
     pub height: usize,
+    /// Grid width.
     pub width: usize,
 }
 
 impl TokenGrid {
+    /// A `height x width` token grid.
     pub fn new(height: usize, width: usize) -> Self {
         Self { height, width }
     }
 
     #[inline]
+    /// Total token count.
     pub fn tokens(&self) -> usize {
         self.height * self.width
     }
 
     #[inline]
+    /// Flatten `(y, x)` to a token address.
     pub fn addr(&self, y: usize, x: usize) -> usize {
         debug_assert!(y < self.height && x < self.width);
         y * self.width + x
     }
 
     #[inline]
+    /// Recover `(y, x)` from a token address.
     pub fn coords(&self, addr: usize) -> (usize, usize) {
         debug_assert!(addr < self.tokens());
         (addr / self.width, addr % self.width)

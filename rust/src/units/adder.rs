@@ -11,9 +11,11 @@ use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
 #[derive(Clone, Copy, Debug, Default)]
+/// The residual Adder Module (value-domain element-wise adds).
 pub struct AdderModule;
 
 impl AdderModule {
+    /// New adder.
     pub fn new() -> Self {
         Self
     }

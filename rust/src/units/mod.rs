@@ -17,6 +17,6 @@ pub mod tile_engine;
 pub use adder::AdderModule;
 pub use sea::SpikeEncodingArray;
 pub use slu::SpikeLinearUnit;
-pub use smam::{SmamOutput, SpikeMaskAddModule};
+pub use smam::{HeadShard, SmamOutput, SpikeMaskAddModule};
 pub use smu::SpikeMaxpoolUnit;
 pub use tile_engine::{QuantizedConv, TileEngine};

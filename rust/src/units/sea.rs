@@ -15,12 +15,15 @@ use crate::util::div_ceil;
 /// A bank of SEUs covering a `[channels, tokens]` activation tile.
 #[derive(Clone, Debug)]
 pub struct SpikeEncodingArray {
+    /// Channels of this encode site.
     pub channels: usize,
+    /// Tokens of this encode site.
     pub tokens: usize,
     lif: LifArray,
 }
 
 impl SpikeEncodingArray {
+    /// An SEA over a `[channels, tokens]` site with LIF parameters.
     pub fn new(channels: usize, tokens: usize, params: LifParams) -> Self {
         Self { channels, tokens, lif: LifArray::new(channels * tokens, params) }
     }

@@ -14,6 +14,7 @@ use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
 #[derive(Clone, Debug, Default)]
+/// The Spike Linear Array plus its Saturation-Truncation Module.
 pub struct SpikeLinearUnit {
     /// Saturation counters (exposed for quantization diagnostics).
     pub sat: SaturationTruncation,
@@ -22,6 +23,7 @@ pub struct SpikeLinearUnit {
 }
 
 impl SpikeLinearUnit {
+    /// Fresh unit with zeroed saturation counters.
     pub fn new() -> Self {
         Self::default()
     }

@@ -14,15 +14,68 @@
 //! Retention is an offset-range copy out of V's CSR arena — no per-channel
 //! heap clones.
 
+use std::ops::Range;
+
 use crate::hw::{AccelConfig, UnitStats};
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
+/// Assignment of attention heads to physical SDEB cores for the SDSA pass.
+///
+/// The SDSA mask is channel-local (each channel's Q∩K count and mask bit
+/// depend on that channel alone), so a head is simply a contiguous channel
+/// range and sharding heads across cores is bit-exact. During block `b`'s
+/// SDSA phase the other blocks' SMAM comparator arrays are idle, so the
+/// controller farms head `h` out to core `h % cores` — each core runs its
+/// assigned heads back to back on its own comparator array, and the phase
+/// finishes when the busiest core does (cycles = max over cores).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HeadShard {
+    /// Attention heads (`SdtModelConfig::num_heads`); each head is a
+    /// contiguous channel range.
+    pub heads: usize,
+    /// Physical SDEB cores whose SMAM arrays process heads concurrently.
+    pub cores: usize,
+}
+
+impl HeadShard {
+    /// The degenerate plan: one head on one core (identical to the serial
+    /// [`SpikeMaskAddModule::run`] accounting).
+    pub fn serial() -> Self {
+        Self { heads: 1, cores: 1 }
+    }
+
+    /// Balanced contiguous channel range of head `h` out of `heads` over
+    /// `channels` channels (first `channels % heads` heads get one extra).
+    pub fn head_channels(h: usize, heads: usize, channels: usize) -> Range<usize> {
+        let base = channels / heads;
+        let rem = channels % heads;
+        let start = h * base + h.min(rem);
+        let len = base + usize::from(h < rem);
+        start..start + len
+    }
+}
+
+/// Spike Mask-Add Module — see the module docs for the Fig. 4 dataflow.
 #[derive(Clone, Copy, Debug)]
 pub struct SpikeMaskAddModule {
     /// Integer firing threshold of the mask neuron (accumulation counts).
     pub v_th: u32,
 }
+
+/// Per-head partial result produced by one core's comparator array.
+struct HeadResult {
+    range: Range<usize>,
+    mask: Vec<bool>,
+    acc: Vec<u32>,
+    steps: u64,
+    matches: u64,
+}
+
+/// Below this many Q+K spikes the merge-join is too small to amortise
+/// spawning per-core worker threads; the cores are then walked
+/// sequentially (bit-identical results, same cycle accounting).
+const SHARD_SPAWN_MIN_SPIKES: usize = 4096;
 
 /// Result of an SDSA pass.
 #[derive(Clone, Debug)]
@@ -36,6 +89,7 @@ pub struct SmamOutput {
 }
 
 impl SpikeMaskAddModule {
+    /// A module with mask-neuron threshold `v_th`.
     pub fn new(v_th: u32) -> Self {
         Self { v_th }
     }
@@ -49,7 +103,12 @@ impl SpikeMaskAddModule {
         assert_eq!(q.tokens, v.tokens, "SMAM V token space mismatch");
     }
 
-    /// Run SDSA mask-add over encoded Q_s, K_s, V_s (all `[C, L]`).
+    /// Run SDSA mask-add over encoded Q_s, K_s, V_s (all `[C, L]`) on one
+    /// serial comparator array.
+    ///
+    /// Delegates to [`Self::run_sharded`] with the degenerate one-head /
+    /// one-core plan, so the serial and sharded paths share one merge-join
+    /// and one stats formula by construction.
     pub fn run(
         &self,
         q: &EncodedSpikes,
@@ -57,24 +116,28 @@ impl SpikeMaskAddModule {
         v: &EncodedSpikes,
         cfg: &AccelConfig,
     ) -> (SmamOutput, UnitStats) {
-        Self::check_shapes(q, k, v);
+        self.run_sharded(q, k, v, cfg, HeadShard::serial())
+    }
 
-        let c = q.channels;
-        let mut mask = vec![false; c];
-        let mut acc = vec![0u32; c];
-        let mut masked_v = EncodedSpikes::empty(v.channels, v.tokens);
-        let mut comparator_steps: u64 = 0;
+    /// Two-pointer merge-join of Q and K over one contiguous channel
+    /// range: per-channel intersection counts, fire decisions, and the
+    /// comparator-step/match totals for that range.
+    fn intersect_range(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        range: Range<usize>,
+    ) -> (Vec<bool>, Vec<u32>, u64, u64) {
+        let mut mask = vec![false; range.len()];
+        let mut acc = vec![0u32; range.len()];
+        let mut steps: u64 = 0;
         let mut matches: u64 = 0;
-
-        for ch in 0..c {
+        for (slot, ch) in range.enumerate() {
             let (ql, kl) = (q.channel_addrs(ch), k.channel_addrs(ch));
-            // Two-pointer merge-join; each iteration is one comparator step
-            // consuming one encoded spike (the smaller address, or both on
-            // a match — the hardware still spends one cycle on the pair).
             let (mut i, mut j) = (0usize, 0usize);
             let mut count = 0u32;
             while i < ql.len() && j < kl.len() {
-                comparator_steps += 1;
+                steps += 1;
                 match ql[i].cmp(&kl[j]) {
                     std::cmp::Ordering::Equal => {
                         count += 1;
@@ -86,27 +149,115 @@ impl SpikeMaskAddModule {
                     std::cmp::Ordering::Greater => j += 1,
                 }
             }
-            acc[ch] = count;
-            // Fire determination (threshold compare, Fig. 4(b)).
-            mask[ch] = count >= self.v_th;
+            acc[slot] = count;
+            mask[slot] = count >= self.v_th;
+        }
+        (mask, acc, steps, matches)
+    }
+
+    /// Run SDSA with attention heads sharded across SDEB-core comparator
+    /// arrays (the overlapped executor's default path).
+    ///
+    /// Head `h` (a contiguous channel range, [`HeadShard::head_channels`])
+    /// is assigned to core `h % cores`. Each core streams its heads back
+    /// to back through its own comparator array, so cycles are charged
+    /// per **core** (one ceiling over the core's total comparator steps
+    /// and one threshold compare per assigned channel — never worse than
+    /// the serial single-array cost), and the phase finishes when the
+    /// busiest core does (cycles = max over cores) while op counts (SOPs,
+    /// adds, compares, SRAM traffic) sum over all heads. Outputs are
+    /// bit-identical to the serial path because the mask is channel-local;
+    /// with `heads == cores == 1` the accounting is the serial formula.
+    /// Cores run on real host threads when the workload is large enough
+    /// to amortise the spawn (`SHARD_SPAWN_MIN_SPIKES`); results and
+    /// accounting are identical either way.
+    pub fn run_sharded(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        cfg: &AccelConfig,
+        shard: HeadShard,
+    ) -> (SmamOutput, UnitStats) {
+        Self::check_shapes(q, k, v);
+        let c = q.channels;
+        let heads = shard.heads.max(1).min(c.max(1));
+        let cores = shard.cores.max(1).min(heads);
+        let comps = cfg.smam_comparators as u64;
+
+        // One core's serial pass over its assigned heads.
+        let run_core = |core: usize| -> Vec<(usize, HeadResult)> {
+            let mut out = Vec::new();
+            let mut h = core;
+            while h < heads {
+                let range = HeadShard::head_channels(h, heads, c);
+                let (mask, acc, steps, matches) = self.intersect_range(q, k, range.clone());
+                out.push((h, HeadResult { range, mask, acc, steps, matches }));
+                h += cores;
+            }
+            out
+        };
+
+        let mut per_head: Vec<Option<HeadResult>> = (0..heads).map(|_| None).collect();
+        let spawn = cores > 1 && q.count_spikes() + k.count_spikes() >= SHARD_SPAWN_MIN_SPIKES;
+        if spawn {
+            std::thread::scope(|s| {
+                let run_core = &run_core;
+                let handles: Vec<_> =
+                    (0..cores).map(|core| s.spawn(move || run_core(core))).collect();
+                for handle in handles {
+                    for (h, r) in handle.join().expect("SMAM head-shard worker panicked") {
+                        per_head[h] = Some(r);
+                    }
+                }
+            });
+        } else {
+            for core in 0..cores {
+                for (h, r) in run_core(core) {
+                    per_head[h] = Some(r);
+                }
+            }
+        }
+
+        // Deterministic merge in head (== channel) order.
+        let mut mask = vec![false; c];
+        let mut acc = vec![0u32; c];
+        let mut core_steps = vec![0u64; cores];
+        let mut core_channels = vec![0u64; cores];
+        let (mut steps, mut matches) = (0u64, 0u64);
+        for (h, slot) in per_head.into_iter().enumerate() {
+            let r = slot.expect("every head computed");
+            mask[r.range.clone()].copy_from_slice(&r.mask);
+            acc[r.range.clone()].copy_from_slice(&r.acc);
+            steps += r.steps;
+            matches += r.matches;
+            core_steps[h % cores] += r.steps;
+            core_channels[h % cores] += r.range.len() as u64;
+        }
+        let mut masked_v = EncodedSpikes::empty(v.channels, v.tokens);
+        for ch in 0..c {
             if mask[ch] {
                 masked_v.extend_channel_from(ch, v, ch);
             }
         }
 
+        // Per-core cost: its comparator steps spread over its array, plus
+        // one threshold compare per assigned channel (Fig. 4(b)). With one
+        // core this is exactly the serial single-array formula, and a
+        // core's cost never exceeds it (its steps/channels are subsets).
+        let core_cycles = |i: usize| -> u64 {
+            div_ceil(core_steps[i], comps).max(1) + div_ceil(core_channels[i], comps)
+        };
         let q_spikes = q.count_spikes() as u64;
         let k_spikes = k.count_spikes() as u64;
         let retained = masked_v.count_spikes() as u64;
         let stats = UnitStats {
-            // comparator steps spread over the comparator array, plus one
-            // threshold compare per channel
-            cycles: div_ceil(comparator_steps, cfg.smam_comparators as u64).max(1)
-                + div_ceil(c as u64, cfg.smam_comparators as u64),
+            cycles: (0..cores).map(core_cycles).max().unwrap_or(1),
             // SOPs: every Q/K spike traverses the comparator once; every
             // retained V spike traverses the mask gate.
             sops: q_spikes + k_spikes + retained,
             adds: matches, // token-dim accumulation increments
-            cmps: comparator_steps + c as u64,
+            cmps: steps + c as u64,
             sram_reads: q_spikes + k_spikes + retained,
             sram_writes: retained,
             ..Default::default()
@@ -264,6 +415,77 @@ mod tests {
         let (out, _) = SpikeMaskAddModule::new(0).run(&q, &k, &v, &cfg);
         assert!(out.mask.iter().all(|&m| m));
         assert_eq!(out.masked_v.channel_addrs(1), &[3u16][..]);
+    }
+
+    #[test]
+    fn sharded_outputs_bit_identical_to_serial() {
+        let mut rng = Prng::new(21);
+        let cfg = AccelConfig::paper();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 384, 64, 0.2);
+        let k = random_encoded(&mut rng, 384, 64, 0.2);
+        let v = random_encoded(&mut rng, 384, 64, 0.2);
+        let (serial, s_serial) = smam.run(&q, &k, &v, &cfg);
+        for shard in [
+            HeadShard { heads: 8, cores: 2 },
+            HeadShard { heads: 8, cores: 8 },
+            HeadShard { heads: 3, cores: 2 }, // uneven head split
+            HeadShard { heads: 500, cores: 4 }, // more heads than channels: clamped
+        ] {
+            let (out, st) = smam.run_sharded(&q, &k, &v, &cfg, shard);
+            assert_eq!(out.mask, serial.mask, "{shard:?}");
+            assert_eq!(out.acc, serial.acc, "{shard:?}");
+            assert_eq!(out.masked_v, serial.masked_v, "{shard:?}");
+            // Same work, concurrent arrays: ops identical, cycles no worse
+            // than one core running all heads back to back.
+            assert_eq!(st.sops, s_serial.sops, "{shard:?}");
+            assert_eq!(st.adds, s_serial.adds, "{shard:?}");
+            assert_eq!(st.cmps, s_serial.cmps, "{shard:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_degenerate_plan_matches_serial_cycles() {
+        let mut rng = Prng::new(22);
+        let cfg = AccelConfig::small();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 64, 64, 0.3);
+        let k = random_encoded(&mut rng, 64, 64, 0.3);
+        let v = random_encoded(&mut rng, 64, 64, 0.3);
+        let (_, s1) = smam.run(&q, &k, &v, &cfg);
+        let (_, s2) = smam.run_sharded(&q, &k, &v, &cfg, HeadShard::serial());
+        assert_eq!(s1, s2, "heads=1/cores=1 must reproduce serial accounting");
+    }
+
+    #[test]
+    fn sharding_across_cores_cuts_cycles() {
+        let mut rng = Prng::new(23);
+        let cfg = AccelConfig::paper();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 384, 64, 0.3);
+        let k = random_encoded(&mut rng, 384, 64, 0.3);
+        let v = random_encoded(&mut rng, 384, 64, 0.3);
+        let (_, one_core) = smam.run_sharded(&q, &k, &v, &cfg, HeadShard { heads: 8, cores: 1 });
+        let (_, two_core) = smam.run_sharded(&q, &k, &v, &cfg, HeadShard { heads: 8, cores: 2 });
+        assert!(
+            two_core.cycles < one_core.cycles,
+            "2 cores {} !< 1 core {}",
+            two_core.cycles,
+            one_core.cycles
+        );
+    }
+
+    #[test]
+    fn head_channel_ranges_partition_exactly() {
+        for (heads, channels) in [(1usize, 64usize), (8, 384), (3, 64), (5, 7)] {
+            let mut next = 0;
+            for h in 0..heads {
+                let r = HeadShard::head_channels(h, heads, channels);
+                assert_eq!(r.start, next, "heads={heads} channels={channels} h={h}");
+                next = r.end;
+            }
+            assert_eq!(next, channels);
+        }
     }
 
     #[test]

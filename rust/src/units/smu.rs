@@ -14,12 +14,16 @@ use crate::spike::{EncodedSpikes, TokenGrid};
 use crate::util::div_ceil;
 
 #[derive(Clone, Copy, Debug)]
+/// The Spike Maxpooling Unit array (spike-input pooling).
 pub struct SpikeMaxpoolUnit {
+    /// Pooling kernel side.
     pub kernel: usize,
+    /// Pooling stride.
     pub stride: usize,
 }
 
 impl SpikeMaxpoolUnit {
+    /// A pooling array with the given kernel and stride.
     pub fn new(kernel: usize, stride: usize) -> Self {
         assert!(kernel >= 1 && stride >= 1);
         Self { kernel, stride }

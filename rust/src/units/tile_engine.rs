@@ -12,9 +12,13 @@ use crate::util::div_ceil;
 /// A BN-folded, quantized 3x3 (or kxk) SAME convolution.
 #[derive(Clone, Debug)]
 pub struct QuantizedConv {
+    /// Output channels.
     pub c_out: usize,
+    /// Input channels.
     pub c_in: usize,
+    /// Kernel height.
     pub kh: usize,
+    /// Kernel width.
     pub kw: usize,
     /// `[c_out][c_in][kh][kw]` row-major.
     pub w: Vec<i32>,
@@ -23,13 +27,16 @@ pub struct QuantizedConv {
     pub wt: Vec<i64>,
     /// Same scatter layout in i32 (the overflow-checked fast path).
     pub wt32: Vec<i32>,
+    /// Weight fraction bits.
     pub w_frac: i32,
+    /// Input fraction bits.
     pub in_frac: i32,
     /// Bias at accumulator scale (`w_frac + in_frac`).
     pub bias: Vec<i64>,
 }
 
 impl QuantizedConv {
+    /// Quantize a float convolution layer.
     pub fn from_f32(
         w: &[f32],
         bias: &[f32],
@@ -59,7 +66,9 @@ impl QuantizedConv {
 }
 
 #[derive(Clone, Debug, Default)]
+/// The dense MAC Tile Engine of the SPS Core.
 pub struct TileEngine {
+    /// Saturation counters (quantization diagnostics).
     pub sat: SaturationTruncation,
     /// Reused HWC accumulator buffers (perf: avoids per-call allocation).
     acc: Vec<i64>,
@@ -67,6 +76,7 @@ pub struct TileEngine {
 }
 
 impl TileEngine {
+    /// Fresh engine.
     pub fn new() -> Self {
         Self::default()
     }

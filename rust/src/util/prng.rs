@@ -5,11 +5,13 @@
 //! small, well-known generator ourselves.
 
 #[derive(Clone, Debug)]
+/// Deterministic 64-bit PRNG (reproducible across platforms; no external crates).
 pub struct Prng {
     s: [u64; 4],
 }
 
 impl Prng {
+    /// Seeded generator.
     pub fn new(seed: u64) -> Self {
         // splitmix64 expansion of the seed, as recommended by the authors.
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -23,6 +25,7 @@ impl Prng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
         let t = self.s[1] << 17;

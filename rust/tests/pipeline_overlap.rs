@@ -1,0 +1,140 @@
+//! Integration: the executed two-core overlapped pipeline against the
+//! serial-charging baseline and the analytic schedule estimator.
+//!
+//! The overlapped executor must (a) change no value anywhere — logits stay
+//! bit-identical to serial mode and the golden executor — and (b) produce
+//! cycle accounting that reconciles with `PipelineEstimate` within the
+//! fill-latency bound, making the estimator a cross-check rather than the
+//! only source of truth.
+
+use spikeformer_accel::accel::{pipeline_estimate, Accelerator, DatapathMode, ExecMode};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{GoldenExecutor, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn random_image(seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+/// A config that exercises head sharding (8 heads over 2 SDEB cores) and
+/// odd timestep parity, at test-friendly scale.
+fn sharded_cfg() -> SdtModelConfig {
+    SdtModelConfig {
+        name: "overlap-test".into(),
+        timesteps: 3,
+        num_blocks: 2,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    }
+}
+
+#[test]
+fn overlapped_and_serial_logits_bit_identical() {
+    for cfg in [SdtModelConfig::tiny(), sharded_cfg()] {
+        for seed in [1u64, 2] {
+            let model = QuantizedModel::random(&cfg, seed);
+            let img = random_image(seed + 10);
+            let golden = GoldenExecutor::new(&model).infer(&img);
+            let mut over = Accelerator::new(model.clone(), AccelConfig::small());
+            let mut serial = Accelerator::with_modes(
+                model,
+                AccelConfig::small(),
+                DatapathMode::Encoded,
+                ExecMode::Serial,
+            );
+            let r_over = over.infer(&img).unwrap();
+            let r_serial = serial.infer(&img).unwrap();
+            assert_eq!(r_over.logits, r_serial.logits, "cfg {} seed {seed}", cfg.name);
+            assert_eq!(r_over.logits, golden.logits, "cfg {} seed {seed}", cfg.name);
+        }
+    }
+}
+
+#[test]
+fn executed_schedule_reconciles_with_estimator() {
+    for (cfg, hw) in [
+        (SdtModelConfig::tiny(), AccelConfig::small()),
+        (sharded_cfg(), AccelConfig::small()),
+        (SdtModelConfig::paper(), AccelConfig::paper()),
+    ] {
+        let timesteps = cfg.timesteps;
+        let model = QuantizedModel::random(&cfg, 7);
+        let mut accel = Accelerator::new(model, hw);
+        let r = accel.infer(&random_image(3)).unwrap();
+        let exec = r.pipeline.as_ref().expect("overlapped run records its schedule");
+
+        // The per-timestep traces must account for exactly the recorded
+        // phase cycles, stage by stage.
+        assert_eq!(exec.sps_cycles(), r.phases.cycles_matching("sps."), "cfg {}", cfg.name);
+        assert_eq!(
+            exec.sdeb_cycles(),
+            r.phases.cycles_matching("sdeb.") + r.phases.cycles_matching("head."),
+            "cfg {}",
+            cfg.name
+        );
+        // Serial-equivalent cost is the sum of every phase.
+        assert_eq!(exec.serialized_cycles, r.total.cycles, "cfg {}", cfg.name);
+
+        // Hard schedule invariants.
+        assert!(exec.executed_cycles >= exec.bottleneck_cycles(), "cfg {}", cfg.name);
+        assert!(exec.executed_cycles <= exec.serialized_cycles, "cfg {}", cfg.name);
+
+        // The analytic re-timer must agree within the fill-latency bound.
+        let est = pipeline_estimate(&r.phases, timesteps);
+        assert!(
+            exec.reconciles_with(&est),
+            "cfg {}: executed {} vs estimated {} (bound {})",
+            cfg.name,
+            exec.executed_cycles,
+            est.pipelined_cycles,
+            exec.fill_latency_bound()
+        );
+    }
+}
+
+#[test]
+fn overlap_strictly_faster_than_serial_charging() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 11);
+    let img = random_image(5);
+    let mut over = Accelerator::new(model.clone(), AccelConfig::small());
+    let mut serial = Accelerator::with_modes(
+        model,
+        AccelConfig::small(),
+        DatapathMode::Encoded,
+        ExecMode::Serial,
+    );
+    let r_over = over.infer(&img).unwrap();
+    let r_serial = serial.infer(&img).unwrap();
+    assert!(
+        r_over.wall_cycles() < r_serial.wall_cycles(),
+        "overlapped {} !< serial {}",
+        r_over.wall_cycles(),
+        r_serial.wall_cycles()
+    );
+    // Head sharding across the 2 SDEB cores must also cut the SDSA
+    // phase's busy cycles relative to one serial comparator array.
+    assert!(
+        r_over.phases.get("sdeb.smam").cycles < r_serial.phases.get("sdeb.smam").cycles,
+        "sharded SMAM {} !< serial SMAM {}",
+        r_over.phases.get("sdeb.smam").cycles,
+        r_serial.phases.get("sdeb.smam").cycles
+    );
+}
+
+#[test]
+fn overlapped_runs_are_deterministic_across_instances() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 13);
+    let img = random_image(9);
+    let mut a = Accelerator::new(model.clone(), AccelConfig::small());
+    let mut b = Accelerator::new(model, AccelConfig::small());
+    let ra = a.infer(&img).unwrap();
+    let rb = b.infer(&img).unwrap();
+    assert_eq!(ra.logits, rb.logits);
+    assert_eq!(ra.wall_cycles(), rb.wall_cycles());
+    let (pa, pb) = (ra.pipeline.unwrap(), rb.pipeline.unwrap());
+    assert_eq!(pa.sps_per_timestep, pb.sps_per_timestep);
+    assert_eq!(pa.sdeb_per_timestep, pb.sdeb_per_timestep);
+}
