@@ -7,6 +7,7 @@
 //! ```bash
 //! cargo run --release --example serve_batched
 //! cargo run --release --example serve_batched -- --serial
+//! cargo run --release --example serve_batched -- --workers 2   # SDEB pool size
 //! ```
 
 use std::path::Path;
@@ -65,11 +66,15 @@ fn main() -> Result<()> {
         run_session(&format!("golden workers={workers} max_batch={batch}"), factories, policy, &imgs)?;
     }
 
-    let exec = if std::env::args().any(|a| a == "--serial") {
+    let argv: Vec<String> = std::env::args().collect();
+    let exec = if argv.iter().any(|a| a == "--serial") {
         ExecMode::Serial
     } else {
         ExecMode::Overlapped
     };
+    // `--workers N`: per-simulator persistent SDEB worker pool size
+    // (0 keeps the model-derived default).
+    let pool_workers = spikeformer_accel::benchlib::arg_value(&argv, "--workers").unwrap_or(0);
     println!("\n== simulator workers (modelled cycles, exec={exec:?}) ==");
     for workers in [1usize, 2] {
         let factories = SimulatorBackend::factories(
@@ -78,6 +83,7 @@ fn main() -> Result<()> {
             AccelConfig::paper(),
             DatapathMode::Encoded,
             exec,
+            pool_workers,
         );
         let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
         run_session(&format!("simulator workers={workers} max_batch=8"), factories, policy, &imgs)?;

@@ -4,7 +4,10 @@
 //!     core redundancy-elimination claim) at the paper scale;
 //!  2. encoded-spike *storage* cost vs bitmap storage across sparsity
 //!     (the paper's "additional memory resource" discussion);
-//!  3. SDSA threshold sensitivity (mask density vs attn_v_th).
+//!  3. SDSA threshold sensitivity (mask density vs attn_v_th);
+//!  4. executed two-core overlap vs serial charging (A1.4);
+//!  5. steady-state host runtime: pooled scratch/worker-pool accelerator
+//!     vs fresh allocation per request, at batch 1/4/8 (A1.5).
 //!
 //! ```bash
 //! cargo bench --bench ablations
@@ -147,6 +150,65 @@ fn main() -> anyhow::Result<()> {
         "analytic cross-check : {:>12} cycles  (reconciles: {})",
         est.pipelined_cycles,
         exec.reconciles_with(&est)
+    );
+
+    println!("\nA1.5 — steady-state host runtime: pooled vs fresh allocation (paper scale)\n");
+    // Host-throughput ablation: identical modelled work, different host
+    // memory/thread behaviour. "fresh" constructs a new accelerator per
+    // batch (cold scratch pools, new worker-pool threads, cloned model);
+    // "pooled" reuses one warmed accelerator and its batched forward.
+    let n_req = 8usize;
+    let imgs: Vec<Vec<f32>> = (0..n_req)
+        .map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect())
+        .collect();
+    println!(
+        "{:<8}{:>16}{:>16}{:>10}",
+        "batch", "fresh req/s", "pooled req/s", "speedup"
+    );
+    for &batch in &[1usize, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let mut fresh_logits = Vec::new();
+        for chunk in imgs.chunks(batch) {
+            let mut accel = Accelerator::new(model.clone(), hw);
+            for r in accel.infer_batch(chunk)? {
+                fresh_logits.push(r.logits);
+            }
+        }
+        let fresh_s = t0.elapsed().as_secs_f64();
+
+        let mut accel = Accelerator::new(model.clone(), hw);
+        accel.infer_batch(&imgs[..batch])?; // warm the scratch pools
+        let t0 = std::time::Instant::now();
+        let mut pooled_logits = Vec::new();
+        for chunk in imgs.chunks(batch) {
+            for r in accel.infer_batch(chunk)? {
+                pooled_logits.push(r.logits);
+            }
+        }
+        let pooled_s = t0.elapsed().as_secs_f64();
+        assert_eq!(fresh_logits, pooled_logits, "steady-state runtime must be bit-exact");
+
+        println!(
+            "{:<8}{:>16.2}{:>16.2}{:>9.2}x",
+            batch,
+            n_req as f64 / fresh_s,
+            n_req as f64 / pooled_s,
+            fresh_s / pooled_s.max(1e-12)
+        );
+    }
+    let stats = {
+        let mut accel = Accelerator::new(model.clone(), hw);
+        accel.infer(&image)?;
+        let warm = accel.scratch_stats();
+        accel.infer(&image)?;
+        let after = accel.scratch_stats();
+        (warm, after)
+    };
+    println!(
+        "scratch pool: warm-up misses={}, steady-state misses={} (+{} hits/request)",
+        stats.0.misses,
+        stats.1.misses,
+        stats.1.hits - stats.0.hits
     );
 
     Ok(())

@@ -6,15 +6,16 @@
 //! charging ablation).
 //!
 //! ```bash
-//! cargo bench --bench e2e_throughput            # full sweep
-//! cargo bench --bench e2e_throughput -- --quick # CI smoke mode
-//! cargo bench --bench e2e_throughput -- --serial# serial-charging ablation
+//! cargo bench --bench e2e_throughput                 # full sweep
+//! cargo bench --bench e2e_throughput -- --quick      # CI smoke mode
+//! cargo bench --bench e2e_throughput -- --serial     # serial-charging ablation
+//! cargo bench --bench e2e_throughput -- --workers N  # size each simulator's SDEB worker pool
 //! ```
 
 use std::time::{Duration, Instant};
 
 use spikeformer_accel::accel::{DatapathMode, ExecMode};
-use spikeformer_accel::benchlib::section;
+use spikeformer_accel::benchlib::{arg_value, section};
 use spikeformer_accel::coordinator::{
     BackendFactory, BatchPolicy, Coordinator, GoldenBackend, Request, SimulatorBackend,
 };
@@ -42,8 +43,12 @@ fn drive(
 }
 
 fn main() -> anyhow::Result<()> {
-    let quick = std::env::args().any(|a| a == "--quick");
-    let serial = std::env::args().any(|a| a == "--serial");
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let serial = args.iter().any(|a| a == "--serial");
+    // Sizes each simulator backend's persistent SDEB worker pool
+    // (0 keeps the model-derived default).
+    let pool_workers = arg_value(&args, "--workers").unwrap_or(0);
     let exec = if serial { ExecMode::Serial } else { ExecMode::Overlapped };
 
     let cfg = SdtModelConfig::tiny();
@@ -63,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     let sim_counts: &[usize] = if quick { &[1] } else { &[1, 2, 4] };
     for &workers in sim_counts {
         let report = drive(
-            SimulatorBackend::factories(workers, &model, hw, DatapathMode::Encoded, exec),
+            SimulatorBackend::factories(workers, &model, hw, DatapathMode::Encoded, exec, pool_workers),
             policy,
             &imgs,
         )?;
@@ -79,12 +84,12 @@ fn main() -> anyhow::Result<()> {
     section("overlapped vs serial charging (single simulator worker)");
     let sample = &imgs[..imgs.len().min(8)];
     let over = drive(
-        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Overlapped),
+        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Overlapped, pool_workers),
         policy,
         sample,
     )?;
     let ser = drive(
-        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Serial),
+        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Serial, pool_workers),
         policy,
         sample,
     )?;

@@ -1,0 +1,220 @@
+//! Bench S1 — steady-state serving runtime: host requests/sec and heap
+//! allocations-per-inference of the pooled accelerator (persistent worker
+//! pool + recycled scratch + batched forward) against fresh-allocation
+//! execution (a new accelerator per batch: cold scratch pools, new pool
+//! threads, cloned model — what a coordinator without persistent backends
+//! would pay).
+//!
+//! Allocation counts come from a counting global allocator wrapped around
+//! the system allocator, so they measure the real heap traffic of the
+//! whole inference (scratch pools included), not just the modelled units.
+//! Logits are asserted bit-identical between every mode.
+//!
+//! ```bash
+//! cargo bench --bench steady_state                 # full sweep
+//! cargo bench --bench steady_state -- --quick      # CI smoke mode
+//! cargo bench --bench steady_state -- --json       # merge into BENCH_steady_state.json
+//! cargo bench --bench steady_state -- --workers N  # size the SDEB worker pool
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode};
+use spikeformer_accel::benchlib::{arg_value, merge_bench_json, section};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+/// System allocator wrapper counting every allocation (and growth
+/// reallocation) — the "allocations per inference" measurement.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+struct CaseResult {
+    mode: &'static str,
+    batch: usize,
+    req_per_s: f64,
+    allocs_per_inference: f64,
+}
+
+/// Fresh-allocation baseline: a new accelerator (cold pools, new worker
+/// threads, cloned model) per batch.
+fn run_fresh(
+    model: &QuantizedModel,
+    hw: AccelConfig,
+    pool_workers: usize,
+    imgs: &[Vec<f32>],
+    batch: usize,
+) -> (CaseResult, Vec<Vec<f32>>) {
+    let mut logits = Vec::new();
+    let a0 = allocs_now();
+    let t0 = Instant::now();
+    for chunk in imgs.chunks(batch) {
+        let mut accel = Accelerator::with_runtime(
+            model.clone(),
+            hw,
+            DatapathMode::Encoded,
+            ExecMode::Overlapped,
+            pool_workers,
+        );
+        for r in accel.infer_batch(chunk).expect("inference failed") {
+            logits.push(r.logits);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let da = allocs_now() - a0;
+    (
+        CaseResult {
+            mode: "fresh",
+            batch,
+            req_per_s: imgs.len() as f64 / dt.max(1e-12),
+            allocs_per_inference: da as f64 / imgs.len() as f64,
+        },
+        logits,
+    )
+}
+
+/// Pooled steady state: one persistent accelerator, warmed before timing.
+fn run_pooled(
+    accel: &mut Accelerator,
+    imgs: &[Vec<f32>],
+    batch: usize,
+) -> (CaseResult, Vec<Vec<f32>>) {
+    // Warm-up pass populates the scratch pools and batch lanes.
+    for chunk in imgs.chunks(batch) {
+        accel.infer_batch(chunk).expect("warm-up failed");
+    }
+    let mut logits = Vec::new();
+    let a0 = allocs_now();
+    let t0 = Instant::now();
+    for chunk in imgs.chunks(batch) {
+        for r in accel.infer_batch(chunk).expect("inference failed") {
+            logits.push(r.logits);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let da = allocs_now() - a0;
+    (
+        CaseResult {
+            mode: "pooled",
+            batch,
+            req_per_s: imgs.len() as f64 / dt.max(1e-12),
+            allocs_per_inference: da as f64 / imgs.len() as f64,
+        },
+        logits,
+    )
+}
+
+fn write_json(model_name: &str, pool_workers: usize, results: &[CaseResult]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_steady_state.json");
+    let mut entry = String::from("{\n");
+    entry.push_str(&format!(
+        "    \"config\": {{\"model\": \"{model_name}\", \"accel\": \"paper\", \"pool_workers\": {pool_workers}}},\n"
+    ));
+    entry.push_str(
+        "    \"units\": \"req_per_s = completed inferences per host second (release build); allocs_per_inference = heap allocations per inference via a counting global allocator; fresh = new accelerator per batch, pooled = persistent warmed accelerator\",\n",
+    );
+    entry.push_str("    \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        entry.push_str(&format!(
+            "      {{\"mode\": \"{}\", \"batch\": {}, \"req_per_s\": {:.3}, \"allocs_per_inference\": {:.1}}}{}\n",
+            r.mode,
+            r.batch,
+            r.req_per_s,
+            r.allocs_per_inference,
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    entry.push_str("    ]\n  }");
+    match merge_bench_json(path, "steady_state", &entry) {
+        Ok(()) => println!("\nwrote {path} (section \"steady_state\")"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json = args.iter().any(|a| a == "--json");
+    let pool_workers = arg_value(&args, "--workers").unwrap_or(0);
+
+    // Tiny model: this bench measures *host* runtime behaviour, and the
+    // tiny config keeps the fresh-vs-pooled contrast visible in seconds.
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 42);
+    let hw = AccelConfig::paper();
+    let n_req = if quick { 8 } else { 32 };
+    let mut rng = Prng::new(17);
+    let imgs: Vec<Vec<f32>> = (0..n_req)
+        .map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect())
+        .collect();
+
+    let mut accel = Accelerator::with_runtime(
+        model.clone(),
+        hw,
+        DatapathMode::Encoded,
+        ExecMode::Overlapped,
+        pool_workers,
+    );
+
+    section(&format!(
+        "steady-state serving: fresh vs pooled, {} requests (model `{}`, pool workers {})",
+        n_req,
+        cfg.name,
+        accel.pool_workers()
+    ));
+    println!(
+        "{:<8}{:<8}{:>14}{:>22}",
+        "mode", "batch", "req/s", "allocs/inference"
+    );
+    let mut results = Vec::new();
+    let batches: &[usize] = if quick { &[1, 8] } else { &[1, 4, 8] };
+    for &batch in batches {
+        let (fresh, fresh_logits) = run_fresh(&model, hw, pool_workers, &imgs, batch);
+        let (pooled, pooled_logits) = run_pooled(&mut accel, &imgs, batch);
+        assert_eq!(fresh_logits, pooled_logits, "pooled runtime must be bit-exact");
+        for r in [fresh, pooled] {
+            println!(
+                "{:<8}{:<8}{:>14.2}{:>22.1}",
+                r.mode, r.batch, r.req_per_s, r.allocs_per_inference
+            );
+            results.push(r);
+        }
+    }
+
+    let stats = accel.scratch_stats();
+    println!(
+        "\nscratch pools after run: hits={} misses={} (hit rate {:.4})",
+        stats.hits,
+        stats.misses,
+        stats.hit_rate()
+    );
+
+    if json {
+        write_json(&cfg.name, pool_workers, &results);
+    }
+}

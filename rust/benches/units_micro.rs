@@ -188,16 +188,16 @@ fn encode_sdsa_case(quick: bool) -> EncodeSdsaCase {
 
 fn write_json(case: &EncodeSdsaCase) {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_encoding.json");
-    let mut out = String::from("{\n  \"bench\": \"encode+sdsa\",\n");
-    out.push_str(&format!(
-        "  \"config\": {{\"channels\": {}, \"tokens\": {}, \"accel\": \"paper\", \"attn_v_th\": {}}},\n",
+    let mut entry = String::from("{\n");
+    entry.push_str(&format!(
+        "    \"config\": {{\"channels\": {}, \"tokens\": {}, \"accel\": \"paper\", \"attn_v_th\": {}}},\n",
         case.channels, case.tokens, case.attn_v_th
     ));
-    out.push_str("  \"units\": \"seconds (median wall time per iteration, release build)\",\n");
-    out.push_str("  \"results\": [\n");
+    entry.push_str("    \"units\": \"seconds (median wall time per iteration, release build)\",\n");
+    entry.push_str("    \"results\": [\n");
     for (i, r) in case.rows.iter().enumerate() {
-        out.push_str(&format!(
-            "    {{\"sparsity\": {:.2}, \"csr_arena_s\": {:.9}, \"list_of_lists_s\": {:.9}, \"speedup\": {:.3}}}{}\n",
+        entry.push_str(&format!(
+            "      {{\"sparsity\": {:.2}, \"csr_arena_s\": {:.9}, \"list_of_lists_s\": {:.9}, \"speedup\": {:.3}}}{}\n",
             r.sparsity,
             r.csr.median_s,
             r.legacy.median_s,
@@ -205,9 +205,10 @@ fn write_json(case: &EncodeSdsaCase) {
             if i + 1 == case.rows.len() { "" } else { "," }
         ));
     }
-    out.push_str("  ]\n}\n");
-    match std::fs::write(path, out) {
-        Ok(()) => println!("\nwrote {path}"),
+    entry.push_str("    ]\n  }");
+    // Merge under this bench's key so other sections of the file survive.
+    match spikeformer_accel::benchlib::merge_bench_json(path, "encode+sdsa", &entry) {
+        Ok(()) => println!("\nwrote {path} (section \"encode+sdsa\")"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
     }
 }

@@ -13,11 +13,21 @@
 //! * **Serial** — every phase charged back to back on one timeline (the
 //!   conservative accounting this repo used originally). Kept as the
 //!   ablation baseline; logits are bit-identical to the overlapped path.
+//!
+//! The accelerator is a **steady-state runtime**: it owns a persistent
+//! [`WorkerPool`] (the SPS producer and SMAM head shards never spawn OS
+//! threads per call), per-stage [`ExecScratch`] pools (arenas and tensors
+//! recycle across timesteps, blocks and requests), and the modelled
+//! [`BufferSet`]. [`Accelerator::infer_batch`] additionally runs a
+//! released batch stage-major — every image through a block back to back
+//! while that block's weight working set is hot — with per-image
+//! [`RunReport`]s bit-identical to the per-call path.
 
 use anyhow::Result;
 
 use crate::hw::{AccelConfig, EnergyModel, UnitStats};
 use crate::quant::{QFormat, QTensor, ACT_FRAC, MEM_BITS};
+use crate::scratch::{ExecScratch, ScratchStats};
 use crate::units::{HeadShard, SpikeEncodingArray};
 use crate::model::QuantizedModel;
 use crate::util::div_ceil;
@@ -27,6 +37,7 @@ use super::executor::{self, PipelineExecution};
 use super::report::{RunReport, StatSink};
 use super::sdeb_core::SdebCore;
 use super::sps_core::SpsCore;
+use super::workers::WorkerPool;
 
 /// Which datapath the spike-consuming units use (ablation A1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -47,6 +58,38 @@ pub enum ExecMode {
     Serial,
 }
 
+/// One batch lane's unit complement: its own LIF state so a batched
+/// forward can interleave images stage-major while every image still sees
+/// exactly the per-call temporal dynamics.
+struct BatchLane {
+    sps: SpsCore,
+    sdebs: Vec<SdebCore>,
+    sea_head: SpikeEncodingArray,
+}
+
+impl BatchLane {
+    fn new(model: &QuantizedModel) -> Self {
+        let cfg = &model.cfg;
+        let params = cfg.lif_params();
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+        Self {
+            sps: SpsCore::new(model, params),
+            sdebs: (0..cfg.num_blocks)
+                .map(|i| SdebCore::new(i, l, d, cfg.mlp_hidden, cfg.attn_v_th, params))
+                .collect(),
+            sea_head: SpikeEncodingArray::new(d, l, params),
+        }
+    }
+
+    fn reset(&mut self) {
+        self.sps.reset();
+        for s in &mut self.sdebs {
+            s.reset();
+        }
+        self.sea_head.reset();
+    }
+}
+
 /// A full accelerator instance bound to one quantized model.
 pub struct Accelerator {
     /// Structural hardware parameters of this instance.
@@ -61,6 +104,19 @@ pub struct Accelerator {
     sps: SpsCore,
     sdebs: Vec<SdebCore>,
     sea_head: SpikeEncodingArray,
+    /// Persistent SDEB worker pool shared by the overlapped executor's SPS
+    /// producer and the SMAM head shards.
+    pool: WorkerPool,
+    /// Modelled SRAM complement, persistent across requests (counters are
+    /// reset per inference).
+    buffers: BufferSet,
+    /// SPS-stage scratch pool (owned by the producer side).
+    scratch_sps: ExecScratch,
+    /// SDEB-stage + head scratch pool (owned by the consumer side).
+    scratch_sdeb: ExecScratch,
+    /// Per-image unit lanes for [`Self::infer_batch`], grown on demand and
+    /// reused across batches.
+    lanes: Vec<BatchLane>,
 }
 
 impl Accelerator {
@@ -81,15 +137,80 @@ impl Accelerator {
         mode: DatapathMode,
         exec: ExecMode,
     ) -> Self {
+        Self::with_runtime(model, hw, mode, exec, 0)
+    }
+
+    /// Choose the datapath, execution strategy and worker-pool size in
+    /// one shot (`pool_workers == 0` keeps the model-derived default) —
+    /// no throwaway default pool is spawned first.
+    pub fn with_runtime(
+        model: QuantizedModel,
+        hw: AccelConfig,
+        mode: DatapathMode,
+        exec: ExecMode,
+        pool_workers: usize,
+    ) -> Self {
         let cfg = &model.cfg;
         let params = cfg.lif_params();
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
         let sps = SpsCore::new(&model, params);
-        let sdebs = (0..cfg.num_blocks)
+        let sdebs: Vec<SdebCore> = (0..cfg.num_blocks)
             .map(|i| SdebCore::new(i, l, d, cfg.mlp_hidden, cfg.attn_v_th, params))
             .collect();
         let sea_head = SpikeEncodingArray::new(d, l, params);
-        Self { hw, energy: EnergyModel::default(), mode, exec, model, sps, sdebs, sea_head }
+        // Default pool sizing: one worker for the SPS producer plus one
+        // per additional SDEB core the SMAM shards fan out to (the
+        // consumer thread itself runs the first core's heads).
+        let workers = if pool_workers > 0 { pool_workers } else { cfg.num_blocks.max(1) };
+        let pool = WorkerPool::new(workers);
+        let buffers = BufferSet::new(&hw);
+        Self {
+            hw,
+            energy: EnergyModel::default(),
+            mode,
+            exec,
+            model,
+            sps,
+            sdebs,
+            sea_head,
+            pool,
+            buffers,
+            scratch_sps: ExecScratch::new(),
+            scratch_sdeb: ExecScratch::new(),
+            lanes: Vec::new(),
+        }
+    }
+
+    /// Resize the persistent worker pool (clamped to at least 1 thread;
+    /// a no-op when the pool already has that many workers). The
+    /// CLI/bench `--workers` knob; construction-time sizing should use
+    /// [`Self::with_runtime`] instead, which never spawns a throwaway
+    /// default pool.
+    pub fn with_pool_workers(mut self, workers: usize) -> Self {
+        let workers = workers.max(1);
+        if workers != self.pool.workers() {
+            self.pool = WorkerPool::new(workers);
+        }
+        self
+    }
+
+    /// Number of persistent worker-pool threads.
+    pub fn pool_workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// Combined scratch-pool hit/miss counters of both pipeline stages —
+    /// the steady-state claim's measurement: after warm-up, `misses`
+    /// stops growing.
+    pub fn scratch_stats(&self) -> ScratchStats {
+        self.scratch_sps.stats().merged(self.scratch_sdeb.stats())
+    }
+
+    /// Objects resting in both stage pools between requests — constant in
+    /// steady state; growth across warm requests means a put/take leak
+    /// somewhere in the datapath.
+    pub fn pooled_scratch_objects(&self) -> usize {
+        self.scratch_sps.pooled_objects() + self.scratch_sdeb.pooled_objects()
     }
 
     /// The quantized model this instance is bound to.
@@ -113,49 +234,20 @@ impl Accelerator {
         self.sea_head.reset();
     }
 
-    /// Run a full inference of one image (f32 CHW pixels).
-    pub fn infer(&mut self, image: &[f32]) -> Result<RunReport> {
-        let cfg = self.model.cfg.clone();
-        assert_eq!(image.len(), cfg.in_channels * cfg.img_size * cfg.img_size);
-        self.reset();
-
-        let mut buffers = BufferSet::new(&self.hw);
-        let mut sink = StatSink::new();
-
-        // External input transfer: 10-bit activations packed 2 B/value.
-        let in_bytes = image.len() * 2;
-        let io_in = buffers.load_external(in_bytes, &self.hw)?;
-        let io_in_cycles = io_in.cycles;
-        sink.add("io.input", io_in);
-
+    /// Quantize one image into a recycled tensor (same values as
+    /// `QTensor::from_f32`).
+    fn quantize_image(scratch: &mut ExecScratch, image: &[f32], shape: &[usize]) -> QTensor {
         let act = QFormat::new(MEM_BITS, ACT_FRAC);
-        let qimg =
-            QTensor::from_f32(image, &[cfg.in_channels, cfg.img_size, cfg.img_size], act);
+        let mut qimg = scratch.take_tensor(shape, ACT_FRAC);
+        for (o, &v) in qimg.data.iter_mut().zip(image) {
+            *o = act.from_f32(v);
+        }
+        qimg
+    }
 
-        let (head_counts, execution) = match self.exec {
-            ExecMode::Overlapped => {
-                let shard = self.shard_plan();
-                let outcome = executor::run_overlapped(
-                    &self.model,
-                    &self.hw,
-                    self.mode,
-                    shard,
-                    &mut self.sps,
-                    &mut self.sdebs,
-                    &mut self.sea_head,
-                    &mut buffers,
-                    &qimg,
-                )?;
-                sink.absorb(outcome.sink);
-                (outcome.head_counts, Some((outcome.sps_per_timestep, outcome.sdeb_per_timestep)))
-            }
-            ExecMode::Serial => {
-                let counts = self.run_serial(&qimg, &mut buffers, &mut sink)?;
-                (counts, None)
-            }
-        };
-
-        // Host/output-side classification head on pooled rates.
+    /// Host/output-side classification head on pooled rates.
+    fn head_logits(&self, head_counts: &[u64]) -> Vec<f32> {
+        let cfg = &self.model.cfg;
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
         let denom = (cfg.timesteps * l) as f32;
         let mut logits = self.model.head_b.clone();
@@ -167,14 +259,70 @@ impl Accelerator {
                 }
             }
         }
+        logits
+    }
 
-        // Output transfer (logits as f32).
-        let out_bytes = cfg.num_classes * 4;
-        let io_out = UnitStats {
+    /// Output transfer stats (logits as f32).
+    fn io_output_stats(&self) -> UnitStats {
+        let out_bytes = self.model.cfg.num_classes * 4;
+        UnitStats {
             cycles: div_ceil(out_bytes as u64, self.hw.dram_bytes_per_cycle as u64),
             dram_bytes: out_bytes as u64,
             ..Default::default()
+        }
+    }
+
+    /// Run a full inference of one image (f32 CHW pixels).
+    pub fn infer(&mut self, image: &[f32]) -> Result<RunReport> {
+        let cfg = self.model.cfg.clone();
+        assert_eq!(image.len(), cfg.in_channels * cfg.img_size * cfg.img_size);
+        self.reset();
+        self.buffers.reset();
+
+        let mut sink = StatSink::new();
+
+        // External input transfer: 10-bit activations packed 2 B/value.
+        let in_bytes = image.len() * 2;
+        let io_in = self.buffers.load_external(in_bytes, &self.hw)?;
+        let io_in_cycles = io_in.cycles;
+        sink.add("io.input", io_in);
+
+        let qimg = Self::quantize_image(
+            &mut self.scratch_sps,
+            image,
+            &[cfg.in_channels, cfg.img_size, cfg.img_size],
+        );
+
+        let (head_counts, execution) = match self.exec {
+            ExecMode::Overlapped => {
+                let shard = self.shard_plan();
+                let outcome = executor::run_overlapped(
+                    &self.model,
+                    &self.hw,
+                    self.mode,
+                    shard,
+                    &self.pool,
+                    &mut self.sps,
+                    &mut self.sdebs,
+                    &mut self.sea_head,
+                    &mut self.buffers,
+                    &mut self.scratch_sps,
+                    &mut self.scratch_sdeb,
+                    &qimg,
+                )?;
+                sink.absorb(outcome.sink);
+                (outcome.head_counts, Some((outcome.sps_per_timestep, outcome.sdeb_per_timestep)))
+            }
+            ExecMode::Serial => {
+                let counts = self.run_serial(&qimg, &mut sink)?;
+                (counts, None)
+            }
         };
+        self.scratch_sps.put_tensor(qimg);
+
+        let logits = self.head_logits(&head_counts);
+
+        let io_out = self.io_output_stats();
         let io_out_cycles = io_out.cycles;
         sink.add("io.output", io_out);
 
@@ -188,31 +336,177 @@ impl Accelerator {
         })
     }
 
+    /// Batched forward with batch-level weight reuse: the whole batch
+    /// walks each pipeline stage back to back (SPS, then block 0 for
+    /// every image, block 1 for every image, ..., head), so a stage's
+    /// weight working set is loaded once per batch instead of once per
+    /// image. Per-image [`RunReport`]s — logits, `UnitStats`, phase
+    /// breakdown and executed pipeline schedule — are bit-identical to
+    /// calling [`Self::infer`] per image, because every image runs on its
+    /// own unit lane (own LIF state) and all accounting is image-local.
+    ///
+    /// Serial-mode instances (and batches of one) fall back to the
+    /// per-call path.
+    pub fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<RunReport>> {
+        if images.len() <= 1 || self.exec == ExecMode::Serial {
+            return images.iter().map(|img| self.infer(img)).collect();
+        }
+        self.run_batched(images)
+    }
+
+    /// The stage-major batched loop behind [`Self::infer_batch`].
+    fn run_batched(&mut self, images: &[Vec<f32>]) -> Result<Vec<RunReport>> {
+        let cfg = self.model.cfg.clone();
+        let n = images.len();
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+        let shard = self.shard_plan();
+        while self.lanes.len() < n {
+            self.lanes.push(BatchLane::new(&self.model));
+        }
+
+        // Per-image admission: input transfer + quantization, exactly as
+        // the per-call path charges them.
+        let mut io_ins = Vec::with_capacity(n);
+        let mut qimgs = Vec::with_capacity(n);
+        for img in images {
+            assert_eq!(img.len(), cfg.in_channels * cfg.img_size * cfg.img_size);
+            self.buffers.reset();
+            io_ins.push(self.buffers.load_external(img.len() * 2, &self.hw)?);
+            qimgs.push(Self::quantize_image(
+                &mut self.scratch_sps,
+                img,
+                &[cfg.in_channels, cfg.img_size, cfg.img_size],
+            ));
+        }
+        for lane in self.lanes[..n].iter_mut() {
+            lane.reset();
+        }
+
+        let mut sps_sinks: Vec<StatSink> = (0..n).map(|_| StatSink::new()).collect();
+        let mut sdeb_sinks: Vec<StatSink> = (0..n).map(|_| StatSink::new()).collect();
+        let mut sps_per_t: Vec<Vec<u64>> =
+            (0..n).map(|_| Vec::with_capacity(cfg.timesteps)).collect();
+        let mut sdeb_per_t: Vec<Vec<u64>> =
+            (0..n).map(|_| Vec::with_capacity(cfg.timesteps)).collect();
+        let mut head_counts: Vec<Vec<u64>> = (0..n).map(|_| vec![0u64; d]).collect();
+        let mut streams: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
+
+        for t in 0..cfg.timesteps {
+            let pong = t % 2 == 1;
+            // SPS stage, whole batch (conv weight working set stays hot).
+            for i in 0..n {
+                let sink = &mut sps_sinks[i];
+                let before = sink.phases.total().cycles;
+                let (u0_cl, enc3) = self.lanes[i].sps.run_timestep(
+                    &self.model,
+                    &qimgs[i],
+                    &self.hw,
+                    self.mode,
+                    pong,
+                    &mut self.buffers.sps,
+                    sink,
+                    &mut self.scratch_sps,
+                )?;
+                sps_per_t[i].push(sink.phases.total().cycles - before);
+                let mut u = self.scratch_sps.take_tensor(&[l, d], ACT_FRAC);
+                executor::u0_to_token_major_into(&u0_cl, l, d, &mut u);
+                self.scratch_sps.put_tensor(u0_cl);
+                self.scratch_sps.put_enc(enc3);
+                streams[i] = Some(u);
+            }
+            // SDEB stage, block-major: every image through block `bi`
+            // back to back while its Q/K/V/O/MLP weights are hot.
+            let before_sdeb: Vec<u64> =
+                sdeb_sinks.iter().map(|s| s.phases.total().cycles).collect();
+            for bi in 0..cfg.num_blocks {
+                for i in 0..n {
+                    let u = streams[i].take().expect("token tensor present");
+                    let u = self.lanes[i].sdebs[bi].run_timestep(
+                        &self.model.blocks[bi],
+                        u,
+                        &self.hw,
+                        self.mode,
+                        pong,
+                        Some(shard),
+                        Some(&self.pool),
+                        &mut self.buffers.sdeb,
+                        &mut sdeb_sinks[i],
+                        &mut self.scratch_sdeb,
+                    )?;
+                    streams[i] = Some(u);
+                }
+            }
+            // Head readout, whole batch.
+            for i in 0..n {
+                let u = streams[i].take().expect("token tensor present");
+                executor::head_readout(
+                    &mut self.lanes[i].sea_head,
+                    &u,
+                    l,
+                    d,
+                    &self.hw,
+                    &mut sdeb_sinks[i],
+                    &mut head_counts[i],
+                    &mut self.scratch_sdeb,
+                );
+                self.scratch_sps.put_tensor(u);
+                sdeb_per_t[i].push(sdeb_sinks[i].phases.total().cycles - before_sdeb[i]);
+            }
+        }
+
+        // Assemble per-image reports in exactly the per-call order:
+        // io.input, SPS phases, SDEB/head phases, io.output.
+        let mut reports = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut sink = StatSink::new();
+            let io_in = io_ins[i];
+            let io_in_cycles = io_in.cycles;
+            sink.add("io.input", io_in);
+            sink.absorb(std::mem::take(&mut sps_sinks[i]));
+            sink.absorb(std::mem::take(&mut sdeb_sinks[i]));
+            let logits = self.head_logits(&head_counts[i]);
+            let io_out = self.io_output_stats();
+            let io_out_cycles = io_out.cycles;
+            sink.add("io.output", io_out);
+            let exec = PipelineExecution::new(
+                io_in_cycles,
+                io_out_cycles,
+                std::mem::take(&mut sps_per_t[i]),
+                std::mem::take(&mut sdeb_per_t[i]),
+            );
+            reports.push(RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy));
+        }
+        for qimg in qimgs {
+            self.scratch_sps.put_tensor(qimg);
+        }
+        Ok(reports)
+    }
+
     /// The serial timestep loop: every phase charged back to back, no
-    /// head sharding — the original conservative accounting.
-    fn run_serial(
-        &mut self,
-        qimg: &QTensor,
-        buffers: &mut BufferSet,
-        sink: &mut StatSink,
-    ) -> Result<Vec<u64>> {
-        let cfg = &self.model.cfg;
+    /// head sharding — the original conservative accounting (scratch
+    /// recycling still applies; it changes host behaviour only).
+    fn run_serial(&mut self, qimg: &QTensor, sink: &mut StatSink) -> Result<Vec<u64>> {
+        let cfg = self.model.cfg.clone();
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
         let mut head_counts = vec![0u64; d];
 
         for t in 0..cfg.timesteps {
             let pong = t % 2 == 1;
-            let (u0_cl, _enc3) = self.sps.run_timestep(
+            let (u0_cl, enc3) = self.sps.run_timestep(
                 &self.model,
                 qimg,
                 &self.hw,
                 self.mode,
                 pong,
-                &mut buffers.sps,
+                &mut self.buffers.sps,
                 sink,
+                &mut self.scratch_sps,
             )?;
+            let mut u = self.scratch_sps.take_tensor(&[l, d], ACT_FRAC);
+            executor::u0_to_token_major_into(&u0_cl, l, d, &mut u);
+            self.scratch_sps.put_tensor(u0_cl);
+            self.scratch_sps.put_enc(enc3);
 
-            let mut u = executor::u0_to_token_major(&u0_cl, l, d);
             for (bi, core) in self.sdebs.iter_mut().enumerate() {
                 u = core.run_timestep(
                     &self.model.blocks[bi],
@@ -221,8 +515,10 @@ impl Accelerator {
                     self.mode,
                     pong,
                     None,
-                    &mut buffers.sdeb,
+                    None,
+                    &mut self.buffers.sdeb,
                     sink,
+                    &mut self.scratch_sdeb,
                 )?;
             }
 
@@ -234,7 +530,13 @@ impl Accelerator {
                 &self.hw,
                 sink,
                 &mut head_counts,
+                &mut self.scratch_sdeb,
             );
+            // The final residual stream came from the SDEB pool but the
+            // next timestep's token tensor is taken from the SPS pool —
+            // return it there to keep both pools balanced (mirrors the
+            // overlapped executor's return ring).
+            self.scratch_sps.put_tensor(u);
         }
         Ok(head_counts)
     }
@@ -319,5 +621,26 @@ mod tests {
         let r = accel.infer(&random_image(8)).unwrap();
         assert!(r.pipeline.is_none());
         assert_eq!(r.wall_cycles(), r.total.cycles);
+    }
+
+    #[test]
+    fn pool_workers_knob_clamps_and_reports() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let accel = Accelerator::new(model.clone(), AccelConfig::small());
+        assert_eq!(accel.pool_workers(), cfg.num_blocks.max(1));
+        let accel = accel.with_pool_workers(0);
+        assert_eq!(accel.pool_workers(), 1, "pool size clamps to >= 1");
+        let sized = Accelerator::with_runtime(
+            model.clone(),
+            AccelConfig::small(),
+            DatapathMode::Encoded,
+            ExecMode::Overlapped,
+            3,
+        );
+        assert_eq!(sized.pool_workers(), 3, "with_runtime sizes the pool directly");
+        let mut accel = Accelerator::new(model, AccelConfig::small()).with_pool_workers(4);
+        assert_eq!(accel.pool_workers(), 4);
+        accel.infer(&random_image(9)).unwrap(); // oversized pool still correct
     }
 }

@@ -4,17 +4,28 @@
 //! The real accelerator double-buffers between the SPS Core and the SDEB
 //! Cores: while the SDEB stage consumes timestep `t` out of one ESS half,
 //! the SPS stage already produces timestep `t+1` into the other half. This
-//! module *runs* that schedule — the SPS stage on a producer thread, the
-//! SDEB + head stage on the consumer side, a bounded rendezvous channel
-//! standing in for the ping/pong handoff — and records per-timestep stage
-//! cycles so the executed schedule ([`PipelineExecution`]) can be
-//! reconciled against the analytic [`PipelineEstimate`](super::pipeline::PipelineEstimate),
-//! which is now a cross-check rather than the only source of truth.
+//! module *runs* that schedule — the SPS stage as a long-lived task on the
+//! accelerator's persistent [`WorkerPool`] (no per-inference thread
+//! spawn), the SDEB + head stage on the calling thread, a bounded
+//! rendezvous channel standing in for the ping/pong handoff — and records
+//! per-timestep stage cycles so the executed schedule
+//! ([`PipelineExecution`]) can be reconciled against the analytic
+//! [`PipelineEstimate`](super::pipeline::PipelineEstimate), which is now a
+//! cross-check rather than the only source of truth.
 //!
 //! Within the SDEB stage, the SDSA pass shards attention heads across the
 //! cores' SMAM comparator arrays ([`HeadShard`]) instead of walking all
 //! channels on one array — the FireFly-T-style dual-engine overlap plus
 //! Bishop-style heterogeneous-core scheduling named in the ROADMAP.
+//!
+//! Steady-state memory model (DESIGN.md): each stage recycles its frame
+//! storage through its own [`ExecScratch`] pool, and the `[L, D]` token
+//! tensors handed producer→consumer circulate through a small ring — the
+//! consumer returns each drained tensor over a second channel, the
+//! producer blocks on that return once its two pre-taken ring slots are in
+//! flight (host run-ahead bounded at the ping/pong depth), and everything
+//! drains back into the SPS pool at the end of the run. After warm-up an
+//! inference performs no thread spawns and no arena/tensor allocations.
 //!
 //! All cycle numbers come from [`UnitStats`](crate::hw::UnitStats)
 //! accounting, never from host wall clocks, so overlapped runs stay
@@ -27,6 +38,7 @@ use anyhow::{anyhow, Result};
 use crate::hw::AccelConfig;
 use crate::model::QuantizedModel;
 use crate::quant::{QTensor, ACT_FRAC};
+use crate::scratch::ExecScratch;
 use crate::units::{HeadShard, SpikeEncodingArray};
 
 use super::buffers::BufferSet;
@@ -34,6 +46,7 @@ use super::controller::DatapathMode;
 use super::report::StatSink;
 use super::sdeb_core::SdebCore;
 use super::sps_core::SpsCore;
+use super::workers::WorkerPool;
 
 /// The executed two-core overlap schedule of one inference: per-timestep
 /// stage cycles plus the resulting finish time under double buffering.
@@ -182,19 +195,25 @@ pub(crate) struct OverlapOutcome {
 }
 
 /// Transpose the SPS core's `[D, L]` channel-major output into the
-/// `[L, D]` token-major residual stream the SDEB cores consume.
-pub(crate) fn u0_to_token_major(u0_cl: &QTensor, l: usize, d: usize) -> QTensor {
-    let mut u = QTensor::zeros(&[l, d], ACT_FRAC);
+/// `[L, D]` token-major residual stream the SDEB cores consume, writing
+/// into a recycled tensor (every element is overwritten).
+pub(crate) fn u0_to_token_major_into(u0_cl: &QTensor, l: usize, d: usize, out: &mut QTensor) {
+    out.shape.clear();
+    out.shape.extend_from_slice(&[l, d]);
+    out.frac = ACT_FRAC;
+    // No clear(): a same-sized recycled buffer skips the resize memset —
+    // the transpose below overwrites every element.
+    out.data.resize(l * d, 0);
     for c in 0..d {
         for tok in 0..l {
-            u.data[tok * d + c] = u0_cl.data[c * l + tok];
+            out.data[tok * d + c] = u0_cl.data[c * l + tok];
         }
     }
-    u
 }
 
 /// Head LIF + pooled spike counting on the final residual stream of one
-/// timestep (shared by the serial and overlapped paths).
+/// timestep (shared by the serial, overlapped and batched paths).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn head_readout(
     sea_head: &mut SpikeEncodingArray,
     u: &QTensor,
@@ -203,39 +222,53 @@ pub(crate) fn head_readout(
     hw: &AccelConfig,
     sink: &mut StatSink,
     head_counts: &mut [u64],
+    scratch: &mut ExecScratch,
 ) {
-    let mut u_cl = vec![0i32; d * l];
+    let mut u_cl = scratch.take_i32(d * l);
     for tok in 0..l {
         for c in 0..d {
             u_cl[c * l + tok] = u.data[tok * d + c];
         }
     }
-    let (s_out, st) = sea_head.encode(&u_cl, hw);
+    let (s_out, st) = sea_head.encode_into(&u_cl, hw, scratch);
     sink.add("head.encode", st);
     sink.sparsity("head.in.spikes", &s_out);
     for (c, count) in head_counts.iter_mut().enumerate() {
         *count += s_out.channel_len(c) as u64;
     }
+    scratch.put_enc(s_out);
+    scratch.put_i32(u_cl);
 }
+
+/// The producer task's final state: its stage sink and trace, plus the
+/// ring tensors and return-channel receiver handed back for draining.
+type ProducerOut = (Result<(StatSink, Vec<u64>)>, Vec<QTensor>, mpsc::Receiver<QTensor>);
 
 /// Run all timesteps with the SPS stage of timestep `t+1` overlapping the
 /// SDEB stage of timestep `t`.
 ///
-/// The SPS producer runs on its own scoped thread against its half of the
-/// ping/pong `BufferSet`; the SDEB consumer runs on the calling thread
-/// against the other half, sharding each block's SDSA heads across the
-/// core array per `shard`. A rendezvous channel of capacity 1 enforces
-/// the double-buffer depth. Stage sinks are merged in a fixed order, so
-/// the result is deterministic regardless of thread interleaving.
+/// The SPS producer runs as one long-lived task on the persistent worker
+/// `pool` against its half of the ping/pong `BufferSet` and its own
+/// scratch pool; the SDEB consumer runs on the calling thread against the
+/// other half, sharding each block's SDSA heads across the core array per
+/// `shard` (shard cores also dispatched on `pool`). A rendezvous channel
+/// of capacity 1 enforces the double-buffer depth; drained token tensors
+/// flow back to the producer over a return channel (see the module docs).
+/// Stage sinks are merged in a fixed order, so the result is
+/// deterministic regardless of thread interleaving.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_overlapped(
     model: &QuantizedModel,
     hw: &AccelConfig,
     mode: DatapathMode,
     shard: HeadShard,
+    pool: &WorkerPool,
     sps: &mut SpsCore,
     sdebs: &mut [SdebCore],
     sea_head: &mut SpikeEncodingArray,
     buffers: &mut BufferSet,
+    scratch_sps: &mut ExecScratch,
+    scratch_sdeb: &mut ExecScratch,
     qimg: &QTensor,
 ) -> Result<OverlapOutcome> {
     let cfg = &model.cfg;
@@ -244,21 +277,67 @@ pub(crate) fn run_overlapped(
 
     let BufferSet { sps: sps_buf, sdeb: sdeb_buf, .. } = buffers;
     let (tx, rx) = mpsc::sync_channel::<QTensor>(1);
+    let (ret_tx, ret_rx) = mpsc::channel::<QTensor>();
 
-    let (producer_res, consumer_res) = std::thread::scope(|s| {
-        let producer = s.spawn(move || -> Result<(StatSink, Vec<u64>)> {
-            let mut sink = StatSink::new();
-            let mut per_t = Vec::with_capacity(timesteps);
-            for t in 0..timesteps {
-                let before = sink.phases.total().cycles;
-                let (u0_cl, _enc3) =
-                    sps.run_timestep(model, qimg, hw, mode, t % 2 == 1, sps_buf, &mut sink)?;
-                per_t.push(sink.phases.total().cycles - before);
-                if tx.send(u0_to_token_major(&u0_cl, l, d)).is_err() {
-                    break; // consumer bailed; surface its error below
+    // Pre-take the ring: exactly two slots per run keeps the take/put
+    // counts deterministic (anything beyond depth 2 waits on the return
+    // channel, matching the modelled ping/pong bound).
+    let ring: Vec<QTensor> = (0..2).map(|_| scratch_sps.take_tensor(&[l, d], ACT_FRAC)).collect();
+
+    let mut producer_out: Option<ProducerOut> = None;
+
+    let consumer_res = pool.scope(|s| {
+        let slot = &mut producer_out;
+        // Reborrow for the producer task: the original `scratch_sps`
+        // reference is needed again after the scope for the ring drain.
+        let scratch_sps: &mut ExecScratch = &mut *scratch_sps;
+        s.spawn(move || {
+            let mut ring = ring;
+            let ret_rx = ret_rx;
+            // Panic parity with the pre-pool `thread::scope` producer: a
+            // panicking SPS stage surfaces as an inference error on the
+            // calling thread, not a poisoned worker pool.
+            let task = || -> Result<(StatSink, Vec<u64>)> {
+                let mut sink = StatSink::new();
+                let mut per_t = Vec::with_capacity(timesteps);
+                for t in 0..timesteps {
+                    let before = sink.phases.total().cycles;
+                    let (u0_cl, enc3) = sps.run_timestep(
+                        model,
+                        qimg,
+                        hw,
+                        mode,
+                        t % 2 == 1,
+                        sps_buf,
+                        &mut sink,
+                        scratch_sps,
+                    )?;
+                    per_t.push(sink.phases.total().cycles - before);
+                    let mut out = match ring.pop() {
+                        Some(buf) => buf,
+                        None => match ret_rx.recv() {
+                            Ok(buf) => buf,
+                            Err(_) => {
+                                scratch_sps.put_tensor(u0_cl);
+                                scratch_sps.put_enc(enc3);
+                                break; // consumer bailed; its error surfaces below
+                            }
+                        },
+                    };
+                    u0_to_token_major_into(&u0_cl, l, d, &mut out);
+                    scratch_sps.put_tensor(u0_cl);
+                    scratch_sps.put_enc(enc3);
+                    if tx.send(out).is_err() {
+                        break; // consumer bailed; its error surfaces below
+                    }
                 }
-            }
-            Ok((sink, per_t))
+                Ok((sink, per_t))
+            };
+            let res = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(task)) {
+                Ok(res) => res,
+                Err(_) => Err(anyhow!("SPS pipeline stage panicked")),
+            };
+            *slot = Some((res, ring, ret_rx));
         });
 
         // Consumer: the SDEB stage + head readout on the calling thread.
@@ -279,22 +358,40 @@ pub(crate) fn run_overlapped(
                         mode,
                         t % 2 == 1,
                         Some(shard),
+                        Some(pool),
                         sdeb_buf,
                         &mut sink,
+                        scratch_sdeb,
                     )?;
                 }
-                head_readout(sea_head, &u, l, d, hw, &mut sink, &mut head_counts);
+                head_readout(sea_head, &u, l, d, hw, &mut sink, &mut head_counts, scratch_sdeb);
                 per_t.push(sink.phases.total().cycles - before);
+                // Hand the drained tensor back to the producer ring (the
+                // receiver outlives the producer task, so this cannot
+                // fail outside a producer panic).
+                let _ = ret_tx.send(u);
             }
             Ok((sink, per_t, head_counts))
         })();
-        // Unblock a producer stuck in `send` if the consumer bailed early.
+        // Unblock a producer stuck in `send`/`recv` if the consumer bailed
+        // early.
         drop(rx);
-        (producer.join(), consumer_res)
+        drop(ret_tx);
+        consumer_res
     });
 
-    let (sps_sink, sps_per_timestep) =
-        producer_res.map_err(|_| anyhow!("SPS pipeline stage panicked"))??;
+    let (producer_res, leftovers, ret_rx) =
+        producer_out.ok_or_else(|| anyhow!("SPS pipeline stage never ran"))?;
+    // Drain every circulating token tensor back into the SPS pool so the
+    // next request's ring takes are pool hits.
+    for buf in leftovers {
+        scratch_sps.put_tensor(buf);
+    }
+    while let Ok(buf) = ret_rx.try_recv() {
+        scratch_sps.put_tensor(buf);
+    }
+    drop(ret_rx);
+    let (sps_sink, sps_per_timestep) = producer_res?;
     let (sdeb_sink, sdeb_per_timestep, head_counts) = consumer_res?;
     debug_assert_eq!(sps_per_timestep.len(), timesteps);
     debug_assert_eq!(sdeb_per_timestep.len(), timesteps);
@@ -352,5 +449,16 @@ mod tests {
     fn fill_latency_bound_is_io_plus_worst_timesteps() {
         let e = PipelineExecution::new(10, 5, vec![50, 60], vec![70, 80]);
         assert_eq!(e.fill_latency_bound(), 10 + 5 + 60 + 80);
+    }
+
+    #[test]
+    fn token_major_transpose_reuses_buffer() {
+        let u0 = QTensor { shape: vec![2, 3], frac: ACT_FRAC, data: vec![1, 2, 3, 4, 5, 6] };
+        let mut out = QTensor { shape: vec![9], frac: 0, data: vec![7; 9] };
+        u0_to_token_major_into(&u0, 3, 2, &mut out);
+        assert_eq!(out.shape, vec![3, 2]);
+        assert_eq!(out.frac, ACT_FRAC);
+        // [D=2, L=3] channel-major -> [L=3, D=2] token-major.
+        assert_eq!(out.data, vec![1, 4, 2, 5, 3, 6]);
     }
 }

@@ -20,8 +20,10 @@ pub mod pipeline;
 pub mod report;
 pub mod sdeb_core;
 pub mod sps_core;
+pub mod workers;
 
 pub use controller::{Accelerator, DatapathMode, ExecMode};
+pub use workers::WorkerPool;
 pub use executor::PipelineExecution;
 pub use pipeline::{estimate as pipeline_estimate, PipelineEstimate};
 pub use report::RunReport;

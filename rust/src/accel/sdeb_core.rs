@@ -8,13 +8,16 @@ use anyhow::Result;
 use crate::hw::{AccelConfig, UnitStats};
 use crate::lif::LifParams;
 use crate::quant::QTensor;
-use crate::spike::EncodedSpikes;
-use crate::units::{AdderModule, HeadShard, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule};
+use crate::scratch::ExecScratch;
+use crate::units::{
+    AdderModule, HeadShard, SmamOutput, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule,
+};
 use crate::model::QuantizedBlock;
 
 use super::buffers::CoreBuffers;
 use super::controller::DatapathMode;
 use super::report::StatSink;
+use super::workers::WorkerPool;
 
 /// One encoder block's SDEB core: SEAs for every encode site, the SLU,
 /// the SMAM and the residual Adder, with persistent LIF state.
@@ -70,40 +73,46 @@ impl SdebCore {
     }
 
     /// Transpose a token-major `[L, C]` value tensor into the channel-major
-    /// `[C, L]` layout the SEA/ESS banks use.
-    fn to_cl(&self, v: &QTensor, c: usize) -> Vec<i32> {
+    /// `[C, L]` layout the SEA/ESS banks use, into a recycled buffer.
+    fn to_cl_into(&self, v: &QTensor, c: usize, out: &mut Vec<i32>) {
         let l = self.tokens;
         debug_assert_eq!(v.data.len(), l * c);
-        let mut out = vec![0i32; c * l];
+        // No clear(): a same-sized recycled buffer skips the resize memset
+        // — the transpose below overwrites every element.
+        out.resize(c * l, 0);
         for tok in 0..l {
             for ch in 0..c {
                 out[ch * l + tok] = v.data[tok * c + ch];
             }
         }
-        out
     }
 
     fn slu_forward(
         &mut self,
-        x: &EncodedSpikes,
+        x: &crate::spike::EncodedSpikes,
         layer: &crate::quant::QuantizedLinear,
         cfg: &AccelConfig,
         mode: DatapathMode,
+        scratch: &mut ExecScratch,
     ) -> (QTensor, UnitStats) {
         match mode {
-            DatapathMode::Encoded => self.slu.forward(x, layer, cfg),
-            DatapathMode::Bitmap => self.slu.forward_bitmap_baseline(x, layer, cfg),
+            DatapathMode::Encoded => self.slu.forward_into(x, layer, cfg, scratch),
+            DatapathMode::Bitmap => self.slu.forward_bitmap_baseline_into(x, layer, cfg, scratch),
         }
     }
 
     /// One timestep of the block. `u` is the `[L, D]` residual-stream value
-    /// tensor (token-major); updated in place (returned).
+    /// tensor (token-major); consumed and returned to `scratch`, with the
+    /// updated stream handed back (also from `scratch`).
     ///
     /// `pong` is the timestep parity selecting the ESS half of `buffers`.
     /// `shard` — when `Some` and the datapath is encoded — runs the SDSA
     /// pass with heads sharded across SDEB-core comparator arrays
-    /// ([`SpikeMaskAddModule::run_sharded`]); `None` keeps the serial
-    /// single-array accounting. Values are bit-identical either way.
+    /// ([`SpikeMaskAddModule::run_sharded_into`]), dispatching the
+    /// non-first cores on `pool` when one is given; `None` keeps the
+    /// serial single-array accounting. Values are bit-identical in every
+    /// combination.
+    #[allow(clippy::too_many_arguments)]
     pub fn run_timestep(
         &mut self,
         blk: &QuantizedBlock,
@@ -112,31 +121,41 @@ impl SdebCore {
         mode: DatapathMode,
         pong: bool,
         shard: Option<HeadShard>,
+        pool: Option<&WorkerPool>,
         buffers: &mut CoreBuffers,
         sink: &mut StatSink,
+        scratch: &mut ExecScratch,
     ) -> Result<QTensor> {
         let bi = self.index;
         let d = self.dim;
+        // One channel-major transpose buffer, reused by every encode site.
+        let mut cl = scratch.take_i32(0);
 
         // SEA encode the residual stream.
-        let u_cl = self.to_cl(&u, d);
-        let (s_in, st) = self.sea_in.encode(&u_cl, cfg);
+        self.to_cl_into(&u, d, &mut cl);
+        let (s_in, st) = self.sea_in.encode_into(&cl, cfg, scratch);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.in.spikes"), &s_in);
         buffers.store_encoded(&s_in, pong)?;
 
         // Q/K/V projections on the Spike Linear Array + SEA fire.
-        let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, mode);
+        let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, mode, scratch);
         sink.add("sdeb.qkv", st);
-        let (q_s, st) = self.sea_q.encode(&self.to_cl(&qv, d), cfg);
+        self.to_cl_into(&qv, d, &mut cl);
+        let (q_s, st) = self.sea_q.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(qv);
         sink.add("sdeb.encode", st);
-        let (kv, st) = self.slu_forward(&s_in, &blk.k, cfg, mode);
+        let (kv, st) = self.slu_forward(&s_in, &blk.k, cfg, mode, scratch);
         sink.add("sdeb.qkv", st);
-        let (k_s, st) = self.sea_k.encode(&self.to_cl(&kv, d), cfg);
+        self.to_cl_into(&kv, d, &mut cl);
+        let (k_s, st) = self.sea_k.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(kv);
         sink.add("sdeb.encode", st);
-        let (vv, st) = self.slu_forward(&s_in, &blk.v, cfg, mode);
+        let (vv, st) = self.slu_forward(&s_in, &blk.v, cfg, mode, scratch);
         sink.add("sdeb.qkv", st);
-        let (v_s, st) = self.sea_v.encode(&self.to_cl(&vv, d), cfg);
+        self.to_cl_into(&vv, d, &mut cl);
+        let (v_s, st) = self.sea_v.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(vv);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.q.spikes"), &q_s);
         sink.sparsity(&format!("block{bi}.k.spikes"), &k_s);
@@ -144,41 +163,66 @@ impl SdebCore {
         buffers.store_encoded(&q_s, pong)?;
         buffers.store_encoded(&k_s, pong)?;
         buffers.store_encoded(&v_s, pong)?;
+        scratch.put_enc(s_in);
 
         // SMAM: dual-spike mask-add (the SDSA engine), optionally with
         // heads sharded across the idle cores' comparator arrays.
         let (smam_out, st) = match (mode, shard) {
-            (DatapathMode::Encoded, Some(sh)) => self.smam.run_sharded(&q_s, &k_s, &v_s, cfg, sh),
-            (DatapathMode::Encoded, None) => self.smam.run(&q_s, &k_s, &v_s, cfg),
-            (DatapathMode::Bitmap, _) => self.smam.run_dense_baseline(&q_s, &k_s, &v_s, cfg),
+            (DatapathMode::Encoded, Some(sh)) => {
+                self.smam.run_sharded_into(&q_s, &k_s, &v_s, cfg, sh, pool, scratch)
+            }
+            (DatapathMode::Encoded, None) => {
+                self.smam.run_sharded_into(&q_s, &k_s, &v_s, cfg, HeadShard::serial(), None, scratch)
+            }
+            (DatapathMode::Bitmap, _) => {
+                self.smam.run_dense_baseline_into(&q_s, &k_s, &v_s, cfg, scratch)
+            }
         };
         sink.add("sdeb.smam", st);
         sink.sparsity(&format!("block{bi}.sdsa.spikes"), &smam_out.masked_v);
+        let SmamOutput { mask, acc, masked_v } = smam_out;
+        scratch.put_bool(mask);
+        scratch.put_u32(acc);
+        scratch.put_enc(q_s);
+        scratch.put_enc(k_s);
+        scratch.put_enc(v_s);
 
         // Output projection + residual.
-        let (ov, st) = self.slu_forward(&smam_out.masked_v, &blk.o, cfg, mode);
+        let (ov, st) = self.slu_forward(&masked_v, &blk.o, cfg, mode, scratch);
         sink.add("sdeb.proj", st);
-        let (u, st) = self.adder.add(&u, &ov, cfg);
+        scratch.put_enc(masked_v);
+        let (u2, st) = self.adder.add_into(&u, &ov, cfg, scratch);
         sink.add("sdeb.residual", st);
+        scratch.put_tensor(u);
+        scratch.put_tensor(ov);
+        let u = u2;
 
         // MLP: encode -> SLU -> encode -> SLU -> residual.
-        let (s2, st) = self.sea_mlp_in.encode(&self.to_cl(&u, d), cfg);
+        self.to_cl_into(&u, d, &mut cl);
+        let (s2, st) = self.sea_mlp_in.encode_into(&cl, cfg, scratch);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.mlp.in.spikes"), &s2);
         buffers.store_encoded(&s2, pong)?;
-        let (hv, st) = self.slu_forward(&s2, &blk.mlp1, cfg, mode);
+        let (hv, st) = self.slu_forward(&s2, &blk.mlp1, cfg, mode, scratch);
         sink.add("sdeb.mlp", st);
+        scratch.put_enc(s2);
         let h = blk.mlp1.out_dim;
-        let (s3, st) = self.sea_mlp_hidden.encode(&self.to_cl(&hv, h), cfg);
+        self.to_cl_into(&hv, h, &mut cl);
+        let (s3, st) = self.sea_mlp_hidden.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(hv);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.mlp.hidden.spikes"), &s3);
         buffers.store_encoded(&s3, pong)?;
-        let (m2, st) = self.slu_forward(&s3, &blk.mlp2, cfg, mode);
+        let (m2, st) = self.slu_forward(&s3, &blk.mlp2, cfg, mode, scratch);
         sink.add("sdeb.mlp", st);
-        let (u, st) = self.adder.add(&u, &m2, cfg);
+        scratch.put_enc(s3);
+        let (u3, st) = self.adder.add_into(&u, &m2, cfg, scratch);
         sink.add("sdeb.residual", st);
+        scratch.put_tensor(u);
+        scratch.put_tensor(m2);
+        scratch.put_i32(cl);
 
-        Ok(u)
+        Ok(u3)
     }
 }
 
@@ -207,8 +251,20 @@ mod tests {
             SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
         let mut buffers = BufferSet::new(&hw);
         let mut sink = StatSink::new();
+        let mut scratch = ExecScratch::new();
         let out = core
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
+            .run_timestep(
+                &model.blocks[0],
+                u,
+                &hw,
+                DatapathMode::Encoded,
+                false,
+                None,
+                None,
+                &mut buffers.sdeb,
+                &mut sink,
+                &mut scratch,
+            )
             .unwrap();
         assert_eq!(out.shape, vec![64, 64]);
         assert_eq!(out.frac, ACT_FRAC);
@@ -227,11 +283,13 @@ mod tests {
         let mut b2 = BufferSet::new(&hw);
         let mut s1 = StatSink::new();
         let mut s2 = StatSink::new();
+        let mut sc1 = ExecScratch::new();
+        let mut sc2 = ExecScratch::new();
         let o1 = c1
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, &mut b1.sdeb, &mut s1)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, None, &mut b1.sdeb, &mut s1, &mut sc1)
             .unwrap();
         let o2 = c2
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, false, None, &mut b2.sdeb, &mut s2)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, false, None, None, &mut b2.sdeb, &mut s2, &mut sc2)
             .unwrap();
         assert_eq!(o1, o2);
     }
@@ -244,16 +302,17 @@ mod tests {
             SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
         let mut buffers = BufferSet::new(&hw);
         let mut sink = StatSink::new();
+        let mut scratch = ExecScratch::new();
         let o1 = core
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, None, &mut buffers.sdeb, &mut sink, &mut scratch)
             .unwrap();
         // Same input, different membrane state -> (almost surely) different output.
         let o2 = core
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, None, &mut buffers.sdeb, &mut sink, &mut scratch)
             .unwrap();
         core.reset();
         let o3 = core
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, false, None, &mut buffers.sdeb, &mut sink)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, false, None, None, &mut buffers.sdeb, &mut sink, &mut scratch)
             .unwrap();
         assert_eq!(o1, o3, "reset must restore t=0 behaviour");
         let _ = o2;

@@ -7,6 +7,7 @@ use anyhow::Result;
 use crate::hw::AccelConfig;
 use crate::lif::LifParams;
 use crate::quant::{QTensor, ACT_FRAC};
+use crate::scratch::ExecScratch;
 use crate::spike::{EncodedSpikes, TokenGrid};
 use crate::units::{AdderModule, SpikeEncodingArray, SpikeMaxpoolUnit, TileEngine};
 use crate::model::QuantizedModel;
@@ -57,8 +58,12 @@ impl SpsCore {
     ///
     /// `pong` is the timestep parity selecting which ESS half of `buffers`
     /// (this core's double-buffered pair) receives the encoded tensors.
-    /// Returns `u0` as `[D, L]` channel-major values plus the stage-3
-    /// output spikes (needed by the controller for sparsity reporting).
+    /// All intermediate tensors and arenas are recycled through `scratch`
+    /// (the returned pair is taken from it too — the caller puts both back
+    /// once consumed). Returns `u0` as `[D, L]` channel-major values plus
+    /// the stage-3 output spikes (needed by the controller for sparsity
+    /// reporting).
+    #[allow(clippy::too_many_arguments)]
     pub fn run_timestep(
         &mut self,
         model: &QuantizedModel,
@@ -68,27 +73,32 @@ impl SpsCore {
         pong: bool,
         buffers: &mut CoreBuffers,
         sink: &mut StatSink,
+        scratch: &mut ExecScratch,
     ) -> Result<(QTensor, EncodedSpikes)> {
-        let mut cur = image.clone();
+        let mut cur = scratch.take_tensor_copy(image);
         let mut enc_prev: Option<EncodedSpikes> = None;
 
         for i in 0..4 {
             let spike_input = i > 0;
-            let (y, conv_stats) = self.tile.conv2d(&cur, &model.sps_convs[i], cfg, spike_input);
+            let (y, conv_stats) =
+                self.tile.conv2d_into(&cur, &model.sps_convs[i], cfg, spike_input, scratch);
             sink.add("sps.conv", conv_stats);
 
-            let (mut enc, sea_stats) = self.seas[i].encode(&y.data, cfg);
+            let (mut enc, sea_stats) = self.seas[i].encode_into(&y.data, cfg, scratch);
+            scratch.put_tensor(y);
             sink.add("sps.encode", sea_stats);
 
             let side = self.sides[i];
             if i == 1 || i == 3 {
                 let grid = TokenGrid::new(side, side);
                 let (pooled, mp_stats) = match mode {
-                    DatapathMode::Encoded => self.smu.pool(&enc, grid, cfg),
-                    DatapathMode::Bitmap => self.smu.pool_dense_baseline(&enc, grid, cfg),
+                    DatapathMode::Encoded => self.smu.pool_into(&enc, grid, cfg, scratch),
+                    DatapathMode::Bitmap => {
+                        self.smu.pool_dense_baseline_into(&enc, grid, cfg, scratch)
+                    }
                 };
                 sink.add("sps.maxpool", mp_stats);
-                enc = pooled;
+                scratch.put_enc(std::mem::replace(&mut enc, pooled));
             }
             // Post-pool sparsity: matches the golden executor and the JAX
             // model's aux records (Fig. 6 measures what later layers see).
@@ -100,26 +110,35 @@ impl SpsCore {
             // instead of round-tripping through a bitmap object.
             let s = if i == 1 || i == 3 { side / 2 } else { side };
             debug_assert_eq!(enc.tokens, s * s);
-            let mut data = vec![0i32; self.dims[i] * enc.tokens];
+            let mut next = scratch.take_tensor(&[self.dims[i], s, s], 0);
             for c in 0..enc.channels {
                 let base = c * enc.tokens;
                 for &a in enc.channel_addrs(c) {
-                    data[base + a as usize] = 1;
+                    next.data[base + a as usize] = 1;
                 }
             }
-            cur = QTensor { shape: vec![self.dims[i], s, s], frac: 0, data };
-            enc_prev = Some(enc);
+            scratch.put_tensor(std::mem::replace(&mut cur, next));
+            if let Some(prev) = enc_prev.replace(enc) {
+                scratch.put_enc(prev);
+            }
         }
 
         let enc3 = enc_prev.expect("four stages ran");
-        let (rpe, rpe_stats) = self.tile.conv2d(&cur, &model.sps_convs[4], cfg, true);
+        let (mut rpe, rpe_stats) =
+            self.tile.conv2d_into(&cur, &model.sps_convs[4], cfg, true, scratch);
+        scratch.put_tensor(cur);
         sink.add("sps.conv", rpe_stats);
 
         // Residual: u0 = RPE(s4) + s4 in the value domain ([D, L] layout).
+        // The RPE output [D, s, s] is reshaped to [D, L] in place.
         let d = model.cfg.embed_dim;
         let l = model.cfg.num_tokens();
-        let rpe_cl = QTensor { shape: vec![d, l], frac: ACT_FRAC, data: rpe.data.clone() };
-        let (u0, add_stats) = self.adder.add_spikes(&rpe_cl, &enc3, cfg);
+        debug_assert_eq!(rpe.data.len(), d * l);
+        rpe.shape.clear();
+        rpe.shape.extend_from_slice(&[d, l]);
+        rpe.frac = ACT_FRAC;
+        let (u0, add_stats) = self.adder.add_spikes_into(&rpe, &enc3, cfg, scratch);
+        scratch.put_tensor(rpe);
         sink.add("sps.residual", add_stats);
 
         Ok((u0, enc3))
@@ -150,8 +169,18 @@ mod tests {
         let mut core = SpsCore::new(&model, model.cfg.lif_params());
         let mut buffers = BufferSet::new(&hw);
         let mut sink = StatSink::new();
+        let mut scratch = ExecScratch::new();
         let (u0, enc3) = core
-            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, false, &mut buffers.sps, &mut sink)
+            .run_timestep(
+                &model,
+                &img,
+                &hw,
+                DatapathMode::Encoded,
+                false,
+                &mut buffers.sps,
+                &mut sink,
+                &mut scratch,
+            )
             .unwrap();
         assert_eq!(u0.shape, vec![64, 64]);
         assert_eq!(enc3.channels, 64);
@@ -168,15 +197,53 @@ mod tests {
         let mut b2 = BufferSet::new(&hw);
         let mut s1 = StatSink::new();
         let mut s2 = StatSink::new();
+        let mut sc1 = ExecScratch::new();
+        let mut sc2 = ExecScratch::new();
         let mut c1 = SpsCore::new(&model, model.cfg.lif_params());
         let mut c2 = SpsCore::new(&model, model.cfg.lif_params());
         let (u1, _) = c1
-            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, false, &mut b1.sps, &mut s1)
+            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, false, &mut b1.sps, &mut s1, &mut sc1)
             .unwrap();
         let (u2, _) = c2
-            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, false, &mut b2.sps, &mut s2)
+            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, false, &mut b2.sps, &mut s2, &mut sc2)
             .unwrap();
         assert_eq!(u1, u2, "datapath modes must agree on values");
         assert!(s2.phases.get("sps.maxpool").cycles >= s1.phases.get("sps.maxpool").cycles);
+    }
+
+    #[test]
+    fn repeated_timesteps_reuse_scratch_after_warmup() {
+        let (model, img) = setup();
+        let hw = AccelConfig::small();
+        let mut core = SpsCore::new(&model, model.cfg.lif_params());
+        let mut buffers = BufferSet::new(&hw);
+        let mut sink = StatSink::new();
+        let mut scratch = ExecScratch::new();
+        let run = |core: &mut SpsCore,
+                   buffers: &mut BufferSet,
+                   sink: &mut StatSink,
+                   scratch: &mut ExecScratch| {
+            let (u0, enc3) = core
+                .run_timestep(
+                    &model,
+                    &img,
+                    &hw,
+                    DatapathMode::Encoded,
+                    false,
+                    &mut buffers.sps,
+                    sink,
+                    scratch,
+                )
+                .unwrap();
+            scratch.put_tensor(u0);
+            scratch.put_enc(enc3);
+        };
+        run(&mut core, &mut buffers, &mut sink, &mut scratch);
+        let warm = scratch.stats();
+        for _ in 0..3 {
+            run(&mut core, &mut buffers, &mut sink, &mut scratch);
+        }
+        assert_eq!(scratch.stats().misses, warm.misses, "warm SPS timesteps must not allocate");
+        assert!(scratch.stats().hits > warm.hits);
     }
 }

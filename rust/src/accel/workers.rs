@@ -1,0 +1,308 @@
+//! The persistent SDEB worker pool: host threads that live as long as the
+//! [`Accelerator`](super::Accelerator) and execute scoped task batches for
+//! the overlapped executor's SPS producer stage and the SMAM's per-core
+//! head shards.
+//!
+//! Before this pool existed, every inference spawned a fresh producer
+//! thread (`std::thread::scope` in the executor) and every SDSA pass
+//! spawned one thread per SDEB core — OS thread churn on the hottest path
+//! of the simulator, gated by a size heuristic. The pool replaces both:
+//! threads are spawned once per accelerator and fed through a shared
+//! injector queue.
+//!
+//! Deadlock freedom by construction: [`WorkerPool::scope`] enqueues its
+//! tasks for the pool **and** lets the calling thread drain its own queue
+//! before waiting, so a scope always completes even when every worker is
+//! busy (e.g. the lone worker is running the long-lived SPS producer while
+//! the consumer thread scopes SMAM shards — the consumer then runs the
+//! shards inline, bit-identically, because results never depend on *where*
+//! a task ran).
+//!
+//! Panic policy: task panics are caught, the scope is poisoned, and
+//! [`WorkerPool::scope`] re-panics after every task of the scope finished
+//! — borrows held by sibling tasks stay valid for their full run.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared state of one `scope` call: its task queue and completion count.
+struct ScopeState {
+    queue: Mutex<VecDeque<Task>>,
+    /// Tasks spawned but not yet finished (condvar-guarded).
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl ScopeState {
+    fn new() -> Self {
+        Self {
+            queue: Mutex::new(VecDeque::new()),
+            pending: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn pop(&self) -> Option<Task> {
+        self.queue.lock().unwrap().pop_front()
+    }
+
+    /// Run one task, recording panics and signalling completion.
+    fn run_one(&self, task: Task) {
+        if catch_unwind(AssertUnwindSafe(task)).is_err() {
+            self.panicked.store(true, Ordering::SeqCst);
+        }
+        let mut pending = self.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Caller-side completion: help execute the scope's own queue, then
+    /// wait for tasks the pool workers picked up.
+    fn drain_and_wait(&self) {
+        while let Some(task) = self.pop() {
+            self.run_one(task);
+        }
+        let mut pending = self.pending.lock().unwrap();
+        while *pending != 0 {
+            pending = self.done_cv.wait(pending).unwrap();
+        }
+    }
+}
+
+/// State shared between the pool handle and its worker threads.
+struct PoolShared {
+    /// One entry per outstanding task (workers pop a scope, then one task).
+    injector: Mutex<VecDeque<Arc<ScopeState>>>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let scope = {
+            let mut injector = shared.injector.lock().unwrap();
+            loop {
+                if let Some(scope) = injector.pop_front() {
+                    break scope;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                injector = shared.work_cv.wait(injector).unwrap();
+            }
+        };
+        // The caller may have already drained this entry's task; that's
+        // fine — stale notifications are no-ops.
+        if let Some(task) = scope.pop() {
+            scope.run_one(task);
+        }
+    }
+}
+
+/// A fixed-size pool of persistent worker threads executing scoped task
+/// batches (see the module docs for the dispatch and safety model).
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `workers` threads (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            injector: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(shared))
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Number of persistent worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f` with a scope handle on which borrowed tasks can be spawned;
+    /// returns only after every spawned task completed (the calling thread
+    /// helps drain the scope's queue, so progress never depends on a free
+    /// worker). Panics if `f` or any task panicked.
+    pub fn scope<'env, 'pool, R, F>(&'pool self, f: F) -> R
+    where
+        F: FnOnce(&PoolScope<'env, 'pool>) -> R,
+    {
+        let scope =
+            PoolScope { state: Arc::new(ScopeState::new()), shared: &self.shared, _env: PhantomData };
+        let result = catch_unwind(AssertUnwindSafe(|| f(&scope)));
+        // Always complete every spawned task before unwinding: sibling
+        // tasks may borrow from the caller's frame.
+        scope.state.drain_and_wait();
+        match result {
+            Ok(r) => {
+                if scope.state.panicked.load(Ordering::SeqCst) {
+                    panic!("worker pool task panicked");
+                }
+                r
+            }
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.work_cv.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("workers", &self.handles.len()).finish()
+    }
+}
+
+/// Spawn handle passed to the closure of [`WorkerPool::scope`]; tasks may
+/// borrow anything that outlives the `scope` call (`'env`).
+pub struct PoolScope<'env, 'pool> {
+    state: Arc<ScopeState>,
+    shared: &'pool Arc<PoolShared>,
+    _env: PhantomData<&'env mut &'env ()>,
+}
+
+impl<'env> PoolScope<'env, '_> {
+    /// Enqueue a task for the pool (the caller drains leftovers itself at
+    /// scope end, so spawning never blocks and never deadlocks).
+    pub fn spawn<F>(&self, task: F)
+    where
+        F: FnOnce() + Send + 'env,
+    {
+        let task: Box<dyn FnOnce() + Send + 'env> = Box::new(task);
+        // SAFETY: `WorkerPool::scope` does not return (or resume an
+        // unwind) before `drain_and_wait` observed every spawned task
+        // finished, so the 'env borrows captured by the task are live for
+        // the task's whole execution. The queue and scope state are
+        // private, so a task cannot escape its scope.
+        let task: Task = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Task>(task)
+        };
+        *self.state.pending.lock().unwrap() += 1;
+        self.state.queue.lock().unwrap().push_back(task);
+        self.shared.injector.lock().unwrap().push_back(Arc::clone(&self.state));
+        self.shared.work_cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn tasks_write_disjoint_borrowed_slots() {
+        let pool = WorkerPool::new(3);
+        let mut slots = vec![0usize; 8];
+        pool.scope(|s| {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                s.spawn(move || *slot = i + 1);
+            }
+        });
+        assert_eq!(slots, (1..=8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn caller_drains_when_no_worker_is_free() {
+        // One worker, parked on a long task; the scope's other tasks must
+        // still finish (the caller runs them inline).
+        let pool = WorkerPool::new(1);
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let hits = AtomicUsize::new(0);
+        pool.scope(|s| {
+            let gate2 = Arc::clone(&gate);
+            s.spawn(move || {
+                let (lock, cv) = &*gate2;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+            });
+            for _ in 0..4 {
+                s.spawn(|| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Open the gate so the parked worker task can finish too.
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn scope_returns_closure_value() {
+        let pool = WorkerPool::new(2);
+        let r = pool.scope(|s| {
+            s.spawn(|| {});
+            41 + 1
+        });
+        assert_eq!(r, 42);
+    }
+
+    #[test]
+    fn sequential_scopes_reuse_the_same_threads() {
+        let pool = WorkerPool::new(2);
+        assert_eq!(pool.workers(), 2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.scope(|s| {
+                s.spawn(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn task_panic_propagates_after_scope_completes() {
+        let pool = WorkerPool::new(1);
+        let finished = Arc::new(AtomicBool::new(false));
+        let finished2 = Arc::clone(&finished);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope(|s| {
+                s.spawn(|| panic!("boom"));
+                s.spawn(move || finished2.store(true, Ordering::SeqCst));
+            });
+        }));
+        assert!(result.is_err(), "scope must re-panic on task panic");
+        assert!(finished.load(Ordering::SeqCst), "sibling tasks still ran to completion");
+    }
+
+    #[test]
+    fn zero_requested_workers_clamps_to_one() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let mut x = 0;
+        pool.scope(|s| s.spawn(|| x = 7));
+        assert_eq!(x, 7);
+    }
+}

@@ -83,6 +83,136 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Value of `--key N` in a raw argument list (`None` when the flag is
+/// absent or its value fails to parse). Shared by the bench binaries and
+/// examples for the `--workers N` pool-sizing knob.
+pub fn arg_value(args: &[String], key: &str) -> Option<usize> {
+    args.iter()
+        .position(|a| a == key)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+}
+
+/// Parse the top level of a JSON object into `(key, raw value text)`
+/// pairs, preserving order. Both keys and values are kept verbatim —
+/// escape sequences are not interpreted, so entries round-trip
+/// byte-exactly through [`merge_bench_json`]; only the top-level
+/// structure is interpreted. Returns `None` for anything that isn't a
+/// well-formed object — callers then start a fresh file. ASCII-oriented
+/// (the bench writers only emit ASCII).
+pub fn parse_json_object(text: &str) -> Option<Vec<(String, String)>> {
+    let t = text.trim();
+    if !t.starts_with('{') || !t.ends_with('}') {
+        return None;
+    }
+    let inner = &t[1..t.len() - 1];
+    let bytes = inner.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    loop {
+        while i < bytes.len() && (bytes[i].is_ascii_whitespace() || bytes[i] == b',') {
+            i += 1;
+        }
+        if i >= bytes.len() {
+            break;
+        }
+        if bytes[i] != b'"' {
+            return None;
+        }
+        let (key, next) = scan_json_string(inner, i)?;
+        i = next;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        if i >= bytes.len() || bytes[i] != b':' {
+            return None;
+        }
+        i += 1;
+        while i < bytes.len() && bytes[i].is_ascii_whitespace() {
+            i += 1;
+        }
+        let start = i;
+        let mut depth = 0i64;
+        while i < bytes.len() {
+            match bytes[i] {
+                b'"' => {
+                    let (_, next) = scan_json_string(inner, i)?;
+                    i = next;
+                    continue;
+                }
+                b'{' | b'[' => depth += 1,
+                b'}' | b']' => {
+                    depth -= 1;
+                    if depth < 0 {
+                        return None;
+                    }
+                }
+                b',' if depth == 0 => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        if depth != 0 || i == start {
+            return None;
+        }
+        out.push((key, inner[start..i].trim().to_string()));
+    }
+    Some(out)
+}
+
+/// Scan one double-quoted JSON string starting at `start` (which must be
+/// the opening quote); returns the content **verbatim** (escape sequences
+/// preserved, not interpreted — keys round-trip byte-exactly through the
+/// merger) and the index just past the closing quote.
+fn scan_json_string(s: &str, start: usize) -> Option<(String, usize)> {
+    let bytes = s.as_bytes();
+    if bytes.get(start) != Some(&b'"') {
+        return None;
+    }
+    let mut i = start + 1;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' => {
+                bytes.get(i + 1)?;
+                i += 2;
+            }
+            b'"' => return Some((s[start + 1..i].to_string(), i + 1)),
+            _ => i += 1,
+        }
+    }
+    None
+}
+
+/// Merge `entry_json` (one section's raw JSON value) under `key` into the
+/// top-level object stored at `path`, preserving every other key — bench
+/// `--json` writers extend `BENCH_*.json` files instead of clobbering
+/// each other's sections. A missing or malformed file starts fresh.
+///
+/// Keys are matched and re-emitted **verbatim** (escape sequences in
+/// existing files are preserved byte-exactly, never re-encoded); the
+/// caller-supplied `key` must therefore contain no characters needing
+/// JSON escaping (`"` or `\`) — the bench writers use plain ASCII names.
+pub fn merge_bench_json(path: &str, key: &str, entry_json: &str) -> std::io::Result<()> {
+    debug_assert!(!key.contains(['"', '\\']), "bench section keys must not need escaping");
+    let existing = std::fs::read_to_string(path).unwrap_or_default();
+    let mut entries = parse_json_object(&existing).unwrap_or_default();
+    let trimmed = entry_json.trim().to_string();
+    if let Some(slot) = entries.iter_mut().find(|(k, _)| k == key) {
+        slot.1 = trimmed;
+    } else {
+        entries.push((key.to_string(), trimmed));
+    }
+    let mut out = String::from("{\n");
+    for (i, (k, v)) in entries.iter().enumerate() {
+        out.push_str(&format!(
+            "  \"{k}\": {v}{}\n",
+            if i + 1 == entries.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("}\n");
+    std::fs::write(path, out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +237,64 @@ mod tests {
         assert!(fmt_time(2e-3).ends_with(" ms"));
         assert!(fmt_time(2e-6).ends_with(" us"));
         assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn parse_json_object_roundtrips_sections() {
+        let text = r#"{
+  "alpha": {"x": 1, "list": [1, 2, {"y": "a,b"}]},
+  "beta": [3, 4],
+  "gamma": "str, with: punctuation}"
+}"#;
+        let entries = parse_json_object(text).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries[0].0, "alpha");
+        assert_eq!(entries[0].1, r#"{"x": 1, "list": [1, 2, {"y": "a,b"}]}"#);
+        assert_eq!(entries[1], ("beta".to_string(), "[3, 4]".to_string()));
+        assert_eq!(entries[2].1, r#""str, with: punctuation}""#);
+    }
+
+    #[test]
+    fn parse_json_object_rejects_malformed() {
+        assert!(parse_json_object("").is_none());
+        assert!(parse_json_object("not json").is_none());
+        assert!(parse_json_object(r#"{"unterminated": "#).is_none());
+        assert!(parse_json_object(r#"{"bad": ]}"#).is_none());
+        assert_eq!(parse_json_object("{}").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn escaped_keys_round_trip_verbatim() {
+        let text = "{\n  \"with \\\"quote\\\" and \\n escape\": 1,\n  \"plain\": 2\n}";
+        let entries = parse_json_object(text).unwrap();
+        assert_eq!(entries[0].0, "with \\\"quote\\\" and \\n escape");
+        assert_eq!(entries[0].1, "1");
+        // Re-emitting (as merge_bench_json does) reproduces the key
+        // byte-exactly, so escapes are never corrupted.
+        let emitted = format!("\"{}\"", entries[0].0);
+        assert_eq!(emitted, "\"with \\\"quote\\\" and \\n escape\"");
+    }
+
+    #[test]
+    fn merge_bench_json_updates_one_key_and_keeps_the_rest() {
+        let dir = std::env::temp_dir().join(format!(
+            "benchlib_merge_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let path = path.to_str().unwrap();
+        merge_bench_json(path, "first", r#"{"v": 1}"#).unwrap();
+        merge_bench_json(path, "second", "[1, 2]").unwrap();
+        merge_bench_json(path, "first", r#"{"v": 2}"#).unwrap();
+        let entries = parse_json_object(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(
+            entries,
+            vec![
+                ("first".to_string(), r#"{"v": 2}"#.to_string()),
+                ("second".to_string(), "[1, 2]".to_string()),
+            ]
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

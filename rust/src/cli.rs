@@ -78,6 +78,8 @@ COMMANDS:
              --weights DIR   use trained artifacts (default artifacts/weights)
              --config tiny|paper   model scale with random weights
              --seed N        image seed
+             --workers N     size of the persistent SDEB worker pool
+                             (default: one per encoder block)
              --serial        charge phases serially instead of executing
                              the two-core overlapped pipeline (ablation)
   accuracy   held-out accuracy: quantized simulator vs float PJRT model
@@ -87,6 +89,7 @@ COMMANDS:
              --weights DIR   --limit N
   serve      batched serving demo through the coordinator
              --workers N --requests N --backend sim|golden|pjrt --batch N
+             --pool-workers N   per-simulator SDEB worker pool size
              --serial        serial-charging simulator workers (ablation)
   sweep      lane-count parallelism sweep (ablation A2)
   help       this message

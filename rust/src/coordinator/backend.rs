@@ -63,18 +63,22 @@ impl SimulatorBackend {
     /// `n` identical worker factories for the [`Coordinator`](super::Coordinator)
     /// (each worker constructs its own simulator in-thread). Shared by the
     /// CLI `serve` command, the serving example and the e2e bench.
+    /// `pool_workers` sizes each simulator's persistent SDEB worker pool
+    /// (`0` keeps the model-derived default).
     pub fn factories(
         n: usize,
         model: &QuantizedModel,
         hw: AccelConfig,
         mode: DatapathMode,
         exec: ExecMode,
+        pool_workers: usize,
     ) -> Vec<BackendFactory> {
         (0..n)
             .map(|_| {
                 let m = model.clone();
                 Box::new(move || {
-                    Ok(Box::new(Self::with_modes(m, hw, mode, exec)) as Box<dyn InferBackend>)
+                    let accel = Accelerator::with_runtime(m, hw, mode, exec, pool_workers);
+                    Ok(Box::new(Self { accel, cycles: 0 }) as Box<dyn InferBackend>)
                 }) as BackendFactory
             })
             .collect()
@@ -90,9 +94,12 @@ impl InferBackend for SimulatorBackend {
     }
 
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
-        let mut out = Vec::with_capacity(images.len());
-        for img in images {
-            let r = self.accel.infer(img)?;
+        // Batch-level weight reuse: the whole released batch walks each
+        // pipeline stage back to back (bit-identical per-image reports;
+        // serial-mode instances fall back to per-image execution inside).
+        let reports = self.accel.infer_batch(images)?;
+        let mut out = Vec::with_capacity(reports.len());
+        for r in reports {
             self.cycles += r.wall_cycles();
             out.push(r.logits);
         }

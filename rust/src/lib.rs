@@ -25,6 +25,7 @@
 
 pub mod util;
 pub mod quant;
+pub mod scratch;
 pub mod spike;
 pub mod lif;
 pub mod hw;

@@ -67,12 +67,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     let model = get_model(args)?;
     let seed = args.usize_or("seed", 1)? as u64;
     let exec = exec_mode(args);
+    let workers = args.usize_or("workers", 0)?;
     println!(
         "model `{}`: D={} T={} blocks={} exec={exec:?}",
         model.cfg.name, model.cfg.embed_dim, model.cfg.timesteps, model.cfg.num_blocks
     );
-    let mut accel =
-        Accelerator::with_modes(model, AccelConfig::paper(), DatapathMode::Encoded, exec);
+    let mut accel = Accelerator::with_runtime(
+        model,
+        AccelConfig::paper(),
+        DatapathMode::Encoded,
+        exec,
+        workers,
+    );
     let report = accel.infer(&random_image(seed))?;
     println!("{}", report.summary());
     println!("predicted class: {}", report.argmax());
@@ -183,6 +189,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let model = get_model(args)?;
 
     let exec = exec_mode(args);
+    let pool_workers = args.usize_or("pool-workers", 0)?;
     let factories: Vec<BackendFactory> = match backend.as_str() {
         "sim" => SimulatorBackend::factories(
             workers,
@@ -190,6 +197,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             AccelConfig::paper(),
             DatapathMode::Encoded,
             exec,
+            pool_workers,
         ),
         "golden" => GoldenBackend::factories(workers, &model),
         "pjrt" => (0..workers)

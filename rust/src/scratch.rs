@@ -1,0 +1,339 @@
+//! The steady-state scratch pool (`ExecScratch`): recycled frame storage
+//! for the simulator's hot loop.
+//!
+//! Every timestep of every block used to allocate fresh [`EncodedSpikes`]
+//! arenas, [`QTensor`] outputs and SMAM mask/acc vectors, then drop them —
+//! thousands of heap round-trips per inference that have nothing to do
+//! with the modelled hardware. `ExecScratch` is a set of per-type free
+//! lists owned by the [`Accelerator`](crate::accel::Accelerator) (one per
+//! pipeline stage, so the overlapped producer and consumer threads never
+//! share one): units *take* storage, consumers *put* it back once drained,
+//! and after warm-up the hot loop performs no arena/tensor allocations at
+//! all.
+//!
+//! Determinism/bit-exactness contract: every `take_*` returns storage in
+//! exactly the state a fresh allocation would have (zeroed buffers, empty
+//! arenas of the requested geometry), so pooled and fresh execution are
+//! bit-identical by construction. The [`ScratchStats`] counters let tests
+//! assert the steady-state claim: after warm-up, `misses` stops growing.
+//!
+//! See `DESIGN.md` "Steady-state memory model" for the lifecycle rules
+//! (who takes, who puts, how tensors migrate between stage pools).
+
+use crate::quant::QTensor;
+use crate::spike::EncodedSpikes;
+
+/// Hit/miss counters of one (or a sum of) scratch pool(s).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchStats {
+    /// Takes served from the free lists (no heap object created).
+    pub hits: u64,
+    /// Takes that had to allocate a fresh object (pool was empty).
+    pub misses: u64,
+}
+
+impl ScratchStats {
+    /// Fraction of takes served from the pool (1.0 when nothing missed;
+    /// 0.0 before any take).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Combine two counters (e.g. the SPS-stage and SDEB-stage pools).
+    pub fn merged(self, other: ScratchStats) -> ScratchStats {
+        ScratchStats { hits: self.hits + other.hits, misses: self.misses + other.misses }
+    }
+}
+
+/// Per-type free lists recycling the hot loop's frame storage.
+///
+/// Single-threaded by design: the controller owns one instance per
+/// pipeline stage and hands `&mut` references down the call tree, so the
+/// overlapped executor's producer and consumer threads each mutate their
+/// own pool. Capacities only ever grow (a reused buffer keeps its largest
+/// size), so the per-request allocation count converges to zero.
+#[derive(Debug, Default)]
+pub struct ExecScratch {
+    encs: Vec<EncodedSpikes>,
+    tensors: Vec<QTensor>,
+    bufs_i32: Vec<Vec<i32>>,
+    bufs_bool: Vec<Vec<bool>>,
+    bufs_u32: Vec<Vec<u32>>,
+    bufs_u64: Vec<Vec<u64>>,
+    bufs_usize: Vec<Vec<usize>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ExecScratch {
+    /// An empty pool (everything misses until objects are put back).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Hit/miss counters so far.
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats { hits: self.hits, misses: self.misses }
+    }
+
+    /// Number of objects currently resting in the free lists (all
+    /// classes). The leak canary: between requests every object is at
+    /// rest, so a put/take imbalance anywhere in the datapath shows up as
+    /// unbounded growth of this count across warm requests.
+    pub fn pooled_objects(&self) -> usize {
+        self.encs.len()
+            + self.tensors.len()
+            + self.bufs_i32.len()
+            + self.bufs_bool.len()
+            + self.bufs_u32.len()
+            + self.bufs_u64.len()
+            + self.bufs_usize.len()
+    }
+
+    #[inline]
+    fn count(&mut self, hit: bool) {
+        if hit {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+    }
+
+    /// Take an empty `[channels, tokens]` encoded tensor, reusing a pooled
+    /// arena's capacity when one is available (`EncodedSpikes::reset`).
+    pub fn take_enc(&mut self, channels: usize, tokens: usize) -> EncodedSpikes {
+        match self.encs.pop() {
+            Some(mut e) => {
+                self.count(true);
+                e.reset(channels, tokens);
+                e
+            }
+            None => {
+                self.count(false);
+                EncodedSpikes::empty(channels, tokens)
+            }
+        }
+    }
+
+    /// Return a drained encoded tensor to the pool (its arena capacity is
+    /// kept for the next [`Self::take_enc`]).
+    pub fn put_enc(&mut self, e: EncodedSpikes) {
+        self.encs.push(e);
+    }
+
+    /// Take an all-zero tensor of `shape` at `frac` fraction bits —
+    /// bit-identical to `QTensor::zeros`, minus the allocation.
+    pub fn take_tensor(&mut self, shape: &[usize], frac: i32) -> QTensor {
+        let mut t = self.pop_tensor();
+        t.shape.clear();
+        t.shape.extend_from_slice(shape);
+        t.frac = frac;
+        let n: usize = shape.iter().product();
+        t.data.clear();
+        t.data.resize(n, 0);
+        t
+    }
+
+    /// Take a tensor holding a copy of `src` (shape, frac and values).
+    pub fn take_tensor_copy(&mut self, src: &QTensor) -> QTensor {
+        let mut t = self.pop_tensor();
+        t.shape.clear();
+        t.shape.extend_from_slice(&src.shape);
+        t.frac = src.frac;
+        t.data.clear();
+        t.data.extend_from_slice(&src.data);
+        t
+    }
+
+    fn pop_tensor(&mut self) -> QTensor {
+        match self.tensors.pop() {
+            Some(t) => {
+                self.count(true);
+                t
+            }
+            None => {
+                self.count(false);
+                QTensor { shape: Vec::new(), frac: 0, data: Vec::new() }
+            }
+        }
+    }
+
+    /// Return a tensor to the pool (both its shape and data capacity are
+    /// kept).
+    pub fn put_tensor(&mut self, t: QTensor) {
+        self.tensors.push(t);
+    }
+
+    /// Take a zeroed `Vec<i32>` of `len` (transpose/scatter buffers).
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        let hit = !self.bufs_i32.is_empty();
+        self.count(hit);
+        let mut v = self.bufs_i32.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return an i32 buffer to the pool.
+    pub fn put_i32(&mut self, v: Vec<i32>) {
+        self.bufs_i32.push(v);
+    }
+
+    /// Take an all-`false` `Vec<bool>` of `len` (SMAM masks, SMU coverage).
+    pub fn take_bool(&mut self, len: usize) -> Vec<bool> {
+        let hit = !self.bufs_bool.is_empty();
+        self.count(hit);
+        let mut v = self.bufs_bool.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, false);
+        v
+    }
+
+    /// Return a bool buffer to the pool.
+    pub fn put_bool(&mut self, v: Vec<bool>) {
+        self.bufs_bool.push(v);
+    }
+
+    /// Take a zeroed `Vec<u32>` of `len` (SMAM accumulation counts).
+    pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
+        let hit = !self.bufs_u32.is_empty();
+        self.count(hit);
+        let mut v = self.bufs_u32.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return a u32 buffer to the pool.
+    pub fn put_u32(&mut self, v: Vec<u32>) {
+        self.bufs_u32.push(v);
+    }
+
+    /// Take a zeroed `Vec<u64>` of `len` (per-head comparator tallies).
+    pub fn take_u64(&mut self, len: usize) -> Vec<u64> {
+        let hit = !self.bufs_u64.is_empty();
+        self.count(hit);
+        let mut v = self.bufs_u64.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0);
+        v
+    }
+
+    /// Return a u64 buffer to the pool.
+    pub fn put_u64(&mut self, v: Vec<u64>) {
+        self.bufs_u64.push(v);
+    }
+
+    /// Take an empty `Vec<usize>` with pooled capacity (SMU window lists).
+    pub fn take_usize(&mut self) -> Vec<usize> {
+        let hit = !self.bufs_usize.is_empty();
+        self.count(hit);
+        let mut v = self.bufs_usize.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    /// Return a usize buffer to the pool.
+    pub fn put_usize(&mut self, v: Vec<usize>) {
+        self.bufs_usize.push(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::ACT_FRAC;
+
+    #[test]
+    fn take_tensor_matches_fresh_zeros() {
+        let mut s = ExecScratch::new();
+        let t = s.take_tensor(&[2, 3], ACT_FRAC);
+        assert_eq!(t, QTensor::zeros(&[2, 3], ACT_FRAC));
+        assert_eq!(s.stats(), ScratchStats { hits: 0, misses: 1 });
+    }
+
+    #[test]
+    fn put_then_take_is_a_hit_and_state_is_fresh() {
+        let mut s = ExecScratch::new();
+        let mut t = s.take_tensor(&[4], 0);
+        t.data[2] = 99; // dirty it
+        s.put_tensor(t);
+        let t2 = s.take_tensor(&[2, 2], 5);
+        assert_eq!(t2, QTensor::zeros(&[2, 2], 5), "reused tensor must be zeroed");
+        assert_eq!(s.stats(), ScratchStats { hits: 1, misses: 1 });
+        assert!((s.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn take_tensor_copy_duplicates_source() {
+        let mut s = ExecScratch::new();
+        let src = QTensor { shape: vec![3], frac: 2, data: vec![1, -2, 3] };
+        let t = s.take_tensor_copy(&src);
+        assert_eq!(t, src);
+    }
+
+    #[test]
+    fn enc_pool_reuses_arena_as_empty() {
+        let mut s = ExecScratch::new();
+        let mut e = s.take_enc(2, 16);
+        e.push(0, 3);
+        e.push(1, 7);
+        s.put_enc(e);
+        let e2 = s.take_enc(3, 8);
+        assert_eq!(e2, EncodedSpikes::empty(3, 8), "reused arena must be empty");
+        assert!(e2.is_well_formed());
+        assert_eq!(s.stats().hits, 1);
+    }
+
+    #[test]
+    fn plain_buffers_come_back_zeroed() {
+        let mut s = ExecScratch::new();
+        let mut b = s.take_bool(4);
+        b[1] = true;
+        s.put_bool(b);
+        assert_eq!(s.take_bool(6), vec![false; 6]);
+        let mut u = s.take_u32(2);
+        u[0] = 7;
+        s.put_u32(u);
+        assert_eq!(s.take_u32(3), vec![0u32; 3]);
+        let mut i = s.take_i32(2);
+        i[0] = -1;
+        s.put_i32(i);
+        assert_eq!(s.take_i32(5), vec![0i32; 5]);
+        let mut w = s.take_u64(2);
+        w[1] = 9;
+        s.put_u64(w);
+        assert_eq!(s.take_u64(2), vec![0u64; 2]);
+    }
+
+    #[test]
+    fn steady_state_stops_missing() {
+        let mut s = ExecScratch::new();
+        // Warm-up: one take per class.
+        let t = s.take_tensor(&[8], 0);
+        let e = s.take_enc(4, 16);
+        s.put_tensor(t);
+        s.put_enc(e);
+        let warm = s.stats();
+        for _ in 0..10 {
+            let t = s.take_tensor(&[8], 0);
+            let e = s.take_enc(4, 16);
+            s.put_tensor(t);
+            s.put_enc(e);
+        }
+        assert_eq!(s.stats().misses, warm.misses, "steady state must not allocate");
+        assert_eq!(s.stats().hits, warm.hits + 20);
+    }
+
+    #[test]
+    fn merged_stats_sum() {
+        let a = ScratchStats { hits: 3, misses: 1 };
+        let b = ScratchStats { hits: 2, misses: 2 };
+        assert_eq!(a.merged(b), ScratchStats { hits: 5, misses: 3 });
+    }
+}

@@ -281,6 +281,32 @@ impl EncodedSpikes {
         self.seg_headers[c] += src.seg_headers[src_c];
     }
 
+    /// Drop every spike in place, keeping the `[channels, tokens]` geometry
+    /// AND every allocation (arena, offset table, header counts) — a
+    /// drained arena keeps its capacity for the next producer. The scratch
+    /// pool's same-geometry reuse primitive ([`Self::reset`] layers the
+    /// reshape on top); equivalent to `*self = Self::empty(..)` minus the
+    /// heap round-trip.
+    pub fn clear_reuse(&mut self) {
+        self.addrs.clear();
+        self.offsets.fill(0);
+        self.seg_headers.fill(0);
+        self.cur = 0;
+    }
+
+    /// Reset to an empty `[channels, tokens]` tensor, reusing the existing
+    /// allocations (the tables only reallocate if `channels` grows past
+    /// their capacity). Bit-identical to [`Self::empty`] afterwards; this
+    /// is what `ExecScratch::take_enc` calls on a pooled arena.
+    pub fn reset(&mut self, channels: usize, tokens: usize) {
+        assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16");
+        self.channels = channels;
+        self.tokens = tokens;
+        self.offsets.resize(channels + 1, 0);
+        self.seg_headers.resize(channels, 0);
+        self.clear_reuse();
+    }
+
     /// Number of 8-bit words the ESS stores for this tensor, including one
     /// segment-header word per non-empty 256-token segment of each channel
     /// (how 8-bit addresses cover token spaces > 256; DESIGN.md). O(channels):
@@ -515,6 +541,38 @@ mod tests {
         let mut enc = EncodedSpikes::empty(1, 16);
         enc.push(0, 5);
         enc.push(0, 3);
+    }
+
+    #[test]
+    fn clear_reuse_restores_empty_state() {
+        let mut rng = Prng::new(5);
+        let m = random_bitmap(&mut rng, 4, 40, 0.4);
+        let mut enc = EncodedSpikes::from_bitmap(&m);
+        enc.clear_reuse();
+        assert_eq!(enc, EncodedSpikes::empty(4, 40));
+        assert!(enc.is_well_formed());
+        assert_eq!(enc.storage_words(), 0);
+        // A cleared arena accepts a fresh build identical to from-scratch.
+        enc.push(1, 3);
+        enc.push(1, 9);
+        assert_eq!(enc.channel_addrs(1), &[3u16, 9][..]);
+        assert!(enc.is_well_formed());
+    }
+
+    #[test]
+    fn reset_reshapes_and_empties() {
+        let mut rng = Prng::new(6);
+        let m = random_bitmap(&mut rng, 8, 300, 0.3);
+        let mut enc = EncodedSpikes::from_bitmap(&m);
+        enc.reset(3, 64);
+        assert_eq!(enc, EncodedSpikes::empty(3, 64));
+        assert!(enc.is_well_formed());
+        // Growing the channel count also works (tables resize).
+        enc.reset(16, 128);
+        assert_eq!(enc, EncodedSpikes::empty(16, 128));
+        enc.push(15, 100);
+        assert!(enc.is_well_formed());
+        assert_eq!(enc.storage_words(), 2); // 1 address + 1 segment header
     }
 
     #[test]

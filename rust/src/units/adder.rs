@@ -7,6 +7,7 @@
 
 use crate::hw::{AccelConfig, UnitStats};
 use crate::quant::{sat, QTensor, ACT_FRAC, MEM_BITS};
+use crate::scratch::ExecScratch;
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
@@ -21,10 +22,22 @@ impl AdderModule {
     }
 
     /// Elementwise saturating add of two tensors in the same format.
+    /// Allocates the output; the hot loop uses [`Self::add_into`].
     pub fn add(&self, a: &QTensor, b: &QTensor, cfg: &AccelConfig) -> (QTensor, UnitStats) {
+        self.add_into(a, b, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::add`] with the output tensor recycled through `scratch`.
+    pub fn add_into(
+        &self,
+        a: &QTensor,
+        b: &QTensor,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (QTensor, UnitStats) {
         assert_eq!(a.shape, b.shape, "adder shape mismatch");
         assert_eq!(a.frac, b.frac, "adder frac mismatch");
-        let mut out = QTensor::zeros(&a.shape, a.frac);
+        let mut out = scratch.take_tensor(&a.shape, a.frac);
         for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
             *o = sat(x as i64 + y as i64, MEM_BITS);
         }
@@ -42,16 +55,29 @@ impl AdderModule {
     /// value + spike residual: adds 1.0 (in activation format) at every
     /// encoded spike position. `values` is `[C, L]` row-major; `spikes`
     /// is the `[C, L]` encoded tensor. Touches only spike positions.
+    /// Allocates the output; the hot loop uses [`Self::add_spikes_into`].
     pub fn add_spikes(
         &self,
         values: &QTensor,
         spikes: &EncodedSpikes,
         cfg: &AccelConfig,
     ) -> (QTensor, UnitStats) {
+        self.add_spikes_into(values, spikes, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::add_spikes`] with the output tensor recycled through
+    /// `scratch`.
+    pub fn add_spikes_into(
+        &self,
+        values: &QTensor,
+        spikes: &EncodedSpikes,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (QTensor, UnitStats) {
         assert_eq!(values.shape, vec![spikes.channels, spikes.tokens]);
         assert_eq!(values.frac, ACT_FRAC);
         let one = 1i64 << ACT_FRAC;
-        let mut out = values.clone();
+        let mut out = scratch.take_tensor_copy(values);
         let mut n_spikes: u64 = 0;
         for c in 0..spikes.channels {
             let list = spikes.channel_addrs(c);

@@ -9,6 +9,7 @@
 
 use crate::hw::{AccelConfig, UnitStats};
 use crate::lif::{LifArray, LifParams};
+use crate::scratch::ExecScratch;
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
@@ -35,9 +36,22 @@ impl SpikeEncodingArray {
 
     /// Encode one timestep of spatial input (`[C, L]` row-major, activation
     /// format). Returns the encoded spikes and the cycle/op record.
+    ///
+    /// Allocates a fresh arena; the hot loop uses [`Self::encode_into`].
     pub fn encode(&mut self, spa: &[i32], cfg: &AccelConfig) -> (EncodedSpikes, UnitStats) {
+        self.encode_into(spa, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::encode`] writing into a recycled arena from `scratch`
+    /// (bit-identical output; no allocation once the pool is warm).
+    pub fn encode_into(
+        &mut self,
+        spa: &[i32],
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (EncodedSpikes, UnitStats) {
         assert_eq!(spa.len(), self.channels * self.tokens);
-        let mut enc = EncodedSpikes::empty(self.channels, self.tokens);
+        let mut enc = scratch.take_enc(self.channels, self.tokens);
         for c in 0..self.channels {
             for l in 0..self.tokens {
                 let idx = c * self.tokens + l;

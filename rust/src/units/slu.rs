@@ -10,6 +10,7 @@
 
 use crate::hw::{AccelConfig, UnitStats};
 use crate::quant::{QFormat, QTensor, QuantizedLinear, SaturationTruncation, ACT_FRAC, MEM_BITS};
+use crate::scratch::ExecScratch;
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
@@ -32,11 +33,25 @@ impl SpikeLinearUnit {
     ///
     /// `x` is `[C_in, L]` encoded; returns `[L, C_out]` in the wide
     /// activation format (input for the next LIF / residual adder).
+    /// Allocates the output tensor; the hot loop uses
+    /// [`Self::forward_into`].
     pub fn forward(
         &mut self,
         x: &EncodedSpikes,
         layer: &QuantizedLinear,
         cfg: &AccelConfig,
+    ) -> (QTensor, UnitStats) {
+        self.forward_into(x, layer, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::forward`] with the output tensor recycled through `scratch`
+    /// (bit-identical output).
+    pub fn forward_into(
+        &mut self,
+        x: &EncodedSpikes,
+        layer: &QuantizedLinear,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
     ) -> (QTensor, UnitStats) {
         assert_eq!(x.channels, layer.in_dim, "SLU input channel mismatch");
         let l = x.tokens;
@@ -71,7 +86,7 @@ impl SpikeLinearUnit {
         // Saturation-truncation into the wide activation format.
         let out_fmt = QFormat::new(MEM_BITS, ACT_FRAC);
         let shift = layer.acc_frac();
-        let mut out = QTensor::zeros(&[l, n_out], ACT_FRAC);
+        let mut out = scratch.take_tensor(&[l, n_out], ACT_FRAC);
         let sat = &mut self.sat;
         for (o, &a) in out.data.iter_mut().zip(self.acc.iter()) {
             *o = sat.convert(a, shift, out_fmt);
@@ -109,15 +124,29 @@ impl SpikeLinearUnit {
 
     /// Bitmap baseline: reads every input position, checks for a spike,
     /// then accumulates — what a conventional SNN accelerator without
-    /// position encoding does (ablation A1).
+    /// position encoding does (ablation A1). The per-position cost is
+    /// charged in the stats only; no host-side bitmap is materialized
+    /// (the values are position-independent, so the encoded forward pass
+    /// already computes them).
     pub fn forward_bitmap_baseline(
         &mut self,
         x: &EncodedSpikes,
         layer: &QuantizedLinear,
         cfg: &AccelConfig,
     ) -> (QTensor, UnitStats) {
-        let bitmap = x.to_bitmap();
-        let (out, mut stats) = self.forward(x, layer, cfg);
+        self.forward_bitmap_baseline_into(x, layer, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::forward_bitmap_baseline`] with the output tensor recycled
+    /// through `scratch`.
+    pub fn forward_bitmap_baseline_into(
+        &mut self,
+        x: &EncodedSpikes,
+        layer: &QuantizedLinear,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (QTensor, UnitStats) {
+        let (out, mut stats) = self.forward_into(x, layer, cfg, scratch);
         // Same values; different cost: every position costs a read + a
         // zero-check before the (sparse) accumulation work.
         let positions = (x.channels * x.tokens) as u64;
@@ -125,7 +154,6 @@ impl SpikeLinearUnit {
         stats.sram_reads = positions + stats.sops;
         stats.cycles = div_ceil(positions, cfg.lanes as u64)
             + div_ceil(stats.sops, cfg.lanes as u64).max(1);
-        let _ = bitmap;
         (out, stats)
     }
 }

@@ -16,7 +16,9 @@
 
 use std::ops::Range;
 
+use crate::accel::workers::WorkerPool;
 use crate::hw::{AccelConfig, UnitStats};
+use crate::scratch::ExecScratch;
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
@@ -63,19 +65,16 @@ pub struct SpikeMaskAddModule {
     pub v_th: u32,
 }
 
-/// Per-head partial result produced by one core's comparator array.
-struct HeadResult {
+/// One head's disjoint slice of the SDSA output, ready to dispatch to a
+/// comparator array: the channel range plus `&mut` windows into the
+/// shared mask/acc vectors and this head's comparator tally
+/// (`tally[0]` = comparator steps, `tally[1]` = address matches).
+struct HeadJob<'a> {
     range: Range<usize>,
-    mask: Vec<bool>,
-    acc: Vec<u32>,
-    steps: u64,
-    matches: u64,
+    mask: &'a mut [bool],
+    acc: &'a mut [u32],
+    tally: &'a mut [u64],
 }
-
-/// Below this many Q+K spikes the merge-join is too small to amortise
-/// spawning per-core worker threads; the cores are then walked
-/// sequentially (bit-identical results, same cycle accounting).
-const SHARD_SPAWN_MIN_SPIKES: usize = 4096;
 
 /// Result of an SDSA pass.
 #[derive(Clone, Debug)]
@@ -119,29 +118,21 @@ impl SpikeMaskAddModule {
         self.run_sharded(q, k, v, cfg, HeadShard::serial())
     }
 
-    /// Two-pointer merge-join of Q and K over one contiguous channel
-    /// range: per-channel intersection counts, fire decisions, and the
-    /// comparator-step/match totals for that range.
-    fn intersect_range(
-        &self,
-        q: &EncodedSpikes,
-        k: &EncodedSpikes,
-        range: Range<usize>,
-    ) -> (Vec<bool>, Vec<u32>, u64, u64) {
-        let mut mask = vec![false; range.len()];
-        let mut acc = vec![0u32; range.len()];
-        let mut steps: u64 = 0;
-        let mut matches: u64 = 0;
-        for (slot, ch) in range.enumerate() {
+    /// Two-pointer merge-join of Q and K over one head's contiguous
+    /// channel range, writing fire decisions, intersection counts and the
+    /// comparator-step/match tallies straight into the job's disjoint
+    /// output slices (no per-head heap storage).
+    fn intersect_head(&self, q: &EncodedSpikes, k: &EncodedSpikes, job: &mut HeadJob<'_>) {
+        for (slot, ch) in job.range.clone().enumerate() {
             let (ql, kl) = (q.channel_addrs(ch), k.channel_addrs(ch));
             let (mut i, mut j) = (0usize, 0usize);
             let mut count = 0u32;
             while i < ql.len() && j < kl.len() {
-                steps += 1;
+                job.tally[0] += 1;
                 match ql[i].cmp(&kl[j]) {
                     std::cmp::Ordering::Equal => {
                         count += 1;
-                        matches += 1;
+                        job.tally[1] += 1;
                         i += 1;
                         j += 1;
                     }
@@ -149,14 +140,32 @@ impl SpikeMaskAddModule {
                     std::cmp::Ordering::Greater => j += 1,
                 }
             }
-            acc[slot] = count;
-            mask[slot] = count >= self.v_th;
+            job.acc[slot] = count;
+            job.mask[slot] = count >= self.v_th;
         }
-        (mask, acc, steps, matches)
     }
 
     /// Run SDSA with attention heads sharded across SDEB-core comparator
     /// arrays (the overlapped executor's default path).
+    ///
+    /// Allocates its outputs and walks the cores sequentially on the
+    /// calling thread; the hot loop uses [`Self::run_sharded_into`] with
+    /// the persistent [`WorkerPool`]. Results and accounting are
+    /// identical either way.
+    pub fn run_sharded(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        cfg: &AccelConfig,
+        shard: HeadShard,
+    ) -> (SmamOutput, UnitStats) {
+        self.run_sharded_into(q, k, v, cfg, shard, None, &mut ExecScratch::new())
+    }
+
+    /// Run SDSA with attention heads sharded across SDEB-core comparator
+    /// arrays, with output storage recycled through `scratch` and the
+    /// per-core head batches dispatched on `pool` when one is given.
     ///
     /// Head `h` (a contiguous channel range, [`HeadShard::head_channels`])
     /// is assigned to core `h % cores`. Each core streams its heads back
@@ -166,93 +175,122 @@ impl SpikeMaskAddModule {
     /// the serial single-array cost), and the phase finishes when the
     /// busiest core does (cycles = max over cores) while op counts (SOPs,
     /// adds, compares, SRAM traffic) sum over all heads. Outputs are
-    /// bit-identical to the serial path because the mask is channel-local;
-    /// with `heads == cores == 1` the accounting is the serial formula.
-    /// Cores run on real host threads when the workload is large enough
-    /// to amortise the spawn (`SHARD_SPAWN_MIN_SPIKES`); results and
-    /// accounting are identical either way.
-    pub fn run_sharded(
+    /// bit-identical to the serial path because the mask is channel-local:
+    /// every head writes a disjoint slice of the output, so values and
+    /// accounting do not depend on which thread ran which core. With
+    /// `heads == cores == 1` the accounting is the serial formula.
+    ///
+    /// `pool: Some(_)` hands the non-first cores to the persistent worker
+    /// pool (no thread spawn; if every worker is busy the caller runs
+    /// them inline at scope end); `None` walks all cores on the calling
+    /// thread.
+    pub fn run_sharded_into(
         &self,
         q: &EncodedSpikes,
         k: &EncodedSpikes,
         v: &EncodedSpikes,
         cfg: &AccelConfig,
         shard: HeadShard,
+        pool: Option<&WorkerPool>,
+        scratch: &mut ExecScratch,
     ) -> (SmamOutput, UnitStats) {
         Self::check_shapes(q, k, v);
         let c = q.channels;
         let heads = shard.heads.max(1).min(c.max(1));
         let cores = shard.cores.max(1).min(heads);
         let comps = cfg.smam_comparators as u64;
+        // Spike counts read once up front (dispatch used to re-count them
+        // for the spawn decision and again for the stats).
+        let q_spikes = q.count_spikes() as u64;
+        let k_spikes = k.count_spikes() as u64;
 
-        // One core's serial pass over its assigned heads.
-        let run_core = |core: usize| -> Vec<(usize, HeadResult)> {
-            let mut out = Vec::new();
-            let mut h = core;
-            while h < heads {
+        let mut mask = scratch.take_bool(c);
+        let mut acc = scratch.take_u32(c);
+        // Interleaved per-head [steps, matches] tallies.
+        let mut head_tally = scratch.take_u64(2 * heads);
+
+        {
+            // Carve the shared outputs into disjoint per-head jobs; heads
+            // partition the channel range contiguously and in order.
+            let mut jobs: Vec<HeadJob<'_>> = Vec::with_capacity(heads);
+            let mut mask_rest = &mut mask[..];
+            let mut acc_rest = &mut acc[..];
+            for (h, tally) in head_tally.chunks_mut(2).enumerate() {
                 let range = HeadShard::head_channels(h, heads, c);
-                let (mask, acc, steps, matches) = self.intersect_range(q, k, range.clone());
-                out.push((h, HeadResult { range, mask, acc, steps, matches }));
-                h += cores;
+                let (m, rest) = std::mem::take(&mut mask_rest).split_at_mut(range.len());
+                mask_rest = rest;
+                let (a, rest) = std::mem::take(&mut acc_rest).split_at_mut(range.len());
+                acc_rest = rest;
+                jobs.push(HeadJob { range, mask: m, acc: a, tally });
             }
-            out
-        };
+            let mut per_core: Vec<Vec<HeadJob<'_>>> = (0..cores).map(|_| Vec::new()).collect();
+            for (h, job) in jobs.into_iter().enumerate() {
+                per_core[h % cores].push(job);
+            }
 
-        let mut per_head: Vec<Option<HeadResult>> = (0..heads).map(|_| None).collect();
-        let spawn = cores > 1 && q.count_spikes() + k.count_spikes() >= SHARD_SPAWN_MIN_SPIKES;
-        if spawn {
-            std::thread::scope(|s| {
-                let run_core = &run_core;
-                let handles: Vec<_> =
-                    (0..cores).map(|core| s.spawn(move || run_core(core))).collect();
-                for handle in handles {
-                    for (h, r) in handle.join().expect("SMAM head-shard worker panicked") {
-                        per_head[h] = Some(r);
+            let me = *self;
+            match pool {
+                Some(pool) if cores > 1 => {
+                    let mut rest = per_core.into_iter();
+                    let mut own = rest.next().expect("at least one core");
+                    pool.scope(|s| {
+                        for mut core_jobs in rest {
+                            s.spawn(move || {
+                                for job in &mut core_jobs {
+                                    me.intersect_head(q, k, job);
+                                }
+                            });
+                        }
+                        // Core 0 runs on the calling thread.
+                        for job in &mut own {
+                            me.intersect_head(q, k, job);
+                        }
+                    });
+                }
+                _ => {
+                    for mut core_jobs in per_core {
+                        for job in &mut core_jobs {
+                            me.intersect_head(q, k, job);
+                        }
                     }
                 }
-            });
-        } else {
-            for core in 0..cores {
-                for (h, r) in run_core(core) {
-                    per_head[h] = Some(r);
-                }
             }
         }
 
-        // Deterministic merge in head (== channel) order.
-        let mut mask = vec![false; c];
-        let mut acc = vec![0u32; c];
-        let mut core_steps = vec![0u64; cores];
-        let mut core_channels = vec![0u64; cores];
+        // Deterministic merge in head (== channel) order; cycles are the
+        // busiest core's total. Per-core cost: its comparator steps spread
+        // over its array, plus one threshold compare per assigned channel
+        // (Fig. 4(b)). With one core this is exactly the serial
+        // single-array formula, and a core's cost never exceeds it (its
+        // steps/channels are subsets).
         let (mut steps, mut matches) = (0u64, 0u64);
-        for (h, slot) in per_head.into_iter().enumerate() {
-            let r = slot.expect("every head computed");
-            mask[r.range.clone()].copy_from_slice(&r.mask);
-            acc[r.range.clone()].copy_from_slice(&r.acc);
-            steps += r.steps;
-            matches += r.matches;
-            core_steps[h % cores] += r.steps;
-            core_channels[h % cores] += r.range.len() as u64;
+        for h in 0..heads {
+            steps += head_tally[2 * h];
+            matches += head_tally[2 * h + 1];
         }
-        let mut masked_v = EncodedSpikes::empty(v.channels, v.tokens);
+        let mut cycles = 0u64;
+        for core in 0..cores {
+            let (mut core_steps, mut core_channels) = (0u64, 0u64);
+            let mut h = core;
+            while h < heads {
+                core_steps += head_tally[2 * h];
+                core_channels += HeadShard::head_channels(h, heads, c).len() as u64;
+                h += cores;
+            }
+            cycles = cycles.max(div_ceil(core_steps, comps).max(1) + div_ceil(core_channels, comps));
+        }
+        scratch.put_u64(head_tally);
+
+        let mut masked_v = scratch.take_enc(v.channels, v.tokens);
         for ch in 0..c {
             if mask[ch] {
                 masked_v.extend_channel_from(ch, v, ch);
             }
         }
 
-        // Per-core cost: its comparator steps spread over its array, plus
-        // one threshold compare per assigned channel (Fig. 4(b)). With one
-        // core this is exactly the serial single-array formula, and a
-        // core's cost never exceeds it (its steps/channels are subsets).
-        let core_cycles = |i: usize| -> u64 {
-            div_ceil(core_steps[i], comps).max(1) + div_ceil(core_channels[i], comps)
-        };
-        let q_spikes = q.count_spikes() as u64;
-        let k_spikes = k.count_spikes() as u64;
         let retained = masked_v.count_spikes() as u64;
         let stats = UnitStats {
-            cycles: (0..cores).map(core_cycles).max().unwrap_or(1),
+            cycles,
             // SOPs: every Q/K spike traverses the comparator once; every
             // retained V spike traverses the mask gate.
             sops: q_spikes + k_spikes + retained,
@@ -266,6 +304,8 @@ impl SpikeMaskAddModule {
     }
 
     /// Dense bitmap baseline: walks all C*L Hadamard positions (ablation A1).
+    /// Allocates its outputs; the bitmap-mode hot loop uses
+    /// [`Self::run_dense_baseline_into`].
     pub fn run_dense_baseline(
         &self,
         q: &EncodedSpikes,
@@ -273,13 +313,27 @@ impl SpikeMaskAddModule {
         v: &EncodedSpikes,
         cfg: &AccelConfig,
     ) -> (SmamOutput, UnitStats) {
+        self.run_dense_baseline_into(q, k, v, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::run_dense_baseline`] with the output storage recycled
+    /// through `scratch`, so a long-lived bitmap-mode accelerator keeps
+    /// the same take/put balance as the encoded datapath.
+    pub fn run_dense_baseline_into(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (SmamOutput, UnitStats) {
         Self::check_shapes(q, k, v);
         let (qb, kb) = (q.to_bitmap(), k.to_bitmap());
         let c = q.channels;
         let l = q.tokens;
-        let mut mask = vec![false; c];
-        let mut acc = vec![0u32; c];
-        let mut masked_v = EncodedSpikes::empty(v.channels, v.tokens);
+        let mut mask = scratch.take_bool(c);
+        let mut acc = scratch.take_u32(c);
+        let mut masked_v = scratch.take_enc(v.channels, v.tokens);
         for ch in 0..c {
             let mut count = 0u32;
             for t in 0..l {
@@ -442,6 +496,41 @@ mod tests {
             assert_eq!(st.adds, s_serial.adds, "{shard:?}");
             assert_eq!(st.cmps, s_serial.cmps, "{shard:?}");
         }
+    }
+
+    #[test]
+    fn pool_dispatch_bit_identical_with_recycled_scratch() {
+        let mut rng = Prng::new(24);
+        let cfg = AccelConfig::paper();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 384, 64, 0.3);
+        let k = random_encoded(&mut rng, 384, 64, 0.3);
+        let v = random_encoded(&mut rng, 384, 64, 0.3);
+        let shard = HeadShard { heads: 8, cores: 4 };
+        let (want, want_stats) = smam.run_sharded(&q, &k, &v, &cfg, shard);
+        let pool = WorkerPool::new(3);
+        let mut scratch = ExecScratch::new();
+        let mut warm_misses = 0;
+        for round in 0..3 {
+            let (out, stats) =
+                smam.run_sharded_into(&q, &k, &v, &cfg, shard, Some(&pool), &mut scratch);
+            assert_eq!(out.mask, want.mask, "round {round}");
+            assert_eq!(out.acc, want.acc, "round {round}");
+            assert_eq!(out.masked_v, want.masked_v, "round {round}");
+            assert_eq!(stats, want_stats, "round {round}");
+            // Hand the outputs back, as the SDEB core does.
+            scratch.put_bool(out.mask);
+            scratch.put_u32(out.acc);
+            scratch.put_enc(out.masked_v);
+            if round == 0 {
+                warm_misses = scratch.stats().misses;
+            }
+        }
+        assert_eq!(
+            scratch.stats().misses,
+            warm_misses,
+            "warm SDSA passes must not allocate scratch objects"
+        );
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //! as the redundancy-elimination baseline (ablation A1).
 
 use crate::hw::{AccelConfig, UnitStats};
+use crate::scratch::ExecScratch;
 use crate::spike::{EncodedSpikes, TokenGrid};
 use crate::util::div_ceil;
 
@@ -30,17 +31,32 @@ impl SpikeMaxpoolUnit {
     }
 
     /// Pool `input` (addresses on `grid`) to the pooled grid.
+    ///
+    /// Allocates fresh output storage; the hot loop uses
+    /// [`Self::pool_into`].
     pub fn pool(
         &self,
         input: &EncodedSpikes,
         grid: TokenGrid,
         cfg: &AccelConfig,
     ) -> (EncodedSpikes, UnitStats) {
+        self.pool_into(input, grid, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::pool`] with the output arena and coverage buffers recycled
+    /// through `scratch` (bit-identical output).
+    pub fn pool_into(
+        &self,
+        input: &EncodedSpikes,
+        grid: TokenGrid,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (EncodedSpikes, UnitStats) {
         assert_eq!(input.tokens, grid.tokens(), "grid/token mismatch");
         let out_grid = grid.pooled(self.kernel, self.stride);
-        let mut out = EncodedSpikes::empty(input.channels, out_grid.tokens());
-        let mut covered = vec![false; out_grid.tokens()];
-        let mut cover_buf = Vec::with_capacity(self.kernel * self.kernel);
+        let mut out = scratch.take_enc(input.channels, out_grid.tokens());
+        let mut covered = scratch.take_bool(out_grid.tokens());
+        let mut cover_buf = scratch.take_usize();
         let mut or_ops: u64 = 0;
 
         for c in 0..input.channels {
@@ -75,20 +91,36 @@ impl SpikeMaxpoolUnit {
             sram_writes: out.storage_words() as u64,
             ..Default::default()
         };
+        scratch.put_bool(covered);
+        scratch.put_usize(cover_buf);
         (out, stats)
     }
 
     /// Conventional dense maxpool on a binary bitmap (baseline): every
-    /// window position compares all kernel*kernel values.
+    /// window position compares all kernel*kernel values. Allocates the
+    /// output; the bitmap-mode hot loop uses
+    /// [`Self::pool_dense_baseline_into`].
     pub fn pool_dense_baseline(
         &self,
         input: &EncodedSpikes,
         grid: TokenGrid,
         cfg: &AccelConfig,
     ) -> (EncodedSpikes, UnitStats) {
+        self.pool_dense_baseline_into(input, grid, cfg, &mut ExecScratch::new())
+    }
+
+    /// [`Self::pool_dense_baseline`] with the output arena recycled
+    /// through `scratch` (keeps bitmap-mode take/put balance).
+    pub fn pool_dense_baseline_into(
+        &self,
+        input: &EncodedSpikes,
+        grid: TokenGrid,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (EncodedSpikes, UnitStats) {
         let bitmap = input.to_bitmap();
         let out_grid = grid.pooled(self.kernel, self.stride);
-        let mut out = EncodedSpikes::empty(input.channels, out_grid.tokens());
+        let mut out = scratch.take_enc(input.channels, out_grid.tokens());
         let mut cmps: u64 = 0;
         for c in 0..input.channels {
             for oy in 0..out_grid.height {

@@ -7,6 +7,7 @@
 
 use crate::hw::{AccelConfig, UnitStats};
 use crate::quant::{quantize_bias, quantize_weights, QFormat, QTensor, SaturationTruncation, ACT_FRAC, MEM_BITS};
+use crate::scratch::ExecScratch;
 use crate::util::div_ceil;
 
 /// A BN-folded, quantized 3x3 (or kxk) SAME convolution.
@@ -87,6 +88,7 @@ impl TileEngine {
     ///
     /// `spike_input` marks binary inputs: MACs degenerate to adds and SOPs
     /// are counted as spikes x fan-out, matching the SOP definition.
+    /// Allocates the output; the hot loop uses [`Self::conv2d_into`].
     pub fn conv2d(
         &mut self,
         input: &QTensor,
@@ -94,13 +96,26 @@ impl TileEngine {
         cfg: &AccelConfig,
         spike_input: bool,
     ) -> (QTensor, UnitStats) {
+        self.conv2d_into(input, conv, cfg, spike_input, &mut ExecScratch::new())
+    }
+
+    /// [`Self::conv2d`] with the output tensor recycled through `scratch`
+    /// (bit-identical output).
+    pub fn conv2d_into(
+        &mut self,
+        input: &QTensor,
+        conv: &QuantizedConv,
+        cfg: &AccelConfig,
+        spike_input: bool,
+        scratch: &mut ExecScratch,
+    ) -> (QTensor, UnitStats) {
         assert_eq!(input.shape.len(), 3, "expect [C,H,W]");
         let (c_in, h, w) = (input.shape[0], input.shape[1], input.shape[2]);
         assert_eq!(c_in, conv.c_in, "conv input channel mismatch");
         assert_eq!(input.frac, conv.in_frac, "input frac mismatch");
         let (ph, pw) = (conv.kh / 2, conv.kw / 2);
 
-        let mut out = QTensor::zeros(&[conv.c_out, h, w], ACT_FRAC);
+        let mut out = scratch.take_tensor(&[conv.c_out, h, w], ACT_FRAC);
         let out_fmt = QFormat::new(MEM_BITS, ACT_FRAC);
         let mut nonzero_inputs: u64 = 0;
 

@@ -1,0 +1,234 @@
+//! Steady-state runtime invariants: the persistent worker pool, the
+//! recycled scratch pools and the batched forward change *host*
+//! performance only. Logits, `UnitStats`, phase breakdowns and executed
+//! pipeline schedules must be bit-identical to a fresh accelerator
+//! running one request per call — the classic reuse bug this guards
+//! against is a stale arena or membrane leaking into the next inference.
+
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn random_image(rng: &mut Prng) -> Vec<f32> {
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+/// A config that exercises head sharding (8 heads over 2 SDEB cores) and
+/// odd timestep parity, at test-friendly scale.
+fn sharded_cfg() -> SdtModelConfig {
+    SdtModelConfig {
+        name: "steady-test".into(),
+        timesteps: 3,
+        num_blocks: 2,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    }
+}
+
+/// Every report field the steady-state work must not perturb.
+fn assert_reports_identical(
+    got: &spikeformer_accel::accel::RunReport,
+    want: &spikeformer_accel::accel::RunReport,
+    ctx: &str,
+) {
+    assert_eq!(got.logits, want.logits, "{ctx}: logits");
+    assert_eq!(got.total, want.total, "{ctx}: total UnitStats");
+    assert_eq!(got.phases.phases, want.phases.phases, "{ctx}: phase breakdown");
+    assert_eq!(got.wall_cycles(), want.wall_cycles(), "{ctx}: wall cycles");
+    match (&got.pipeline, &want.pipeline) {
+        (Some(a), Some(b)) => {
+            assert_eq!(a.sps_per_timestep, b.sps_per_timestep, "{ctx}: sps trace");
+            assert_eq!(a.sdeb_per_timestep, b.sdeb_per_timestep, "{ctx}: sdeb trace");
+            assert_eq!(a.executed_cycles, b.executed_cycles, "{ctx}: executed cycles");
+            assert_eq!(a.serialized_cycles, b.serialized_cycles, "{ctx}: serialized cycles");
+        }
+        (None, None) => {}
+        _ => panic!("{ctx}: pipeline record presence differs"),
+    }
+}
+
+/// Satellite: randomized request sequences through ONE pooled accelerator
+/// must be bit-identical to a fresh accelerator per request.
+#[test]
+fn pooled_accelerator_matches_fresh_per_request() {
+    for cfg in [SdtModelConfig::tiny(), sharded_cfg()] {
+        for seed in [1u64, 9] {
+            let model = QuantizedModel::random(&cfg, seed);
+            let mut rng = Prng::new(seed * 101 + 7);
+            let mut pooled = Accelerator::new(model.clone(), AccelConfig::small());
+            for req in 0..6 {
+                let img = random_image(&mut rng);
+                let warm = pooled.infer(&img).unwrap();
+                let mut fresh = Accelerator::new(model.clone(), AccelConfig::small());
+                let cold = fresh.infer(&img).unwrap();
+                assert_reports_identical(
+                    &warm,
+                    &cold,
+                    &format!("cfg {} seed {seed} req {req}", cfg.name),
+                );
+            }
+        }
+    }
+}
+
+/// Serial-mode (no overlap) scratch reuse must be just as invisible.
+#[test]
+fn pooled_serial_mode_matches_fresh_per_request() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 4);
+    let mut rng = Prng::new(31);
+    let mut pooled = Accelerator::with_modes(
+        model.clone(),
+        AccelConfig::small(),
+        DatapathMode::Encoded,
+        ExecMode::Serial,
+    );
+    for req in 0..4 {
+        let img = random_image(&mut rng);
+        let warm = pooled.infer(&img).unwrap();
+        let mut fresh = Accelerator::with_modes(
+            model.clone(),
+            AccelConfig::small(),
+            DatapathMode::Encoded,
+            ExecMode::Serial,
+        );
+        let cold = fresh.infer(&img).unwrap();
+        assert_reports_identical(&warm, &cold, &format!("serial req {req}"));
+    }
+}
+
+/// The batched forward (block-major weight reuse) must produce per-image
+/// reports bit-identical to the per-call path — including the executed
+/// pipeline schedule.
+#[test]
+fn batched_forward_matches_per_call_reports() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 3);
+    let mut rng = Prng::new(5);
+    let imgs: Vec<Vec<f32>> = (0..5).map(|_| random_image(&mut rng)).collect();
+    let mut batched = Accelerator::new(model.clone(), AccelConfig::small());
+    let reports = batched.infer_batch(&imgs).unwrap();
+    assert_eq!(reports.len(), imgs.len());
+    let mut per_call = Accelerator::new(model, AccelConfig::small());
+    for (i, img) in imgs.iter().enumerate() {
+        let want = per_call.infer(img).unwrap();
+        assert_reports_identical(&reports[i], &want, &format!("batched req {i}"));
+    }
+}
+
+/// Randomized mixed batch sizes through one pooled accelerator (the
+/// serving pattern: whatever the dynamic batcher released) stay
+/// bit-identical to fresh per-request accelerators.
+#[test]
+fn randomized_mixed_batches_match_fresh_accelerators() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 23);
+    let mut rng = Prng::new(77);
+    let mut pooled = Accelerator::new(model.clone(), AccelConfig::small());
+    for round in 0..4 {
+        let batch = rng.gen_range(1, 5);
+        let imgs: Vec<Vec<f32>> = (0..batch).map(|_| random_image(&mut rng)).collect();
+        let reports = pooled.infer_batch(&imgs).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            let mut fresh = Accelerator::new(model.clone(), AccelConfig::small());
+            let want = fresh.infer(img).unwrap();
+            assert_reports_identical(&reports[i], &want, &format!("round {round} req {i}"));
+        }
+    }
+}
+
+/// The steady-state claim itself: after warm-up, per-call inference takes
+/// every arena/tensor from the scratch pools (zero new allocations).
+#[test]
+fn warm_inference_performs_no_scratch_allocations() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 5);
+    let mut accel = Accelerator::new(model, AccelConfig::small());
+    let mut rng = Prng::new(9);
+    // Two warm-up requests: the first populates the pools, the second
+    // confirms the live-set converged.
+    accel.infer(&random_image(&mut rng)).unwrap();
+    accel.infer(&random_image(&mut rng)).unwrap();
+    let warm = accel.scratch_stats();
+    let warm_objects = accel.pooled_scratch_objects();
+    for _ in 0..3 {
+        accel.infer(&random_image(&mut rng)).unwrap();
+    }
+    let after = accel.scratch_stats();
+    assert_eq!(
+        after.misses, warm.misses,
+        "steady-state inference must not allocate new scratch objects"
+    );
+    assert_eq!(
+        accel.pooled_scratch_objects(),
+        warm_objects,
+        "free lists must stay a constant size (no put/take leak)"
+    );
+    assert!(after.hits > warm.hits, "steady-state inference must hit the scratch pools");
+    assert!(after.hit_rate() > 0.9, "hit rate {:.4} too low after warm-up", after.hit_rate());
+}
+
+/// The bitmap-mode ablation datapath must keep the same take/put balance
+/// as the encoded path: the free lists stay a constant size across warm
+/// requests (growth means dense-baseline outputs leak into the pools).
+#[test]
+fn bitmap_mode_scratch_pools_stay_balanced() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 14);
+    let mut accel =
+        Accelerator::with_mode(model, AccelConfig::small(), DatapathMode::Bitmap);
+    let mut rng = Prng::new(41);
+    accel.infer(&random_image(&mut rng)).unwrap();
+    accel.infer(&random_image(&mut rng)).unwrap();
+    let warm_objects = accel.pooled_scratch_objects();
+    let warm = accel.scratch_stats();
+    for _ in 0..3 {
+        accel.infer(&random_image(&mut rng)).unwrap();
+    }
+    assert_eq!(
+        accel.pooled_scratch_objects(),
+        warm_objects,
+        "bitmap-mode free lists must not grow across warm requests"
+    );
+    assert_eq!(accel.scratch_stats().misses, warm.misses);
+}
+
+/// Same claim for the batched path at a fixed batch size.
+#[test]
+fn warm_batched_inference_performs_no_scratch_allocations() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 6);
+    let mut accel = Accelerator::new(model, AccelConfig::small());
+    let mut rng = Prng::new(13);
+    let batch = |rng: &mut Prng| -> Vec<Vec<f32>> { (0..4).map(|_| random_image(rng)).collect() };
+    accel.infer_batch(&batch(&mut rng)).unwrap();
+    accel.infer_batch(&batch(&mut rng)).unwrap();
+    let warm = accel.scratch_stats();
+    for _ in 0..3 {
+        accel.infer_batch(&batch(&mut rng)).unwrap();
+    }
+    let after = accel.scratch_stats();
+    assert_eq!(
+        after.misses, warm.misses,
+        "steady-state batched inference must not allocate new scratch objects"
+    );
+    assert!(after.hits > warm.hits);
+}
+
+/// Pool sizing must not change results (oversized, undersized, default).
+#[test]
+fn pool_size_does_not_change_results() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 8);
+    let mut rng = Prng::new(21);
+    let img = random_image(&mut rng);
+    let mut base = Accelerator::new(model.clone(), AccelConfig::small());
+    let want = base.infer(&img).unwrap();
+    for workers in [1usize, 3, 8] {
+        let mut accel =
+            Accelerator::new(model.clone(), AccelConfig::small()).with_pool_workers(workers);
+        let got = accel.infer(&img).unwrap();
+        assert_reports_identical(&got, &want, &format!("workers {workers}"));
+    }
+}
