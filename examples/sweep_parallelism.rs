@@ -1,7 +1,10 @@
 //! Ablation A2: scale the neuron-lane count from 128 to the paper's 1,536
-//! and report modelled cycles, throughput, energy efficiency and FPGA
-//! resources at each point — the "how much fabric buys how much speed"
-//! trade-off an implementer of this accelerator would sweep.
+//! (and beyond) **crossed with the SDEB-core count** and report modelled
+//! cycles, throughput, energy efficiency and FPGA resources at each point
+//! — the "how much fabric buys how much speed" trade-off an implementer
+//! of this accelerator would sweep. Lanes scale the compute arrays inside
+//! a core; `sdeb_cores` replicates whole SDEB cores (more concurrent SDSA
+//! comparator arrays and a wider head mapping).
 //!
 //! ```bash
 //! cargo run --release --example sweep_parallelism
@@ -10,7 +13,7 @@
 use anyhow::Result;
 
 use spikeformer_accel::accel::Accelerator;
-use spikeformer_accel::hw::{AccelConfig, ResourceModel};
+use spikeformer_accel::hw::{AccelConfig, CoreTopology, ResourceModel};
 use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
 use spikeformer_accel::util::Prng;
 
@@ -23,34 +26,43 @@ fn main() -> Result<()> {
     let image: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
 
     println!(
-        "{:<8}{:>14}{:>12}{:>12}{:>12}{:>12}{:>10}",
-        "lanes", "cycles/img", "ms/img", "GSOP/s", "GSOP/W", "LUT", "BRAM"
+        "{:<8}{:<7}{:>14}{:>12}{:>12}{:>12}{:>12}{:>10}",
+        "lanes", "cores", "wall cyc/img", "ms/img", "GSOP/s", "GSOP/W", "LUT", "BRAM"
     );
-    let mut last_cycles = None;
     for lanes in [128, 256, 512, 768, 1024, 1536, 2048] {
-        let hw = AccelConfig::with_lanes(lanes);
-        let res = ResourceModel::default().estimate(&hw);
-        let mut accel = Accelerator::new(model.clone(), hw);
-        let r = accel.infer(&image)?;
-        println!(
-            "{:<8}{:>14}{:>12.3}{:>12.1}{:>12.2}{:>12}{:>10}",
-            lanes,
-            r.total.cycles,
-            r.seconds * 1e3,
-            r.gsops,
-            r.gsop_per_w,
-            res.lut,
-            res.bram
-        );
-        if let Some(prev) = last_cycles {
-            let speedup = prev as f64 / r.total.cycles as f64;
-            if speedup < 1.05 {
-                println!("         (diminishing returns: {speedup:.2}x from doubling)");
+        let mut last_cycles = None;
+        for cores in [1usize, 2, 4] {
+            let hw = AccelConfig::with_lanes(lanes)
+                .with_topology(CoreTopology::with_sdeb_cores(cores));
+            let res = ResourceModel::default().estimate(&hw);
+            let mut accel = Accelerator::new(model.clone(), hw);
+            let r = accel.infer(&image)?;
+            println!(
+                "{:<8}{:<7}{:>14}{:>12.3}{:>12.1}{:>12.2}{:>12}{:>10}",
+                lanes,
+                cores,
+                r.wall_cycles(),
+                r.wall_seconds() * 1e3,
+                r.gsops,
+                r.gsop_per_w,
+                res.lut,
+                res.bram
+            );
+            if let Some(prev) = last_cycles {
+                assert!(
+                    r.wall_cycles() <= prev,
+                    "adding replicated SDEB cores must never cost modelled cycles"
+                );
+                let speedup = prev as f64 / r.wall_cycles() as f64;
+                if speedup < 1.05 {
+                    println!("               (diminishing returns: {speedup:.2}x from doubling cores)");
+                }
             }
+            last_cycles = Some(r.wall_cycles());
         }
-        last_cycles = Some(r.total.cycles);
     }
-    println!("\nnote: cycles stop scaling once the Tile Engine (dense conv) dominates —");
-    println!("the encoded-spike units (SLU/SMAM/SMU) are already sparsity-bound.");
+    println!("\nnote: lane scaling stops paying once the Tile Engine (dense conv) dominates —");
+    println!("the encoded-spike units (SLU/SMAM/SMU) are already sparsity-bound — and core");
+    println!("scaling stops paying once the SDSA phase is thinner than the busiest head.");
     Ok(())
 }

@@ -7,14 +7,20 @@
 //!  3. SDSA threshold sensitivity (mask density vs attn_v_th);
 //!  4. executed two-core overlap vs serial charging (A1.4);
 //!  5. steady-state host runtime: pooled scratch/worker-pool accelerator
-//!     vs fresh allocation per request, at batch 1/4/8 (A1.5).
+//!     vs fresh allocation per request, at batch 1/4/8 (A1.5);
+//!  6. core-topology and mapping-policy sweep at fixed fabric (A1.6):
+//!     SDEB-core count x SDSA head->core policy, wall cycles and SMAM
+//!     phase cycles, logits asserted invariant (`--json` merges the table
+//!     into `BENCH_topology.json`).
 //!
 //! ```bash
 //! cargo bench --bench ablations
+//! cargo bench --bench ablations -- --json   # write BENCH_topology.json
 //! ```
 
-use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode};
-use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
+use spikeformer_accel::benchlib::merge_bench_json;
+use spikeformer_accel::hw::{AccelConfig, CoreTopology};
 use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
 use spikeformer_accel::quant::ADDR_BITS;
 use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix};
@@ -210,6 +216,86 @@ fn main() -> anyhow::Result<()> {
         stats.1.misses,
         stats.1.hits - stats.0.hits
     );
+
+    println!("\nA1.6 — core topology x mapping policy at fixed fabric (paper scale)\n");
+    // Same compute fabric (paper lanes/comparators) throughout; only the
+    // SDEB-core count and the SDSA head->core policy vary. Values must be
+    // bit-identical everywhere — the topology is a schedule, not a
+    // numeric — and modelled wall cycles must not increase with core
+    // count under the default policy (each added core is a full
+    // replicated comparator array).
+    let baseline_logits = r_over.logits.clone();
+    struct TopoRow {
+        cores: usize,
+        policy: &'static str,
+        wall_cycles: u64,
+        smam_cycles: u64,
+        speedup: f64,
+    }
+    let mut rows: Vec<TopoRow> = Vec::new();
+    println!(
+        "{:<8}{:<16}{:>14}{:>14}{:>10}",
+        "cores", "mapping", "wall cyc", "smam cyc", "speedup"
+    );
+    for &cores in &[1usize, 2, 4, 8] {
+        for policy in MappingPolicy::ALL {
+            let hw_t = hw.with_topology(CoreTopology::with_sdeb_cores(cores));
+            let mut accel = Accelerator::new(model.clone(), hw_t).with_mapping(policy);
+            let r = accel.infer(&image)?;
+            assert_eq!(r.logits, baseline_logits, "topology/policy must not change values");
+            rows.push(TopoRow {
+                cores,
+                policy: policy.name(),
+                wall_cycles: r.wall_cycles(),
+                smam_cycles: r.phases.get("sdeb.smam").cycles,
+                speedup: r_enc.total.cycles as f64 / r.wall_cycles() as f64,
+            });
+            let row = rows.last().unwrap();
+            println!(
+                "{:<8}{:<16}{:>14}{:>14}{:>9.2}x",
+                row.cores, row.policy, row.wall_cycles, row.smam_cycles, row.speedup
+            );
+        }
+    }
+    // Monotonicity under the default policy: more replicated cores never
+    // cost modelled cycles (the ISSUE 4 acceptance criterion).
+    let rr: Vec<u64> = rows
+        .iter()
+        .filter(|r| r.policy == MappingPolicy::HeadRoundRobin.name())
+        .map(|r| r.wall_cycles)
+        .collect();
+    assert!(
+        rr.windows(2).all(|w| w[1] <= w[0]),
+        "wall cycles must be monotonically non-increasing in core count: {rr:?}"
+    );
+
+    if std::env::args().any(|a| a == "--json") {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_topology.json");
+        let mut entry = String::from("{\n");
+        entry.push_str(
+            "    \"config\": {\"model\": \"paper\", \"accel\": \"paper (fixed fabric)\", \"image_seed\": 2},\n",
+        );
+        entry.push_str(
+            "    \"units\": \"wall_cycles = executed overlapped-schedule finish time; smam_cycles = SDSA phase busy cycles (max over cores); speedup = serial-charging cycles / wall_cycles; logits bit-identical across all rows\",\n",
+        );
+        entry.push_str("    \"results\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            entry.push_str(&format!(
+                "      {{\"sdeb_cores\": {}, \"mapping\": \"{}\", \"wall_cycles\": {}, \"smam_cycles\": {}, \"speedup\": {:.3}}}{}\n",
+                r.cores,
+                r.policy,
+                r.wall_cycles,
+                r.smam_cycles,
+                r.speedup,
+                if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        entry.push_str("    ]\n  }");
+        match merge_bench_json(path, "topology", &entry) {
+            Ok(()) => println!("\nwrote {path} (section \"topology\")"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+    }
 
     Ok(())
 }

@@ -10,12 +10,13 @@
 //! cargo bench --bench e2e_throughput -- --quick      # CI smoke mode
 //! cargo bench --bench e2e_throughput -- --serial     # serial-charging ablation
 //! cargo bench --bench e2e_throughput -- --workers N  # size each simulator's SDEB worker pool
+//! cargo bench --bench e2e_throughput -- --sdeb-cores N --pipeline-depth N --mapping POLICY
 //! ```
 
 use std::time::{Duration, Instant};
 
 use spikeformer_accel::accel::{DatapathMode, ExecMode};
-use spikeformer_accel::benchlib::{arg_value, section};
+use spikeformer_accel::benchlib::{apply_topology_args, arg_value, section};
 use spikeformer_accel::coordinator::{
     BackendFactory, BatchPolicy, Coordinator, GoldenBackend, Request, SimulatorBackend,
 };
@@ -51,7 +52,15 @@ fn main() -> anyhow::Result<()> {
     let pool_workers = arg_value(&args, "--workers").unwrap_or(0);
     let exec = if serial { ExecMode::Serial } else { ExecMode::Overlapped };
 
-    let cfg = SdtModelConfig::tiny();
+    // Tiny-scale fabric but a multi-head, multi-block model, so the
+    // `--sdeb-cores`/`--mapping` topology path actually exercises head
+    // mapping (tiny's single head would clamp every topology to 1 core).
+    let cfg = SdtModelConfig {
+        name: "e2e".into(),
+        num_blocks: 2,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    };
     let model = QuantizedModel::random(&cfg, 42);
     let imgs = images(if quick { 24 } else { 96 });
     let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
@@ -64,11 +73,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     section("simulator workers (modelled accelerator throughput, overlapped pipeline)");
-    let hw = AccelConfig::paper();
+    // Topology knobs: SDEB-core count, ring depth, head->core policy.
+    let mut hw = AccelConfig::paper();
+    let mapping = apply_topology_args(&args, &mut hw);
+    println!(
+        "topology: sdeb_cores={} depth={} mapping={}",
+        hw.topology.sdeb_cores,
+        hw.topology.pipeline_depth,
+        mapping.name()
+    );
     let sim_counts: &[usize] = if quick { &[1] } else { &[1, 2, 4] };
     for &workers in sim_counts {
         let report = drive(
-            SimulatorBackend::factories(workers, &model, hw, DatapathMode::Encoded, exec, pool_workers),
+            SimulatorBackend::factories_with_mapping(workers, &model, hw, DatapathMode::Encoded, exec, pool_workers, mapping),
             policy,
             &imgs,
         )?;
@@ -84,12 +101,12 @@ fn main() -> anyhow::Result<()> {
     section("overlapped vs serial charging (single simulator worker)");
     let sample = &imgs[..imgs.len().min(8)];
     let over = drive(
-        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Overlapped, pool_workers),
+        SimulatorBackend::factories_with_mapping(1, &model, hw, DatapathMode::Encoded, ExecMode::Overlapped, pool_workers, mapping),
         policy,
         sample,
     )?;
     let ser = drive(
-        SimulatorBackend::factories(1, &model, hw, DatapathMode::Encoded, ExecMode::Serial, pool_workers),
+        SimulatorBackend::factories_with_mapping(1, &model, hw, DatapathMode::Encoded, ExecMode::Serial, pool_workers, mapping),
         policy,
         sample,
     )?;

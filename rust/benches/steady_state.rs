@@ -15,14 +15,15 @@
 //! cargo bench --bench steady_state -- --quick      # CI smoke mode
 //! cargo bench --bench steady_state -- --json       # merge into BENCH_steady_state.json
 //! cargo bench --bench steady_state -- --workers N  # size the SDEB worker pool
+//! cargo bench --bench steady_state -- --sdeb-cores N --pipeline-depth N --mapping POLICY
 //! ```
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode};
-use spikeformer_accel::benchlib::{arg_value, merge_bench_json, section};
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
+use spikeformer_accel::benchlib::{apply_topology_args, arg_value, merge_bench_json, section};
 use spikeformer_accel::hw::AccelConfig;
 use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
 use spikeformer_accel::util::Prng;
@@ -67,6 +68,7 @@ fn run_fresh(
     model: &QuantizedModel,
     hw: AccelConfig,
     pool_workers: usize,
+    mapping: MappingPolicy,
     imgs: &[Vec<f32>],
     batch: usize,
 ) -> (CaseResult, Vec<Vec<f32>>) {
@@ -80,7 +82,8 @@ fn run_fresh(
             DatapathMode::Encoded,
             ExecMode::Overlapped,
             pool_workers,
-        );
+        )
+        .with_mapping(mapping);
         for r in accel.infer_batch(chunk).expect("inference failed") {
             logits.push(r.logits);
         }
@@ -162,11 +165,21 @@ fn main() {
     let json = args.iter().any(|a| a == "--json");
     let pool_workers = arg_value(&args, "--workers").unwrap_or(0);
 
-    // Tiny model: this bench measures *host* runtime behaviour, and the
-    // tiny config keeps the fresh-vs-pooled contrast visible in seconds.
-    let cfg = SdtModelConfig::tiny();
+    // Tiny-scale fabric but a multi-head, multi-block model: the bench
+    // measures *host* runtime behaviour (fresh-vs-pooled contrast stays
+    // visible in seconds) and the `--sdeb-cores`/`--mapping` topology
+    // path actually exercises head mapping (a single head would clamp
+    // every topology to 1 effective core).
+    let cfg = SdtModelConfig {
+        name: "steady".into(),
+        num_blocks: 2,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    };
     let model = QuantizedModel::random(&cfg, 42);
-    let hw = AccelConfig::paper();
+    // Topology knobs: SDEB-core count, ring depth, head->core policy.
+    let mut hw = AccelConfig::paper();
+    let mapping = apply_topology_args(&args, &mut hw);
     let n_req = if quick { 8 } else { 32 };
     let mut rng = Prng::new(17);
     let imgs: Vec<Vec<f32>> = (0..n_req)
@@ -179,7 +192,8 @@ fn main() {
         DatapathMode::Encoded,
         ExecMode::Overlapped,
         pool_workers,
-    );
+    )
+    .with_mapping(mapping);
 
     section(&format!(
         "steady-state serving: fresh vs pooled, {} requests (model `{}`, pool workers {})",
@@ -194,7 +208,7 @@ fn main() {
     let mut results = Vec::new();
     let batches: &[usize] = if quick { &[1, 8] } else { &[1, 4, 8] };
     for &batch in batches {
-        let (fresh, fresh_logits) = run_fresh(&model, hw, pool_workers, &imgs, batch);
+        let (fresh, fresh_logits) = run_fresh(&model, hw, pool_workers, mapping, &imgs, batch);
         let (pooled, pooled_logits) = run_pooled(&mut accel, &imgs, batch);
         assert_eq!(fresh_logits, pooled_logits, "pooled runtime must be bit-exact");
         for r in [fresh, pooled] {

@@ -1,13 +1,19 @@
 //! The buffer complement of Fig. 1: Input/Output Buffers at the external
-//! interface, the double-buffered ESS halves inside each core, the weight
-//! buffer feeding the Tile Engine / SLA, and the ResBuffer for residual
-//! operands.
+//! interface, the ESS buffer ring inside each core, the weight buffer
+//! feeding the Tile Engine / SLA, and the ResBuffer for residual operands.
 //!
-//! Each core's encoded-spike storage is modelled as an explicit ping/pong
-//! pair ([`CoreBuffers`]): timestep `t` writes one half while the
-//! overlapped consumer still drains the other, which is what lets the
-//! [`executor`](super::executor) run the SPS stage of timestep `t+1`
-//! concurrently with the SDEB stage of timestep `t`.
+//! Each core's encoded-spike storage is modelled as an explicit ring of
+//! bank slots ([`CoreBuffers`]) whose depth comes from the instance's
+//! [`CoreTopology`](crate::hw::CoreTopology): timestep `t` writes slot
+//! `t % depth` while the overlapped consumer still drains earlier slots,
+//! which is what lets the [`executor`](super::executor) run the SPS stage
+//! of timestep `t+1` concurrently with the SDEB stage of timestep `t`. The
+//! paper's instance is depth 2 — the classic ping/pong pair — and deeper
+//! rings let a fast producer run further ahead.
+//!
+//! The SDEB side holds one ring **per SDEB core** ([`BufferSet::sdeb`]):
+//! each physical core owns its SEA/ESS complement (Fig. 1), so encoder
+//! block `b`'s traffic lands in core `b % sdeb_cores`'s ring.
 
 use anyhow::Result;
 
@@ -15,56 +21,64 @@ use crate::hw::{AccelConfig, SramBank, UnitStats};
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
 
-/// One core's double-buffered ESS complement: two physical bank halves,
-/// alternated by timestep parity (Fig. 1: each core owns its SEA/ESS pair,
-/// duplicated so produce and consume can overlap).
+/// One core's ESS buffer ring: `depth` physical bank slots, selected by
+/// timestep (`slot = t % depth`). Depth 2 is Fig. 1's ping/pong pair,
+/// duplicated so produce and consume can overlap.
 #[derive(Clone, Debug)]
 pub struct CoreBuffers {
-    /// The half written on even timesteps.
-    pub ping: SramBank,
-    /// The half written on odd timesteps.
-    pub pong: SramBank,
+    /// The ring of bank slots, written round-robin by timestep.
+    pub slots: Vec<SramBank>,
 }
 
 impl CoreBuffers {
-    /// Build both halves, each sized to the core's full ESS complement
-    /// (`ess_banks * ess_bank_words` words).
+    /// Build a ring of `depth` slots, each sized to the core's full ESS
+    /// complement (`ess_banks * ess_bank_words` words). `depth` is
+    /// defensively clamped to at least 2 (produce/consume cannot overlap
+    /// through fewer slots) — validating constructors reject such configs
+    /// up front via [`CoreTopology::validate`](crate::hw::CoreTopology::validate).
     ///
-    /// Modelling note: double buffering here *duplicates* the physical
-    /// banks rather than splitting one complement in half. The resource
+    /// Modelling note: the ring *duplicates* the physical banks rather
+    /// than splitting one complement into `depth` parts. The resource
     /// model's ESS BRAM term stays calibrated to the paper's reported
     /// Table I totals (which describe the real, already-double-buffered
     /// chip), so `ResourceModel` charges the ESS once — see
     /// DESIGN.md "Substitutions".
-    pub fn new(prefix: &str, words: usize) -> Self {
+    pub fn new(prefix: &str, words: usize, depth: usize) -> Self {
+        let depth = depth.max(2);
         Self {
-            ping: SramBank::new(&format!("{prefix}_ping"), words),
-            pong: SramBank::new(&format!("{prefix}_pong"), words),
+            slots: (0..depth).map(|i| SramBank::new(&format!("{prefix}_slot{i}"), words)).collect(),
         }
     }
 
-    /// Store an encoded tensor into the half selected by `pong` (the
-    /// caller passes the timestep parity). The previous tensor of the same
-    /// site is freed by the consumer within the layer pass, so occupancy
-    /// is transient — but the capacity check is a hard error, catching
-    /// configs whose ESS cannot hold one tensor.
-    pub fn store_encoded(&mut self, enc: &EncodedSpikes, pong: bool) -> Result<()> {
+    /// Ring depth (number of slots).
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Store an encoded tensor into the slot of timestep `t` (`t % depth`;
+    /// callers may pass the timestep directly). The previous tensor of the
+    /// same site is freed by the consumer within the layer pass, so
+    /// occupancy is transient — but the capacity check is a hard error,
+    /// catching configs whose ESS cannot hold one tensor.
+    pub fn store_encoded(&mut self, enc: &EncodedSpikes, t: usize) -> Result<()> {
         let words = enc.storage_words();
-        let bank = if pong { &mut self.pong } else { &mut self.ping };
+        let depth = self.slots.len();
+        let bank = &mut self.slots[t % depth];
         bank.alloc(words)?;
-        bank.free(words); // consumed within the layer pass (double buffer)
+        bank.free(words); // consumed within the layer pass (buffer ring)
         Ok(())
     }
 
-    /// Reset both halves' access counters.
+    /// Reset every slot's access counters.
     pub fn reset_counters(&mut self) {
-        self.ping.reset_counters();
-        self.pong.reset_counters();
+        for s in &mut self.slots {
+            s.reset_counters();
+        }
     }
 
-    /// Total writes across both halves (for reports/tests).
+    /// Total writes across all slots (for reports/tests).
     pub fn writes(&self) -> u64 {
-        self.ping.writes + self.pong.writes
+        self.slots.iter().map(|s| s.writes).sum()
     }
 }
 
@@ -79,24 +93,36 @@ pub struct BufferSet {
     pub res: SramBank,
     /// Weight buffer feeding the Tile Engine and the Spike Linear Array.
     pub weight: SramBank,
-    /// The SPS Core's double-buffered ESS halves.
+    /// The SPS Core's ESS buffer ring.
     pub sps: CoreBuffers,
-    /// The SDEB Cores' double-buffered ESS halves.
-    pub sdeb: CoreBuffers,
+    /// One ESS buffer ring per SDEB core (encoder block `b` uses ring
+    /// `b % sdeb_cores` — see [`Self::sdeb_for`]).
+    pub sdeb: Vec<CoreBuffers>,
 }
 
 impl BufferSet {
-    /// Build the full complement for one accelerator instance.
+    /// Build the full complement for one accelerator instance: ring depth
+    /// and SDEB-core count come from `cfg.topology`.
     pub fn new(cfg: &AccelConfig) -> Self {
         let ess_words = cfg.ess_banks * cfg.ess_bank_words;
+        let depth = cfg.topology.pipeline_depth;
+        let sdeb_cores = cfg.topology.sdeb_cores.max(1);
         Self {
             input: SramBank::new("input_buffer", 64 * 1024),
             output: SramBank::new("output_buffer", 16 * 1024),
             res: SramBank::new("res_buffer", 64 * 1024),
             weight: SramBank::new("weight_buffer", 2 * 1024 * 1024),
-            sps: CoreBuffers::new("ess_sps", ess_words),
-            sdeb: CoreBuffers::new("ess_sdeb", ess_words),
+            sps: CoreBuffers::new("ess_sps", ess_words, depth),
+            sdeb: (0..sdeb_cores)
+                .map(|c| CoreBuffers::new(&format!("ess_sdeb{c}"), ess_words, depth))
+                .collect(),
         }
+    }
+
+    /// The ESS ring of the SDEB core that hosts encoder block `block`.
+    pub fn sdeb_for(&mut self, block: usize) -> &mut CoreBuffers {
+        let n = self.sdeb.len();
+        &mut self.sdeb[block % n]
     }
 
     /// Charge an external->input-buffer transfer of `bytes`.
@@ -116,13 +142,16 @@ impl BufferSet {
             b.reset_counters();
         }
         self.sps.reset_counters();
-        self.sdeb.reset_counters();
+        for ring in &mut self.sdeb {
+            ring.reset_counters();
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hw::CoreTopology;
     use crate::spike::SpikeMatrix;
 
     #[test]
@@ -145,35 +174,67 @@ mod tests {
             m.set(0, l, true);
         }
         let enc = EncodedSpikes::from_bitmap(&m);
-        assert!(b.sps.store_encoded(&enc, false).is_err());
-        assert!(b.sps.store_encoded(&enc, true).is_err(), "pong half same capacity");
+        assert!(b.sps.store_encoded(&enc, 0).is_err());
+        assert!(b.sps.store_encoded(&enc, 1).is_err(), "every ring slot has the same capacity");
     }
 
     #[test]
-    fn store_encoded_double_buffers() {
+    fn store_encoded_cycles_the_ring() {
         let cfg = AccelConfig::small();
         let mut b = BufferSet::new(&cfg);
         let mut m = SpikeMatrix::zeros(4, 64);
         m.set(0, 3, true);
         let enc = EncodedSpikes::from_bitmap(&m);
         for t in 0..1000 {
-            b.sdeb.store_encoded(&enc, t % 2 == 1).unwrap(); // never overflows
+            b.sdeb_for(0).store_encoded(&enc, t).unwrap(); // never overflows
         }
-        assert_eq!(b.sdeb.ping.used, 0);
-        assert_eq!(b.sdeb.pong.used, 0);
-        assert!(b.sdeb.ping.writes > 0 && b.sdeb.pong.writes > 0, "both halves exercised");
+        for slot in &b.sdeb[0].slots {
+            assert_eq!(slot.used, 0);
+            assert!(slot.writes > 0, "every ring slot exercised");
+        }
     }
 
     #[test]
-    fn parity_selects_halves() {
-        let mut cb = CoreBuffers::new("t", 1024);
+    fn timestep_selects_ring_slot() {
+        let mut cb = CoreBuffers::new("t", 1024, 2);
+        assert_eq!(cb.depth(), 2);
         let mut m = SpikeMatrix::zeros(1, 16);
         m.set(0, 1, true);
         let enc = EncodedSpikes::from_bitmap(&m);
-        cb.store_encoded(&enc, false).unwrap();
-        assert!(cb.ping.writes > 0);
-        assert_eq!(cb.pong.writes, 0);
-        cb.store_encoded(&enc, true).unwrap();
-        assert!(cb.pong.writes > 0);
+        cb.store_encoded(&enc, 0).unwrap();
+        assert!(cb.slots[0].writes > 0);
+        assert_eq!(cb.slots[1].writes, 0);
+        cb.store_encoded(&enc, 1).unwrap();
+        assert!(cb.slots[1].writes > 0);
+        // The ring wraps: timestep 2 lands back in slot 0.
+        let w0 = cb.slots[0].writes;
+        cb.store_encoded(&enc, 2).unwrap();
+        assert!(cb.slots[0].writes > w0);
+    }
+
+    #[test]
+    fn topology_sizes_the_rings() {
+        let mut cfg = AccelConfig::small();
+        cfg.topology = CoreTopology {
+            pipeline_depth: 3,
+            ..CoreTopology::with_sdeb_cores(4)
+        };
+        let b = BufferSet::new(&cfg);
+        assert_eq!(b.sps.depth(), 3);
+        assert_eq!(b.sdeb.len(), 4);
+        assert!(b.sdeb.iter().all(|r| r.depth() == 3));
+    }
+
+    #[test]
+    fn blocks_round_robin_over_sdeb_rings() {
+        let cfg = AccelConfig::small(); // 2 SDEB cores
+        let mut b = BufferSet::new(&cfg);
+        let mut m = SpikeMatrix::zeros(1, 16);
+        m.set(0, 1, true);
+        let enc = EncodedSpikes::from_bitmap(&m);
+        b.sdeb_for(0).store_encoded(&enc, 0).unwrap();
+        b.sdeb_for(1).store_encoded(&enc, 0).unwrap();
+        b.sdeb_for(2).store_encoded(&enc, 0).unwrap(); // wraps to ring 0
+        assert!(b.sdeb[0].writes() > b.sdeb[1].writes());
     }
 }

@@ -4,12 +4,15 @@
 //!
 //! Two execution strategies are available ([`ExecMode`]):
 //!
-//! * **Overlapped** (default) — the two-core pipeline the paper's Fig. 1
-//!   implies: the SPS stage of timestep `t+1` runs concurrently with the
-//!   SDEB stage of timestep `t` against ping/pong buffer halves, and each
-//!   block's SDSA heads are sharded across the SDEB cores' comparator
-//!   arrays. Executed by [`super::executor`]; the report carries the
-//!   executed [`PipelineExecution`](super::executor::PipelineExecution).
+//! * **Overlapped** (default) — the core pipeline the paper's Fig. 1
+//!   implies, generalized over the configured
+//!   [`CoreTopology`](crate::hw::CoreTopology): the SPS stage of timestep
+//!   `t+1` runs concurrently with the SDEB stage of timestep `t` against
+//!   an ESS buffer ring (the paper's ping/pong pair at depth 2), and each
+//!   block's SDSA heads are mapped across the SDEB cores' comparator
+//!   arrays by the [`Mapper`](super::mapper::Mapper) scheduler. Executed
+//!   by [`super::executor`]; the report carries the executed
+//!   [`PipelineExecution`](super::executor::PipelineExecution).
 //! * **Serial** — every phase charged back to back on one timeline (the
 //!   conservative accounting this repo used originally). Kept as the
 //!   ablation baseline; logits are bit-identical to the overlapped path.
@@ -28,12 +31,13 @@ use anyhow::Result;
 use crate::hw::{AccelConfig, EnergyModel, UnitStats};
 use crate::quant::{QFormat, QTensor, ACT_FRAC, MEM_BITS};
 use crate::scratch::{ExecScratch, ScratchStats};
-use crate::units::{HeadShard, SpikeEncodingArray};
+use crate::units::SpikeEncodingArray;
 use crate::model::QuantizedModel;
 use crate::util::div_ceil;
 
 use super::buffers::BufferSet;
 use super::executor::{self, PipelineExecution};
+use super::mapper::{Mapper, MappingPolicy};
 use super::report::{RunReport, StatSink};
 use super::sdeb_core::SdebCore;
 use super::sps_core::SpsCore;
@@ -51,7 +55,9 @@ pub enum DatapathMode {
 /// How the controller schedules the cores over timesteps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum ExecMode {
-    /// Two-core overlapped pipeline with per-head SDEB sharding (default).
+    /// Overlapped SPS→SDEB pipeline with the SDSA heads mapped across the
+    /// topology's SDEB cores (default; the paper's two-core instance at
+    /// the default [`CoreTopology`](crate::hw::CoreTopology)).
     #[default]
     Overlapped,
     /// Serial phase charging (the `--serial` ablation escape hatch).
@@ -100,6 +106,8 @@ pub struct Accelerator {
     pub mode: DatapathMode,
     /// Execution strategy (overlapped pipeline vs serial charging).
     pub exec: ExecMode,
+    /// The work-unit → core mapping scheduler (topology + policy).
+    mapper: Mapper,
     model: QuantizedModel,
     sps: SpsCore,
     sdebs: Vec<SdebCore>,
@@ -158,17 +166,26 @@ impl Accelerator {
             .map(|i| SdebCore::new(i, l, d, cfg.mlp_hidden, cfg.attn_v_th, params))
             .collect();
         let sea_head = SpikeEncodingArray::new(d, l, params);
-        // Default pool sizing: one worker for the SPS producer plus one
-        // per additional SDEB core the SMAM shards fan out to (the
-        // consumer thread itself runs the first core's heads).
-        let workers = if pool_workers > 0 { pool_workers } else { cfg.num_blocks.max(1) };
+        // Default pool sizing: the long-lived SPS producer occupies one
+        // worker, and each SDSA pass spawns `sdeb_cores - 1` head jobs
+        // (the consumer thread runs the first core inline) — so
+        // `sdeb_cores` workers give the full modelled fan-out. Correctness
+        // never depends on this: a short pool degrades to caller-helping
+        // inline execution, bit-identically.
+        let workers = if pool_workers > 0 {
+            pool_workers
+        } else {
+            cfg.num_blocks.max(hw.topology.sdeb_cores).max(1)
+        };
         let pool = WorkerPool::new(workers);
         let buffers = BufferSet::new(&hw);
+        let mapper = Mapper::new(cfg.num_heads, hw.topology, MappingPolicy::default());
         Self {
             hw,
             energy: EnergyModel::default(),
             mode,
             exec,
+            mapper,
             model,
             sps,
             sdebs,
@@ -199,6 +216,15 @@ impl Accelerator {
         self.pool.workers()
     }
 
+    /// Choose the SDSA head→core mapping policy (default
+    /// [`MappingPolicy::HeadRoundRobin`], the paper's static assignment).
+    /// The topology itself comes from
+    /// [`AccelConfig::topology`](crate::hw::AccelConfig).
+    pub fn with_mapping(mut self, policy: MappingPolicy) -> Self {
+        self.mapper.policy = policy;
+        self
+    }
+
     /// Combined scratch-pool hit/miss counters of both pipeline stages —
     /// the steady-state claim's measurement: after warm-up, `misses`
     /// stops growing.
@@ -218,12 +244,17 @@ impl Accelerator {
         &self.model
     }
 
-    /// The head-to-core shard plan the overlapped executor uses.
-    pub fn shard_plan(&self) -> HeadShard {
-        HeadShard {
-            heads: self.model.cfg.num_heads.max(1),
-            cores: self.sdebs.len().max(1),
-        }
+    /// The mapping scheduler the overlapped executor uses (head count from
+    /// the model, topology from the hardware config, policy from
+    /// [`Self::with_mapping`]).
+    ///
+    /// Note the semantic shift from the pre-topology executor: the SDSA
+    /// shard width is now `hw.topology.sdeb_cores` (default 2, the
+    /// paper's instance) rather than implicitly the encoder block count —
+    /// identical for the paper's two-block models; a model with a
+    /// different block count should set the topology explicitly.
+    pub fn mapper(&self) -> Mapper {
+        self.mapper
     }
 
     fn reset(&mut self) {
@@ -295,12 +326,11 @@ impl Accelerator {
 
         let (head_counts, execution) = match self.exec {
             ExecMode::Overlapped => {
-                let shard = self.shard_plan();
                 let outcome = executor::run_overlapped(
                     &self.model,
                     &self.hw,
                     self.mode,
-                    shard,
+                    self.mapper,
                     &self.pool,
                     &mut self.sps,
                     &mut self.sdebs,
@@ -328,8 +358,13 @@ impl Accelerator {
 
         Ok(match execution {
             Some((sps_per, sdeb_per)) => {
-                let exec =
-                    PipelineExecution::new(io_in_cycles, io_out_cycles, sps_per, sdeb_per);
+                let exec = PipelineExecution::with_topology(
+                    io_in_cycles,
+                    io_out_cycles,
+                    sps_per,
+                    sdeb_per,
+                    &self.hw.topology,
+                );
                 RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy)
             }
             None => RunReport::from_sink(logits, sink, &self.hw, &self.energy),
@@ -359,7 +394,8 @@ impl Accelerator {
         let cfg = self.model.cfg.clone();
         let n = images.len();
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
-        let shard = self.shard_plan();
+        let mapper = self.mapper;
+        let sdeb_rings = self.buffers.sdeb.len().max(1);
         while self.lanes.len() < n {
             self.lanes.push(BatchLane::new(&self.model));
         }
@@ -392,7 +428,6 @@ impl Accelerator {
         let mut streams: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
 
         for t in 0..cfg.timesteps {
-            let pong = t % 2 == 1;
             // SPS stage, whole batch (conv weight working set stays hot).
             for i in 0..n {
                 let sink = &mut sps_sinks[i];
@@ -402,7 +437,7 @@ impl Accelerator {
                     &qimgs[i],
                     &self.hw,
                     self.mode,
-                    pong,
+                    t,
                     &mut self.buffers.sps,
                     sink,
                     &mut self.scratch_sps,
@@ -426,10 +461,10 @@ impl Accelerator {
                         u,
                         &self.hw,
                         self.mode,
-                        pong,
-                        Some(shard),
+                        t,
+                        Some(mapper),
                         Some(&self.pool),
-                        &mut self.buffers.sdeb,
+                        &mut self.buffers.sdeb[bi % sdeb_rings],
                         &mut sdeb_sinks[i],
                         &mut self.scratch_sdeb,
                     )?;
@@ -468,11 +503,12 @@ impl Accelerator {
             let io_out = self.io_output_stats();
             let io_out_cycles = io_out.cycles;
             sink.add("io.output", io_out);
-            let exec = PipelineExecution::new(
+            let exec = PipelineExecution::with_topology(
                 io_in_cycles,
                 io_out_cycles,
                 std::mem::take(&mut sps_per_t[i]),
                 std::mem::take(&mut sdeb_per_t[i]),
+                &self.hw.topology,
             );
             reports.push(RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy));
         }
@@ -491,13 +527,12 @@ impl Accelerator {
         let mut head_counts = vec![0u64; d];
 
         for t in 0..cfg.timesteps {
-            let pong = t % 2 == 1;
             let (u0_cl, enc3) = self.sps.run_timestep(
                 &self.model,
                 qimg,
                 &self.hw,
                 self.mode,
-                pong,
+                t,
                 &mut self.buffers.sps,
                 sink,
                 &mut self.scratch_sps,
@@ -513,10 +548,10 @@ impl Accelerator {
                     u,
                     &self.hw,
                     self.mode,
-                    pong,
+                    t,
                     None,
                     None,
-                    &mut self.buffers.sdeb,
+                    self.buffers.sdeb_for(bi),
                     sink,
                     &mut self.scratch_sdeb,
                 )?;
@@ -628,7 +663,10 @@ mod tests {
         let cfg = SdtModelConfig::tiny();
         let model = QuantizedModel::random(&cfg, 11);
         let accel = Accelerator::new(model.clone(), AccelConfig::small());
-        assert_eq!(accel.pool_workers(), cfg.num_blocks.max(1));
+        // Default sizing covers the topology's SDSA fan-out (2 SDEB cores
+        // in the paper topology) as well as one worker per block.
+        let topo_cores = AccelConfig::small().topology.sdeb_cores;
+        assert_eq!(accel.pool_workers(), cfg.num_blocks.max(topo_cores));
         let accel = accel.with_pool_workers(0);
         assert_eq!(accel.pool_workers(), 1, "pool size clamps to >= 1");
         let sized = Accelerator::with_runtime(

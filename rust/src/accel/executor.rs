@@ -1,20 +1,23 @@
-//! The overlapped two-core pipeline executor (Fig. 1's throughput trick,
-//! executed rather than estimated).
+//! The overlapped multi-core pipeline executor (Fig. 1's throughput
+//! trick, executed rather than estimated, generalized over the instance's
+//! [`CoreTopology`]).
 //!
-//! The real accelerator double-buffers between the SPS Core and the SDEB
-//! Cores: while the SDEB stage consumes timestep `t` out of one ESS half,
-//! the SPS stage already produces timestep `t+1` into the other half. This
-//! module *runs* that schedule — the SPS stage as a long-lived task on the
+//! The real accelerator buffers between the SPS Core and the SDEB Cores
+//! through an ESS ring: while the SDEB stage consumes timestep `t` out of
+//! one ring slot, the SPS stage already produces timestep `t+1` into the
+//! next (the paper's instance is a depth-2 ping/pong pair). This module
+//! *runs* that schedule — the SPS stage as a long-lived task on the
 //! accelerator's persistent [`WorkerPool`] (no per-inference thread
-//! spawn), the SDEB + head stage on the calling thread, a bounded
-//! rendezvous channel standing in for the ping/pong handoff — and records
+//! spawn), the SDEB + head stage on the calling thread, a bounded channel
+//! of capacity `depth - 1` standing in for the ring handoff — and records
 //! per-timestep stage cycles so the executed schedule
 //! ([`PipelineExecution`]) can be reconciled against the analytic
 //! [`PipelineEstimate`](super::pipeline::PipelineEstimate), which is now a
 //! cross-check rather than the only source of truth.
 //!
-//! Within the SDEB stage, the SDSA pass shards attention heads across the
-//! cores' SMAM comparator arrays ([`HeadShard`]) instead of walking all
+//! Within the SDEB stage, the SDSA pass maps attention heads across the
+//! topology's SDEB-core comparator arrays under the
+//! [`Mapper`](super::mapper::Mapper)'s policy instead of walking all
 //! channels on one array — the FireFly-T-style dual-engine overlap plus
 //! Bishop-style heterogeneous-core scheduling named in the ROADMAP.
 //!
@@ -22,10 +25,11 @@
 //! storage through its own [`ExecScratch`] pool, and the `[L, D]` token
 //! tensors handed producer→consumer circulate through a small ring — the
 //! consumer returns each drained tensor over a second channel, the
-//! producer blocks on that return once its two pre-taken ring slots are in
-//! flight (host run-ahead bounded at the ping/pong depth), and everything
-//! drains back into the SPS pool at the end of the run. After warm-up an
-//! inference performs no thread spawns and no arena/tensor allocations.
+//! producer blocks on that return once its `depth` pre-taken ring slots
+//! are in flight (host run-ahead bounded at the modelled buffer-ring
+//! depth), and everything drains back into the SPS pool at the end of the
+//! run. After warm-up an inference performs no thread spawns and no
+//! arena/tensor allocations.
 //!
 //! All cycle numbers come from [`UnitStats`](crate::hw::UnitStats)
 //! accounting, never from host wall clocks, so overlapped runs stay
@@ -35,33 +39,41 @@ use std::sync::mpsc;
 
 use anyhow::{anyhow, Result};
 
-use crate::hw::AccelConfig;
+use crate::hw::{AccelConfig, CoreTopology};
 use crate::model::QuantizedModel;
 use crate::quant::{QTensor, ACT_FRAC};
 use crate::scratch::ExecScratch;
-use crate::units::{HeadShard, SpikeEncodingArray};
+use crate::units::SpikeEncodingArray;
 
 use super::buffers::BufferSet;
 use super::controller::DatapathMode;
+use super::mapper::Mapper;
 use super::report::StatSink;
 use super::sdeb_core::SdebCore;
 use super::sps_core::SpsCore;
 use super::workers::WorkerPool;
 
-/// The executed two-core overlap schedule of one inference: per-timestep
-/// stage cycles plus the resulting finish time under double buffering.
+/// The executed overlap schedule of one inference: per-timestep stage
+/// cycles plus the resulting finish time under the topology's buffer
+/// ring.
 ///
-/// The schedule recurrence models a depth-2 (ping/pong) pipeline: the SPS
-/// stage of timestep `i` may start once its own previous timestep is done
-/// *and* the ESS half it writes has been drained (the SDEB stage of
-/// timestep `i - 2`); the SDEB stage of timestep `i` may start once its
-/// input is produced and its own previous timestep is done. External input
-/// precedes the first SPS timestep; output transfer follows the last SDEB
-/// timestep.
+/// The schedule recurrence models a depth-`N` ring pipeline with `P` SPS
+/// cores: the SPS stage of timestep `i` may start once the same core's
+/// previous timestep (`i - P`) is done *and* the ESS ring slot it writes
+/// has been drained (the SDEB stage of timestep `i - N`); the SDEB stage
+/// of timestep `i` may start once its input is produced and its own
+/// previous timestep is done (the SDEB side is sequential in time — LIF
+/// state carries across timesteps). External input precedes the first SPS
+/// timestep; output transfer follows the last SDEB timestep. The paper's
+/// instance is `N = 2`, `P = 1` — the classic ping/pong recurrence.
 #[derive(Clone, Debug)]
 pub struct PipelineExecution {
     /// Number of timesteps executed.
     pub timesteps: usize,
+    /// Buffer-ring depth of the modelled schedule (2 = ping/pong).
+    pub depth: usize,
+    /// SPS cores round-robining timesteps in the modelled schedule.
+    pub sps_cores: usize,
     /// Cycles of the external input transfer (before the first timestep).
     pub io_input_cycles: u64,
     /// Cycles of the external output transfer (after the last timestep).
@@ -77,22 +89,59 @@ pub struct PipelineExecution {
 }
 
 impl PipelineExecution {
-    /// Build the execution record and run the schedule recurrence.
+    /// Build the execution record under the paper's depth-2 / one-SPS-core
+    /// recurrence (see [`Self::with_topology`] for the general form).
     pub fn new(
         io_input_cycles: u64,
         io_output_cycles: u64,
         sps_per_timestep: Vec<u64>,
         sdeb_per_timestep: Vec<u64>,
     ) -> Self {
+        Self::with_shape(io_input_cycles, io_output_cycles, sps_per_timestep, sdeb_per_timestep, 2, 1)
+    }
+
+    /// Build the execution record under `topology`'s ring depth and SPS
+    /// core count.
+    pub fn with_topology(
+        io_input_cycles: u64,
+        io_output_cycles: u64,
+        sps_per_timestep: Vec<u64>,
+        sdeb_per_timestep: Vec<u64>,
+        topology: &CoreTopology,
+    ) -> Self {
+        Self::with_shape(
+            io_input_cycles,
+            io_output_cycles,
+            sps_per_timestep,
+            sdeb_per_timestep,
+            topology.pipeline_depth,
+            topology.sps_cores,
+        )
+    }
+
+    /// The generalized schedule recurrence (see the type docs).
+    fn with_shape(
+        io_input_cycles: u64,
+        io_output_cycles: u64,
+        sps_per_timestep: Vec<u64>,
+        sdeb_per_timestep: Vec<u64>,
+        depth: usize,
+        sps_cores: usize,
+    ) -> Self {
         assert_eq!(sps_per_timestep.len(), sdeb_per_timestep.len(), "stage trace length mismatch");
+        let depth = depth.max(2);
+        let sps_cores = sps_cores.max(1);
         let t = sps_per_timestep.len();
         let mut sps_done = vec![0u64; t];
         let mut sdeb_done = vec![0u64; t];
         for i in 0..t {
-            // Ping/pong: the half written at timestep i was last written at
-            // i-2 and must have been consumed by SDEB(i-2) by now.
-            let buffer_free = if i >= 2 { sdeb_done[i - 2] } else { 0 };
-            let prev_sps = if i > 0 { sps_done[i - 1] } else { io_input_cycles };
+            // Ring: the slot written at timestep i was last written at
+            // i - depth and must have been consumed by SDEB(i - depth).
+            let buffer_free = if i >= depth { sdeb_done[i - depth] } else { 0 };
+            // Timesteps round-robin over the SPS cores; a core's next
+            // timestep waits for its own previous one (i - sps_cores).
+            let prev_sps =
+                if i >= sps_cores { sps_done[i - sps_cores] } else { io_input_cycles };
             sps_done[i] = prev_sps.max(buffer_free) + sps_per_timestep[i];
             let prev_sdeb = if i > 0 { sdeb_done[i - 1] } else { 0 };
             sdeb_done[i] = sps_done[i].max(prev_sdeb) + sdeb_per_timestep[i];
@@ -105,6 +154,8 @@ impl PipelineExecution {
             + sdeb_per_timestep.iter().sum::<u64>();
         Self {
             timesteps: t,
+            depth,
+            sps_cores,
             io_input_cycles,
             io_output_cycles,
             sps_per_timestep,
@@ -248,20 +299,21 @@ type ProducerOut = (Result<(StatSink, Vec<u64>)>, Vec<QTensor>, mpsc::Receiver<Q
 /// SDEB stage of timestep `t`.
 ///
 /// The SPS producer runs as one long-lived task on the persistent worker
-/// `pool` against its half of the ping/pong `BufferSet` and its own
-/// scratch pool; the SDEB consumer runs on the calling thread against the
-/// other half, sharding each block's SDSA heads across the core array per
-/// `shard` (shard cores also dispatched on `pool`). A rendezvous channel
-/// of capacity 1 enforces the double-buffer depth; drained token tensors
-/// flow back to the producer over a return channel (see the module docs).
-/// Stage sinks are merged in a fixed order, so the result is
-/// deterministic regardless of thread interleaving.
+/// `pool` against its slots of the ESS buffer ring and its own scratch
+/// pool; the SDEB consumer runs on the calling thread against the
+/// per-core SDEB rings, mapping each block's SDSA heads across the
+/// topology's comparator arrays per `mapper` (non-first cores also
+/// dispatched on `pool`). A bounded channel of capacity `depth - 1`
+/// enforces the ring depth; drained token tensors flow back to the
+/// producer over a return channel (see the module docs). Stage sinks are
+/// merged in a fixed order, so the result is deterministic regardless of
+/// thread interleaving.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn run_overlapped(
     model: &QuantizedModel,
     hw: &AccelConfig,
     mode: DatapathMode,
-    shard: HeadShard,
+    mapper: Mapper,
     pool: &WorkerPool,
     sps: &mut SpsCore,
     sdebs: &mut [SdebCore],
@@ -274,15 +326,18 @@ pub(crate) fn run_overlapped(
     let cfg = &model.cfg;
     let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
     let timesteps = cfg.timesteps;
+    let depth = hw.topology.pipeline_depth.max(2);
 
     let BufferSet { sps: sps_buf, sdeb: sdeb_buf, .. } = buffers;
-    let (tx, rx) = mpsc::sync_channel::<QTensor>(1);
+    let sdeb_rings = sdeb_buf.len().max(1);
+    let (tx, rx) = mpsc::sync_channel::<QTensor>(depth - 1);
     let (ret_tx, ret_rx) = mpsc::channel::<QTensor>();
 
-    // Pre-take the ring: exactly two slots per run keeps the take/put
-    // counts deterministic (anything beyond depth 2 waits on the return
-    // channel, matching the modelled ping/pong bound).
-    let ring: Vec<QTensor> = (0..2).map(|_| scratch_sps.take_tensor(&[l, d], ACT_FRAC)).collect();
+    // Pre-take the ring: exactly `depth` slots per run keeps the take/put
+    // counts deterministic (anything beyond the ring depth waits on the
+    // return channel, matching the modelled buffer-ring bound).
+    let ring: Vec<QTensor> =
+        (0..depth).map(|_| scratch_sps.take_tensor(&[l, d], ACT_FRAC)).collect();
 
     let mut producer_out: Option<ProducerOut> = None;
 
@@ -307,7 +362,7 @@ pub(crate) fn run_overlapped(
                         qimg,
                         hw,
                         mode,
-                        t % 2 == 1,
+                        t,
                         sps_buf,
                         &mut sink,
                         scratch_sps,
@@ -356,10 +411,10 @@ pub(crate) fn run_overlapped(
                         u,
                         hw,
                         mode,
-                        t % 2 == 1,
-                        Some(shard),
+                        t,
+                        Some(mapper),
                         Some(pool),
-                        sdeb_buf,
+                        &mut sdeb_buf[bi % sdeb_rings],
                         &mut sink,
                         scratch_sdeb,
                     )?;
@@ -436,6 +491,59 @@ mod tests {
         let e = PipelineExecution::new(0, 0, vec![1, 1, 1], vec![100, 100, 100]);
         // sps_done = [1, 2, 102]; sdeb_done = [101, 201, 301].
         assert_eq!(e.executed_cycles, 301);
+    }
+
+    #[test]
+    fn schedule_topology_depth_2_matches_legacy_recurrence() {
+        let topo = CoreTopology::paper();
+        let a = PipelineExecution::new(10, 5, vec![50, 60, 55], vec![500, 480, 510]);
+        let b = PipelineExecution::with_topology(
+            10,
+            5,
+            vec![50, 60, 55],
+            vec![500, 480, 510],
+            &topo,
+        );
+        assert_eq!(a.executed_cycles, b.executed_cycles);
+        assert_eq!(a.depth, 2);
+        assert_eq!(a.sps_cores, 1);
+    }
+
+    #[test]
+    fn schedule_deeper_ring_relaxes_runahead() {
+        // Fast producer, slow consumer: at depth 2, sps[2] waits for
+        // sdeb[0]; at depth 4 all four producer timesteps run ahead.
+        let sps = vec![1u64, 1, 1, 1];
+        let sdeb = vec![100u64, 100, 100, 100];
+        let d2 = PipelineExecution::new(0, 0, sps.clone(), sdeb.clone());
+        let d4 = PipelineExecution::with_topology(
+            0,
+            0,
+            sps,
+            sdeb,
+            &CoreTopology { pipeline_depth: 4, ..CoreTopology::paper() },
+        );
+        // Consumer-bound either way, but the deeper ring can never be
+        // slower and the producer stalls disappear from the recurrence.
+        assert!(d4.executed_cycles <= d2.executed_cycles);
+        // sdeb_done = [101, 201, 301, 401] at depth 4 (sps all done by 4).
+        assert_eq!(d4.executed_cycles, 401);
+    }
+
+    #[test]
+    fn schedule_multiple_sps_cores_overlap_sps_timesteps() {
+        // SPS-bound workload: two SPS cores nearly halve the SPS critical
+        // path (timesteps round-robin across cores).
+        let sps = vec![100u64; 4];
+        let sdeb = vec![1u64; 4];
+        let one = PipelineExecution::new(0, 0, sps.clone(), sdeb.clone());
+        let topo = CoreTopology { sps_cores: 2, pipeline_depth: 4, ..CoreTopology::paper() };
+        let two = PipelineExecution::with_topology(0, 0, sps, sdeb, &topo);
+        assert_eq!(one.executed_cycles, 401); // serial SPS chain
+        // Cores A/B each run 2 timesteps: sps_done = [100, 100, 200, 200];
+        // sdeb_done = [101, 102, 201, 202].
+        assert_eq!(two.executed_cycles, 202);
+        assert_eq!(two.sps_cores, 2);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! The mapping scheduler: assigns SDSA work units (block × head ×
+//! timestep tiles) to physical SDEB cores under an explicit policy.
+//!
+//! The paper's Fig. 1 instance hardwires one assignment — head `h` of the
+//! active block runs on core `h % 2` — which this module generalizes into
+//! a swept design axis. A [`Mapper`] is built from the instance's
+//! [`CoreTopology`] plus a [`MappingPolicy`]; at each block's SDSA pass it
+//! produces a head→core assignment that the
+//! [`SpikeMaskAddModule`](crate::units::SpikeMaskAddModule) executes
+//! (cycles = max over cores, ops summed — see `run_mapped_into`).
+//!
+//! Because the SDSA mask is channel-local, *every* assignment is
+//! value-exact: policies change only which comparator array does the work,
+//! i.e. the modelled cycle count, never a logit. That makes the policy an
+//! honest scheduling knob (Bishop maps spiking-transformer layers onto
+//! heterogeneous core pools the same way) rather than a numerics hazard.
+//!
+//! Policies:
+//!
+//! * [`MappingPolicy::HeadRoundRobin`] — head `h` on core `h % cores`; the
+//!   paper's static assignment and the default (bit-identical schedules to
+//!   the pre-topology executor at `sdeb_cores = 2`).
+//! * [`MappingPolicy::BlockAffinity`] — the round-robin start rotates with
+//!   the block index, so consecutive blocks' head streams land on
+//!   different home cores (keeps per-core weight/ESS working sets
+//!   block-affine when blocks outnumber cores).
+//! * [`MappingPolicy::LoadBalanced`] — greedy longest-processing-time
+//!   assignment using the *actual* per-head encoded-spike counts of this
+//!   timestep's Q/K tensors as the load measure: heads are placed
+//!   heaviest-first onto the currently least-loaded core. Deterministic
+//!   (ties break toward the lower head / core index).
+
+use std::str::FromStr;
+
+use anyhow::{bail, Error, Result};
+
+use crate::hw::{AccelConfig, CoreTopology};
+use crate::spike::EncodedSpikes;
+use crate::units::HeadShard;
+
+/// Core counts up to this use stack storage in the load-balanced
+/// assignment loop (no per-pass heap allocation on the hot path).
+const MAX_STACK_CORES: usize = 64;
+
+/// Which SDEB core runs which head: the scheduling policy axis of the
+/// topology sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MappingPolicy {
+    /// Head `h` on core `h % cores` (the paper's static assignment).
+    #[default]
+    HeadRoundRobin,
+    /// Round-robin with the start core rotated by the block index.
+    BlockAffinity,
+    /// Greedy heaviest-head-first onto the least-loaded core, using
+    /// per-head Q+K encoded-spike counts as the load measure.
+    LoadBalanced,
+}
+
+impl MappingPolicy {
+    /// All policies, for sweeps.
+    pub const ALL: [MappingPolicy; 3] =
+        [Self::HeadRoundRobin, Self::BlockAffinity, Self::LoadBalanced];
+
+    /// Stable CLI name (`--mapping` value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::HeadRoundRobin => "round-robin",
+            Self::BlockAffinity => "block-affinity",
+            Self::LoadBalanced => "load-balanced",
+        }
+    }
+}
+
+impl FromStr for MappingPolicy {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "round-robin" | "head-round-robin" | "rr" => Ok(Self::HeadRoundRobin),
+            "block-affinity" | "affinity" => Ok(Self::BlockAffinity),
+            "load-balanced" | "balanced" | "lpt" => Ok(Self::LoadBalanced),
+            other => bail!(
+                "unknown mapping policy `{other}` (expected round-robin, \
+                 block-affinity or load-balanced)"
+            ),
+        }
+    }
+}
+
+/// One schedulable tile of SDSA work: one attention head of one encoder
+/// block at one timestep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// Encoder block index.
+    pub block: usize,
+    /// Attention head index within the block.
+    pub head: usize,
+    /// Timestep index.
+    pub timestep: usize,
+}
+
+/// The mapping scheduler bound to one model/instance pair: knows the head
+/// count, the core topology and the policy, and emits head→core
+/// assignments for each block's SDSA pass.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mapper {
+    /// Attention heads per block (`SdtModelConfig::num_heads`).
+    pub heads: usize,
+    /// The instance's core topology.
+    pub topology: CoreTopology,
+    /// The assignment policy.
+    pub policy: MappingPolicy,
+}
+
+impl Mapper {
+    /// A mapper for `heads` attention heads on `topology` under `policy`.
+    pub fn new(heads: usize, topology: CoreTopology, policy: MappingPolicy) -> Self {
+        Self { heads: heads.max(1), topology, policy }
+    }
+
+    /// The degenerate serial plan: one head on one core (used by the
+    /// serial-charging ablation path).
+    pub fn serial() -> Self {
+        Self {
+            heads: 1,
+            topology: CoreTopology { sdeb_cores: 1, ..CoreTopology::paper() },
+            policy: MappingPolicy::HeadRoundRobin,
+        }
+    }
+
+    /// Effective head count over `channels` channels (a head needs at
+    /// least one channel).
+    pub fn effective_heads(&self, channels: usize) -> usize {
+        self.heads.max(1).min(channels.max(1))
+    }
+
+    /// Effective core count for `heads` heads (no core without a head).
+    pub fn effective_cores(&self, heads: usize) -> usize {
+        self.topology.sdeb_cores.max(1).min(heads)
+    }
+
+    /// Write the head→core assignment for block `block`'s SDSA pass into
+    /// `assign` (resized to `heads`). `loads[h]` is the per-head load
+    /// measure (Q+K encoded-spike counts); only [`MappingPolicy::LoadBalanced`]
+    /// reads it, and an empty slice falls back to uniform loads.
+    ///
+    /// Every head is assigned exactly one core in `0..cores` — the
+    /// coverage property the mapping tests pin down.
+    pub fn assign_heads_into(
+        &self,
+        block: usize,
+        heads: usize,
+        cores: usize,
+        loads: &[u64],
+        assign: &mut Vec<usize>,
+    ) {
+        let cores = cores.max(1);
+        assign.clear();
+        assign.resize(heads, 0);
+        match self.policy {
+            MappingPolicy::HeadRoundRobin => {
+                for (h, slot) in assign.iter_mut().enumerate() {
+                    *slot = h % cores;
+                }
+            }
+            MappingPolicy::BlockAffinity => {
+                for (h, slot) in assign.iter_mut().enumerate() {
+                    *slot = (block + h) % cores;
+                }
+            }
+            MappingPolicy::LoadBalanced => {
+                // Greedy LPT without sorting: each round picks the
+                // heaviest unassigned head (ties toward the lower head
+                // index) and places it on the least-loaded core (ties
+                // toward the lower core index). O(heads^2 + heads*cores)
+                // with heads and cores both small; fully deterministic.
+                use std::cmp::Reverse;
+                const UNASSIGNED: usize = usize::MAX;
+                assign.fill(UNASSIGNED);
+                // Stack storage keeps the steady-state hot path
+                // allocation-free (the heap fallback only exists for
+                // fabrics wider than any swept instance).
+                let mut small = [0u64; MAX_STACK_CORES];
+                let mut big: Vec<u64>;
+                let core_load: &mut [u64] = if cores <= MAX_STACK_CORES {
+                    &mut small[..cores]
+                } else {
+                    big = vec![0u64; cores];
+                    &mut big
+                };
+                let load_of = |h: usize| loads.get(h).copied().unwrap_or(1);
+                for _ in 0..heads {
+                    // min_by_key returns the FIRST minimum, giving both
+                    // tie-breaks deterministically.
+                    let pick = (0..heads)
+                        .filter(|&h| assign[h] == UNASSIGNED)
+                        .min_by_key(|&h| Reverse(load_of(h)))
+                        .expect("an unassigned head remains each round");
+                    let best = (0..cores)
+                        .min_by_key(|&c| core_load[c])
+                        .expect("at least one core");
+                    assign[pick] = best;
+                    core_load[best] += load_of(pick);
+                }
+            }
+        }
+    }
+
+    /// Per-head Q+K encoded-spike counts over `heads` contiguous head
+    /// ranges of `q`/`k`'s channel space — the [`MappingPolicy::LoadBalanced`]
+    /// load measure. Written into `loads` (resized to `heads`).
+    pub fn head_loads_into(q: &EncodedSpikes, k: &EncodedSpikes, heads: usize, loads: &mut Vec<u64>) {
+        loads.clear();
+        loads.resize(heads, 0);
+        let c = q.channels;
+        for (h, load) in loads.iter_mut().enumerate() {
+            for ch in HeadShard::head_channels(h, heads, c) {
+                *load += (q.channel_len(ch) + k.channel_len(ch)) as u64;
+            }
+        }
+    }
+
+    /// Enumerate the full work-unit → core map for `blocks` blocks over
+    /// `timesteps` timesteps, using uniform loads for
+    /// [`MappingPolicy::LoadBalanced`] (runtime assignment uses the actual
+    /// per-timestep spike counts; this static view is for reports and the
+    /// coverage tests).
+    pub fn plan(&self, blocks: usize, timesteps: usize) -> Vec<(WorkUnit, usize)> {
+        let heads = self.heads.max(1);
+        let cores = self.effective_cores(heads);
+        let mut out = Vec::with_capacity(blocks * heads * timesteps);
+        let mut assign = Vec::new();
+        for t in 0..timesteps {
+            for b in 0..blocks {
+                self.assign_heads_into(b, heads, cores, &[], &mut assign);
+                for (h, &core) in assign.iter().enumerate() {
+                    out.push((WorkUnit { block: b, head: h, timestep: t }, core));
+                }
+            }
+        }
+        out
+    }
+
+    /// Comparators per SDEB core under this topology (see
+    /// [`CoreTopology::comparators_per_core`]).
+    pub fn comparators_per_core(&self, cfg: &AccelConfig) -> usize {
+        self.topology.comparators_per_core(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spike::SpikeMatrix;
+    use crate::util::Prng;
+
+    fn mapper(heads: usize, cores: usize, policy: MappingPolicy) -> Mapper {
+        Mapper::new(heads, CoreTopology::with_sdeb_cores(cores), policy)
+    }
+
+    #[test]
+    fn round_robin_matches_legacy_modulo_assignment() {
+        let m = mapper(8, 2, MappingPolicy::HeadRoundRobin);
+        let mut assign = Vec::new();
+        m.assign_heads_into(0, 8, 2, &[], &mut assign);
+        assert_eq!(assign, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        // Block index must not perturb round-robin (the legacy behaviour).
+        m.assign_heads_into(3, 8, 2, &[], &mut assign);
+        assert_eq!(assign, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn block_affinity_rotates_start_core() {
+        let m = mapper(4, 4, MappingPolicy::BlockAffinity);
+        let mut assign = Vec::new();
+        m.assign_heads_into(0, 4, 4, &[], &mut assign);
+        assert_eq!(assign, vec![0, 1, 2, 3]);
+        m.assign_heads_into(1, 4, 4, &[], &mut assign);
+        assert_eq!(assign, vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn load_balanced_puts_heavy_heads_on_distinct_cores() {
+        let m = mapper(4, 2, MappingPolicy::LoadBalanced);
+        let mut assign = Vec::new();
+        // Two heavy heads (0, 1) must not share a core.
+        m.assign_heads_into(0, 4, 2, &[100, 90, 1, 1], &mut assign);
+        assert_ne!(assign[0], assign[1]);
+        // Loads {100} vs {90, 1, 1}: max core load 100 (optimal here).
+        let load0: u64 = [100u64, 90, 1, 1]
+            .iter()
+            .zip(&assign)
+            .filter(|(_, &c)| c == 0)
+            .map(|(l, _)| l)
+            .sum();
+        let load1: u64 = 100 + 90 + 1 + 1 - load0;
+        assert_eq!(load0.max(load1), 100);
+    }
+
+    #[test]
+    fn load_balanced_is_deterministic_on_ties() {
+        let m = mapper(6, 3, MappingPolicy::LoadBalanced);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        m.assign_heads_into(0, 6, 3, &[5; 6], &mut a);
+        m.assign_heads_into(0, 6, 3, &[5; 6], &mut b);
+        assert_eq!(a, b);
+        // Uniform loads round-robin by construction of the tie-breaks.
+        assert_eq!(a, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn every_policy_covers_all_work_units_exactly_once() {
+        for policy in MappingPolicy::ALL {
+            for (heads, cores, blocks, timesteps) in
+                [(8, 2, 2, 4), (3, 2, 1, 2), (8, 8, 3, 1), (5, 3, 4, 2)]
+            {
+                let m = mapper(heads, cores, policy);
+                let plan = m.plan(blocks, timesteps);
+                assert_eq!(plan.len(), heads * blocks * timesteps, "{policy:?}");
+                for b in 0..blocks {
+                    for h in 0..heads {
+                        for t in 0..timesteps {
+                            let unit = WorkUnit { block: b, head: h, timestep: t };
+                            let hits: Vec<usize> = plan
+                                .iter()
+                                .filter(|(u, _)| *u == unit)
+                                .map(|(_, c)| *c)
+                                .collect();
+                            assert_eq!(hits.len(), 1, "{policy:?} {unit:?}");
+                            assert!(hits[0] < cores, "{policy:?} {unit:?} -> core {}", hits[0]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn head_loads_sum_q_and_k_spikes_per_head_range() {
+        let mut rng = Prng::new(3);
+        let mut mq = SpikeMatrix::zeros(8, 16);
+        let mut mk = SpikeMatrix::zeros(8, 16);
+        for c in 0..8 {
+            for t in 0..16 {
+                if rng.bernoulli(0.4) {
+                    mq.set(c, t, true);
+                }
+                if rng.bernoulli(0.4) {
+                    mk.set(c, t, true);
+                }
+            }
+        }
+        let q = EncodedSpikes::from_bitmap(&mq);
+        let k = EncodedSpikes::from_bitmap(&mk);
+        let mut loads = Vec::new();
+        Mapper::head_loads_into(&q, &k, 4, &mut loads);
+        assert_eq!(loads.len(), 4);
+        let total: u64 = loads.iter().sum();
+        assert_eq!(total, (q.count_spikes() + k.count_spikes()) as u64);
+        // Head 0 covers channels 0..2 under the balanced split.
+        let want0 =
+            (q.channel_len(0) + q.channel_len(1) + k.channel_len(0) + k.channel_len(1)) as u64;
+        assert_eq!(loads[0], want0);
+    }
+
+    #[test]
+    fn policy_parses_from_cli_names() {
+        assert_eq!("round-robin".parse::<MappingPolicy>().unwrap(), MappingPolicy::HeadRoundRobin);
+        assert_eq!("block-affinity".parse::<MappingPolicy>().unwrap(), MappingPolicy::BlockAffinity);
+        assert_eq!("load-balanced".parse::<MappingPolicy>().unwrap(), MappingPolicy::LoadBalanced);
+        assert_eq!("lpt".parse::<MappingPolicy>().unwrap(), MappingPolicy::LoadBalanced);
+        assert!("nope".parse::<MappingPolicy>().is_err());
+        for p in MappingPolicy::ALL {
+            assert_eq!(p.name().parse::<MappingPolicy>().unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn serial_mapper_is_one_head_one_core() {
+        let m = Mapper::serial();
+        assert_eq!(m.effective_heads(64), 1);
+        assert_eq!(m.effective_cores(1), 1);
+    }
+}

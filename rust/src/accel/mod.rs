@@ -5,17 +5,20 @@
 //! Spike-driven Transformer inference with cycle/energy/sparsity accounting
 //! and returns the same logits as the dense golden executor — bit-exactly.
 //!
-//! By default the controller **executes** the paper's two-core overlap:
-//! the SPS stage of timestep `t+1` runs concurrently with the SDEB stage
-//! of timestep `t` ([`executor`]), with attention heads sharded across the
-//! SDEB cores and the ESS modelled as explicit ping/pong halves
-//! ([`buffers::CoreBuffers`]). The analytic re-timer ([`pipeline`])
+//! By default the controller **executes** the paper's core overlap: the
+//! SPS stage of timestep `t+1` runs concurrently with the SDEB stage of
+//! timestep `t` ([`executor`]), with attention heads mapped across the
+//! SDEB cores by the [`mapper`] scheduler and the ESS modelled as an
+//! explicit buffer ring ([`buffers::CoreBuffers`]) whose depth comes from
+//! the instance's [`CoreTopology`](crate::hw::CoreTopology) (the paper's
+//! ping/pong pair is depth 2). The analytic re-timer ([`pipeline`])
 //! remains as a cross-check on the executed schedule. `ExecMode::Serial`
 //! preserves the original serial charging for ablations.
 
 pub mod buffers;
 pub mod controller;
 pub mod executor;
+pub mod mapper;
 pub mod pipeline;
 pub mod report;
 pub mod sdeb_core;
@@ -23,6 +26,7 @@ pub mod sps_core;
 pub mod workers;
 
 pub use controller::{Accelerator, DatapathMode, ExecMode};
+pub use mapper::{Mapper, MappingPolicy, WorkUnit};
 pub use workers::WorkerPool;
 pub use executor::PipelineExecution;
 pub use pipeline::{estimate as pipeline_estimate, PipelineEstimate};

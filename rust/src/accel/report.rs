@@ -85,8 +85,8 @@ pub struct RunReport {
     pub gsop_per_w: f64,
     /// (module, sparsity) — the Fig. 6 measurement.
     pub sparsity: Vec<(String, f64)>,
-    /// The executed two-core overlap schedule (`None` for serial-mode
-    /// runs): per-stage traces, executed finish cycles and speedup.
+    /// The executed core-overlap schedule (`None` for serial-mode runs):
+    /// per-stage traces, ring depth, executed finish cycles and speedup.
     pub pipeline: Option<PipelineExecution>,
 }
 

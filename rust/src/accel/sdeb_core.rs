@@ -10,11 +10,12 @@ use crate::lif::LifParams;
 use crate::quant::QTensor;
 use crate::scratch::ExecScratch;
 use crate::units::{
-    AdderModule, HeadShard, SmamOutput, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule,
+    AdderModule, SmamOutput, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule,
 };
 use crate::model::QuantizedBlock;
 
 use super::buffers::CoreBuffers;
+use super::mapper::Mapper;
 use super::controller::DatapathMode;
 use super::report::StatSink;
 use super::workers::WorkerPool;
@@ -105,10 +106,11 @@ impl SdebCore {
     /// tensor (token-major); consumed and returned to `scratch`, with the
     /// updated stream handed back (also from `scratch`).
     ///
-    /// `pong` is the timestep parity selecting the ESS half of `buffers`.
-    /// `shard` — when `Some` and the datapath is encoded — runs the SDSA
-    /// pass with heads sharded across SDEB-core comparator arrays
-    /// ([`SpikeMaskAddModule::run_sharded_into`]), dispatching the
+    /// `t` is the timestep index selecting the ESS ring slot of `buffers`
+    /// (`t % depth`). `mapper` — when `Some` and the datapath is encoded —
+    /// runs the SDSA pass with heads mapped across the topology's SDEB
+    /// comparator arrays under the mapper's policy
+    /// ([`SpikeMaskAddModule::run_mapped_into`]), dispatching the
     /// non-first cores on `pool` when one is given; `None` keeps the
     /// serial single-array accounting. Values are bit-identical in every
     /// combination.
@@ -119,8 +121,8 @@ impl SdebCore {
         u: QTensor,
         cfg: &AccelConfig,
         mode: DatapathMode,
-        pong: bool,
-        shard: Option<HeadShard>,
+        t: usize,
+        mapper: Option<Mapper>,
         pool: Option<&WorkerPool>,
         buffers: &mut CoreBuffers,
         sink: &mut StatSink,
@@ -136,7 +138,7 @@ impl SdebCore {
         let (s_in, st) = self.sea_in.encode_into(&cl, cfg, scratch);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.in.spikes"), &s_in);
-        buffers.store_encoded(&s_in, pong)?;
+        buffers.store_encoded(&s_in, t)?;
 
         // Q/K/V projections on the Spike Linear Array + SEA fire.
         let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, mode, scratch);
@@ -160,19 +162,20 @@ impl SdebCore {
         sink.sparsity(&format!("block{bi}.q.spikes"), &q_s);
         sink.sparsity(&format!("block{bi}.k.spikes"), &k_s);
         sink.sparsity(&format!("block{bi}.v.spikes"), &v_s);
-        buffers.store_encoded(&q_s, pong)?;
-        buffers.store_encoded(&k_s, pong)?;
-        buffers.store_encoded(&v_s, pong)?;
+        buffers.store_encoded(&q_s, t)?;
+        buffers.store_encoded(&k_s, t)?;
+        buffers.store_encoded(&v_s, t)?;
         scratch.put_enc(s_in);
 
         // SMAM: dual-spike mask-add (the SDSA engine), optionally with
-        // heads sharded across the idle cores' comparator arrays.
-        let (smam_out, st) = match (mode, shard) {
-            (DatapathMode::Encoded, Some(sh)) => {
-                self.smam.run_sharded_into(&q_s, &k_s, &v_s, cfg, sh, pool, scratch)
+        // heads mapped across the idle cores' comparator arrays by the
+        // topology scheduler.
+        let (smam_out, st) = match (mode, mapper) {
+            (DatapathMode::Encoded, Some(m)) => {
+                self.smam.run_mapped_into(&q_s, &k_s, &v_s, cfg, &m, bi, pool, scratch)
             }
             (DatapathMode::Encoded, None) => {
-                self.smam.run_sharded_into(&q_s, &k_s, &v_s, cfg, HeadShard::serial(), None, scratch)
+                self.smam.run_mapped_into(&q_s, &k_s, &v_s, cfg, &Mapper::serial(), bi, None, scratch)
             }
             (DatapathMode::Bitmap, _) => {
                 self.smam.run_dense_baseline_into(&q_s, &k_s, &v_s, cfg, scratch)
@@ -202,7 +205,7 @@ impl SdebCore {
         let (s2, st) = self.sea_mlp_in.encode_into(&cl, cfg, scratch);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.mlp.in.spikes"), &s2);
-        buffers.store_encoded(&s2, pong)?;
+        buffers.store_encoded(&s2, t)?;
         let (hv, st) = self.slu_forward(&s2, &blk.mlp1, cfg, mode, scratch);
         sink.add("sdeb.mlp", st);
         scratch.put_enc(s2);
@@ -212,7 +215,7 @@ impl SdebCore {
         scratch.put_tensor(hv);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.mlp.hidden.spikes"), &s3);
-        buffers.store_encoded(&s3, pong)?;
+        buffers.store_encoded(&s3, t)?;
         let (m2, st) = self.slu_forward(&s3, &blk.mlp2, cfg, mode, scratch);
         sink.add("sdeb.mlp", st);
         scratch.put_enc(s3);
@@ -258,10 +261,10 @@ mod tests {
                 u,
                 &hw,
                 DatapathMode::Encoded,
-                false,
+                0,
                 None,
                 None,
-                &mut buffers.sdeb,
+                buffers.sdeb_for(0),
                 &mut sink,
                 &mut scratch,
             )
@@ -286,10 +289,10 @@ mod tests {
         let mut sc1 = ExecScratch::new();
         let mut sc2 = ExecScratch::new();
         let o1 = c1
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, None, &mut b1.sdeb, &mut s1, &mut sc1)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, 0, None, None, b1.sdeb_for(0), &mut s1, &mut sc1)
             .unwrap();
         let o2 = c2
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, false, None, None, &mut b2.sdeb, &mut s2, &mut sc2)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, 0, None, None, b2.sdeb_for(0), &mut s2, &mut sc2)
             .unwrap();
         assert_eq!(o1, o2);
     }
@@ -304,15 +307,15 @@ mod tests {
         let mut sink = StatSink::new();
         let mut scratch = ExecScratch::new();
         let o1 = core
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, None, &mut buffers.sdeb, &mut sink, &mut scratch)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, 0, None, None, buffers.sdeb_for(0), &mut sink, &mut scratch)
             .unwrap();
         // Same input, different membrane state -> (almost surely) different output.
         let o2 = core
-            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, false, None, None, &mut buffers.sdeb, &mut sink, &mut scratch)
+            .run_timestep(&model.blocks[0], u.clone(), &hw, DatapathMode::Encoded, 0, None, None, buffers.sdeb_for(0), &mut sink, &mut scratch)
             .unwrap();
         core.reset();
         let o3 = core
-            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, false, None, None, &mut buffers.sdeb, &mut sink, &mut scratch)
+            .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Encoded, 0, None, None, buffers.sdeb_for(0), &mut sink, &mut scratch)
             .unwrap();
         assert_eq!(o1, o3, "reset must restore t=0 behaviour");
         let _ = o2;

@@ -56,13 +56,13 @@ impl SpsCore {
 
     /// Run one timestep of SPS on the quantized input image.
     ///
-    /// `pong` is the timestep parity selecting which ESS half of `buffers`
-    /// (this core's double-buffered pair) receives the encoded tensors.
-    /// All intermediate tensors and arenas are recycled through `scratch`
-    /// (the returned pair is taken from it too — the caller puts both back
-    /// once consumed). Returns `u0` as `[D, L]` channel-major values plus
-    /// the stage-3 output spikes (needed by the controller for sparsity
-    /// reporting).
+    /// `t` is the timestep index: it selects which slot of this core's ESS
+    /// buffer ring (`t % depth`) receives the encoded tensors — the
+    /// paper's ping/pong parity at depth 2. All intermediate tensors and
+    /// arenas are recycled through `scratch` (the returned pair is taken
+    /// from it too — the caller puts both back once consumed). Returns
+    /// `u0` as `[D, L]` channel-major values plus the stage-3 output
+    /// spikes (needed by the controller for sparsity reporting).
     #[allow(clippy::too_many_arguments)]
     pub fn run_timestep(
         &mut self,
@@ -70,7 +70,7 @@ impl SpsCore {
         image: &QTensor,
         cfg: &AccelConfig,
         mode: DatapathMode,
-        pong: bool,
+        t: usize,
         buffers: &mut CoreBuffers,
         sink: &mut StatSink,
         scratch: &mut ExecScratch,
@@ -103,7 +103,7 @@ impl SpsCore {
             // Post-pool sparsity: matches the golden executor and the JAX
             // model's aux records (Fig. 6 measures what later layers see).
             sink.sparsity(&format!("sps.stage{i}.spikes"), &enc);
-            buffers.store_encoded(&enc, pong)?;
+            buffers.store_encoded(&enc, t)?;
 
             // Next conv consumes the spike map as a dense binary tensor;
             // scatter the encoded addresses straight into a zeroed buffer
@@ -176,7 +176,7 @@ mod tests {
                 &img,
                 &hw,
                 DatapathMode::Encoded,
-                false,
+                0,
                 &mut buffers.sps,
                 &mut sink,
                 &mut scratch,
@@ -202,10 +202,10 @@ mod tests {
         let mut c1 = SpsCore::new(&model, model.cfg.lif_params());
         let mut c2 = SpsCore::new(&model, model.cfg.lif_params());
         let (u1, _) = c1
-            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, false, &mut b1.sps, &mut s1, &mut sc1)
+            .run_timestep(&model, &img, &hw, DatapathMode::Encoded, 0, &mut b1.sps, &mut s1, &mut sc1)
             .unwrap();
         let (u2, _) = c2
-            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, false, &mut b2.sps, &mut s2, &mut sc2)
+            .run_timestep(&model, &img, &hw, DatapathMode::Bitmap, 0, &mut b2.sps, &mut s2, &mut sc2)
             .unwrap();
         assert_eq!(u1, u2, "datapath modes must agree on values");
         assert!(s2.phases.get("sps.maxpool").cycles >= s1.phases.get("sps.maxpool").cycles);
@@ -229,7 +229,7 @@ mod tests {
                     &img,
                     &hw,
                     DatapathMode::Encoded,
-                    false,
+                    0,
                     &mut buffers.sps,
                     sink,
                     scratch,

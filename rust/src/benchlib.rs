@@ -93,6 +93,34 @@ pub fn arg_value(args: &[String], key: &str) -> Option<usize> {
         .and_then(|v| v.parse().ok())
 }
 
+/// String value of `--key VALUE` in a raw argument list (`None` when the
+/// flag is absent). Used for the `--mapping POLICY` topology knob.
+pub fn arg_str(args: &[String], key: &str) -> Option<String> {
+    args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// Apply the shared bench topology flags to `hw` and parse the mapping
+/// policy: `--sdeb-cores N` and `--pipeline-depth N` override
+/// `hw.topology` (the combined config is validated), `--mapping POLICY`
+/// selects the SDSA head→core policy. Panics on invalid values — bench
+/// binaries fail loud rather than sweeping a config they did not ask
+/// for. (The CLI has a `Result`-returning equivalent in `main.rs`.)
+pub fn apply_topology_args(
+    args: &[String],
+    hw: &mut crate::hw::AccelConfig,
+) -> crate::accel::MappingPolicy {
+    if let Some(cores) = arg_value(args, "--sdeb-cores") {
+        hw.topology.sdeb_cores = cores;
+    }
+    if let Some(depth) = arg_value(args, "--pipeline-depth") {
+        hw.topology.pipeline_depth = depth;
+    }
+    hw.validate().expect("bad --sdeb-cores/--pipeline-depth topology");
+    arg_str(args, "--mapping")
+        .map(|p| p.parse().expect("bad --mapping policy"))
+        .unwrap_or_default()
+}
+
 /// Parse the top level of a JSON object into `(key, raw value text)`
 /// pairs, preserving order. Both keys and values are kept verbatim —
 /// escape sequences are not interpreted, so entries round-trip

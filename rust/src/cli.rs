@@ -79,9 +79,14 @@ COMMANDS:
              --config tiny|paper   model scale with random weights
              --seed N        image seed
              --workers N     size of the persistent SDEB worker pool
-                             (default: one per encoder block)
+                             (default: sized to the topology)
+             --sdeb-cores N  SDEB cores in the topology (default 2, the
+                             paper's Fig. 1 instance)
+             --pipeline-depth N   ESS buffer-ring depth (default 2 = ping/pong)
+             --mapping P     SDSA head->core policy: round-robin |
+                             block-affinity | load-balanced
              --serial        charge phases serially instead of executing
-                             the two-core overlapped pipeline (ablation)
+                             the overlapped core pipeline (ablation)
   accuracy   held-out accuracy: quantized simulator vs float PJRT model
              --weights DIR   --limit N
   table1     regenerate Table I (comparison with SNN accelerators)
@@ -90,8 +95,9 @@ COMMANDS:
   serve      batched serving demo through the coordinator
              --workers N --requests N --backend sim|golden|pjrt --batch N
              --pool-workers N   per-simulator SDEB worker pool size
+             --sdeb-cores N --mapping P   topology/mapping of sim workers
              --serial        serial-charging simulator workers (ablation)
-  sweep      lane-count parallelism sweep (ablation A2)
+  sweep      lane-count x SDEB-core-count parallelism sweep (ablation A2)
   help       this message
 ";
 

@@ -4,7 +4,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
-use crate::accel::{Accelerator, DatapathMode, ExecMode};
+use crate::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
 use crate::hw::AccelConfig;
 use crate::model::{GoldenExecutor, QuantizedModel};
 use crate::runtime::{LoadedHlo, PjrtRuntime};
@@ -64,7 +64,9 @@ impl SimulatorBackend {
     /// (each worker constructs its own simulator in-thread). Shared by the
     /// CLI `serve` command, the serving example and the e2e bench.
     /// `pool_workers` sizes each simulator's persistent SDEB worker pool
-    /// (`0` keeps the model-derived default).
+    /// (`0` keeps the model-derived default). The core topology rides in
+    /// on `hw.topology`; use [`Self::factories_with_mapping`] to also pick
+    /// the SDSA head→core mapping policy.
     pub fn factories(
         n: usize,
         model: &QuantizedModel,
@@ -73,11 +75,27 @@ impl SimulatorBackend {
         exec: ExecMode,
         pool_workers: usize,
     ) -> Vec<BackendFactory> {
+        Self::factories_with_mapping(n, model, hw, mode, exec, pool_workers, MappingPolicy::default())
+    }
+
+    /// [`Self::factories`] with an explicit SDSA mapping policy (the CLI
+    /// `--mapping` knob of `serve` and the benches).
+    #[allow(clippy::too_many_arguments)]
+    pub fn factories_with_mapping(
+        n: usize,
+        model: &QuantizedModel,
+        hw: AccelConfig,
+        mode: DatapathMode,
+        exec: ExecMode,
+        pool_workers: usize,
+        policy: MappingPolicy,
+    ) -> Vec<BackendFactory> {
         (0..n)
             .map(|_| {
                 let m = model.clone();
                 Box::new(move || {
-                    let accel = Accelerator::with_runtime(m, hw, mode, exec, pool_workers);
+                    let accel = Accelerator::with_runtime(m, hw, mode, exec, pool_workers)
+                        .with_mapping(policy);
                     Ok(Box::new(Self { accel, cycles: 0 }) as Box<dyn InferBackend>)
                 }) as BackendFactory
             })

@@ -1,6 +1,128 @@
 //! Accelerator configuration. `AccelConfig::paper()` is the operating point
 //! of Table I: 1,536 parallel spiking neurons at 200 MHz on a Virtex
-//! UltraScale part.
+//! UltraScale part, arranged as the Fig. 1 core topology (one SPS core
+//! overlapped with two SDEB cores through ping/pong ESS halves).
+//!
+//! The topology itself is a first-class, sweepable parameter
+//! ([`CoreTopology`]): core counts, the buffer-ring depth of the
+//! SPS→SDEB pipeline, and how the SMAM comparator fabric relates to the
+//! SDEB-core count are all explicit, so scaling scenarios beyond the
+//! paper's fixed two-core instance (Bishop-style heterogeneous pools,
+//! FireFly-T-style engine replication) are one config edit away.
+
+use anyhow::{bail, Result};
+
+/// How the SMAM comparator fabric maps onto the SDEB cores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum FabricPartition {
+    /// Every SDEB core owns a full `smam_comparators`-wide array (the
+    /// paper's physical replication: each core is a complete SEA/ESS/SMAM
+    /// complement, so adding cores adds fabric).
+    #[default]
+    Replicated,
+    /// The configured `smam_comparators` fabric is split evenly across the
+    /// SDEB cores (iso-fabric scaling: adding cores buys concurrency but
+    /// each comparator array narrows). Modelling note: today the
+    /// partition narrows the **SMAM** accounting only (via
+    /// [`CoreTopology::comparators_per_core`]); the SLU/SEA lane arrays
+    /// keep charging at the configured width —
+    /// [`CoreTopology::lanes_per_core`] is a planning helper for sweeps
+    /// and resource estimates, not yet wired into the datapath.
+    Split,
+}
+
+/// Core counts and pipeline shape of one accelerator instance.
+///
+/// The paper's Fig. 1 instance is `sps_cores = 1`, `sdeb_cores = 2`,
+/// `pipeline_depth = 2` (ping/pong ESS halves): the SPS stage of timestep
+/// `t+1` overlaps the SDEB stage of timestep `t`, and each block's SDSA
+/// heads are sharded across the two SDEB cores' comparator arrays. This
+/// struct generalizes that fixed shape into a swept axis; the
+/// [`Mapper`](crate::accel::Mapper) decides which core runs which
+/// block × head × timestep work unit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoreTopology {
+    /// SPS (patch-embedding) cores. The schedule recurrence round-robins
+    /// timesteps across them; the paper instance has one.
+    pub sps_cores: usize,
+    /// SDEB cores whose SMAM comparator arrays process attention heads
+    /// concurrently (and whose count bounds the SDSA shard width).
+    pub sdeb_cores: usize,
+    /// Depth of the SPS→SDEB buffer ring: how many timesteps' encoded
+    /// outputs can be in flight. 2 is the paper's ping/pong pair.
+    pub pipeline_depth: usize,
+    /// Comparator-fabric partition across SDEB cores.
+    pub partition: FabricPartition,
+}
+
+impl Default for CoreTopology {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl CoreTopology {
+    /// The paper's Fig. 1 topology: one SPS core, two SDEB cores,
+    /// ping/pong (depth-2) double buffering, replicated comparator arrays.
+    pub fn paper() -> Self {
+        Self {
+            sps_cores: 1,
+            sdeb_cores: 2,
+            pipeline_depth: 2,
+            partition: FabricPartition::Replicated,
+        }
+    }
+
+    /// The paper topology with a different SDEB-core count (the
+    /// `--sdeb-cores` sweep axis).
+    pub fn with_sdeb_cores(sdeb_cores: usize) -> Self {
+        Self { sdeb_cores, ..Self::paper() }
+    }
+
+    /// Comparators available to one SDEB core's SMAM array under this
+    /// topology's partition (never below 1).
+    pub fn comparators_per_core(&self, cfg: &AccelConfig) -> usize {
+        match self.partition {
+            FabricPartition::Replicated => cfg.smam_comparators,
+            FabricPartition::Split => {
+                (cfg.smam_comparators / self.sdeb_cores.max(1)).max(1)
+            }
+        }
+    }
+
+    /// Spiking-neuron lanes available to one SDEB core under this
+    /// topology's partition (never below 1). Replicated cores each see the
+    /// full SLA width, mirroring the comparator rule. Planning helper for
+    /// sweeps/resource estimates — the SLU cycle accounting itself is not
+    /// (yet) partition-aware; see [`FabricPartition::Split`].
+    pub fn lanes_per_core(&self, cfg: &AccelConfig) -> usize {
+        match self.partition {
+            FabricPartition::Replicated => cfg.lanes,
+            FabricPartition::Split => (cfg.lanes / self.sdeb_cores.max(1)).max(1),
+        }
+    }
+
+    /// Structural invariants: every count nonzero and the pipeline deep
+    /// enough to overlap. (Fabric-dependent checks — e.g. that a Split
+    /// partition leaves each core at least one comparator — live in
+    /// [`AccelConfig::validate`], which knows the comparator budget.)
+    pub fn validate(&self) -> Result<()> {
+        if self.sps_cores == 0 {
+            bail!("topology needs at least one SPS core");
+        }
+        if self.sdeb_cores == 0 {
+            bail!("topology needs at least one SDEB core");
+        }
+        if self.pipeline_depth < 2 {
+            bail!(
+                "pipeline_depth {} < 2: the SPS and SDEB stages cannot overlap \
+                 without at least a ping/pong buffer pair",
+                self.pipeline_depth
+            );
+        }
+        Ok(())
+    }
+}
 
 /// Structural parameters of the accelerator instance.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -23,6 +145,8 @@ pub struct AccelConfig {
     pub ess_bank_words: usize,
     /// External-memory interface bytes/cycle (Input/Output Buffer side).
     pub dram_bytes_per_cycle: usize,
+    /// Core counts and pipeline shape (Fig. 1 generalized).
+    pub topology: CoreTopology,
 }
 
 impl AccelConfig {
@@ -37,6 +161,7 @@ impl AccelConfig {
             ess_banks: 384,
             ess_bank_words: 4096,
             dram_bytes_per_cycle: 16,
+            topology: CoreTopology::paper(),
         }
     }
 
@@ -51,16 +176,19 @@ impl AccelConfig {
             ess_banks: 16,
             ess_bank_words: 2048,
             dram_bytes_per_cycle: 8,
+            topology: CoreTopology::paper(),
         }
     }
 
     /// Scale the compute fabric to a different lane count, keeping the
-    /// proportions of the paper instance (used by the parallelism sweep).
+    /// proportions (and topology) of the paper instance (used by the
+    /// parallelism sweep). Panics on a degenerate lane count — sweeps
+    /// should never silently produce an invalid instance.
     pub fn with_lanes(lanes: usize) -> Self {
         let p = Self::paper();
         let ratio = lanes as f64 / p.lanes as f64;
         let scale = |v: usize| ((v as f64 * ratio).round() as usize).max(1);
-        Self {
+        let cfg = Self {
             lanes,
             freq_mhz: p.freq_mhz,
             tile_macs: scale(p.tile_macs),
@@ -69,7 +197,63 @@ impl AccelConfig {
             ess_banks: scale(p.ess_banks),
             ess_bank_words: p.ess_bank_words,
             dram_bytes_per_cycle: p.dram_bytes_per_cycle,
+            topology: p.topology,
+        };
+        cfg.validate().expect("scaled AccelConfig invalid");
+        cfg
+    }
+
+    /// This instance with a different core topology (validated).
+    pub fn with_topology(mut self, topology: CoreTopology) -> Self {
+        topology.validate().expect("invalid CoreTopology");
+        self.topology = topology;
+        self
+    }
+
+    /// Structural invariants of the fabric: nonzero unit counts, the
+    /// comparator array no wider than the lane array, and a valid
+    /// topology. `with_lanes` enforces this on every swept instance.
+    pub fn validate(&self) -> Result<()> {
+        if self.lanes == 0 {
+            bail!("lanes must be nonzero");
         }
+        if self.tile_macs == 0 {
+            bail!("tile_macs must be nonzero");
+        }
+        if self.smam_comparators == 0 {
+            bail!("smam_comparators must be nonzero");
+        }
+        if self.smam_comparators > self.lanes {
+            bail!(
+                "smam_comparators {} > lanes {}: the comparator array cannot \
+                 outrun the neuron fabric that feeds it",
+                self.smam_comparators,
+                self.lanes
+            );
+        }
+        if self.smu_units == 0 {
+            bail!("smu_units must be nonzero");
+        }
+        if self.ess_banks == 0 || self.ess_bank_words == 0 {
+            bail!("ESS must have nonzero banks and words per bank");
+        }
+        if self.dram_bytes_per_cycle == 0 {
+            bail!("dram_bytes_per_cycle must be nonzero");
+        }
+        if !(self.freq_mhz > 0.0) {
+            bail!("freq_mhz must be positive");
+        }
+        if self.topology.partition == FabricPartition::Split
+            && self.topology.sdeb_cores > self.smam_comparators
+        {
+            bail!(
+                "Split partition over {} SDEB cores cannot be cut from {} \
+                 comparators (each core needs at least one)",
+                self.topology.sdeb_cores,
+                self.smam_comparators
+            );
+        }
+        self.topology.validate()
     }
 
     /// Peak throughput in GSOP/s: every lane retires one synaptic
@@ -112,5 +296,103 @@ mod tests {
     fn seconds_at_clock() {
         let c = AccelConfig::paper();
         assert!((c.seconds(200_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_topology_is_the_fig1_instance() {
+        let t = AccelConfig::paper().topology;
+        assert_eq!(t.sps_cores, 1);
+        assert_eq!(t.sdeb_cores, 2);
+        assert_eq!(t.pipeline_depth, 2);
+        assert_eq!(t.partition, FabricPartition::Replicated);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn replicated_partition_keeps_full_arrays() {
+        let cfg = AccelConfig::paper();
+        let t = CoreTopology::with_sdeb_cores(4);
+        assert_eq!(t.comparators_per_core(&cfg), 384);
+        assert_eq!(t.lanes_per_core(&cfg), 1536);
+    }
+
+    #[test]
+    fn split_partition_divides_the_fabric() {
+        let cfg = AccelConfig::paper();
+        let t = CoreTopology {
+            partition: FabricPartition::Split,
+            ..CoreTopology::with_sdeb_cores(4)
+        };
+        assert_eq!(t.comparators_per_core(&cfg), 96);
+        assert_eq!(t.lanes_per_core(&cfg), 384);
+        // Splitting below one comparator clamps rather than hitting zero.
+        let mut tiny = AccelConfig::small();
+        tiny.smam_comparators = 2;
+        let wide = CoreTopology {
+            partition: FabricPartition::Split,
+            ..CoreTopology::with_sdeb_cores(8)
+        };
+        assert_eq!(wide.comparators_per_core(&tiny), 1);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_instances() {
+        let mut c = AccelConfig::small();
+        c.lanes = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = AccelConfig::small();
+        c.smam_comparators = c.lanes + 1;
+        assert!(c.validate().is_err(), "comparators must not exceed lanes");
+
+        let mut c = AccelConfig::small();
+        c.ess_banks = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = AccelConfig::small();
+        c.dram_bytes_per_cycle = 0;
+        assert!(c.validate().is_err());
+
+        assert!(AccelConfig::small().validate().is_ok());
+        assert!(AccelConfig::paper().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_oversplit_fabric() {
+        let mut c = AccelConfig::small(); // 16 comparators
+        c.smam_comparators = 2;
+        c.topology = CoreTopology {
+            partition: FabricPartition::Split,
+            ..CoreTopology::with_sdeb_cores(8)
+        };
+        assert!(c.validate().is_err(), "8 cores cannot split 2 comparators");
+        c.topology.sdeb_cores = 2;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn topology_validate_rejects_zero_cores_and_shallow_pipes() {
+        assert!(CoreTopology { sps_cores: 0, ..CoreTopology::paper() }.validate().is_err());
+        assert!(CoreTopology { sdeb_cores: 0, ..CoreTopology::paper() }.validate().is_err());
+        assert!(
+            CoreTopology { pipeline_depth: 1, ..CoreTopology::paper() }.validate().is_err(),
+            "depth 1 cannot double-buffer"
+        );
+        assert!(CoreTopology { pipeline_depth: 4, ..CoreTopology::paper() }.validate().is_ok());
+    }
+
+    #[test]
+    fn with_lanes_smallest_swept_instance_is_valid() {
+        // The degenerate end of the sweep: every scaled count clamps to
+        // >= 1 and the result still validates.
+        let tiny = AccelConfig::with_lanes(1);
+        assert!(tiny.validate().is_ok());
+        assert_eq!(tiny.smam_comparators, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "scaled AccelConfig invalid")]
+    fn with_lanes_zero_panics() {
+        let _ = AccelConfig::with_lanes(0);
     }
 }

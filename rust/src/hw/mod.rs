@@ -14,7 +14,7 @@ pub mod resources;
 pub mod sram;
 pub mod stats;
 
-pub use config::AccelConfig;
+pub use config::{AccelConfig, CoreTopology, FabricPartition};
 pub use energy::EnergyModel;
 pub use resources::{ResourceModel, Resources};
 pub use sram::SramBank;

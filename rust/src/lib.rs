@@ -8,13 +8,16 @@
 //! PJRT runtime that cross-checks numerics against the AOT-compiled JAX
 //! model (see `python/compile/`).
 //!
-//! The accelerator controller **executes** the paper's two-core overlap by
-//! default: the SPS stage of timestep `t+1` runs concurrently with the
-//! SDEB stage of timestep `t` against double-buffered ESS halves, with
-//! attention heads sharded across the SDEB cores
-//! ([`accel::executor`]); serial charging stays available as an ablation
-//! (`ExecMode::Serial`). See `ARCHITECTURE.md` for the paper-to-code map
-//! and `DESIGN.md` for layer/substitution details.
+//! The accelerator controller **executes** the paper's core overlap by
+//! default, generalized over a configurable [`CoreTopology`](hw::CoreTopology):
+//! the SPS stage of timestep `t+1` runs concurrently with the SDEB stage
+//! of timestep `t` against per-core ESS buffer rings, with attention
+//! heads mapped across the SDEB cores by the [`accel::mapper`] scheduler
+//! ([`accel::executor`]). The default topology is the paper's Fig. 1
+//! two-core instance (bit-identical to the pre-topology executor);
+//! serial charging stays available as an ablation (`ExecMode::Serial`).
+//! See `ARCHITECTURE.md` for the paper-to-code map and `DESIGN.md` for
+//! layer/substitution details.
 //!
 //! Layer map (DESIGN.md):
 //! * L3 — this crate: coordinator, simulator, metrics, benches.

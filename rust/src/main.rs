@@ -7,14 +7,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode};
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
 use spikeformer_accel::baselines::{aicas23_row, iscas22_row, tcad22_row};
 use spikeformer_accel::cli::{Args, USAGE};
 use spikeformer_accel::coordinator::{
     BackendFactory, BatchPolicy, Coordinator, GoldenBackend, PjrtBackend, Request,
     SimulatorBackend,
 };
-use spikeformer_accel::hw::{AccelConfig, ResourceModel};
+use spikeformer_accel::hw::{AccelConfig, CoreTopology, ResourceModel};
 use spikeformer_accel::metrics::{format_table1, AccelRow};
 use spikeformer_accel::model::{load_model, loader::load_test_split, QuantizedModel, SdtModelConfig};
 use spikeformer_accel::runtime::PjrtRuntime;
@@ -63,22 +63,50 @@ fn exec_mode(args: &Args) -> ExecMode {
     }
 }
 
+/// The paper hardware point with the CLI's topology overrides
+/// (`--sdeb-cores N`, `--pipeline-depth N`) applied and validated.
+fn hw_from_args(args: &Args) -> Result<AccelConfig> {
+    let mut hw = AccelConfig::paper();
+    hw.topology.sdeb_cores = args.usize_or("sdeb-cores", hw.topology.sdeb_cores)?;
+    hw.topology.pipeline_depth =
+        args.usize_or("pipeline-depth", hw.topology.pipeline_depth)?;
+    hw.validate()?;
+    Ok(hw)
+}
+
+/// The `--mapping P` SDSA head->core policy (default round-robin).
+fn mapping_from_args(args: &Args) -> Result<MappingPolicy> {
+    match args.get("mapping") {
+        Some(p) => p.parse(),
+        None => Ok(MappingPolicy::default()),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let model = get_model(args)?;
     let seed = args.usize_or("seed", 1)? as u64;
     let exec = exec_mode(args);
     let workers = args.usize_or("workers", 0)?;
+    let hw = hw_from_args(args)?;
+    let policy = mapping_from_args(args)?;
     println!(
-        "model `{}`: D={} T={} blocks={} exec={exec:?}",
-        model.cfg.name, model.cfg.embed_dim, model.cfg.timesteps, model.cfg.num_blocks
+        "model `{}`: D={} T={} blocks={} exec={exec:?} sdeb_cores={} depth={} mapping={}",
+        model.cfg.name,
+        model.cfg.embed_dim,
+        model.cfg.timesteps,
+        model.cfg.num_blocks,
+        hw.topology.sdeb_cores,
+        hw.topology.pipeline_depth,
+        policy.name()
     );
     let mut accel = Accelerator::with_runtime(
         model,
-        AccelConfig::paper(),
+        hw,
         DatapathMode::Encoded,
         exec,
         workers,
-    );
+    )
+    .with_mapping(policy);
     let report = accel.infer(&random_image(seed))?;
     println!("{}", report.summary());
     println!("predicted class: {}", report.argmax());
@@ -191,13 +219,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let exec = exec_mode(args);
     let pool_workers = args.usize_or("pool-workers", 0)?;
     let factories: Vec<BackendFactory> = match backend.as_str() {
-        "sim" => SimulatorBackend::factories(
+        "sim" => SimulatorBackend::factories_with_mapping(
             workers,
             &model,
-            AccelConfig::paper(),
+            hw_from_args(args)?,
             DatapathMode::Encoded,
             exec,
             pool_workers,
+            mapping_from_args(args)?,
         ),
         "golden" => GoldenBackend::factories(workers, &model),
         "pjrt" => (0..workers)
@@ -229,16 +258,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_sweep() -> Result<()> {
     let cfg = SdtModelConfig::paper();
     let model = QuantizedModel::random(&cfg, 42);
-    println!("{:<8}{:>14}{:>14}{:>14}{:>12}", "lanes", "cycles", "GSOP/s", "GSOP/W", "LUT");
+    println!(
+        "{:<8}{:<8}{:>14}{:>14}{:>14}{:>12}",
+        "lanes", "cores", "wall cyc", "GSOP/s", "GSOP/W", "LUT"
+    );
     for lanes in [128, 256, 512, 768, 1024, 1536] {
-        let hw = AccelConfig::with_lanes(lanes);
-        let res = ResourceModel::default().estimate(&hw);
-        let mut accel = Accelerator::new(model.clone(), hw);
-        let r = accel.infer(&random_image(1))?;
-        println!(
-            "{:<8}{:>14}{:>14.1}{:>14.2}{:>12}",
-            lanes, r.total.cycles, r.gsops, r.gsop_per_w, res.lut
-        );
+        for cores in [1usize, 2, 4] {
+            let hw = AccelConfig::with_lanes(lanes)
+                .with_topology(CoreTopology::with_sdeb_cores(cores));
+            let res = ResourceModel::default().estimate(&hw);
+            let mut accel = Accelerator::new(model.clone(), hw);
+            let r = accel.infer(&random_image(1))?;
+            println!(
+                "{:<8}{:<8}{:>14}{:>14.1}{:>14.2}{:>12}",
+                lanes,
+                cores,
+                r.wall_cycles(),
+                r.gsops,
+                r.gsop_per_w,
+                res.lut
+            );
+        }
     }
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! Model hyper-parameters, loadable from the exported `config.txt` and
 //! constructible for the paper operating point.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::io::ModelConfigFile;
 use crate::lif::LifParams;
@@ -40,7 +40,7 @@ pub struct SdtModelConfig {
 impl SdtModelConfig {
     /// The trainable `tiny` config (matches `python/compile/config.py`).
     pub fn tiny() -> Self {
-        Self {
+        let c = Self {
             name: "tiny".into(),
             img_size: 32,
             in_channels: 3,
@@ -54,12 +54,14 @@ impl SdtModelConfig {
             lif_v_th: 1.0,
             lif_v_reset: 0.0,
             lif_gamma: 0.5,
-        }
+        };
+        c.validate().expect("builtin tiny config invalid");
+        c
     }
 
     /// The paper's CIFAR operating point (Table I workload; T=4, D=384).
     pub fn paper() -> Self {
-        Self {
+        let c = Self {
             name: "paper".into(),
             img_size: 32,
             in_channels: 3,
@@ -73,12 +75,32 @@ impl SdtModelConfig {
             lif_v_th: 1.0,
             lif_v_reset: 0.0,
             lif_gamma: 0.5,
-        }
+        };
+        c.validate().expect("builtin paper config invalid");
+        c
     }
 
     /// Parse from the exported `config.txt` representation.
+    ///
+    /// `attn_v_th` is an integer accumulation count in the hardware; the
+    /// exporter historically wrote it as a float (`2.0`), so integral
+    /// float spellings are accepted but anything with a fractional part
+    /// (e.g. `2.7`) is a hard error rather than a silent truncation.
     pub fn from_file(f: &ModelConfigFile) -> Result<Self> {
-        Ok(Self {
+        let attn_v_th_f = f.f32("attn_v_th")?;
+        // `>=` because `u32::MAX as f32` rounds up to 2^32: anything at or
+        // above it would saturate in the cast below.
+        if !attn_v_th_f.is_finite()
+            || attn_v_th_f < 0.0
+            || attn_v_th_f.fract() != 0.0
+            || attn_v_th_f >= u32::MAX as f32
+        {
+            bail!(
+                "attn_v_th {attn_v_th_f} is not a non-negative integer: the SDSA \
+                 mask threshold counts whole accumulations"
+            );
+        }
+        let c = Self {
             name: f.kv.get("name").cloned().unwrap_or_else(|| "custom".into()),
             img_size: f.usize("img_size")?,
             in_channels: f.usize("in_channels")?,
@@ -88,11 +110,52 @@ impl SdtModelConfig {
             num_blocks: f.usize("num_blocks")?,
             num_heads: f.usize("num_heads")?,
             mlp_hidden: f.usize("mlp_hidden")?,
-            attn_v_th: f.f32("attn_v_th")? as u32,
+            attn_v_th: attn_v_th_f as u32,
             lif_v_th: f.f32("lif_v_th")?,
             lif_v_reset: f.f32("lif_v_reset")?,
             lif_gamma: f.f32("lif_gamma")?,
-        })
+        };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Structural invariants of the model geometry. The SPS front-end
+    /// downsamples by 4 in each spatial dimension, so `img_size` must be a
+    /// multiple of 4 (otherwise [`Self::tokens_side`] silently
+    /// floor-divides); heads are contiguous channel ranges, so
+    /// `num_heads` must divide `embed_dim` evenly.
+    pub fn validate(&self) -> Result<()> {
+        if self.img_size == 0 || self.img_size % 4 != 0 {
+            bail!(
+                "img_size {} must be a nonzero multiple of 4 (the SPS stage \
+                 pools twice)",
+                self.img_size
+            );
+        }
+        if self.in_channels == 0 {
+            bail!("in_channels must be nonzero");
+        }
+        if self.num_classes == 0 {
+            bail!("num_classes must be nonzero");
+        }
+        if self.timesteps == 0 {
+            bail!("timesteps must be nonzero");
+        }
+        if self.embed_dim == 0 || self.mlp_hidden == 0 {
+            bail!("embed_dim and mlp_hidden must be nonzero");
+        }
+        if self.num_blocks == 0 {
+            bail!("num_blocks must be nonzero");
+        }
+        if self.num_heads == 0 || self.embed_dim % self.num_heads != 0 {
+            bail!(
+                "num_heads {} must be nonzero and divide embed_dim {} (heads are \
+                 contiguous channel ranges)",
+                self.num_heads,
+                self.embed_dim
+            );
+        }
+        Ok(())
     }
 
     /// The integer LIF parameters of this config.
@@ -153,5 +216,68 @@ mod tests {
         let f = ModelConfigFile::parse(text);
         let c = SdtModelConfig::from_file(&f).unwrap();
         assert_eq!(c, SdtModelConfig::tiny());
+    }
+
+    fn tiny_text_with(key: &str, value: &str) -> String {
+        let base = [
+            ("name", "tiny"),
+            ("img_size", "32"),
+            ("in_channels", "3"),
+            ("num_classes", "10"),
+            ("timesteps", "2"),
+            ("embed_dim", "64"),
+            ("num_blocks", "1"),
+            ("num_heads", "1"),
+            ("mlp_hidden", "128"),
+            ("attn_v_th", "2"),
+            ("lif_v_th", "1.0"),
+            ("lif_v_reset", "0.0"),
+            ("lif_gamma", "0.5"),
+        ];
+        base.iter()
+            .map(|&(k, v)| format!("{k} {}\n", if k == key { value } else { v }))
+            .collect()
+    }
+
+    #[test]
+    fn from_file_rejects_fractional_attn_v_th() {
+        let f = ModelConfigFile::parse(&tiny_text_with("attn_v_th", "2.7"));
+        let err = SdtModelConfig::from_file(&f).unwrap_err().to_string();
+        assert!(err.contains("attn_v_th"), "{err}");
+        // Integral spellings still parse (bare integer and float alike).
+        for ok in ["2", "2.0", "0"] {
+            let f = ModelConfigFile::parse(&tiny_text_with("attn_v_th", ok));
+            assert!(SdtModelConfig::from_file(&f).is_ok(), "attn_v_th {ok}");
+        }
+        let f = ModelConfigFile::parse(&tiny_text_with("attn_v_th", "-1"));
+        assert!(SdtModelConfig::from_file(&f).is_err(), "negative threshold");
+        // 2^32 parses to exactly `u32::MAX as f32` (which rounds up to
+        // 2^32) — must be rejected, not saturated.
+        let f = ModelConfigFile::parse(&tiny_text_with("attn_v_th", "4294967296"));
+        assert!(SdtModelConfig::from_file(&f).is_err(), "out-of-range threshold");
+    }
+
+    #[test]
+    fn from_file_validates_geometry() {
+        // img_size not a multiple of 4: tokens_side would floor-divide.
+        let f = ModelConfigFile::parse(&tiny_text_with("img_size", "30"));
+        assert!(SdtModelConfig::from_file(&f).is_err());
+        // heads must divide embed_dim.
+        let f = ModelConfigFile::parse(&tiny_text_with("num_heads", "5"));
+        assert!(SdtModelConfig::from_file(&f).is_err());
+        // zero dims.
+        for (k, v) in [("embed_dim", "0"), ("timesteps", "0"), ("num_blocks", "0")] {
+            let f = ModelConfigFile::parse(&tiny_text_with(k, v));
+            assert!(SdtModelConfig::from_file(&f).is_err(), "{k}={v}");
+        }
+    }
+
+    #[test]
+    fn validate_accepts_builtin_configs() {
+        assert!(SdtModelConfig::tiny().validate().is_ok());
+        assert!(SdtModelConfig::paper().validate().is_ok());
+        let mut c = SdtModelConfig::paper();
+        c.num_heads = 7; // 384 % 7 != 0
+        assert!(c.validate().is_err());
     }
 }

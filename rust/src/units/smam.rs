@@ -16,6 +16,7 @@
 
 use std::ops::Range;
 
+use crate::accel::mapper::Mapper;
 use crate::accel::workers::WorkerPool;
 use crate::hw::{AccelConfig, UnitStats};
 use crate::scratch::ExecScratch;
@@ -27,10 +28,15 @@ use crate::util::div_ceil;
 /// The SDSA mask is channel-local (each channel's Q∩K count and mask bit
 /// depend on that channel alone), so a head is simply a contiguous channel
 /// range and sharding heads across cores is bit-exact. During block `b`'s
-/// SDSA phase the other blocks' SMAM comparator arrays are idle, so the
-/// controller farms head `h` out to core `h % cores` — each core runs its
+/// SDSA phase the other SDEB cores' SMAM comparator arrays are idle, so
+/// the scheduler farms heads out across them — each core runs its
 /// assigned heads back to back on its own comparator array, and the phase
 /// finishes when the busiest core does (cycles = max over cores).
+///
+/// This struct is the legacy fixed round-robin plan (`h % cores`); the
+/// policy-driven head→core assignment lives in
+/// [`Mapper`](crate::accel::Mapper) and enters through
+/// [`SpikeMaskAddModule::run_mapped_into`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct HeadShard {
     /// Attention heads (`SdtModelConfig::num_heads`); each head is a
@@ -168,22 +174,9 @@ impl SpikeMaskAddModule {
     /// per-core head batches dispatched on `pool` when one is given.
     ///
     /// Head `h` (a contiguous channel range, [`HeadShard::head_channels`])
-    /// is assigned to core `h % cores`. Each core streams its heads back
-    /// to back through its own comparator array, so cycles are charged
-    /// per **core** (one ceiling over the core's total comparator steps
-    /// and one threshold compare per assigned channel — never worse than
-    /// the serial single-array cost), and the phase finishes when the
-    /// busiest core does (cycles = max over cores) while op counts (SOPs,
-    /// adds, compares, SRAM traffic) sum over all heads. Outputs are
-    /// bit-identical to the serial path because the mask is channel-local:
-    /// every head writes a disjoint slice of the output, so values and
-    /// accounting do not depend on which thread ran which core. With
-    /// `heads == cores == 1` the accounting is the serial formula.
-    ///
-    /// `pool: Some(_)` hands the non-first cores to the persistent worker
-    /// pool (no thread spawn; if every worker is busy the caller runs
-    /// them inline at scope end); `None` walks all cores on the calling
-    /// thread.
+    /// is assigned to core `h % cores` — the legacy round-robin
+    /// assignment; [`Self::run_mapped_into`] is the policy-driven
+    /// generalization this wrapper delegates to.
     pub fn run_sharded_into(
         &self,
         q: &EncodedSpikes,
@@ -198,7 +191,103 @@ impl SpikeMaskAddModule {
         let c = q.channels;
         let heads = shard.heads.max(1).min(c.max(1));
         let cores = shard.cores.max(1).min(heads);
-        let comps = cfg.smam_comparators as u64;
+        let mut assign = scratch.take_usize();
+        assign.clear();
+        assign.extend((0..heads).map(|h| h % cores));
+        let out = self.run_assigned_into(
+            q,
+            k,
+            v,
+            cfg.smam_comparators as u64,
+            heads,
+            cores,
+            &assign,
+            pool,
+            scratch,
+        );
+        scratch.put_usize(assign);
+        out
+    }
+
+    /// Run SDSA under a [`Mapper`]'s policy for encoder block `block`:
+    /// the mapper produces this pass's head→core assignment (reading the
+    /// actual per-head Q+K spike loads for
+    /// [`LoadBalanced`](crate::accel::MappingPolicy::LoadBalanced)) and
+    /// the topology decides each core's comparator width.
+    ///
+    /// Each core streams its assigned heads back to back through its own
+    /// comparator array, so cycles are charged per **core** (one ceiling
+    /// over the core's total comparator steps and one threshold compare
+    /// per assigned channel — never worse than the serial single-array
+    /// cost under a replicated fabric), and the phase finishes when the
+    /// busiest core does (cycles = max over cores) while op counts (SOPs,
+    /// adds, compares, SRAM traffic) sum over all heads. Outputs are
+    /// bit-identical for every assignment because the mask is
+    /// channel-local: every head writes a disjoint slice of the output,
+    /// so values never depend on which core (or thread) ran which head.
+    ///
+    /// `pool: Some(_)` hands the non-first cores to the persistent worker
+    /// pool (no thread spawn; if every worker is busy the caller runs
+    /// them inline at scope end); `None` walks all cores on the calling
+    /// thread.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_mapped_into(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        cfg: &AccelConfig,
+        mapper: &Mapper,
+        block: usize,
+        pool: Option<&WorkerPool>,
+        scratch: &mut ExecScratch,
+    ) -> (SmamOutput, UnitStats) {
+        Self::check_shapes(q, k, v);
+        let c = q.channels;
+        let heads = mapper.effective_heads(c);
+        let cores = mapper.effective_cores(heads);
+        let mut loads = scratch.take_u64(0);
+        if matches!(mapper.policy, crate::accel::MappingPolicy::LoadBalanced) && cores > 1 {
+            Mapper::head_loads_into(q, k, heads, &mut loads);
+        }
+        let mut assign = scratch.take_usize();
+        mapper.assign_heads_into(block, heads, cores, &loads, &mut assign);
+        let out = self.run_assigned_into(
+            q,
+            k,
+            v,
+            mapper.comparators_per_core(cfg) as u64,
+            heads,
+            cores,
+            &assign,
+            pool,
+            scratch,
+        );
+        scratch.put_usize(assign);
+        scratch.put_u64(loads);
+        out
+    }
+
+    /// The shared execution path behind [`Self::run_sharded_into`] and
+    /// [`Self::run_mapped_into`]: run `heads` contiguous head ranges on
+    /// `cores` comparator arrays of `comps` comparators each, with head
+    /// `h` on core `assign[h]`.
+    #[allow(clippy::too_many_arguments)]
+    fn run_assigned_into(
+        &self,
+        q: &EncodedSpikes,
+        k: &EncodedSpikes,
+        v: &EncodedSpikes,
+        comps: u64,
+        heads: usize,
+        cores: usize,
+        assign: &[usize],
+        pool: Option<&WorkerPool>,
+        scratch: &mut ExecScratch,
+    ) -> (SmamOutput, UnitStats) {
+        let c = q.channels;
+        debug_assert_eq!(assign.len(), heads);
+        debug_assert!(assign.iter().all(|&core| core < cores));
         // Spike counts read once up front (dispatch used to re-count them
         // for the spawn decision and again for the stats).
         let q_spikes = q.count_spikes() as u64;
@@ -225,7 +314,7 @@ impl SpikeMaskAddModule {
             }
             let mut per_core: Vec<Vec<HeadJob<'_>>> = (0..cores).map(|_| Vec::new()).collect();
             for (h, job) in jobs.into_iter().enumerate() {
-                per_core[h % cores].push(job);
+                per_core[assign[h]].push(job);
             }
 
             let me = *self;
@@ -271,11 +360,9 @@ impl SpikeMaskAddModule {
         let mut cycles = 0u64;
         for core in 0..cores {
             let (mut core_steps, mut core_channels) = (0u64, 0u64);
-            let mut h = core;
-            while h < heads {
+            for h in (0..heads).filter(|&h| assign[h] == core) {
                 core_steps += head_tally[2 * h];
                 core_channels += HeadShard::head_channels(h, heads, c).len() as u64;
-                h += cores;
             }
             cycles = cycles.max(div_ceil(core_steps, comps).max(1) + div_ceil(core_channels, comps));
         }
@@ -561,6 +648,109 @@ mod tests {
             "2 cores {} !< 1 core {}",
             two_core.cycles,
             one_core.cycles
+        );
+    }
+
+    #[test]
+    fn mapped_policies_bit_identical_values_any_assignment() {
+        use crate::accel::{Mapper, MappingPolicy};
+        use crate::hw::{CoreTopology, FabricPartition};
+        let mut rng = Prng::new(25);
+        let cfg = AccelConfig::paper();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 384, 64, 0.25);
+        let k = random_encoded(&mut rng, 384, 64, 0.25);
+        let v = random_encoded(&mut rng, 384, 64, 0.25);
+        let (want, want_stats) = smam.run(&q, &k, &v, &cfg);
+        let mut scratch = ExecScratch::new();
+        for policy in MappingPolicy::ALL {
+            for cores in [1usize, 2, 4, 8] {
+                for partition in [FabricPartition::Replicated, FabricPartition::Split] {
+                    let topo = CoreTopology {
+                        partition,
+                        ..CoreTopology::with_sdeb_cores(cores)
+                    };
+                    let mapper = Mapper::new(8, topo, policy);
+                    let (out, st) =
+                        smam.run_mapped_into(&q, &k, &v, &cfg, &mapper, 1, None, &mut scratch);
+                    assert_eq!(out.mask, want.mask, "{policy:?} cores={cores}");
+                    assert_eq!(out.acc, want.acc, "{policy:?} cores={cores}");
+                    assert_eq!(out.masked_v, want.masked_v, "{policy:?} cores={cores}");
+                    // Work is conserved under every assignment.
+                    assert_eq!(st.sops, want_stats.sops, "{policy:?} cores={cores}");
+                    assert_eq!(st.adds, want_stats.adds, "{policy:?} cores={cores}");
+                    assert_eq!(st.cmps, want_stats.cmps, "{policy:?} cores={cores}");
+                    scratch.put_bool(out.mask);
+                    scratch.put_u32(out.acc);
+                    scratch.put_enc(out.masked_v);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mapped_round_robin_matches_legacy_shard_accounting() {
+        use crate::accel::{Mapper, MappingPolicy};
+        use crate::hw::CoreTopology;
+        let mut rng = Prng::new(26);
+        let cfg = AccelConfig::paper();
+        let smam = SpikeMaskAddModule::new(2);
+        let q = random_encoded(&mut rng, 384, 64, 0.3);
+        let k = random_encoded(&mut rng, 384, 64, 0.3);
+        let v = random_encoded(&mut rng, 384, 64, 0.3);
+        for cores in [1usize, 2, 4] {
+            let (want, want_st) =
+                smam.run_sharded(&q, &k, &v, &cfg, HeadShard { heads: 8, cores });
+            let mapper = Mapper::new(
+                8,
+                CoreTopology::with_sdeb_cores(cores),
+                MappingPolicy::HeadRoundRobin,
+            );
+            let mut scratch = ExecScratch::new();
+            let (out, st) = smam.run_mapped_into(&q, &k, &v, &cfg, &mapper, 0, None, &mut scratch);
+            assert_eq!(out.mask, want.mask, "cores={cores}");
+            assert_eq!(st, want_st, "round-robin mapping must reproduce HeadShard cycles");
+        }
+    }
+
+    #[test]
+    fn load_balanced_never_slower_than_round_robin_busiest_core() {
+        use crate::accel::{Mapper, MappingPolicy};
+        use crate::hw::CoreTopology;
+        let mut rng = Prng::new(27);
+        let cfg = AccelConfig::paper();
+        let smam = SpikeMaskAddModule::new(2);
+        // Skewed tensor: low channels dense, high channels sparse, so
+        // round-robin's static split is measurably unbalanced.
+        let mut mq = SpikeMatrix::zeros(384, 64);
+        let mut mk = SpikeMatrix::zeros(384, 64);
+        for c in 0..384 {
+            let p = if c < 96 { 0.8 } else { 0.05 };
+            for t in 0..64 {
+                if rng.bernoulli(p) {
+                    mq.set(c, t, true);
+                }
+                if rng.bernoulli(p) {
+                    mk.set(c, t, true);
+                }
+            }
+        }
+        let q = EncodedSpikes::from_bitmap(&mq);
+        let k = EncodedSpikes::from_bitmap(&mk);
+        let v = random_encoded(&mut rng, 384, 64, 0.2);
+        let topo = CoreTopology::with_sdeb_cores(4);
+        let mut scratch = ExecScratch::new();
+        let rr = Mapper::new(8, topo, MappingPolicy::HeadRoundRobin);
+        let lb = Mapper::new(8, topo, MappingPolicy::LoadBalanced);
+        let (o1, s_rr) = smam.run_mapped_into(&q, &k, &v, &cfg, &rr, 0, None, &mut scratch);
+        let (o2, s_lb) = smam.run_mapped_into(&q, &k, &v, &cfg, &lb, 0, None, &mut scratch);
+        assert_eq!(o1.mask, o2.mask);
+        assert_eq!(o1.masked_v, o2.masked_v);
+        assert!(
+            s_lb.cycles <= s_rr.cycles,
+            "LPT {} !<= round-robin {}",
+            s_lb.cycles,
+            s_rr.cycles
         );
     }
 

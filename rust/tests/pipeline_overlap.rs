@@ -7,8 +7,10 @@
 //! fill-latency bound, making the estimator a cross-check rather than the
 //! only source of truth.
 
-use spikeformer_accel::accel::{pipeline_estimate, Accelerator, DatapathMode, ExecMode};
-use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::accel::{
+    pipeline_estimate, Accelerator, DatapathMode, ExecMode, MappingPolicy,
+};
+use spikeformer_accel::hw::{AccelConfig, CoreTopology};
 use spikeformer_accel::model::{GoldenExecutor, QuantizedModel, SdtModelConfig};
 use spikeformer_accel::util::Prng;
 
@@ -121,6 +123,115 @@ fn overlap_strictly_faster_than_serial_charging() {
         r_over.phases.get("sdeb.smam").cycles,
         r_serial.phases.get("sdeb.smam").cycles
     );
+}
+
+/// Tentpole acceptance: every SDEB-core count produces bit-identical
+/// logits (vs serial charging *and* the golden executor), and modelled
+/// wall cycles are monotonically non-increasing in the core count under
+/// the default (replicated-fabric, round-robin) topology.
+#[test]
+fn sdeb_core_counts_bit_identical_logits_monotone_cycles() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 17);
+    let img = random_image(21);
+    let golden = GoldenExecutor::new(&model).infer(&img);
+    let mut serial = Accelerator::with_modes(
+        model.clone(),
+        AccelConfig::small(),
+        DatapathMode::Encoded,
+        ExecMode::Serial,
+    );
+    let r_serial = serial.infer(&img).unwrap();
+    let mut last_wall = None;
+    for cores in [1usize, 2, 4] {
+        let hw = AccelConfig::small().with_topology(CoreTopology::with_sdeb_cores(cores));
+        let mut accel = Accelerator::new(model.clone(), hw);
+        let r = accel.infer(&img).unwrap();
+        assert_eq!(r.logits, r_serial.logits, "cores={cores}: logits vs serial");
+        assert_eq!(r.logits, golden.logits, "cores={cores}: logits vs golden");
+        // Serial-equivalent op accounting is topology-invariant.
+        assert_eq!(r.total.sops, r_serial.total.sops, "cores={cores}: sops");
+        let exec = r.pipeline.as_ref().expect("overlapped run records its schedule");
+        assert_eq!(exec.serialized_cycles, r.total.cycles, "cores={cores}");
+        if let Some(prev) = last_wall {
+            assert!(
+                r.wall_cycles() <= prev,
+                "cores={cores}: wall {} > previous {} — replicated cores must \
+                 never cost modelled cycles",
+                r.wall_cycles(),
+                prev
+            );
+        }
+        last_wall = Some(r.wall_cycles());
+    }
+}
+
+/// The default topology (sdeb_cores = 2, depth 2, round-robin) must
+/// reproduce the paper's two-core executor exactly: same logits, same
+/// executed schedule as an explicitly-constructed two-core instance.
+#[test]
+fn default_topology_is_the_two_core_paper_instance() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 19);
+    let img = random_image(23);
+    let mut default = Accelerator::new(model.clone(), AccelConfig::small());
+    let explicit_hw = AccelConfig::small().with_topology(CoreTopology::paper());
+    let mut explicit = Accelerator::new(model, explicit_hw)
+        .with_mapping(MappingPolicy::HeadRoundRobin);
+    let a = default.infer(&img).unwrap();
+    let b = explicit.infer(&img).unwrap();
+    assert_eq!(a.logits, b.logits);
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.wall_cycles(), b.wall_cycles());
+    let (pa, pb) = (a.pipeline.unwrap(), b.pipeline.unwrap());
+    assert_eq!(pa.sps_per_timestep, pb.sps_per_timestep);
+    assert_eq!(pa.sdeb_per_timestep, pb.sdeb_per_timestep);
+    assert_eq!(pa.depth, 2);
+    assert_eq!(pa.sps_cores, 1);
+}
+
+/// Every mapping policy is value-invariant end to end, and the executed
+/// schedule still reconciles with the analytic estimator.
+#[test]
+fn mapping_policies_bit_identical_end_to_end() {
+    let cfg = sharded_cfg();
+    let timesteps = cfg.timesteps;
+    let model = QuantizedModel::random(&cfg, 29);
+    let img = random_image(31);
+    let hw = AccelConfig::small().with_topology(CoreTopology::with_sdeb_cores(4));
+    let mut base = Accelerator::new(model.clone(), hw);
+    let want = base.infer(&img).unwrap();
+    for policy in MappingPolicy::ALL {
+        let mut accel = Accelerator::new(model.clone(), hw).with_mapping(policy);
+        let r = accel.infer(&img).unwrap();
+        assert_eq!(r.logits, want.logits, "{policy:?}");
+        assert_eq!(r.total.sops, want.total.sops, "{policy:?}: ops conserved");
+        let exec = r.pipeline.as_ref().unwrap();
+        let est = pipeline_estimate(&r.phases, timesteps);
+        assert!(exec.reconciles_with(&est), "{policy:?}");
+    }
+}
+
+/// Deeper buffer rings are schedule-only: logits identical, wall cycles
+/// never worse than the ping/pong default.
+#[test]
+fn deeper_pipeline_rings_value_invariant() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 37);
+    let img = random_image(41);
+    let mut d2 = Accelerator::new(model.clone(), AccelConfig::small());
+    let r2 = d2.infer(&img).unwrap();
+    for depth in [3usize, 4] {
+        let topo = CoreTopology { pipeline_depth: depth, ..CoreTopology::paper() };
+        let mut accel = Accelerator::new(model.clone(), AccelConfig::small().with_topology(topo));
+        let r = accel.infer(&img).unwrap();
+        assert_eq!(r.logits, r2.logits, "depth {depth}");
+        assert!(
+            r.wall_cycles() <= r2.wall_cycles(),
+            "depth {depth}: deeper ring must never cost cycles"
+        );
+        assert_eq!(r.pipeline.as_ref().unwrap().depth, depth);
+    }
 }
 
 #[test]

@@ -158,3 +158,70 @@ fn prop_smu_output_well_formed() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_mapping_policies_cover_all_work_units_exactly_once() {
+    use spikeformer_accel::accel::{Mapper, MappingPolicy};
+    use spikeformer_accel::hw::CoreTopology;
+    check("every mapping policy covers block x head x timestep once", 60, |rng| {
+        let heads = rng.gen_range(1, 17);
+        let cores = rng.gen_range(1, 9);
+        let blocks = rng.gen_range(1, 5);
+        let timesteps = rng.gen_range(1, 5);
+        let policy = MappingPolicy::ALL[rng.gen_range(0, 3)];
+        let mapper = Mapper::new(heads, CoreTopology::with_sdeb_cores(cores), policy);
+        let plan = mapper.plan(blocks, timesteps);
+        prop_assert_eq!(plan.len(), heads * blocks * timesteps);
+        let eff_cores = mapper.effective_cores(heads);
+        let mut seen = vec![0usize; heads * blocks * timesteps];
+        for (unit, core) in &plan {
+            prop_assert!(*core < eff_cores, "core {} out of range {}", core, eff_cores);
+            let idx = (unit.timestep * blocks + unit.block) * heads + unit.head;
+            seen[idx] += 1;
+        }
+        prop_assert!(
+            seen.iter().all(|&n| n == 1),
+            "some work unit covered {:?} times",
+            seen.iter().find(|&&n| n != 1)
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mapped_smam_value_invariant_under_random_topology() {
+    use spikeformer_accel::accel::{Mapper, MappingPolicy};
+    use spikeformer_accel::hw::{CoreTopology, FabricPartition};
+    use spikeformer_accel::scratch::ExecScratch;
+    check("mapped SMAM values independent of topology/policy", 30, |rng| {
+        let c = rng.gen_range(4, 64);
+        let l = rng.gen_range(4, 64);
+        let p = rng.next_f64() * 0.6;
+        let q = random_encoded(rng, c, l, p);
+        let k = random_encoded(rng, c, l, p);
+        let v = random_encoded(rng, c, l, p);
+        let hw = random_hw(rng);
+        let smam = SpikeMaskAddModule::new(rng.gen_range(0, 4) as u32);
+        let (want, want_stats) = smam.run(&q, &k, &v, &hw);
+        let heads = rng.gen_range(1, 12);
+        let cores = rng.gen_range(1, 6);
+        let policy = MappingPolicy::ALL[rng.gen_range(0, 3)];
+        let partition = if rng.bernoulli(0.5) {
+            FabricPartition::Replicated
+        } else {
+            FabricPartition::Split
+        };
+        let topo = CoreTopology { partition, ..CoreTopology::with_sdeb_cores(cores) };
+        let mapper = Mapper::new(heads, topo, policy);
+        let mut scratch = ExecScratch::new();
+        let (out, stats) =
+            smam.run_mapped_into(&q, &k, &v, &hw, &mapper, rng.gen_range(0, 4), None, &mut scratch);
+        prop_assert_eq!(out.mask, want.mask);
+        prop_assert_eq!(out.acc, want.acc);
+        prop_assert_eq!(out.masked_v, want.masked_v);
+        prop_assert_eq!(stats.sops, want_stats.sops);
+        prop_assert_eq!(stats.adds, want_stats.adds);
+        prop_assert_eq!(stats.cmps, want_stats.cmps);
+        Ok(())
+    });
+}
