@@ -269,6 +269,53 @@ fn main() -> anyhow::Result<()> {
         "wall cycles must be monotonically non-increasing in core count: {rr:?}"
     );
 
+    println!("\nA1.7 — weight-streaming stall fraction per topology point (paper scale)\n");
+    // The memory lane re-times the recorded paper-point traces (which are
+    // bandwidth- and SPS-core-independent) under different bus/topology
+    // points: at the paper's 16 B/cycle the default schedule is
+    // compute-bound, and scaling the SPS stage to 4 cores pushes it past
+    // the roofline knee. `memory_roofline` sweeps the full axis.
+    let p_over = r_over.pipeline.as_ref().expect("overlapped run carries its schedule");
+    let dma_paper = spikeformer_accel::accel::DmaEngine::new(over.model(), &hw);
+    println!(
+        "{:<12}{:<12}{:>14}{:>14}{:>12}",
+        "sps_cores", "dram_bw", "wall cyc", "stall cyc", "stall %"
+    );
+    let mut scaled_stall = None;
+    for &(sps_cores, bw) in &[(1usize, 16usize), (1, 4), (4, 16), (4, usize::MAX)] {
+        let topo = CoreTopology {
+            sps_cores,
+            pipeline_depth: 2 * sps_cores,
+            ..CoreTopology::paper()
+        };
+        let e = spikeformer_accel::accel::PipelineExecution::with_memory(
+            p_over.io_input_cycles,
+            p_over.io_output_cycles,
+            p_over.sps_per_timestep.clone(),
+            p_over.sdeb_segments.clone(),
+            &topo,
+            Some(&dma_paper.clone().with_bandwidth(bw)),
+        );
+        println!(
+            "{:<12}{:<12}{:>14}{:>14}{:>11.2}%",
+            sps_cores,
+            if bw == usize::MAX { "inf".to_string() } else { bw.to_string() },
+            e.executed_cycles,
+            e.stall_cycles,
+            100.0 * e.stall_fraction()
+        );
+        if (sps_cores, bw) == (4, 16) {
+            scaled_stall = Some(e.stall_cycles);
+        }
+        if bw == usize::MAX {
+            assert_eq!(e.stall_cycles, 0, "an unlimited bus never stalls");
+        }
+    }
+    assert!(
+        scaled_stall.unwrap_or(0) > 0,
+        "paper bandwidth must stall the 4-SPS-core point (the roofline knee)"
+    );
+
     if std::env::args().any(|a| a == "--json") {
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_topology.json");
         let mut entry = String::from("{\n");

@@ -11,6 +11,7 @@
 //! cargo bench --bench e2e_throughput -- --serial     # serial-charging ablation
 //! cargo bench --bench e2e_throughput -- --workers N  # size each simulator's SDEB worker pool
 //! cargo bench --bench e2e_throughput -- --sdeb-cores N --pipeline-depth N --mapping POLICY
+//! cargo bench --bench e2e_throughput -- --dram-bw N    # external-memory bus bytes/cycle (`max` = unlimited)
 //! ```
 
 use std::time::{Duration, Instant};

@@ -91,7 +91,12 @@ pub struct BufferSet {
     pub output: SramBank,
     /// ResBuffer holding residual operands.
     pub res: SramBank,
-    /// Weight buffer feeding the Tile Engine and the Spike Linear Array.
+    /// Weight buffer feeding the Tile Engine and the Spike Linear Array
+    /// (sized by [`AccelConfig::weight_buffer_words`]; its ping/pong slot
+    /// discipline is modelled by the
+    /// [`DmaEngine`](super::DmaEngine), and streamed refills land on its
+    /// write counter via
+    /// [`SramBank::record_stream_writes`]).
     pub weight: SramBank,
     /// The SPS Core's ESS buffer ring.
     pub sps: CoreBuffers,
@@ -111,7 +116,7 @@ impl BufferSet {
             input: SramBank::new("input_buffer", 64 * 1024),
             output: SramBank::new("output_buffer", 16 * 1024),
             res: SramBank::new("res_buffer", 64 * 1024),
-            weight: SramBank::new("weight_buffer", 2 * 1024 * 1024),
+            weight: SramBank::new("weight_buffer", cfg.weight_buffer_words),
             sps: CoreBuffers::new("ess_sps", ess_words, depth),
             sdeb: (0..sdeb_cores)
                 .map(|c| CoreBuffers::new(&format!("ess_sdeb{c}"), ess_words, depth))

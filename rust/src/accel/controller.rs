@@ -36,6 +36,7 @@ use crate::model::QuantizedModel;
 use crate::util::div_ceil;
 
 use super::buffers::BufferSet;
+use super::dma::DmaEngine;
 use super::executor::{self, PipelineExecution};
 use super::mapper::{Mapper, MappingPolicy};
 use super::report::{RunReport, StatSink};
@@ -341,7 +342,7 @@ impl Accelerator {
                     &qimg,
                 )?;
                 sink.absorb(outcome.sink);
-                (outcome.head_counts, Some((outcome.sps_per_timestep, outcome.sdeb_per_timestep)))
+                (outcome.head_counts, Some((outcome.sps_per_timestep, outcome.sdeb_segments)))
             }
             ExecMode::Serial => {
                 let counts = self.run_serial(&qimg, &mut sink)?;
@@ -357,14 +358,25 @@ impl Accelerator {
         sink.add("io.output", io_out);
 
         Ok(match execution {
-            Some((sps_per, sdeb_per)) => {
-                let exec = PipelineExecution::with_topology(
+            Some((sps_per, sdeb_segments)) => {
+                // Weight-streaming memory lane: plan the block working
+                // sets' movement over the shared bus and gate the
+                // executed schedule on weights-resident.
+                let dma = DmaEngine::new(&self.model, &self.hw);
+                let exec = PipelineExecution::with_memory(
                     io_in_cycles,
                     io_out_cycles,
                     sps_per,
-                    sdeb_per,
+                    sdeb_segments,
                     &self.hw.topology,
+                    Some(&dma),
                 );
+                if let Some(m) = &exec.memory {
+                    // The streamed words pass through the weight buffer.
+                    self.buffers
+                        .weight
+                        .record_stream_writes(m.weight_bytes() / super::dma::WEIGHT_STREAM_BYTES);
+                }
                 RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy)
             }
             None => RunReport::from_sink(logits, sink, &self.hw, &self.energy),
@@ -422,7 +434,10 @@ impl Accelerator {
         let mut sdeb_sinks: Vec<StatSink> = (0..n).map(|_| StatSink::new()).collect();
         let mut sps_per_t: Vec<Vec<u64>> =
             (0..n).map(|_| Vec::with_capacity(cfg.timesteps)).collect();
-        let mut sdeb_per_t: Vec<Vec<u64>> =
+        // Per-image, per-timestep SDEB segments (one per block + head),
+        // mirroring the per-call executor so the memory lane gates the
+        // same block boundaries and reports stay bit-identical.
+        let mut sdeb_segs: Vec<Vec<Vec<u64>>> =
             (0..n).map(|_| Vec::with_capacity(cfg.timesteps)).collect();
         let mut head_counts: Vec<Vec<u64>> = (0..n).map(|_| vec![0u64; d]).collect();
         let mut streams: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
@@ -451,8 +466,11 @@ impl Accelerator {
             }
             // SDEB stage, block-major: every image through block `bi`
             // back to back while its Q/K/V/O/MLP weights are hot.
-            let before_sdeb: Vec<u64> =
+            let mut seg_cursor: Vec<u64> =
                 sdeb_sinks.iter().map(|s| s.phases.total().cycles).collect();
+            for i in 0..n {
+                sdeb_segs[i].push(Vec::with_capacity(cfg.num_blocks + 1));
+            }
             for bi in 0..cfg.num_blocks {
                 for i in 0..n {
                     let u = streams[i].take().expect("token tensor present");
@@ -469,6 +487,9 @@ impl Accelerator {
                         &mut self.scratch_sdeb,
                     )?;
                     streams[i] = Some(u);
+                    let now = sdeb_sinks[i].phases.total().cycles;
+                    sdeb_segs[i].last_mut().unwrap().push(now - seg_cursor[i]);
+                    seg_cursor[i] = now;
                 }
             }
             // Head readout, whole batch.
@@ -485,12 +506,18 @@ impl Accelerator {
                     &mut self.scratch_sdeb,
                 );
                 self.scratch_sps.put_tensor(u);
-                sdeb_per_t[i].push(sdeb_sinks[i].phases.total().cycles - before_sdeb[i]);
+                let now = sdeb_sinks[i].phases.total().cycles;
+                sdeb_segs[i].last_mut().unwrap().push(now - seg_cursor[i]);
+                seg_cursor[i] = now;
             }
         }
 
         // Assemble per-image reports in exactly the per-call order:
-        // io.input, SPS phases, SDEB/head phases, io.output.
+        // io.input, SPS phases, SDEB/head phases, io.output. The memory
+        // lane is per-image too (each image streams its own weight
+        // traffic, exactly as the per-call path charges it — batch-level
+        // weight reuse is a host-side optimization, not a modelled one).
+        let dma = DmaEngine::new(&self.model, &self.hw);
         let mut reports = Vec::with_capacity(n);
         for i in 0..n {
             let mut sink = StatSink::new();
@@ -503,13 +530,19 @@ impl Accelerator {
             let io_out = self.io_output_stats();
             let io_out_cycles = io_out.cycles;
             sink.add("io.output", io_out);
-            let exec = PipelineExecution::with_topology(
+            let exec = PipelineExecution::with_memory(
                 io_in_cycles,
                 io_out_cycles,
                 std::mem::take(&mut sps_per_t[i]),
-                std::mem::take(&mut sdeb_per_t[i]),
+                std::mem::take(&mut sdeb_segs[i]),
                 &self.hw.topology,
+                Some(&dma),
             );
+            if let Some(m) = &exec.memory {
+                self.buffers
+                    .weight
+                    .record_stream_writes(m.weight_bytes() / super::dma::WEIGHT_STREAM_BYTES);
+            }
             reports.push(RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy));
         }
         for qimg in qimgs {

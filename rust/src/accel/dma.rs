@@ -1,0 +1,298 @@
+//! Weight-streaming DMA engine: plans which weight working sets move
+//! over the shared [`DramBus`](crate::hw::DramBus), when their transfers
+//! may start, and whether they stay resident on chip.
+//!
+//! The paper's Fig. 1 dataflow keeps the compute cores fed through the
+//! Input/Output Buffers; this module makes that feeding explicit. Each
+//! SDEB core owns a weight buffer of
+//! [`AccelConfig::weight_buffer_words`] words cut into
+//! [`AccelConfig::weight_slots`] ping/pong slots (the same double-buffer
+//! discipline as the ESS ring), and each encoder block's working set —
+//! its Q/K/V/O and MLP matrices plus biases, 10-bit weights packed into
+//! 16-bit memory words — is classified per core:
+//!
+//! * **Resident** — every set hosted on the core fits one slot and the
+//!   core hosts no more sets than slots: each set streams **once per
+//!   inference** (a prefetch ahead of its first use) and then stays on
+//!   chip.
+//! * **Thrash** — every set fits one slot but the core hosts more sets
+//!   than slots: the cyclic rotation evicts each set before its next use
+//!   (classic LRU thrash), so every use re-streams. The transfer for a
+//!   use may start once the slot it refills frees — when the use
+//!   `weight_slots` back on that core finishes — which is the ping/pong
+//!   prefetch running one working set ahead.
+//! * **Streaming** — the set is larger than one slot: it cannot be
+//!   double-buffered at all and streams through on every use, its
+//!   transfer gated on the core's previous use finishing.
+//!
+//! The SPS Core's convolution weights are **pinned**: they are reused by
+//! every timestep, live in the SPS core's own buffer, and are charged at
+//! model-load time rather than per inference (the `pinned_sps_words`
+//! field of [`DmaEngine`] reports the footprint). The per-inference streamed traffic is the
+//! SDEB side, which is exactly where the paper-scale working sets
+//! (≈1.77 M words per block vs a 1 M-word slot) outgrow the on-chip
+//! buffer.
+//!
+//! **Block→core affinity.** Weight placement follows the ESS-ring
+//! convention (`core = block % sdeb_cores`, the same rule as
+//! [`BufferSet::sdeb_for`](super::buffers::BufferSet::sdeb_for)): the
+//! weight-heavy consumers — the SLU's Q/K/V/O and MLP passes — are
+//! block-granular and run on the block's host core. The SDSA head→core
+//! [`MappingPolicy`](super::MappingPolicy) moves **SMAM comparator**
+//! work only, which consumes spikes, not weights — so the memory plan
+//! (and the resulting `MemoryReport`) is deliberately invariant under
+//! `--mapping`.
+//!
+//! The plan is a pure function of the model and the hardware config, so
+//! the executed schedule that consumes it
+//! ([`PipelineExecution`](super::PipelineExecution)) stays
+//! bit-deterministic.
+
+use crate::hw::AccelConfig;
+use crate::model::QuantizedModel;
+
+/// Bytes one weight word occupies on the external bus (10-bit weights
+/// packed into 16-bit memory words, the same packing as the 10-bit input
+/// activations).
+pub const WEIGHT_STREAM_BYTES: u64 = 2;
+
+/// How a block's weight working set behaves on its host core's weight
+/// buffer (see the module docs for the three regimes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightResidency {
+    /// Streams once per inference, then stays on chip.
+    Resident,
+    /// Fits a slot but is evicted between uses: re-streams every use,
+    /// double-buffered one working set ahead.
+    Thrash,
+    /// Larger than a slot: streams through on every use, no prefetch
+    /// overlap with the core's previous use.
+    Streaming,
+}
+
+/// One encoder block's planned weight movement.
+#[derive(Clone, Debug)]
+pub struct BlockPlan {
+    /// Working-set size in weight words (matrices + biases).
+    pub words: u64,
+    /// Working-set size in bus bytes ([`WEIGHT_STREAM_BYTES`] per word).
+    pub bytes: u64,
+    /// The SDEB core hosting this block (`block % sdeb_cores`).
+    pub core: usize,
+    /// Residency classification on that core.
+    pub residency: WeightResidency,
+}
+
+impl BlockPlan {
+    /// Does this set re-stream on every use (vs once per inference)?
+    pub fn streams_every_use(&self) -> bool {
+        self.residency != WeightResidency::Resident
+    }
+}
+
+/// The weight-streaming plan for one (model, hardware config) pair.
+///
+/// ```
+/// use spikeformer_accel::accel::{DmaEngine, WeightResidency};
+/// use spikeformer_accel::hw::AccelConfig;
+/// use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+///
+/// let model = QuantizedModel::random(&SdtModelConfig::tiny(), 1);
+/// let dma = DmaEngine::new(&model, &AccelConfig::small());
+/// // tiny's single encoder block fits a ping/pong slot and has the core
+/// // to itself, so its weights stream exactly once per inference.
+/// assert_eq!(dma.blocks.len(), 1);
+/// assert_eq!(dma.blocks[0].residency, WeightResidency::Resident);
+/// assert!(dma.blocks[0].bytes > 0);
+/// // One inference therefore streams one working set.
+/// assert_eq!(dma.streamed_bytes_per_inference(model.cfg.timesteps), dma.blocks[0].bytes);
+/// ```
+#[derive(Clone, Debug)]
+pub struct DmaEngine {
+    /// Bus bandwidth the plan schedules against (bytes/cycle).
+    pub bytes_per_cycle: usize,
+    /// Ping/pong slots per SDEB-core weight buffer.
+    pub slots: usize,
+    /// Per-block movement plans, in block order.
+    pub blocks: Vec<BlockPlan>,
+    /// Input-image transfer size in bytes (10-bit activations packed
+    /// 2 B/value) — the bus client the weight DMA queues behind.
+    pub input_bytes: u64,
+    /// Output logits transfer size in bytes (f32).
+    pub output_bytes: u64,
+    /// Pinned SPS convolution-weight footprint in words (charged at model
+    /// load, not per inference — see the module docs).
+    pub pinned_sps_words: u64,
+}
+
+impl DmaEngine {
+    /// Plan the weight movement of `model` on `hw`.
+    pub fn new(model: &QuantizedModel, hw: &AccelConfig) -> Self {
+        let cfg = &model.cfg;
+        let cores = hw.topology.sdeb_cores.max(1);
+        let slot_words = hw.weight_slot_words() as u64;
+        let slots = hw.weight_slots.max(2);
+
+        let words: Vec<u64> = model.blocks.iter().map(block_set_words).collect();
+        // Per-core classification: any oversized set forces the whole
+        // core into streaming mode (it transiently needs the full
+        // buffer); otherwise residency is a pure slot-count question.
+        let mut residency = vec![WeightResidency::Resident; words.len()];
+        for c in 0..cores {
+            let hosted: Vec<usize> = (0..words.len()).filter(|b| b % cores == c).collect();
+            let any_oversized = hosted.iter().any(|&b| words[b] > slot_words);
+            for &b in &hosted {
+                residency[b] = if any_oversized {
+                    WeightResidency::Streaming
+                } else if hosted.len() > slots {
+                    WeightResidency::Thrash
+                } else {
+                    WeightResidency::Resident
+                };
+            }
+        }
+
+        let blocks = words
+            .iter()
+            .zip(&residency)
+            .enumerate()
+            .map(|(b, (&w, &r))| BlockPlan {
+                words: w,
+                bytes: w * WEIGHT_STREAM_BYTES,
+                core: b % cores,
+                residency: r,
+            })
+            .collect();
+
+        let pinned_sps_words = model
+            .sps_convs
+            .iter()
+            .map(|c| (c.w.len() + c.bias.len()) as u64)
+            .sum();
+
+        Self {
+            bytes_per_cycle: hw.dram_bytes_per_cycle,
+            slots,
+            blocks,
+            input_bytes: (cfg.in_channels * cfg.img_size * cfg.img_size * 2) as u64,
+            output_bytes: (cfg.num_classes * 4) as u64,
+            pinned_sps_words,
+        }
+    }
+
+    /// Total weight bytes one inference of `timesteps` timesteps streams
+    /// over the bus under this plan: resident sets once, streaming/thrash
+    /// sets once per use.
+    pub fn streamed_bytes_per_inference(&self, timesteps: usize) -> u64 {
+        self.blocks
+            .iter()
+            .map(|b| if b.streams_every_use() { b.bytes * timesteps as u64 } else { b.bytes })
+            .sum()
+    }
+
+    /// Does any block re-stream per use (i.e. does the plan generate
+    /// sustained, rather than fill-time-only, weight traffic)?
+    pub fn has_sustained_traffic(&self) -> bool {
+        self.blocks.iter().any(|b| b.streams_every_use())
+    }
+
+    /// This plan re-scheduled against a different bus bandwidth (the
+    /// residency classification is bandwidth-independent, so sweeps can
+    /// retime one recorded run across the whole `--dram-bw` axis).
+    pub fn with_bandwidth(mut self, bytes_per_cycle: usize) -> Self {
+        self.bytes_per_cycle = bytes_per_cycle;
+        self
+    }
+}
+
+/// Weight words of one encoder block's working set: the Q/K/V/O
+/// projections and both MLP matrices, plus their biases.
+fn block_set_words(blk: &crate::model::QuantizedBlock) -> u64 {
+    [&blk.q, &blk.k, &blk.v, &blk.o, &blk.mlp1, &blk.mlp2]
+        .iter()
+        .map(|l| (l.w.len() + l.bias.len()) as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::CoreTopology;
+    use crate::model::SdtModelConfig;
+
+    fn model(blocks: usize) -> QuantizedModel {
+        let cfg = SdtModelConfig { num_blocks: blocks, ..SdtModelConfig::tiny() };
+        QuantizedModel::random(&cfg, 3)
+    }
+
+    #[test]
+    fn tiny_blocks_are_resident() {
+        let m = model(2);
+        let dma = DmaEngine::new(&m, &AccelConfig::small());
+        // 2 blocks over 2 cores: one fitting set each -> resident.
+        assert!(dma.blocks.iter().all(|b| b.residency == WeightResidency::Resident));
+        assert!(!dma.has_sustained_traffic());
+        // Words: 4 * (64*64 + 64) + (64*128 + 128) + (128*64 + 64).
+        assert_eq!(dma.blocks[0].words, 4 * 4160 + 8320 + 8256);
+        assert_eq!(dma.blocks[0].bytes, dma.blocks[0].words * 2);
+        assert_eq!(
+            dma.streamed_bytes_per_inference(4),
+            dma.blocks[0].bytes + dma.blocks[1].bytes
+        );
+    }
+
+    #[test]
+    fn paper_blocks_exceed_a_slot_and_stream() {
+        let cfg = SdtModelConfig::paper();
+        let m = QuantizedModel::random(&cfg, 3);
+        let hw = AccelConfig::paper();
+        let dma = DmaEngine::new(&m, &hw);
+        // 4*(384*384+384) + (384*1536+1536) + (1536*384+384) words.
+        assert_eq!(dma.blocks[0].words, 1_772_928);
+        assert!(dma.blocks[0].words > hw.weight_slot_words() as u64);
+        assert!(dma.blocks.iter().all(|b| b.residency == WeightResidency::Streaming));
+        assert!(dma.has_sustained_traffic());
+        assert_eq!(
+            dma.streamed_bytes_per_inference(cfg.timesteps),
+            2 * dma.blocks[0].bytes * cfg.timesteps as u64
+        );
+        assert!(dma.pinned_sps_words > 0);
+    }
+
+    #[test]
+    fn crowded_core_thrashes() {
+        // 3 fitting sets on one core with 2 slots: cyclic eviction.
+        let m = model(3);
+        let hw = AccelConfig::small()
+            .with_topology(CoreTopology::with_sdeb_cores(1));
+        let dma = DmaEngine::new(&m, &hw);
+        assert!(dma.blocks.iter().all(|b| b.residency == WeightResidency::Thrash));
+        assert!(dma.blocks.iter().all(|b| b.core == 0));
+        // Spreading the same blocks over 3 cores restores residency.
+        let dma = DmaEngine::new(
+            &m,
+            &AccelConfig::small().with_topology(CoreTopology::with_sdeb_cores(3)),
+        );
+        assert!(dma.blocks.iter().all(|b| b.residency == WeightResidency::Resident));
+    }
+
+    #[test]
+    fn oversized_set_poisons_its_core_only() {
+        // Shrink the buffer so tiny sets (33,216 words) exceed a slot.
+        let m = model(2);
+        let mut hw = AccelConfig::small();
+        hw.weight_buffer_words = 40_000; // slot = 20,000 < 33,216
+        let dma = DmaEngine::new(&m, &hw);
+        assert!(dma.blocks.iter().all(|b| b.residency == WeightResidency::Streaming));
+    }
+
+    #[test]
+    fn bandwidth_retarget_keeps_classification() {
+        let m = model(1);
+        let dma = DmaEngine::new(&m, &AccelConfig::small());
+        let wide = dma.clone().with_bandwidth(usize::MAX);
+        assert_eq!(wide.bytes_per_cycle, usize::MAX);
+        assert_eq!(wide.blocks[0].residency, dma.blocks[0].residency);
+        assert_eq!(wide.blocks[0].bytes, dma.blocks[0].bytes);
+    }
+}

@@ -39,6 +39,7 @@ use std::sync::mpsc;
 
 use anyhow::{anyhow, Result};
 
+use crate::hw::dram::{BusTimeline, DramBus, MemoryReport};
 use crate::hw::{AccelConfig, CoreTopology};
 use crate::model::QuantizedModel;
 use crate::quant::{QTensor, ACT_FRAC};
@@ -47,6 +48,7 @@ use crate::units::SpikeEncodingArray;
 
 use super::buffers::BufferSet;
 use super::controller::DatapathMode;
+use super::dma::{DmaEngine, WeightResidency};
 use super::mapper::Mapper;
 use super::report::StatSink;
 use super::sdeb_core::SdebCore;
@@ -55,7 +57,7 @@ use super::workers::WorkerPool;
 
 /// The executed overlap schedule of one inference: per-timestep stage
 /// cycles plus the resulting finish time under the topology's buffer
-/// ring.
+/// ring and the shared external-memory bus.
 ///
 /// The schedule recurrence models a depth-`N` ring pipeline with `P` SPS
 /// cores: the SPS stage of timestep `i` may start once the same core's
@@ -66,6 +68,18 @@ use super::workers::WorkerPool;
 /// state carries across timesteps). External input precedes the first SPS
 /// timestep; output transfer follows the last SDEB timestep. The paper's
 /// instance is `N = 2`, `P = 1` — the classic ping/pong recurrence.
+///
+/// **Memory lane** (when built through [`Self::with_memory`]): each
+/// encoder block's segment of the SDEB stage additionally waits for its
+/// weight working set, streamed over the shared
+/// [`DramBus`](crate::hw::DramBus) by the
+/// [`DmaEngine`](super::DmaEngine)'s plan — a segment's finish time is
+/// `max(compute-ready + compute, weights-resident)`, the excess is
+/// recorded as stall, and every transfer queues FIFO behind the input
+/// load and earlier weight streams. At unlimited bandwidth
+/// (`dram_bytes_per_cycle == usize::MAX`) every transfer completes
+/// instantly and the schedule is bit-identical to the memory-blind
+/// recurrence — the invariance the memory tests pin down.
 #[derive(Clone, Debug)]
 pub struct PipelineExecution {
     /// Number of timesteps executed.
@@ -82,10 +96,22 @@ pub struct PipelineExecution {
     pub sps_per_timestep: Vec<u64>,
     /// Per-timestep SDEB-stage cycles (`sdeb.*` + `head.*` phases).
     pub sdeb_per_timestep: Vec<u64>,
+    /// Per-timestep SDEB-stage segments: one entry per encoder block (in
+    /// block order) plus a final head-readout segment. Sums to
+    /// [`Self::sdeb_per_timestep`]. Aggregate-trace constructors
+    /// ([`Self::new`], [`Self::with_topology`]) record one opaque segment
+    /// per timestep.
+    pub sdeb_segments: Vec<Vec<u64>>,
     /// Finish time of the overlapped schedule, in cycles.
     pub executed_cycles: u64,
     /// What the same work costs charged serially (sum of all stages).
     pub serialized_cycles: u64,
+    /// Cycles the schedule spent with compute ready but weights not yet
+    /// resident (0 without a memory plan or at unlimited bandwidth).
+    pub stall_cycles: u64,
+    /// Per-client external-memory accounting of the run (`None` for
+    /// schedules built without a memory plan).
+    pub memory: Option<MemoryReport>,
 }
 
 impl PipelineExecution {
@@ -97,11 +123,12 @@ impl PipelineExecution {
         sps_per_timestep: Vec<u64>,
         sdeb_per_timestep: Vec<u64>,
     ) -> Self {
-        Self::with_shape(io_input_cycles, io_output_cycles, sps_per_timestep, sdeb_per_timestep, 2, 1)
+        let segments = sdeb_per_timestep.iter().map(|&c| vec![c]).collect();
+        Self::with_shape(io_input_cycles, io_output_cycles, sps_per_timestep, segments, 2, 1, None)
     }
 
     /// Build the execution record under `topology`'s ring depth and SPS
-    /// core count.
+    /// core count (no memory lane — the PR 4 schedule).
     pub fn with_topology(
         io_input_cycles: u64,
         io_output_cycles: u64,
@@ -109,13 +136,39 @@ impl PipelineExecution {
         sdeb_per_timestep: Vec<u64>,
         topology: &CoreTopology,
     ) -> Self {
+        let segments = sdeb_per_timestep.iter().map(|&c| vec![c]).collect();
         Self::with_shape(
             io_input_cycles,
             io_output_cycles,
             sps_per_timestep,
-            sdeb_per_timestep,
+            segments,
             topology.pipeline_depth,
             topology.sps_cores,
+            None,
+        )
+    }
+
+    /// Build the execution record with the memory lane active:
+    /// `sdeb_segments[t]` holds one compute-cycle entry per encoder block
+    /// (in block order) plus a final head-readout segment, and `dma` is
+    /// the weight-streaming plan whose transfers gate each block segment
+    /// (see the type docs).
+    pub fn with_memory(
+        io_input_cycles: u64,
+        io_output_cycles: u64,
+        sps_per_timestep: Vec<u64>,
+        sdeb_segments: Vec<Vec<u64>>,
+        topology: &CoreTopology,
+        dma: Option<&DmaEngine>,
+    ) -> Self {
+        Self::with_shape(
+            io_input_cycles,
+            io_output_cycles,
+            sps_per_timestep,
+            sdeb_segments,
+            topology.pipeline_depth,
+            topology.sps_cores,
+            dma,
         )
     }
 
@@ -124,17 +177,51 @@ impl PipelineExecution {
         io_input_cycles: u64,
         io_output_cycles: u64,
         sps_per_timestep: Vec<u64>,
-        sdeb_per_timestep: Vec<u64>,
+        sdeb_segments: Vec<Vec<u64>>,
         depth: usize,
         sps_cores: usize,
+        dma: Option<&DmaEngine>,
     ) -> Self {
-        assert_eq!(sps_per_timestep.len(), sdeb_per_timestep.len(), "stage trace length mismatch");
+        assert_eq!(sps_per_timestep.len(), sdeb_segments.len(), "stage trace length mismatch");
         let depth = depth.max(2);
         let sps_cores = sps_cores.max(1);
         let t = sps_per_timestep.len();
+        let nblocks = dma.map(|d| d.blocks.len()).unwrap_or(0);
+        if let Some(d) = dma {
+            for seg in &sdeb_segments {
+                assert_eq!(
+                    seg.len(),
+                    d.blocks.len() + 1,
+                    "memory-lane schedules need one segment per block plus the head"
+                );
+            }
+        }
+
+        // Weight-streaming machinery: the shared bus (input first, then
+        // weight transfers in consumption order) and the per-core /
+        // per-block state the slot discipline needs.
+        let mut timeline = dma.map(|d| {
+            let mut tl = BusTimeline::new(DramBus::new(d.bytes_per_cycle));
+            tl.seed("input", d.input_bytes, io_input_cycles);
+            tl
+        });
+        // Completion times of recent uses, per SDEB core (for slot
+        // release; only the last `slots` ever matter, so the history is
+        // capped there) and per block (streamed-once tracking). Client
+        // names are built once, not per transfer.
+        let cores = dma.map(|d| d.blocks.iter().map(|b| b.core).max().unwrap_or(0) + 1).unwrap_or(1);
+        let history = dma.map(|d| d.slots).unwrap_or(2).max(1);
+        let mut core_use_done: Vec<Vec<u64>> = vec![Vec::new(); cores];
+        let mut first_use_streamed = vec![false; nblocks];
+        let client_names: Vec<String> =
+            (0..nblocks).map(|b| format!("weights.block{b}")).collect();
+        let mut stall_cycles = 0u64;
+
         let mut sps_done = vec![0u64; t];
         let mut sdeb_done = vec![0u64; t];
+        let mut sdeb_per_timestep = vec![0u64; t];
         for i in 0..t {
+            sdeb_per_timestep[i] = sdeb_segments[i].iter().sum();
             // Ring: the slot written at timestep i was last written at
             // i - depth and must have been consumed by SDEB(i - depth).
             let buffer_free = if i >= depth { sdeb_done[i - depth] } else { 0 };
@@ -143,11 +230,73 @@ impl PipelineExecution {
             let prev_sps =
                 if i >= sps_cores { sps_done[i - sps_cores] } else { io_input_cycles };
             sps_done[i] = prev_sps.max(buffer_free) + sps_per_timestep[i];
+
+            // SDEB side: the block segments run back to back on the
+            // consumer chain, each gated on its weights when streaming.
             let prev_sdeb = if i > 0 { sdeb_done[i - 1] } else { 0 };
-            sdeb_done[i] = sps_done[i].max(prev_sdeb) + sdeb_per_timestep[i];
+            let mut pos = sps_done[i].max(prev_sdeb);
+            match (dma, timeline.as_mut()) {
+                (Some(d), Some(tl)) => {
+                    for (b, plan) in d.blocks.iter().enumerate() {
+                        let compute = sdeb_segments[i][b];
+                        let needs_stream =
+                            plan.streams_every_use() || !first_use_streamed[b];
+                        let done = if needs_stream {
+                            first_use_streamed[b] = true;
+                            // Slot release: when may the transfer start
+                            // overwriting on-chip state? (module docs of
+                            // `accel::dma` — the stall formula.)
+                            let recent = &core_use_done[plan.core];
+                            let release = match plan.residency {
+                                WeightResidency::Resident => 0,
+                                WeightResidency::Streaming => {
+                                    recent.last().copied().unwrap_or(0)
+                                }
+                                WeightResidency::Thrash => {
+                                    if recent.len() >= d.slots {
+                                        recent[recent.len() - d.slots]
+                                    } else {
+                                        0
+                                    }
+                                }
+                            };
+                            let client = &client_names[b];
+                            let (_, tdone) = tl.request(client, plan.bytes, release);
+                            let done = (pos + compute).max(tdone);
+                            let stall = done - (pos + compute);
+                            if stall > 0 {
+                                tl.add_stall(client, stall);
+                                stall_cycles += stall;
+                            }
+                            done
+                        } else {
+                            pos + compute
+                        };
+                        let recent = &mut core_use_done[plan.core];
+                        if recent.len() == history {
+                            recent.remove(0);
+                        }
+                        recent.push(done);
+                        pos = done;
+                    }
+                    // Head readout: weightless final segment.
+                    pos += sdeb_segments[i][nblocks];
+                }
+                _ => {
+                    pos += sdeb_per_timestep[i];
+                }
+            }
+            sdeb_done[i] = pos;
         }
-        let executed_cycles =
-            sdeb_done.last().copied().unwrap_or(io_input_cycles) + io_output_cycles;
+        let last_done = sdeb_done.last().copied().unwrap_or(io_input_cycles);
+        let executed_cycles = last_done + io_output_cycles;
+        let memory = match (dma, timeline) {
+            (Some(d), Some(mut tl)) => {
+                tl.book("output", d.output_bytes, io_output_cycles);
+                Some(tl.into_report())
+            }
+            _ => None,
+        };
         let serialized_cycles = io_input_cycles
             + io_output_cycles
             + sps_per_timestep.iter().sum::<u64>()
@@ -160,8 +309,11 @@ impl PipelineExecution {
             io_output_cycles,
             sps_per_timestep,
             sdeb_per_timestep,
+            sdeb_segments,
             executed_cycles,
             serialized_cycles,
+            stall_cycles,
+            memory,
         }
     }
 
@@ -210,15 +362,28 @@ impl PipelineExecution {
         cfg.seconds(self.executed_cycles)
     }
 
+    /// Fraction of the executed schedule spent stalled on weight
+    /// streaming (0 without a memory plan) — the roofline bench's y-axis.
+    pub fn stall_fraction(&self) -> f64 {
+        if self.executed_cycles == 0 {
+            0.0
+        } else {
+            self.stall_cycles as f64 / self.executed_cycles as f64
+        }
+    }
+
     /// The fill-latency bound used to reconcile executed cycles against
     /// the analytic estimator: both lie in `[bottleneck, serialized]`, and
     /// they may differ by at most the I/O transfers plus one worst-case
-    /// timestep of each stage entering/draining the pipe.
+    /// timestep of each stage entering/draining the pipe — plus whatever
+    /// the memory lane stalled, which the (memory-blind) estimator cannot
+    /// see.
     pub fn fill_latency_bound(&self) -> u64 {
         self.io_input_cycles
             + self.io_output_cycles
             + self.sps_per_timestep.iter().copied().max().unwrap_or(0)
             + self.sdeb_per_timestep.iter().copied().max().unwrap_or(0)
+            + self.stall_cycles
     }
 
     /// Does the executed schedule agree with the analytic re-timer within
@@ -241,8 +406,9 @@ pub(crate) struct OverlapOutcome {
     pub head_counts: Vec<u64>,
     /// Per-timestep SPS-stage cycles.
     pub sps_per_timestep: Vec<u64>,
-    /// Per-timestep SDEB-stage cycles (including the head readout).
-    pub sdeb_per_timestep: Vec<u64>,
+    /// Per-timestep SDEB-stage segments: one entry per encoder block plus
+    /// a final head-readout segment (what the memory lane gates on).
+    pub sdeb_segments: Vec<Vec<u64>>,
 }
 
 /// Transpose the SPS core's `[D, L]` channel-major output into the
@@ -395,16 +561,19 @@ pub(crate) fn run_overlapped(
             *slot = Some((res, ring, ret_rx));
         });
 
-        // Consumer: the SDEB stage + head readout on the calling thread.
-        let consumer_res = (|| -> Result<(StatSink, Vec<u64>, Vec<u64>)> {
+        // Consumer: the SDEB stage + head readout on the calling thread,
+        // recording one compute segment per block (plus the head) so the
+        // memory lane can gate each block on its weight transfer.
+        let consumer_res = (|| -> Result<(StatSink, Vec<Vec<u64>>, Vec<u64>)> {
             let mut sink = StatSink::new();
-            let mut per_t = Vec::with_capacity(timesteps);
+            let mut segments = Vec::with_capacity(timesteps);
             let mut head_counts = vec![0u64; d];
             for t in 0..timesteps {
                 let Ok(mut u) = rx.recv() else {
                     break; // producer failed; its error takes precedence
                 };
-                let before = sink.phases.total().cycles;
+                let mut seg = Vec::with_capacity(sdebs.len() + 1);
+                let mut before = sink.phases.total().cycles;
                 for (bi, core) in sdebs.iter_mut().enumerate() {
                     u = core.run_timestep(
                         &model.blocks[bi],
@@ -418,15 +587,19 @@ pub(crate) fn run_overlapped(
                         &mut sink,
                         scratch_sdeb,
                     )?;
+                    let now = sink.phases.total().cycles;
+                    seg.push(now - before);
+                    before = now;
                 }
                 head_readout(sea_head, &u, l, d, hw, &mut sink, &mut head_counts, scratch_sdeb);
-                per_t.push(sink.phases.total().cycles - before);
+                seg.push(sink.phases.total().cycles - before);
+                segments.push(seg);
                 // Hand the drained tensor back to the producer ring (the
                 // receiver outlives the producer task, so this cannot
                 // fail outside a producer panic).
                 let _ = ret_tx.send(u);
             }
-            Ok((sink, per_t, head_counts))
+            Ok((sink, segments, head_counts))
         })();
         // Unblock a producer stuck in `send`/`recv` if the consumer bailed
         // early.
@@ -447,16 +620,16 @@ pub(crate) fn run_overlapped(
     }
     drop(ret_rx);
     let (sps_sink, sps_per_timestep) = producer_res?;
-    let (sdeb_sink, sdeb_per_timestep, head_counts) = consumer_res?;
+    let (sdeb_sink, sdeb_segments, head_counts) = consumer_res?;
     debug_assert_eq!(sps_per_timestep.len(), timesteps);
-    debug_assert_eq!(sdeb_per_timestep.len(), timesteps);
+    debug_assert_eq!(sdeb_segments.len(), timesteps);
 
     // Deterministic merge: SPS phases first (the order the serial
     // controller would have recorded them), then SDEB/head.
     let mut sink = StatSink::new();
     sink.absorb(sps_sink);
     sink.absorb(sdeb_sink);
-    Ok(OverlapOutcome { sink, head_counts, sps_per_timestep, sdeb_per_timestep })
+    Ok(OverlapOutcome { sink, head_counts, sps_per_timestep, sdeb_segments })
 }
 
 #[cfg(test)]
@@ -557,6 +730,98 @@ mod tests {
     fn fill_latency_bound_is_io_plus_worst_timesteps() {
         let e = PipelineExecution::new(10, 5, vec![50, 60], vec![70, 80]);
         assert_eq!(e.fill_latency_bound(), 10 + 5 + 60 + 80);
+    }
+
+    fn synthetic_dma(bytes: u64, residency: WeightResidency, bw: usize, nblocks: usize) -> DmaEngine {
+        use super::super::dma::BlockPlan;
+        DmaEngine {
+            bytes_per_cycle: bw,
+            slots: 2,
+            blocks: (0..nblocks)
+                .map(|b| BlockPlan { words: bytes / 2, bytes, core: b % 2, residency })
+                .collect(),
+            input_bytes: 64,
+            output_bytes: 40,
+            pinned_sps_words: 1000,
+        }
+    }
+
+    /// Segments: 2 blocks of 50 cycles plus a 10-cycle head, 3 timesteps.
+    fn segs(t: usize) -> Vec<Vec<u64>> {
+        (0..t).map(|_| vec![50, 50, 10]).collect()
+    }
+
+    #[test]
+    fn memory_lane_unlimited_bandwidth_matches_plain_schedule() {
+        let topo = CoreTopology::paper();
+        let dma = synthetic_dma(1_000_000, WeightResidency::Streaming, usize::MAX, 2);
+        let plain = PipelineExecution::with_topology(8, 3, vec![100; 3], vec![110; 3], &topo);
+        let mem = PipelineExecution::with_memory(8, 3, vec![100; 3], segs(3), &topo, Some(&dma));
+        assert_eq!(mem.executed_cycles, plain.executed_cycles);
+        assert_eq!(mem.stall_cycles, 0);
+        let report = mem.memory.expect("memory lane records a report");
+        // Traffic is still fully accounted even though it never stalls.
+        assert_eq!(report.weight_bytes(), 2 * 3 * 1_000_000);
+        assert_eq!(report.busy_cycles(), 8 + 3, "only the seeded I/O occupies the ideal bus");
+    }
+
+    #[test]
+    fn memory_lane_stalls_when_bus_is_slow() {
+        let topo = CoreTopology::paper();
+        // 1000-byte sets over a 1 B/cycle bus: 1000-cycle transfers vs
+        // 50-cycle block segments — heavily bandwidth-bound.
+        let dma = synthetic_dma(1000, WeightResidency::Streaming, 1, 2);
+        let plain = PipelineExecution::with_topology(8, 3, vec![100; 3], vec![110; 3], &topo);
+        let mem = PipelineExecution::with_memory(8, 3, vec![100; 3], segs(3), &topo, Some(&dma));
+        assert!(mem.stall_cycles > 0, "slow bus must stall the consumer");
+        assert!(mem.executed_cycles > plain.executed_cycles);
+        // The injected stalls bound the schedule delay (subadditivity:
+        // every other recurrence constraint is monotone).
+        assert!(mem.executed_cycles <= plain.executed_cycles + mem.stall_cycles);
+        let report = mem.memory.as_ref().unwrap();
+        assert_eq!(report.stall_cycles(), mem.stall_cycles);
+        assert!(mem.stall_fraction() > 0.0);
+        // A bandwidth-bound schedule may exceed the serial *compute* sum —
+        // serial charging never modelled memory.
+        assert!(mem.fill_latency_bound() >= mem.stall_cycles);
+    }
+
+    #[test]
+    fn memory_lane_monotone_in_bandwidth() {
+        let topo = CoreTopology::paper();
+        let mut last = None;
+        for bw in [1usize, 2, 4, 8, 16, 64, 1024, usize::MAX] {
+            let dma = synthetic_dma(5000, WeightResidency::Streaming, bw, 2);
+            let e = PipelineExecution::with_memory(8, 3, vec![100; 3], segs(3), &topo, Some(&dma));
+            if let Some(prev) = last {
+                assert!(
+                    e.executed_cycles <= prev,
+                    "bw {bw}: {} > previous {prev}",
+                    e.executed_cycles
+                );
+            }
+            last = Some(e.executed_cycles);
+        }
+    }
+
+    #[test]
+    fn resident_sets_stream_once_streaming_sets_every_use() {
+        let topo = CoreTopology::paper();
+        let res = synthetic_dma(1000, WeightResidency::Resident, usize::MAX, 2);
+        let e = PipelineExecution::with_memory(8, 3, vec![100; 3], segs(3), &topo, Some(&res));
+        assert_eq!(e.memory.unwrap().weight_bytes(), 2 * 1000, "once per block");
+        let stream = synthetic_dma(1000, WeightResidency::Streaming, usize::MAX, 2);
+        let e = PipelineExecution::with_memory(8, 3, vec![100; 3], segs(3), &topo, Some(&stream));
+        assert_eq!(e.memory.unwrap().weight_bytes(), 2 * 3 * 1000, "once per use");
+    }
+
+    #[test]
+    fn memory_lane_segments_sum_to_stage_trace() {
+        let topo = CoreTopology::paper();
+        let dma = synthetic_dma(100, WeightResidency::Resident, 8, 2);
+        let e = PipelineExecution::with_memory(8, 3, vec![100; 3], segs(3), &topo, Some(&dma));
+        assert_eq!(e.sdeb_per_timestep, vec![110; 3]);
+        assert_eq!(e.sdeb_segments, segs(3));
     }
 
     #[test]

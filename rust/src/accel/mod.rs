@@ -17,6 +17,7 @@
 
 pub mod buffers;
 pub mod controller;
+pub mod dma;
 pub mod executor;
 pub mod mapper;
 pub mod pipeline;
@@ -26,6 +27,7 @@ pub mod sps_core;
 pub mod workers;
 
 pub use controller::{Accelerator, DatapathMode, ExecMode};
+pub use dma::{BlockPlan, DmaEngine, WeightResidency, WEIGHT_STREAM_BYTES};
 pub use mapper::{Mapper, MappingPolicy, WorkUnit};
 pub use workers::WorkerPool;
 pub use executor::PipelineExecution;

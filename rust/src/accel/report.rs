@@ -2,7 +2,7 @@
 //! final [`RunReport`] with throughput/energy/sparsity numbers.
 
 use crate::hw::stats::PhaseStats;
-use crate::hw::{AccelConfig, EnergyModel, UnitStats};
+use crate::hw::{AccelConfig, EnergyModel, MemoryReport, UnitStats};
 use crate::spike::EncodedSpikes;
 
 use super::executor::PipelineExecution;
@@ -86,7 +86,9 @@ pub struct RunReport {
     /// (module, sparsity) — the Fig. 6 measurement.
     pub sparsity: Vec<(String, f64)>,
     /// The executed core-overlap schedule (`None` for serial-mode runs):
-    /// per-stage traces, ring depth, executed finish cycles and speedup.
+    /// per-stage traces, ring depth, executed finish cycles, speedup,
+    /// weight-streaming stalls and the per-client memory accounting
+    /// (see [`Self::memory`]).
     pub pipeline: Option<PipelineExecution>,
 }
 
@@ -124,8 +126,19 @@ impl RunReport {
         let total = sink.phases.total();
         let seconds = cfg.seconds(total.cycles);
         let gsops = if seconds > 0.0 { total.sops as f64 / seconds / 1e9 } else { 0.0 };
-        let power_w = energy.avg_power_w(&total, seconds);
-        let gsop_per_w = energy.gsop_per_w(&total, seconds);
+        // Energy charges the now-real weight-streaming traffic alongside
+        // the compute phases' op counts: the streamed bytes live outside
+        // the phase breakdown (they are a schedule lane, not a compute
+        // phase), so they are folded in here — priced by the same
+        // `pj_dram_byte` term `EnergyModel::weight_stream_j` exposes.
+        let weight_bytes = pipeline
+            .as_ref()
+            .and_then(|p| p.memory.as_ref())
+            .map(|m| m.weight_bytes())
+            .unwrap_or(0);
+        let energy_basis = total.with_dram_bytes(weight_bytes);
+        let power_w = energy.avg_power_w(&energy_basis, seconds);
+        let gsop_per_w = energy.gsop_per_w(&energy_basis, seconds);
         Self {
             logits,
             sparsity: sink.sparsity_table(),
@@ -137,6 +150,15 @@ impl RunReport {
             gsop_per_w,
             pipeline,
         }
+    }
+
+    /// Per-client external-memory accounting (weight-streaming DMA, input
+    /// load, output drain) of the executed schedule — borrowed from the
+    /// pipeline record, which owns it. `None` for serial-mode runs, which
+    /// predate the memory system and stay the memory-blind ablation
+    /// baseline.
+    pub fn memory(&self) -> Option<&MemoryReport> {
+        self.pipeline.as_ref().and_then(|p| p.memory.as_ref())
     }
 
     /// Modelled wall-clock cycles of the run: the executed overlap
@@ -196,6 +218,21 @@ impl RunReport {
                 p.bottleneck(),
                 p.fill_cycles(),
                 self.wall_gsops()
+            ));
+        }
+        if let Some(m) = self.memory() {
+            let wall = self.wall_cycles();
+            s.push_str(&format!(
+                "memory: weights={:.2} MB streamed  stall={} cycles ({:.1}% of wall)  bus util={:.1}% @ {} B/cyc\n",
+                m.weight_bytes() as f64 / 1e6,
+                m.stall_cycles(),
+                100.0 * m.stall_fraction(wall),
+                100.0 * m.bus_utilization(wall),
+                if m.bytes_per_cycle == usize::MAX {
+                    "inf".to_string()
+                } else {
+                    m.bytes_per_cycle.to_string()
+                }
             ));
         }
         for (name, st) in &self.phases.phases {

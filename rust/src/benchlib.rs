@@ -99,12 +99,14 @@ pub fn arg_str(args: &[String], key: &str) -> Option<String> {
     args.iter().position(|a| a == key).and_then(|i| args.get(i + 1)).cloned()
 }
 
-/// Apply the shared bench topology flags to `hw` and parse the mapping
-/// policy: `--sdeb-cores N` and `--pipeline-depth N` override
-/// `hw.topology` (the combined config is validated), `--mapping POLICY`
-/// selects the SDSA head→core policy. Panics on invalid values — bench
-/// binaries fail loud rather than sweeping a config they did not ask
-/// for. (The CLI has a `Result`-returning equivalent in `main.rs`.)
+/// Apply the shared bench topology/memory flags to `hw` and parse the
+/// mapping policy: `--sdeb-cores N` and `--pipeline-depth N` override
+/// `hw.topology`, `--dram-bw N|max` overrides the external-memory bus
+/// bandwidth (`max` = the unlimited-bandwidth idealization), and the
+/// combined config is validated. `--mapping POLICY` selects the SDSA
+/// head→core policy. Panics on invalid values — bench binaries fail loud
+/// rather than sweeping a config they did not ask for. (The CLI has a
+/// `Result`-returning equivalent in `main.rs`.)
 pub fn apply_topology_args(
     args: &[String],
     hw: &mut crate::hw::AccelConfig,
@@ -115,7 +117,14 @@ pub fn apply_topology_args(
     if let Some(depth) = arg_value(args, "--pipeline-depth") {
         hw.topology.pipeline_depth = depth;
     }
-    hw.validate().expect("bad --sdeb-cores/--pipeline-depth topology");
+    if let Some(bw) = arg_str(args, "--dram-bw") {
+        hw.dram_bytes_per_cycle = if bw == "max" {
+            usize::MAX
+        } else {
+            bw.parse().expect("bad --dram-bw value")
+        };
+    }
+    hw.validate().expect("bad --sdeb-cores/--pipeline-depth/--dram-bw config");
     arg_str(args, "--mapping")
         .map(|p| p.parse().expect("bad --mapping policy"))
         .unwrap_or_default()

@@ -85,8 +85,12 @@ COMMANDS:
              --pipeline-depth N   ESS buffer-ring depth (default 2 = ping/pong)
              --mapping P     SDSA head->core policy: round-robin |
                              block-affinity | load-balanced
+             --dram-bw N     external-memory bus bytes/cycle (default 16,
+                             the paper's interface; `max` = unlimited —
+                             weight streaming can never stall)
              --serial        charge phases serially instead of executing
-                             the overlapped core pipeline (ablation)
+                             the overlapped core pipeline (ablation; no
+                             memory lane)
   accuracy   held-out accuracy: quantized simulator vs float PJRT model
              --weights DIR   --limit N
   table1     regenerate Table I (comparison with SNN accelerators)
@@ -96,6 +100,7 @@ COMMANDS:
              --workers N --requests N --backend sim|golden|pjrt --batch N
              --pool-workers N   per-simulator SDEB worker pool size
              --sdeb-cores N --mapping P   topology/mapping of sim workers
+             --dram-bw N     sim workers' bus bytes/cycle (or `max`)
              --serial        serial-charging simulator workers (ablation)
   sweep      lane-count x SDEB-core-count parallelism sweep (ablation A2)
   help       this message

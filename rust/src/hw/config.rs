@@ -143,14 +143,42 @@ pub struct AccelConfig {
     pub ess_banks: usize,
     /// Words per ESS bank (8-bit encoded addresses + segment headers).
     pub ess_bank_words: usize,
-    /// External-memory interface bytes/cycle (Input/Output Buffer side).
+    /// External-memory interface bytes/cycle (Input/Output Buffer side) —
+    /// the shared [`DramBus`](crate::hw::DramBus) bandwidth every client
+    /// (input load, weight-streaming DMA, output drain) arbitrates for.
+    /// `usize::MAX` is the idealized unlimited bus (the `--dram-bw` sweep
+    /// axis; see `DESIGN.md` "Memory system & DMA").
     pub dram_bytes_per_cycle: usize,
+    /// Weight-buffer capacity in words (one word = one 10-bit weight in a
+    /// 16-bit memory word). The buffer feeds the Tile Engine and the
+    /// Spike Linear Array; each SDEB core sees its own full-size copy
+    /// (mirroring the replicated ESS complement).
+    pub weight_buffer_words: usize,
+    /// Ping/pong slots the weight buffer is divided into for the
+    /// streaming DMA's double buffering (2 = the classic pair). A block
+    /// working set larger than one slot cannot be double-buffered and
+    /// must stream through per use — see
+    /// [`DmaEngine`](crate::accel::DmaEngine).
+    pub weight_slots: usize,
     /// Core counts and pipeline shape (Fig. 1 generalized).
     pub topology: CoreTopology,
 }
 
 impl AccelConfig {
     /// The paper's implementation point (Table I "Ours").
+    ///
+    /// ```
+    /// use spikeformer_accel::hw::AccelConfig;
+    ///
+    /// let hw = AccelConfig::paper();
+    /// assert!(hw.validate().is_ok());
+    /// // 1,536 lanes x 200 MHz = the paper's 307.2 GSOP/s headline peak.
+    /// assert!((hw.peak_gsops() - 307.2).abs() < 1e-9);
+    /// // Fig. 1's instance: one SPS core overlapped with two SDEB cores
+    /// // through a ping/pong ESS pair, fed over a 16 B/cycle bus.
+    /// assert_eq!(hw.topology.sdeb_cores, 2);
+    /// assert_eq!(hw.dram_bytes_per_cycle, 16);
+    /// ```
     pub fn paper() -> Self {
         Self {
             lanes: 1536,
@@ -161,6 +189,8 @@ impl AccelConfig {
             ess_banks: 384,
             ess_bank_words: 4096,
             dram_bytes_per_cycle: 16,
+            weight_buffer_words: 2 * 1024 * 1024,
+            weight_slots: 2,
             topology: CoreTopology::paper(),
         }
     }
@@ -176,6 +206,8 @@ impl AccelConfig {
             ess_banks: 16,
             ess_bank_words: 2048,
             dram_bytes_per_cycle: 8,
+            weight_buffer_words: 512 * 1024,
+            weight_slots: 2,
             topology: CoreTopology::paper(),
         }
     }
@@ -197,6 +229,8 @@ impl AccelConfig {
             ess_banks: scale(p.ess_banks),
             ess_bank_words: p.ess_bank_words,
             dram_bytes_per_cycle: p.dram_bytes_per_cycle,
+            weight_buffer_words: p.weight_buffer_words,
+            weight_slots: p.weight_slots,
             topology: p.topology,
         };
         cfg.validate().expect("scaled AccelConfig invalid");
@@ -240,6 +274,23 @@ impl AccelConfig {
         if self.dram_bytes_per_cycle == 0 {
             bail!("dram_bytes_per_cycle must be nonzero");
         }
+        if self.weight_buffer_words == 0 {
+            bail!("weight_buffer_words must be nonzero");
+        }
+        if self.weight_slots < 2 {
+            bail!(
+                "weight_slots {} < 2: the streaming DMA cannot double-buffer \
+                 through fewer than a ping/pong pair",
+                self.weight_slots
+            );
+        }
+        if self.weight_buffer_words < self.weight_slots {
+            bail!(
+                "weight buffer of {} words cannot be cut into {} slots",
+                self.weight_buffer_words,
+                self.weight_slots
+            );
+        }
         if !(self.freq_mhz > 0.0) {
             bail!("freq_mhz must be positive");
         }
@@ -254,6 +305,13 @@ impl AccelConfig {
             );
         }
         self.topology.validate()
+    }
+
+    /// Words one weight-buffer ping/pong slot holds — the residency
+    /// threshold of the streaming DMA: a block working set larger than
+    /// this cannot be double-buffered and streams through per use.
+    pub fn weight_slot_words(&self) -> usize {
+        (self.weight_buffer_words / self.weight_slots.max(1)).max(1)
     }
 
     /// Peak throughput in GSOP/s: every lane retires one synaptic
@@ -353,8 +411,29 @@ mod tests {
         c.dram_bytes_per_cycle = 0;
         assert!(c.validate().is_err());
 
+        let mut c = AccelConfig::small();
+        c.weight_buffer_words = 0;
+        assert!(c.validate().is_err());
+
+        let mut c = AccelConfig::small();
+        c.weight_slots = 1;
+        assert!(c.validate().is_err(), "one slot cannot double-buffer");
+
         assert!(AccelConfig::small().validate().is_ok());
         assert!(AccelConfig::paper().validate().is_ok());
+    }
+
+    #[test]
+    fn weight_slot_words_divides_the_buffer() {
+        let p = AccelConfig::paper();
+        assert_eq!(p.weight_slot_words(), 1024 * 1024);
+        let s = AccelConfig::small();
+        assert_eq!(s.weight_slot_words(), 256 * 1024);
+        // An unlimited-bandwidth bus is a valid config (the invariance
+        // tests' idealization).
+        let mut c = AccelConfig::small();
+        c.dram_bytes_per_cycle = usize::MAX;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -43,6 +43,30 @@ impl Default for EnergyModel {
 }
 
 impl EnergyModel {
+    /// Energy of streaming `bytes` over the external-memory bus, in
+    /// Joules. This is exactly the `pj_dram_byte` term of
+    /// [`Self::dynamic_j`] — the report folds the weight-streaming DMA's
+    /// traffic into its power/efficiency numbers by adding the streamed
+    /// bytes to the stats record it prices
+    /// ([`UnitStats::with_dram_bytes`](super::stats::UnitStats::with_dram_bytes)),
+    /// and this helper prices the same bytes standalone (a unit test pins
+    /// the two paths equal so they cannot diverge).
+    ///
+    /// ```
+    /// use spikeformer_accel::hw::EnergyModel;
+    ///
+    /// let m = EnergyModel::default();
+    /// // One paper-scale encoder block's working set is ~3.5 MB per
+    /// // stream; at 160 pJ/byte that is ~0.57 mJ of DRAM energy per use.
+    /// let j = m.weight_stream_j(3_545_856);
+    /// assert!((j - 3_545_856.0 * 160.0e-12).abs() < 1e-9);
+    /// // Streaming energy is linear in bytes.
+    /// assert!((m.weight_stream_j(2) - 2.0 * m.weight_stream_j(1)).abs() < 1e-18);
+    /// ```
+    pub fn weight_stream_j(&self, bytes: u64) -> f64 {
+        bytes as f64 * self.pj_dram_byte * 1e-12
+    }
+
     /// Dynamic energy of a stats record, in Joules.
     pub fn dynamic_j(&self, s: &UnitStats) -> f64 {
         (s.adds as f64 * self.pj_add
@@ -124,6 +148,17 @@ mod tests {
         let m = EnergyModel::default();
         let eff = m.peak_gsop_per_w(&crate::hw::AccelConfig::paper());
         assert!((eff - 25.6).abs() / 25.6 < 0.05, "peak {eff:.2}");
+    }
+
+    #[test]
+    fn weight_stream_j_matches_dynamic_j_dram_term() {
+        // The report charges streamed weights by folding bytes into the
+        // stats record; the standalone helper must price them identically.
+        let m = EnergyModel::default();
+        for bytes in [0u64, 1, 4096, 3_545_856] {
+            let s = UnitStats { dram_bytes: bytes, ..Default::default() };
+            assert!((m.weight_stream_j(bytes) - m.dynamic_j(&s)).abs() < 1e-24, "{bytes}");
+        }
     }
 
     #[test]

@@ -9,12 +9,14 @@
 //! paper's reported implementation results.
 
 pub mod config;
+pub mod dram;
 pub mod energy;
 pub mod resources;
 pub mod sram;
 pub mod stats;
 
 pub use config::{AccelConfig, CoreTopology, FabricPartition};
+pub use dram::{BusTimeline, ClientStats, DramBus, MemoryReport};
 pub use energy::EnergyModel;
 pub use resources::{ResourceModel, Resources};
 pub use sram::SramBank;

@@ -57,6 +57,14 @@ impl SramBank {
         self.reads += n as u64;
     }
 
+    /// Record `n` word writes without occupancy tracking — streamed
+    /// traffic that passes through the bank transiently (the weight DMA
+    /// refilling a ping/pong slot), where occupancy is governed by the
+    /// slot discipline rather than alloc/free pairs.
+    pub fn record_stream_writes(&mut self, n: u64) {
+        self.writes += n;
+    }
+
     /// Peak occupancy fraction.
     pub fn utilization(&self) -> f64 {
         if self.words == 0 {
@@ -104,6 +112,15 @@ mod tests {
         b.alloc(100).unwrap();
         b.free(100);
         assert!((b.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stream_writes_bypass_occupancy() {
+        let mut b = SramBank::new("weight", 8);
+        b.record_stream_writes(1000); // far beyond capacity: transient traffic
+        assert_eq!(b.writes, 1000);
+        assert_eq!(b.used, 0);
+        assert_eq!(b.peak_used, 0);
     }
 
     #[test]

@@ -36,6 +36,14 @@ impl UnitStats {
     pub fn seconds(&self, freq_mhz: f64) -> f64 {
         self.cycles as f64 / (freq_mhz * 1e6)
     }
+
+    /// This record with `bytes` of additional external-memory traffic —
+    /// how the report folds the weight-streaming DMA's bus traffic (which
+    /// lives outside the compute phases) into the energy accounting.
+    pub fn with_dram_bytes(mut self, bytes: u64) -> Self {
+        self.dram_bytes += bytes;
+        self
+    }
 }
 
 impl Add for UnitStats {
@@ -120,6 +128,14 @@ mod tests {
         assert_eq!(a.cycles, 11);
         assert_eq!(a.sops, 2);
         assert_eq!(a.adds, 5);
+    }
+
+    #[test]
+    fn with_dram_bytes_adds_traffic_only() {
+        let s = UnitStats { cycles: 5, dram_bytes: 10, ..Default::default() };
+        let t = s.with_dram_bytes(90);
+        assert_eq!(t.dram_bytes, 100);
+        assert_eq!(t.cycles, 5);
     }
 
     #[test]

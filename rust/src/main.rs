@@ -63,13 +63,17 @@ fn exec_mode(args: &Args) -> ExecMode {
     }
 }
 
-/// The paper hardware point with the CLI's topology overrides
-/// (`--sdeb-cores N`, `--pipeline-depth N`) applied and validated.
+/// The paper hardware point with the CLI's topology and memory overrides
+/// (`--sdeb-cores N`, `--pipeline-depth N`, `--dram-bw N|max`) applied
+/// and validated.
 fn hw_from_args(args: &Args) -> Result<AccelConfig> {
     let mut hw = AccelConfig::paper();
     hw.topology.sdeb_cores = args.usize_or("sdeb-cores", hw.topology.sdeb_cores)?;
     hw.topology.pipeline_depth =
         args.usize_or("pipeline-depth", hw.topology.pipeline_depth)?;
+    if let Some(bw) = args.get("dram-bw") {
+        hw.dram_bytes_per_cycle = if bw == "max" { usize::MAX } else { bw.parse()? };
+    }
     hw.validate()?;
     Ok(hw)
 }

@@ -83,6 +83,23 @@ impl SpikeMatrix {
 /// the build cursor are exact, later entries are implicitly `addrs.len()`
 /// (all-empty tail). Every accessor goes through [`Self::offset`], so the
 /// laziness is invisible to consumers.
+///
+/// ```
+/// use spikeformer_accel::spike::EncodedSpikes;
+///
+/// // A [2, 8] spike tile built channel-major, addresses increasing.
+/// let mut e = EncodedSpikes::empty(2, 8);
+/// e.push(0, 3);
+/// e.push(0, 5);
+/// e.push(1, 0);
+/// assert_eq!(e.channel_addrs(0), &[3, 5]);
+/// assert_eq!(e.channel_addrs(1), &[0]);
+/// assert_eq!(e.count_spikes(), 3);
+/// // ESS storage: one word per spike plus one header word per distinct
+/// // 256-token segment each channel touches (here: one per channel).
+/// assert_eq!(e.storage_words(), 3 + 2);
+/// assert!((e.sparsity() - 13.0 / 16.0).abs() < 1e-12);
+/// ```
 #[derive(Clone)]
 pub struct EncodedSpikes {
     /// Channel count (C).

@@ -11,7 +11,13 @@ pub use prng::Prng;
 #[inline]
 pub fn div_ceil(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
-    (a + b - 1) / b
+    // Overflow-safe form: `(a + b - 1)` wraps when `b` is huge (e.g. the
+    // unlimited-bandwidth bus, `usize::MAX` bytes/cycle).
+    if a == 0 {
+        0
+    } else {
+        1 + (a - 1) / b
+    }
 }
 
 /// Mean of an f64 slice; 0.0 for empty input.
@@ -44,6 +50,9 @@ mod tests {
         assert_eq!(div_ceil(9, 3), 3);
         assert_eq!(div_ceil(1, 1536), 1);
         assert_eq!(div_ceil(0, 4), 0);
+        // No overflow at the unlimited-bandwidth extreme.
+        assert_eq!(div_ceil(6144, u64::MAX), 1);
+        assert_eq!(div_ceil(u64::MAX, 1), u64::MAX);
     }
 
     #[test]

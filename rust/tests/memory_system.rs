@@ -1,0 +1,293 @@
+//! Integration: the bandwidth-aware memory system against the PR 4
+//! (memory-blind) executed schedule.
+//!
+//! The weight-streaming DMA and the shared DRAM bus are a *schedule*
+//! lane, never a value path, so three invariances pin the model down:
+//!
+//! 1. logits are bit-identical to the pre-memory executor at **any**
+//!    bandwidth (and the phase breakdown — compute busy-time — does not
+//!    depend on bandwidth at all);
+//! 2. at `dram_bytes_per_cycle = usize::MAX` (the unlimited-bus
+//!    idealization) stalls are exactly zero and wall cycles equal the
+//!    PR 4 schedule bit-for-bit;
+//! 3. wall cycles are monotonically non-increasing in
+//!    `dram_bytes_per_cycle` (property-tested over random topologies).
+//!
+//! Plus the acceptance half of the roofline claim: at the paper's 16
+//! B/cycle interface, scaling the SPS compute up (more SPS cores) tips
+//! the paper-scale schedule bandwidth-bound — a nonzero stall fraction.
+
+use spikeformer_accel::accel::{
+    Accelerator, DatapathMode, DmaEngine, ExecMode, PipelineExecution,
+};
+use spikeformer_accel::hw::{AccelConfig, CoreTopology};
+use spikeformer_accel::model::{GoldenExecutor, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn random_image(seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+/// Multi-block, multi-head config at test scale (mirrors the overlap
+/// suite's sharded config).
+fn sharded_cfg() -> SdtModelConfig {
+    SdtModelConfig {
+        name: "memory-test".into(),
+        timesteps: 3,
+        num_blocks: 2,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    }
+}
+
+fn hw_at(bw: usize) -> AccelConfig {
+    let mut hw = AccelConfig::small();
+    hw.dram_bytes_per_cycle = bw;
+    hw
+}
+
+/// The PR 4 schedule: the same stage traces re-timed without a memory
+/// plan.
+fn pr4_schedule(p: &PipelineExecution, topo: &CoreTopology) -> PipelineExecution {
+    PipelineExecution::with_topology(
+        p.io_input_cycles,
+        p.io_output_cycles,
+        p.sps_per_timestep.clone(),
+        p.sdeb_per_timestep.clone(),
+        topo,
+    )
+}
+
+#[test]
+fn logits_and_phases_bit_identical_across_bandwidths() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 5);
+    let img = random_image(7);
+    let golden = GoldenExecutor::new(&model).infer(&img);
+    let mut serial = Accelerator::with_modes(
+        model.clone(),
+        AccelConfig::small(),
+        DatapathMode::Encoded,
+        ExecMode::Serial,
+    );
+    let r_serial = serial.infer(&img).unwrap();
+    let mut reference: Option<spikeformer_accel::accel::RunReport> = None;
+    for bw in [1usize, 8, 1024, usize::MAX] {
+        let mut accel = Accelerator::new(model.clone(), hw_at(bw));
+        let r = accel.infer(&img).unwrap();
+        assert_eq!(r.logits, golden.logits, "bw {bw}: logits vs golden");
+        assert_eq!(r.logits, r_serial.logits, "bw {bw}: logits vs serial");
+        assert!(r.memory().is_some(), "bw {bw}: overlapped runs carry memory accounting");
+        if let Some(want) = &reference {
+            // The compute phases are a bandwidth-independent quantity —
+            // only the schedule (wall cycles, stalls) may move.
+            assert_eq!(r.total, want.total, "bw {bw}: phase totals");
+            assert_eq!(r.phases.phases, want.phases.phases, "bw {bw}: phase breakdown");
+        } else {
+            reference = Some(r);
+        }
+    }
+}
+
+#[test]
+fn unlimited_bandwidth_recovers_the_pr4_schedule() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 11);
+    let img = random_image(13);
+    let mut accel = Accelerator::new(model, hw_at(usize::MAX));
+    let r = accel.infer(&img).unwrap();
+    let p = r.pipeline.as_ref().unwrap();
+    assert_eq!(p.stall_cycles, 0, "an unlimited bus can never stall");
+    let pr4 = pr4_schedule(p, &CoreTopology::paper());
+    assert_eq!(
+        p.executed_cycles, pr4.executed_cycles,
+        "wall cycles must equal the memory-blind schedule"
+    );
+    assert_eq!(r.wall_cycles(), pr4.executed_cycles);
+    // The traffic is still real and still charged.
+    let m = r.memory().unwrap();
+    assert!(m.weight_bytes() > 0, "weights are streamed even on an ideal bus");
+}
+
+#[test]
+fn small_scale_paper_bandwidth_has_no_stalls_and_matches_pr4() {
+    // At test scale the working sets are slot-resident and tiny next to
+    // the conv front-end: the default-bandwidth schedule must already be
+    // stall-free and bit-identical to PR 4 (this is what keeps every
+    // pre-memory cycle assertion in the suite valid).
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 17);
+    let img = random_image(19);
+    let mut accel = Accelerator::new(model, AccelConfig::small());
+    let r = accel.infer(&img).unwrap();
+    let p = r.pipeline.as_ref().unwrap();
+    assert_eq!(p.stall_cycles, 0);
+    assert_eq!(p.executed_cycles, pr4_schedule(p, &CoreTopology::paper()).executed_cycles);
+}
+
+#[test]
+fn wall_cycles_monotone_in_bandwidth_over_random_topologies() {
+    // The stage traces are bandwidth-independent, so one inference per
+    // topology yields the exact schedule at every bandwidth by re-timing
+    // the recorded traces through the recurrence with a retargeted plan.
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 23);
+    let img = random_image(29);
+    let mut rng = Prng::new(31);
+    for case in 0..12u64 {
+        let topo = CoreTopology {
+            sps_cores: 1 + (rng.next_u64() % 3) as usize,
+            sdeb_cores: 1 + (rng.next_u64() % 4) as usize,
+            pipeline_depth: 2 + (rng.next_u64() % 3) as usize,
+            ..CoreTopology::paper()
+        };
+        // Random residency pressure: occasionally shrink the weight
+        // buffer so the sets stream per use.
+        let mut hw = AccelConfig::small().with_topology(topo);
+        if rng.next_u64() % 2 == 0 {
+            hw.weight_buffer_words = 40_000; // slot 20k < 33k-word sets
+        }
+        let mut accel = Accelerator::new(model.clone(), hw);
+        let r = accel.infer(&img).unwrap();
+        let p = r.pipeline.as_ref().unwrap();
+        let dma = DmaEngine::new(accel.model(), &hw);
+        let mut last = None;
+        for bw in [1usize, 2, 3, 5, 8, 13, 64, 4096, usize::MAX] {
+            let e = PipelineExecution::with_memory(
+                p.io_input_cycles,
+                p.io_output_cycles,
+                p.sps_per_timestep.clone(),
+                p.sdeb_segments.clone(),
+                &topo,
+                Some(&dma.clone().with_bandwidth(bw)),
+            );
+            if bw == hw.dram_bytes_per_cycle {
+                assert_eq!(
+                    e.executed_cycles, p.executed_cycles,
+                    "case {case}: re-timed schedule must reproduce the executed one"
+                );
+            }
+            if let Some(prev) = last {
+                assert!(
+                    e.executed_cycles <= prev,
+                    "case {case} bw {bw}: wall {} > previous {prev}",
+                    e.executed_cycles
+                );
+            }
+            last = Some(e.executed_cycles);
+        }
+        // The unlimited end of the sweep is the PR 4 schedule.
+        let ideal = PipelineExecution::with_memory(
+            p.io_input_cycles,
+            p.io_output_cycles,
+            p.sps_per_timestep.clone(),
+            p.sdeb_segments.clone(),
+            &topo,
+            Some(&dma.clone().with_bandwidth(usize::MAX)),
+        );
+        assert_eq!(ideal.stall_cycles, 0, "case {case}");
+        assert_eq!(
+            ideal.executed_cycles,
+            pr4_schedule(p, &topo).executed_cycles,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn bandwidth_bound_schedule_stalls_and_stays_value_exact() {
+    // Force the bandwidth-bound regime at test scale: streaming residency
+    // (shrunken weight buffer), a 1 B/cycle bus, and doubled SPS compute
+    // so the bus is the bottleneck.
+    let cfg = SdtModelConfig {
+        name: "membound".into(),
+        timesteps: 3,
+        num_blocks: 4,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    };
+    let model = QuantizedModel::random(&cfg, 37);
+    let img = random_image(41);
+    let golden = GoldenExecutor::new(&model).infer(&img);
+    let mut hw = AccelConfig::small().with_topology(CoreTopology {
+        sps_cores: 2,
+        sdeb_cores: 2,
+        pipeline_depth: 4,
+        ..CoreTopology::paper()
+    });
+    hw.weight_buffer_words = 40_000; // slot 20k < 33k-word sets -> streaming
+    hw.dram_bytes_per_cycle = 1;
+    let mut accel = Accelerator::new(model, hw);
+    let r = accel.infer(&img).unwrap();
+    assert_eq!(r.logits, golden.logits, "stalling must not change values");
+    let p = r.pipeline.as_ref().unwrap();
+    assert!(p.stall_cycles > 0, "1 B/cycle must starve the consumer");
+    assert!(p.stall_fraction() > 0.0);
+    assert!(
+        p.executed_cycles > pr4_schedule(p, &hw.topology).executed_cycles,
+        "stalls must show up in wall cycles"
+    );
+    let m = r.memory().unwrap();
+    assert_eq!(m.stall_cycles(), p.stall_cycles);
+    assert!(m.bus_utilization(p.executed_cycles) > 0.0);
+}
+
+/// Acceptance: at the paper's 16 B/cycle interface, at least one swept
+/// topology point of the roofline is bandwidth-bound. Scaling the SPS
+/// stage to 4 cores roughly quarters the compute period while the
+/// paper-scale working sets (1.77 M words > the 1 M-word ping/pong slot)
+/// re-stream every timestep — the schedule stalls.
+#[test]
+fn paper_bandwidth_stalls_on_the_scaled_sps_topology() {
+    let cfg = SdtModelConfig::paper();
+    let model = QuantizedModel::random(&cfg, 42);
+    let img = random_image(3);
+    let topo = CoreTopology {
+        sps_cores: 4,
+        sdeb_cores: 2,
+        pipeline_depth: 6,
+        ..CoreTopology::paper()
+    };
+    let hw = AccelConfig::paper().with_topology(topo);
+    let mut accel = Accelerator::new(model, hw);
+    let r = accel.infer(&img).unwrap();
+    let p = r.pipeline.as_ref().unwrap();
+    assert!(
+        p.stall_cycles > 0,
+        "paper bandwidth must stall the compute-scaled topology (stall {})",
+        p.stall_cycles
+    );
+    // Re-timing the same run on an unlimited bus removes every stall.
+    let dma = DmaEngine::new(accel.model(), &hw).with_bandwidth(usize::MAX);
+    let ideal = PipelineExecution::with_memory(
+        p.io_input_cycles,
+        p.io_output_cycles,
+        p.sps_per_timestep.clone(),
+        p.sdeb_segments.clone(),
+        &topo,
+        Some(&dma),
+    );
+    assert_eq!(ideal.stall_cycles, 0);
+    assert!(ideal.executed_cycles < p.executed_cycles);
+}
+
+#[test]
+fn batched_inference_reports_match_per_call_with_memory() {
+    let cfg = sharded_cfg();
+    let model = QuantizedModel::random(&cfg, 43);
+    let imgs: Vec<Vec<f32>> = (0..3).map(|s| random_image(50 + s)).collect();
+    let mut batched = Accelerator::new(model.clone(), AccelConfig::small());
+    let batch_reports = batched.infer_batch(&imgs).unwrap();
+    for (i, img) in imgs.iter().enumerate() {
+        let mut fresh = Accelerator::new(model.clone(), AccelConfig::small());
+        let want = fresh.infer(img).unwrap();
+        let got = &batch_reports[i];
+        assert_eq!(got.logits, want.logits, "image {i}");
+        assert_eq!(got.wall_cycles(), want.wall_cycles(), "image {i}");
+        let (gp, wp) = (got.pipeline.as_ref().unwrap(), want.pipeline.as_ref().unwrap());
+        assert_eq!(gp.sdeb_segments, wp.sdeb_segments, "image {i}");
+        assert_eq!(gp.stall_cycles, wp.stall_cycles, "image {i}");
+        assert_eq!(got.memory(), want.memory(), "image {i}");
+    }
+}
