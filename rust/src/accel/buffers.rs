@@ -20,6 +20,89 @@ use anyhow::Result;
 use crate::hw::{AccelConfig, SramBank, UnitStats};
 use crate::spike::EncodedSpikes;
 use crate::util::div_ceil;
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Executable model of the ping/pong handoff: a single-producer
+/// single-consumer ring of `depth` slots with release/acquire publication.
+///
+/// [`CoreBuffers`] models the ESS ring's *capacity* (bank words, access
+/// counters); `SlotRing` models its *synchronization protocol* — the
+/// ordering discipline that lets the SPS producer of timestep `t + 1` hand
+/// a filled slot to the SDEB consumer of timestep `t` without locks. The
+/// overlapped executor realizes the same discipline through a bounded
+/// `mpsc` channel of `depth - 1` plus a pre-filled return ring; loom has no
+/// channel model, so `rust/tests/loom_sync.rs` model-checks the protocol on
+/// this primitive instead (see `util::sync` for the loom build recipe).
+///
+/// Protocol: the producer writes the payload into slot `head % depth` with
+/// `Relaxed`, then publishes by storing `head + 1` with `Release`; the
+/// consumer `Acquire`-loads `head` (which makes the payload write visible),
+/// reads the slot, then retires it by storing `tail + 1` with `Release`,
+/// which the producer `Acquire`-loads before reusing the slot. Weakening
+/// any of the four orderings is a bug loom can exhibit as a stale read.
+#[derive(Debug)]
+pub struct SlotRing {
+    slots: Box<[AtomicU64]>,
+    /// Number of payloads published (monotonic; producer-owned).
+    head: AtomicUsize,
+    /// Number of payloads consumed (monotonic; consumer-owned).
+    tail: AtomicUsize,
+}
+
+impl SlotRing {
+    /// Build a ring of `depth` slots (clamped to at least 2, matching
+    /// [`CoreBuffers::new`] — produce and consume cannot overlap through
+    /// fewer).
+    pub fn new(depth: usize) -> Self {
+        let depth = depth.max(2);
+        Self {
+            slots: (0..depth).map(|_| AtomicU64::new(0)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+        }
+    }
+
+    /// Ring depth (number of slots).
+    pub fn depth(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Producer side: publish `value` into the next slot. Returns `false`
+    /// when the ring is full (the producer has run a full `depth` ahead of
+    /// the consumer — exactly the back-pressure the executor's bounded
+    /// channel applies to the SPS stage).
+    pub fn try_publish(&self, value: u64) -> bool {
+        let head = self.head.load(Ordering::Relaxed); // producer-owned
+        let tail = self.tail.load(Ordering::Acquire); // consumer retired up to here
+        if head.wrapping_sub(tail) >= self.slots.len() {
+            return false;
+        }
+        self.slots[head % self.slots.len()].store(value, Ordering::Relaxed);
+        // Publication point: makes the payload store above visible to the
+        // consumer's Acquire load of `head`.
+        self.head.store(head.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side: take the oldest published payload, or `None` when the
+    /// ring is empty.
+    pub fn try_consume(&self) -> Option<u64> {
+        let tail = self.tail.load(Ordering::Relaxed); // consumer-owned
+        let head = self.head.load(Ordering::Acquire); // producer published up to here
+        if tail == head {
+            return None;
+        }
+        let value = self.slots[tail % self.slots.len()].load(Ordering::Relaxed);
+        // Retirement point: tells the producer this slot may be rewritten.
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        Some(value)
+    }
+
+    /// Payloads published but not yet consumed.
+    pub fn in_flight(&self) -> usize {
+        self.head.load(Ordering::Acquire).wrapping_sub(self.tail.load(Ordering::Acquire))
+    }
+}
 
 /// One core's ESS buffer ring: `depth` physical bank slots, selected by
 /// timestep (`slot = t % depth`). Depth 2 is Fig. 1's ping/pong pair,
@@ -134,9 +217,9 @@ impl BufferSet {
     pub fn load_external(&mut self, bytes: usize, cfg: &AccelConfig) -> Result<UnitStats> {
         self.input.alloc(bytes.min(self.input.words - self.input.used))?;
         Ok(UnitStats {
-            cycles: div_ceil(bytes as u64, cfg.dram_bytes_per_cycle as u64).max(1),
-            dram_bytes: bytes as u64,
-            sram_writes: bytes as u64,
+            cycles: div_ceil(bytes as u64, cfg.dram_bytes_per_cycle as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
+            dram_bytes: bytes as u64, // as-ok: widening for 64-bit stat/cycle math
+            sram_writes: bytes as u64, // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         })
     }
@@ -228,6 +311,58 @@ mod tests {
         assert_eq!(b.sps.depth(), 3);
         assert_eq!(b.sdeb.len(), 4);
         assert!(b.sdeb.iter().all(|r| r.depth() == 3));
+    }
+
+    #[test]
+    fn slot_ring_full_and_empty_transitions() {
+        let ring = SlotRing::new(2);
+        assert_eq!(ring.depth(), 2);
+        assert_eq!(ring.try_consume(), None, "empty ring yields nothing");
+        assert!(ring.try_publish(10));
+        assert!(ring.try_publish(11));
+        assert!(!ring.try_publish(12), "depth-2 ring is full after two publishes");
+        assert_eq!(ring.in_flight(), 2);
+        assert_eq!(ring.try_consume(), Some(10));
+        assert!(ring.try_publish(12), "retiring a slot frees it for reuse");
+        assert_eq!(ring.try_consume(), Some(11));
+        assert_eq!(ring.try_consume(), Some(12));
+        assert_eq!(ring.try_consume(), None);
+        assert_eq!(ring.in_flight(), 0);
+    }
+
+    #[test]
+    fn slot_ring_depth_clamps_to_two() {
+        assert_eq!(SlotRing::new(0).depth(), 2);
+        assert_eq!(SlotRing::new(1).depth(), 2);
+        assert_eq!(SlotRing::new(3).depth(), 3);
+    }
+
+    #[test]
+    fn slot_ring_two_threads_fifo() {
+        // Cross-thread pump: every value arrives, in order, through a ring
+        // shallower than the stream — the ping/pong handoff in miniature.
+        let ring = std::sync::Arc::new(SlotRing::new(2));
+        let r2 = std::sync::Arc::clone(&ring);
+        let consumer = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while got.len() < 64 {
+                match r2.try_consume() {
+                    Some(v) => got.push(v),
+                    None => std::thread::yield_now(),
+                }
+            }
+            got
+        });
+        let mut sent = 0u64;
+        while sent < 64 {
+            if ring.try_publish(sent) {
+                sent += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        let got = consumer.join().unwrap();
+        assert_eq!(got, (0..64).collect::<Vec<u64>>());
     }
 
     #[test]

@@ -26,7 +26,7 @@
 //! while that block's weight working set is hot — with per-image
 //! [`RunReport`]s bit-identical to the per-call path.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::hw::{AccelConfig, EnergyModel, UnitStats};
 use crate::quant::{QFormat, QTensor, ACT_FRAC, MEM_BITS};
@@ -281,10 +281,10 @@ impl Accelerator {
     fn head_logits(&self, head_counts: &[u64]) -> Vec<f32> {
         let cfg = &self.model.cfg;
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
-        let denom = (cfg.timesteps * l) as f32;
+        let denom = (cfg.timesteps * l) as f32; // as-ok: reporting rate, not datapath state
         let mut logits = self.model.head_b.clone();
         for c in 0..d {
-            let rate = head_counts[c] as f32 / denom;
+            let rate = head_counts[c] as f32 / denom; // as-ok: reporting rate, not datapath state
             if rate != 0.0 {
                 for k in 0..cfg.num_classes {
                     logits[k] += rate * self.model.head_w[c * cfg.num_classes + k];
@@ -298,8 +298,8 @@ impl Accelerator {
     fn io_output_stats(&self) -> UnitStats {
         let out_bytes = self.model.cfg.num_classes * 4;
         UnitStats {
-            cycles: div_ceil(out_bytes as u64, self.hw.dram_bytes_per_cycle as u64),
-            dram_bytes: out_bytes as u64,
+            cycles: div_ceil(out_bytes as u64, self.hw.dram_bytes_per_cycle as u64), // as-ok: widening for 64-bit stat/cycle math
+            dram_bytes: out_bytes as u64, // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         }
     }
@@ -445,19 +445,28 @@ impl Accelerator {
         for t in 0..cfg.timesteps {
             // SPS stage, whole batch (conv weight working set stays hot).
             for i in 0..n {
-                let sink = &mut sps_sinks[i];
-                let before = sink.phases.total().cycles;
-                let (u0_cl, enc3) = self.lanes[i].sps.run_timestep(
-                    &self.model,
-                    &qimgs[i],
-                    &self.hw,
-                    self.mode,
-                    t,
-                    &mut self.buffers.sps,
-                    sink,
-                    &mut self.scratch_sps,
-                )?;
-                sps_per_t[i].push(sink.phases.total().cycles - before);
+                let before = sps_sinks[i].phases.total().cycles;
+                // Panic parity with the overlapped executor's producer
+                // task: a panicking SPS stage surfaces as an inference
+                // error from `infer_batch` too, so batched and per-call
+                // inference fail identically on a corrupt model.
+                let sps_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.lanes[i].sps.run_timestep(
+                        &self.model,
+                        &qimgs[i],
+                        &self.hw,
+                        self.mode,
+                        t,
+                        &mut self.buffers.sps,
+                        &mut sps_sinks[i],
+                        &mut self.scratch_sps,
+                    )
+                }));
+                let (u0_cl, enc3) = match sps_res {
+                    Ok(res) => res?,
+                    Err(_) => return Err(anyhow!("SPS pipeline stage panicked")),
+                };
+                sps_per_t[i].push(sps_sinks[i].phases.total().cycles - before);
                 let mut u = self.scratch_sps.take_tensor(&[l, d], ACT_FRAC);
                 executor::u0_to_token_major_into(&u0_cl, l, d, &mut u);
                 self.scratch_sps.put_tensor(u0_cl);

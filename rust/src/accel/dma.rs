@@ -130,7 +130,7 @@ impl DmaEngine {
     pub fn new(model: &QuantizedModel, hw: &AccelConfig) -> Self {
         let cfg = &model.cfg;
         let cores = hw.topology.sdeb_cores.max(1);
-        let slot_words = hw.weight_slot_words() as u64;
+        let slot_words = hw.weight_slot_words() as u64; // as-ok: widening for 64-bit stat/cycle math
         let slots = hw.weight_slots.max(2);
 
         let words: Vec<u64> = model.blocks.iter().map(block_set_words).collect();
@@ -167,15 +167,15 @@ impl DmaEngine {
         let pinned_sps_words = model
             .sps_convs
             .iter()
-            .map(|c| (c.w.len() + c.bias.len()) as u64)
+            .map(|c| (c.w.len() + c.bias.len()) as u64) // as-ok: widening for 64-bit stat/cycle math
             .sum();
 
         Self {
             bytes_per_cycle: hw.dram_bytes_per_cycle,
             slots,
             blocks,
-            input_bytes: (cfg.in_channels * cfg.img_size * cfg.img_size * 2) as u64,
-            output_bytes: (cfg.num_classes * 4) as u64,
+            input_bytes: (cfg.in_channels * cfg.img_size * cfg.img_size * 2) as u64, // as-ok: widening for 64-bit stat/cycle math
+            output_bytes: (cfg.num_classes * 4) as u64, // as-ok: widening for 64-bit stat/cycle math
             pinned_sps_words,
         }
     }
@@ -186,7 +186,7 @@ impl DmaEngine {
     pub fn streamed_bytes_per_inference(&self, timesteps: usize) -> u64 {
         self.blocks
             .iter()
-            .map(|b| if b.streams_every_use() { b.bytes * timesteps as u64 } else { b.bytes })
+            .map(|b| if b.streams_every_use() { b.bytes * timesteps as u64 } else { b.bytes }) // as-ok: widening for 64-bit stat/cycle math
             .sum()
     }
 
@@ -210,7 +210,7 @@ impl DmaEngine {
 fn block_set_words(blk: &crate::model::QuantizedBlock) -> u64 {
     [&blk.q, &blk.k, &blk.v, &blk.o, &blk.mlp1, &blk.mlp2]
         .iter()
-        .map(|l| (l.w.len() + l.bias.len()) as u64)
+        .map(|l| (l.w.len() + l.bias.len()) as u64) // as-ok: widening for 64-bit stat/cycle math
         .sum()
 }
 

@@ -35,7 +35,10 @@
 //! accounting, never from host wall clocks, so overlapped runs stay
 //! bit-deterministic: same image, same model, same report.
 
-use std::sync::mpsc;
+// Routed through the sync shim: `mpsc` stays `std` under every cfg (loom
+// has no channel model); the handoff discipline this channel implements is
+// loom-checked via `buffers::SlotRing` instead.
+use crate::util::sync::mpsc;
 
 use anyhow::{anyhow, Result};
 
@@ -353,7 +356,7 @@ impl PipelineExecution {
         if self.executed_cycles == 0 {
             return 1.0;
         }
-        self.serialized_cycles as f64 / self.executed_cycles as f64
+        self.serialized_cycles as f64 / self.executed_cycles as f64 // as-ok: reporting ratio, not datapath state
     }
 
     /// Modelled wall-clock seconds of the executed schedule at `cfg`'s
@@ -368,7 +371,7 @@ impl PipelineExecution {
         if self.executed_cycles == 0 {
             0.0
         } else {
-            self.stall_cycles as f64 / self.executed_cycles as f64
+            self.stall_cycles as f64 / self.executed_cycles as f64 // as-ok: reporting ratio, not datapath state
         }
     }
 
@@ -451,7 +454,7 @@ pub(crate) fn head_readout(
     sink.add("head.encode", st);
     sink.sparsity("head.in.spikes", &s_out);
     for (c, count) in head_counts.iter_mut().enumerate() {
-        *count += s_out.channel_len(c) as u64;
+        *count += s_out.channel_len(c) as u64; // as-ok: widening for 64-bit stat/cycle math
     }
     scratch.put_enc(s_out);
     scratch.put_i32(u_cl);

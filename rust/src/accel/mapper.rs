@@ -185,7 +185,7 @@ impl Mapper {
                 let core_load: &mut [u64] = if cores <= MAX_STACK_CORES {
                     &mut small[..cores]
                 } else {
-                    big = vec![0u64; cores];
+                    big = vec![0u64; cores]; // alloc-ok: cold fallback, fabrics wider than MAX_STACK_CORES
                     &mut big
                 };
                 let load_of = |h: usize| loads.get(h).copied().unwrap_or(1);
@@ -215,7 +215,7 @@ impl Mapper {
         let c = q.channels;
         for (h, load) in loads.iter_mut().enumerate() {
             for ch in HeadShard::head_channels(h, heads, c) {
-                *load += (q.channel_len(ch) + k.channel_len(ch)) as u64;
+                *load += (q.channel_len(ch) + k.channel_len(ch)) as u64; // as-ok: widening for 64-bit stat/cycle math
             }
         }
     }

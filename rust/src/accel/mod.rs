@@ -26,6 +26,7 @@ pub mod sdeb_core;
 pub mod sps_core;
 pub mod workers;
 
+pub use buffers::SlotRing;
 pub use controller::{Accelerator, DatapathMode, ExecMode};
 pub use dma::{BlockPlan, DmaEngine, WeightResidency, WEIGHT_STREAM_BYTES};
 pub use mapper::{Mapper, MappingPolicy, WorkUnit};

@@ -54,7 +54,7 @@ impl PipelineEstimate {
         if self.pipelined_cycles == 0 {
             return 1.0;
         }
-        self.serialized_cycles as f64 / self.pipelined_cycles as f64
+        self.serialized_cycles as f64 / self.pipelined_cycles as f64 // as-ok: reporting ratio, not datapath state
     }
 
     /// Which stage bounds the pipelined schedule.
@@ -76,7 +76,7 @@ impl PipelineEstimate {
 /// steady-state period is the slowest stage's per-timestep cycles, plus a
 /// fill of one per-timestep latency for each upstream stage.
 pub fn estimate(phases: &PhaseStats, timesteps: usize) -> PipelineEstimate {
-    let t = timesteps.max(1) as u64;
+    let t = timesteps.max(1) as u64; // as-ok: widening for 64-bit stat/cycle math
     let (mut io, mut sps, mut sdeb) = (0u64, 0u64, 0u64);
     for (name, st) in &phases.phases {
         match stage_of(name) {

@@ -114,7 +114,7 @@ impl SpsCore {
             for c in 0..enc.channels {
                 let base = c * enc.tokens;
                 for &a in enc.channel_addrs(c) {
-                    next.data[base + a as usize] = 1;
+                    next.data[base + a as usize] = 1; // as-ok: narrow-int index widening
                 }
             }
             scratch.put_tensor(std::mem::replace(&mut cur, next));

@@ -25,9 +25,10 @@
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::thread::{spawn, JoinHandle};
+use crate::util::sync::{Arc, Condvar, Mutex};
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -127,7 +128,7 @@ impl WorkerPool {
         let handles = (0..workers.max(1))
             .map(|_| {
                 let shared = Arc::clone(&shared);
-                std::thread::spawn(move || worker_loop(shared))
+                spawn(move || worker_loop(shared))
             })
             .collect();
         Self { shared, handles }

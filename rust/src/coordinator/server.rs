@@ -6,9 +6,9 @@
 //! topology — router thread, N workers, response collector — mirrors the
 //! vllm-style leader/worker layout the architecture guide calls for.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
+use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::thread::JoinHandle;
+use crate::util::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -84,7 +84,7 @@ impl Coordinator {
         for factory in factories {
             let rx = Arc::clone(&work_rx);
             let tx = resp_tx.clone();
-            workers.push(std::thread::spawn(move || -> u64 {
+            workers.push(crate::util::sync::thread::spawn(move || -> u64 {
                 let mut backend = match factory() {
                     Ok(b) => b,
                     Err(e) => {

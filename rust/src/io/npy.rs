@@ -31,10 +31,14 @@ impl NpyArray {
         let major = bytes[6];
         let (header_len, header_start) = match major {
             1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
-            2 => (
-                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
-                12,
-            ),
+            2 => {
+                // The v1 check above only guarantees 10 bytes; a truncated
+                // v2 header must be an error, not an index panic.
+                if bytes.len() < 12 {
+                    bail!("truncated npy v2 header length field");
+                }
+                (u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize, 12)
+            }
             v => bail!("unsupported npy version {v}"),
         };
         let header_end = header_start + header_len;
@@ -56,12 +60,17 @@ impl NpyArray {
             "|i1" | "|u1" => 1,
             d => bail!("unsupported dtype {d}"),
         };
-        let n: usize = shape.iter().product();
+        // Checked products: a corrupt shape like (2**48, 2**48) must not
+        // wrap around usize and pass the length check below.
+        let bytes_needed = shape
+            .iter()
+            .try_fold(elem, |acc: usize, &d| acc.checked_mul(d))
+            .context("npy shape overflows usize")?;
         let data = &bytes[header_end..];
-        if data.len() < n * elem {
-            bail!("npy payload too short: {} < {}", data.len(), n * elem);
+        if data.len() < bytes_needed {
+            bail!("npy payload too short: {} < {}", data.len(), bytes_needed);
         }
-        Ok(Self { shape, dtype, raw: data[..n * elem].to_vec() })
+        Ok(Self { shape, dtype, raw: data[..bytes_needed].to_vec() })
     }
 
     /// Element count.
@@ -201,6 +210,37 @@ mod tests {
     fn rejects_truncated_payload() {
         let npy = make_npy("<f4", "(4,)", &1.0f32.to_le_bytes());
         assert!(NpyArray::parse(&npy).is_err());
+    }
+
+    #[test]
+    fn truncated_v2_length_field_is_an_error_not_a_panic() {
+        // 10 bytes of a v2.0 file: magic + version, but only 2 of the 4
+        // header-length bytes. Used to index out of bounds.
+        let npy = b"\x93NUMPY\x02\x00\x40\x00";
+        let err = NpyArray::parse(npy).unwrap_err();
+        assert!(err.to_string().contains("truncated npy v2"), "{err:#}");
+    }
+
+    #[test]
+    fn parses_v2_header() {
+        let payload = 1.5f32.to_le_bytes();
+        let header = "{'descr': '<f4', 'fortran_order': False, 'shape': (1,), }\n";
+        let mut npy = b"\x93NUMPY\x02\x00".to_vec();
+        npy.extend((header.len() as u32).to_le_bytes());
+        npy.extend(header.as_bytes());
+        npy.extend(payload);
+        let arr = NpyArray::parse(&npy).unwrap();
+        assert_eq!(arr.shape, vec![1]);
+        assert_eq!(arr.as_f32().unwrap(), vec![1.5]);
+    }
+
+    #[test]
+    fn huge_shape_product_does_not_wrap() {
+        // 2^63 * 4 wraps a u64/usize product to 0, which would make an
+        // empty payload "long enough" without the checked_mul guard.
+        let npy = make_npy("<f4", "(9223372036854775808,)", &[]);
+        let err = NpyArray::parse(&npy).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err:#}");
     }
 
     #[test]

@@ -61,7 +61,7 @@ impl SpikeMatrix {
         if self.data.is_empty() {
             return 0.0;
         }
-        1.0 - self.count_spikes() as f64 / self.data.len() as f64
+        1.0 - self.count_spikes() as f64 / self.data.len() as f64 // as-ok: reporting ratio, not datapath state
     }
 
     /// One channel's bitmap row.
@@ -121,7 +121,7 @@ pub struct EncodedSpikes {
 impl EncodedSpikes {
     /// An encoded tensor with no spikes.
     pub fn empty(channels: usize, tokens: usize) -> Self {
-        assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16");
+        assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16"); // as-ok: narrow-int index widening
         Self {
             channels,
             tokens,
@@ -144,7 +144,7 @@ impl EncodedSpikes {
         if i > self.cur {
             self.addrs.len()
         } else {
-            self.offsets[i] as usize
+            self.offsets[i] as usize // as-ok: narrow-int index widening
         }
     }
 
@@ -152,7 +152,8 @@ impl EncodedSpikes {
     #[inline]
     fn advance_to(&mut self, c: usize) {
         if c > self.cur {
-            let end = self.addrs.len() as u32;
+            let end =
+                u32::try_from(self.addrs.len()).expect("CSR arena exceeds the u32 offset space");
             for o in &mut self.offsets[self.cur + 1..=c] {
                 *o = end;
             }
@@ -179,7 +180,7 @@ impl EncodedSpikes {
         let mut m = SpikeMatrix::zeros(self.channels, self.tokens);
         for c in 0..self.channels {
             for &l in self.channel_addrs(c) {
-                m.set(c, l as usize, true);
+                m.set(c, l as usize, true); // as-ok: narrow-int index widening
             }
         }
         m
@@ -231,7 +232,7 @@ impl EncodedSpikes {
         if total == 0 {
             return 0.0;
         }
-        1.0 - self.count_spikes() as f64 / total as f64
+        1.0 - self.count_spikes() as f64 / total as f64 // as-ok: reporting ratio, not datapath state
     }
 
     /// Push a spike. Spikes must arrive channel-major and in increasing
@@ -243,18 +244,21 @@ impl EncodedSpikes {
         assert!(c >= self.cur, "channel-major push order violated: {c} < {}", self.cur);
         debug_assert!(l < self.tokens, "address {l} out of token range {}", self.tokens);
         self.advance_to(c);
-        let start = self.offsets[c] as usize;
+        let start = self.offsets[c] as usize; // as-ok: narrow-int index widening
         let seg = l / SEGMENT_TOKENS;
         if self.addrs.len() == start {
             self.seg_headers[c] += 1; // first spike of the channel
         } else {
-            let last = *self.addrs.last().unwrap() as usize;
+            let last = *self.addrs.last().unwrap() as usize; // as-ok: narrow-int index widening
             debug_assert!(last < l, "out-of-order push: {last} >= {l}");
             if last / SEGMENT_TOKENS != seg {
                 self.seg_headers[c] += 1; // channel enters a new segment
             }
         }
-        self.addrs.push(l as u16);
+        // `empty`/`reset` assert tokens <= u16::MAX + 1 and `l < tokens` is
+        // the push contract, so this only fires on an invariant violation.
+        let addr = u16::try_from(l).expect("spike address exceeds the u16 token space");
+        self.addrs.push(addr);
     }
 
     /// Bulk-append a strictly increasing address slice to channel `c`
@@ -263,13 +267,13 @@ impl EncodedSpikes {
         assert!(c < self.channels, "channel {c} out of range");
         assert!(c >= self.cur, "channel-major extend order violated");
         self.advance_to(c);
-        let start = self.offsets[c] as usize;
+        let start = self.offsets[c] as usize; // as-ok: narrow-int index widening
         let mut prev: Option<u16> = self.addrs.get(start..).and_then(|s| s.last().copied());
-        let mut prev_seg = prev.map_or(usize::MAX, |p| p as usize / SEGMENT_TOKENS);
+        let mut prev_seg = prev.map_or(usize::MAX, |p| p as usize / SEGMENT_TOKENS); // as-ok: narrow-int index widening
         for &a in new {
-            debug_assert!((a as usize) < self.tokens, "address {a} out of range");
+            debug_assert!((a as usize) < self.tokens, "address {a} out of range"); // as-ok: narrow-int index widening
             debug_assert!(prev.map_or(true, |p| p < a), "out-of-order extend");
-            let seg = a as usize / SEGMENT_TOKENS;
+            let seg = a as usize / SEGMENT_TOKENS; // as-ok: narrow-int index widening
             if seg != prev_seg {
                 self.seg_headers[c] += 1;
                 prev_seg = seg;
@@ -289,7 +293,7 @@ impl EncodedSpikes {
         assert_eq!(self.tokens, src.tokens, "token-space mismatch");
         self.advance_to(c);
         assert_eq!(
-            self.offsets[c] as usize,
+            self.offsets[c] as usize, // as-ok: narrow-int index widening
             self.addrs.len(),
             "extend_channel_from target channel must be empty"
         );
@@ -316,7 +320,7 @@ impl EncodedSpikes {
     /// their capacity). Bit-identical to [`Self::empty`] afterwards; this
     /// is what `ExecScratch::take_enc` calls on a pooled arena.
     pub fn reset(&mut self, channels: usize, tokens: usize) {
-        assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16");
+        assert!(tokens <= u16::MAX as usize + 1, "token space exceeds u16"); // as-ok: narrow-int index widening
         self.channels = channels;
         self.tokens = tokens;
         self.offsets.resize(channels + 1, 0);
@@ -329,7 +333,7 @@ impl EncodedSpikes {
     /// (how 8-bit addresses cover token spaces > 256; DESIGN.md). O(channels):
     /// header counts are maintained incrementally on push.
     pub fn storage_words(&self) -> usize {
-        self.addrs.len() + self.seg_headers.iter().map(|&h| h as usize).sum::<usize>()
+        self.addrs.len() + self.seg_headers.iter().map(|&h| h as usize).sum::<usize>() // as-ok: narrow-int index widening
     }
 
     /// Validity check used by property tests: offsets contiguous and
@@ -353,13 +357,13 @@ impl EncodedSpikes {
             if !list.windows(2).all(|w| w[0] < w[1]) {
                 return false;
             }
-            if !list.iter().all(|&l| (l as usize) < self.tokens) {
+            if !list.iter().all(|&l| (l as usize) < self.tokens) { // as-ok: narrow-int index widening
                 return false;
             }
             let mut segs = 0u32;
             let mut prev_seg = usize::MAX;
             for &l in list {
-                let seg = l as usize / SEGMENT_TOKENS;
+                let seg = l as usize / SEGMENT_TOKENS; // as-ok: narrow-int index widening
                 if seg != prev_seg {
                     segs += 1;
                     prev_seg = seg;

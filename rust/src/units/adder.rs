@@ -39,11 +39,11 @@ impl AdderModule {
         assert_eq!(a.frac, b.frac, "adder frac mismatch");
         let mut out = scratch.take_tensor(&a.shape, a.frac);
         for ((o, &x), &y) in out.data.iter_mut().zip(&a.data).zip(&b.data) {
-            *o = sat(x as i64 + y as i64, MEM_BITS);
+            *o = sat(x as i64 + y as i64, MEM_BITS); // as-ok: widening into i64 accumulator math
         }
-        let n = a.len() as u64;
+        let n = a.len() as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
-            cycles: div_ceil(n, cfg.lanes as u64).max(1),
+            cycles: div_ceil(n, cfg.lanes as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
             adds: n,
             sram_reads: 2 * n,
             sram_writes: n,
@@ -74,21 +74,21 @@ impl AdderModule {
         cfg: &AccelConfig,
         scratch: &mut ExecScratch,
     ) -> (QTensor, UnitStats) {
-        assert_eq!(values.shape, vec![spikes.channels, spikes.tokens]);
+        assert_eq!(values.shape, [spikes.channels, spikes.tokens]);
         assert_eq!(values.frac, ACT_FRAC);
         let one = 1i64 << ACT_FRAC;
         let mut out = scratch.take_tensor_copy(values);
         let mut n_spikes: u64 = 0;
         for c in 0..spikes.channels {
             let list = spikes.channel_addrs(c);
-            n_spikes += list.len() as u64;
+            n_spikes += list.len() as u64; // as-ok: widening for 64-bit stat/cycle math
             for &l in list {
-                let idx = c * spikes.tokens + l as usize;
-                out.data[idx] = sat(out.data[idx] as i64 + one, MEM_BITS);
+                let idx = c * spikes.tokens + l as usize; // as-ok: narrow-int index widening
+                out.data[idx] = sat(out.data[idx] as i64 + one, MEM_BITS); // as-ok: widening into i64 accumulator math
             }
         }
         let stats = UnitStats {
-            cycles: div_ceil(n_spikes, cfg.lanes as u64).max(1),
+            cycles: div_ceil(n_spikes, cfg.lanes as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
             adds: n_spikes,
             sops: n_spikes,
             sram_reads: n_spikes,

@@ -60,13 +60,13 @@ impl SpikeEncodingArray {
                 }
             }
         }
-        let n = spa.len() as u64;
+        let n = spa.len() as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
-            cycles: div_ceil(n, cfg.lanes as u64),
+            cycles: div_ceil(n, cfg.lanes as u64), // as-ok: widening for 64-bit stat/cycle math
             adds: n,                                  // Eq. (2) membrane add
             cmps: n,                                  // Eq. (3) threshold
             sram_reads: n,                            // spatial input read
-            sram_writes: enc.storage_words() as u64,  // encoded addresses
+            sram_writes: enc.storage_words() as u64,  // encoded addresses // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         };
         (enc, stats)

@@ -73,12 +73,12 @@ impl SpikeLinearUnit {
                 continue;
             }
             let row = layer.row(c);
-            total_spikes += list.len() as u64;
+            total_spikes += list.len() as u64; // as-ok: widening for 64-bit stat/cycle math
             for &tok in list {
-                let base = tok as usize * n_out;
+                let base = tok as usize * n_out; // as-ok: narrow-int index widening
                 let dst = &mut acc[base..base + n_out];
                 for (d, &w) in dst.iter_mut().zip(row) {
-                    *d += w as i64;
+                    *d += w as i64; // as-ok: widening into i64 accumulator math
                 }
             }
         }
@@ -92,13 +92,13 @@ impl SpikeLinearUnit {
             *o = sat.convert(a, shift, out_fmt);
         }
 
-        let sops = total_spikes * n_out as u64;
+        let sops = total_spikes * n_out as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
-            cycles: div_ceil(sops, cfg.lanes as u64).max(1),
+            cycles: div_ceil(sops, cfg.lanes as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
             sops,
             adds: sops,
             sram_reads: total_spikes + sops, // ESS addresses + weight rows
-            sram_writes: (l * n_out) as u64,
+            sram_writes: (l * n_out) as u64, // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         };
         (out, stats)
@@ -114,11 +114,11 @@ impl SpikeLinearUnit {
         cfg: &AccelConfig,
     ) -> (QTensor, UnitStats) {
         let (out, mut stats) = self.forward(x, layer, cfg);
-        let total = (x.channels * x.tokens * layer.out_dim) as u64;
+        let total = (x.channels * x.tokens * layer.out_dim) as u64; // as-ok: widening for 64-bit stat/cycle math
         stats.macs = total;
         stats.adds = total;
-        stats.sram_reads = (x.channels * x.tokens) as u64 + total;
-        stats.cycles = div_ceil(total, cfg.lanes as u64).max(1);
+        stats.sram_reads = (x.channels * x.tokens) as u64 + total; // as-ok: widening for 64-bit stat/cycle math
+        stats.cycles = div_ceil(total, cfg.lanes as u64).max(1); // as-ok: widening for 64-bit stat/cycle math
         (out, stats)
     }
 
@@ -149,11 +149,11 @@ impl SpikeLinearUnit {
         let (out, mut stats) = self.forward_into(x, layer, cfg, scratch);
         // Same values; different cost: every position costs a read + a
         // zero-check before the (sparse) accumulation work.
-        let positions = (x.channels * x.tokens) as u64;
+        let positions = (x.channels * x.tokens) as u64; // as-ok: widening for 64-bit stat/cycle math
         stats.cmps += positions;
         stats.sram_reads = positions + stats.sops;
-        stats.cycles = div_ceil(positions, cfg.lanes as u64)
-            + div_ceil(stats.sops, cfg.lanes as u64).max(1);
+        stats.cycles = div_ceil(positions, cfg.lanes as u64) // as-ok: widening for 64-bit stat/cycle math
+            + div_ceil(stats.sops, cfg.lanes as u64).max(1); // as-ok: widening for 64-bit stat/cycle math
         (out, stats)
     }
 }
@@ -171,7 +171,7 @@ pub fn dense_reference(x: &EncodedSpikes, layer: &QuantizedLinear) -> Vec<i64> {
         for c in 0..x.channels {
             if bitmap.get(c, tok) {
                 for o in 0..layer.out_dim {
-                    acc[tok * layer.out_dim + o] += layer.row(c)[o] as i64;
+                    acc[tok * layer.out_dim + o] += layer.row(c)[o] as i64; // as-ok: widening into i64 accumulator math
                 }
             }
         }

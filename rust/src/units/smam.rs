@@ -198,7 +198,7 @@ impl SpikeMaskAddModule {
             q,
             k,
             v,
-            cfg.smam_comparators as u64,
+            cfg.smam_comparators as u64, // as-ok: widening for 64-bit stat/cycle math
             heads,
             cores,
             &assign,
@@ -256,7 +256,7 @@ impl SpikeMaskAddModule {
             q,
             k,
             v,
-            mapper.comparators_per_core(cfg) as u64,
+            mapper.comparators_per_core(cfg) as u64, // as-ok: widening for 64-bit stat/cycle math
             heads,
             cores,
             &assign,
@@ -290,8 +290,8 @@ impl SpikeMaskAddModule {
         debug_assert!(assign.iter().all(|&core| core < cores));
         // Spike counts read once up front (dispatch used to re-count them
         // for the spawn decision and again for the stats).
-        let q_spikes = q.count_spikes() as u64;
-        let k_spikes = k.count_spikes() as u64;
+        let q_spikes = q.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
+        let k_spikes = k.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
 
         let mut mask = scratch.take_bool(c);
         let mut acc = scratch.take_u32(c);
@@ -301,7 +301,10 @@ impl SpikeMaskAddModule {
         {
             // Carve the shared outputs into disjoint per-head jobs; heads
             // partition the channel range contiguously and in order.
-            let mut jobs: Vec<HeadJob<'_>> = Vec::with_capacity(heads);
+            // The HeadJob scaffolding borrows from this stack frame, so it
+            // cannot live in the 'static ExecScratch pool; heads/cores are
+            // tiny (<= fabric width) and the Vecs die with the scope.
+            let mut jobs: Vec<HeadJob<'_>> = Vec::with_capacity(heads); // alloc-ok: lifetime-bound dispatch scaffolding
             let mut mask_rest = &mut mask[..];
             let mut acc_rest = &mut acc[..];
             for (h, tally) in head_tally.chunks_mut(2).enumerate() {
@@ -312,7 +315,7 @@ impl SpikeMaskAddModule {
                 acc_rest = rest;
                 jobs.push(HeadJob { range, mask: m, acc: a, tally });
             }
-            let mut per_core: Vec<Vec<HeadJob<'_>>> = (0..cores).map(|_| Vec::new()).collect();
+            let mut per_core: Vec<Vec<HeadJob<'_>>> = (0..cores).map(|_| Vec::new()).collect(); // alloc-ok: lifetime-bound dispatch scaffolding
             for (h, job) in jobs.into_iter().enumerate() {
                 per_core[assign[h]].push(job);
             }
@@ -362,7 +365,7 @@ impl SpikeMaskAddModule {
             let (mut core_steps, mut core_channels) = (0u64, 0u64);
             for h in (0..heads).filter(|&h| assign[h] == core) {
                 core_steps += head_tally[2 * h];
-                core_channels += HeadShard::head_channels(h, heads, c).len() as u64;
+                core_channels += HeadShard::head_channels(h, heads, c).len() as u64; // as-ok: widening for 64-bit stat/cycle math
             }
             cycles = cycles.max(div_ceil(core_steps, comps).max(1) + div_ceil(core_channels, comps));
         }
@@ -375,14 +378,14 @@ impl SpikeMaskAddModule {
             }
         }
 
-        let retained = masked_v.count_spikes() as u64;
+        let retained = masked_v.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
             cycles,
             // SOPs: every Q/K spike traverses the comparator once; every
             // retained V spike traverses the mask gate.
             sops: q_spikes + k_spikes + retained,
             adds: matches, // token-dim accumulation increments
-            cmps: steps + c as u64,
+            cmps: steps + c as u64, // as-ok: widening for 64-bit stat/cycle math
             sram_reads: q_spikes + k_spikes + retained,
             sram_writes: retained,
             ..Default::default()
@@ -434,14 +437,14 @@ impl SpikeMaskAddModule {
                 masked_v.extend_channel_from(ch, v, ch);
             }
         }
-        let positions = (c * l) as u64;
-        let retained = masked_v.count_spikes() as u64;
+        let positions = (c * l) as u64; // as-ok: widening for 64-bit stat/cycle math
+        let retained = masked_v.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
-            cycles: div_ceil(positions, cfg.smam_comparators as u64).max(1)
-                + div_ceil(c as u64, cfg.smam_comparators as u64),
-            sops: q.count_spikes() as u64 + k.count_spikes() as u64 + retained,
-            adds: acc.iter().map(|&x| x as u64).sum(),
-            cmps: positions + c as u64,
+            cycles: div_ceil(positions, cfg.smam_comparators as u64).max(1) // as-ok: widening for 64-bit stat/cycle math
+                + div_ceil(c as u64, cfg.smam_comparators as u64), // as-ok: widening for 64-bit stat/cycle math
+            sops: q.count_spikes() as u64 + k.count_spikes() as u64 + retained, // as-ok: widening for 64-bit stat/cycle math
+            adds: acc.iter().map(|&x| x as u64).sum(), // as-ok: widening for 64-bit stat/cycle math
+            cmps: positions + c as u64, // as-ok: widening for 64-bit stat/cycle math
             sram_reads: 2 * positions + retained,
             sram_writes: retained,
             ..Default::default()

@@ -66,9 +66,9 @@ impl SpikeMaxpoolUnit {
             }
             covered.fill(false);
             for &addr in list {
-                let (y, x) = grid.coords(addr as usize);
+                let (y, x) = grid.coords(addr as usize); // as-ok: narrow-int index widening
                 grid.covering_outputs(y, x, self.kernel, self.stride, &mut cover_buf);
-                or_ops += cover_buf.len() as u64;
+                or_ops += cover_buf.len() as u64; // as-ok: widening for 64-bit stat/cycle math
                 for &o in &cover_buf {
                     covered[o] = true;
                 }
@@ -80,15 +80,15 @@ impl SpikeMaxpoolUnit {
             }
         }
 
-        let spikes = input.count_spikes() as u64;
+        let spikes = input.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
             // one spike per SMU per cycle, channels spread over the array
-            cycles: div_ceil(spikes, cfg.smu_units as u64).max(1),
+            cycles: div_ceil(spikes, cfg.smu_units as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
             sops: spikes,
             adds: spikes * 2, // window-address arithmetic per spike
             cmps: or_ops,     // the per-kernel "or" updates
             sram_reads: spikes,
-            sram_writes: out.storage_words() as u64,
+            sram_writes: out.storage_words() as u64, // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         };
         scratch.put_bool(covered);
@@ -138,13 +138,13 @@ impl SpikeMaxpoolUnit {
                 }
             }
         }
-        let reads = input.channels as u64 * grid.tokens() as u64;
+        let reads = input.channels as u64 * grid.tokens() as u64; // as-ok: widening for 64-bit stat/cycle math
         let stats = UnitStats {
-            cycles: div_ceil(cmps, cfg.smu_units as u64).max(1),
-            sops: input.count_spikes() as u64,
+            cycles: div_ceil(cmps, cfg.smu_units as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
+            sops: input.count_spikes() as u64, // as-ok: widening for 64-bit stat/cycle math
             cmps,
             sram_reads: reads,
-            sram_writes: out.storage_words() as u64,
+            sram_writes: out.storage_words() as u64, // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         };
         (out, stats)

@@ -56,12 +56,12 @@ impl QuantizedConv {
                 for ky in 0..kh {
                     for kx in 0..kw {
                         wt[((i * kh + ky) * kw + kx) * c_out + o] =
-                            wq[((o * c_in + i) * kh + ky) * kw + kx] as i64;
+                            wq[((o * c_in + i) * kh + ky) * kw + kx] as i64; // as-ok: widening into i64 accumulator math
                     }
                 }
             }
         }
-        let wt32 = wt.iter().map(|&v| v as i32).collect();
+        let wt32 = wt.iter().map(|&v| v as i32).collect(); // as-ok: lossless, quantized |w| <= 512
         Self { c_out, c_in, kh, kw, w: wq, wt, wt32, w_frac, in_frac, bias: quantize_bias(bias, w_frac + in_frac) }
     }
 }
@@ -127,9 +127,9 @@ impl TileEngine {
         let n_out = conv.c_out;
         // i32 accumulators are 2x SIMD-wider than i64 and provably cannot
         // overflow here: |acc| <= |bias| (24-bit) + taps * max|in| * max|w|.
-        let max_in = input.data.iter().map(|&v| (v as i64).abs()).max().unwrap_or(0).max(1);
-        let worst = (1i64 << 23) + (c_in * conv.kh * conv.kw) as i64 * max_in * 512;
-        let use_i32 = worst < i32::MAX as i64 / 2;
+        let max_in = input.data.iter().map(|&v| (v as i64).abs()).max().unwrap_or(0).max(1); // as-ok: widening into i64 accumulator math
+        let worst = (1i64 << 23) + (c_in * conv.kh * conv.kw) as i64 * max_in * 512; // as-ok: widening into i64 accumulator math
+        let use_i32 = worst < i32::MAX as i64 / 2; // as-ok: widening into i64 accumulator math
         let shift = conv.w_frac + conv.in_frac;
         let taps = conv.kh * conv.kw;
 
@@ -140,7 +140,7 @@ impl TileEngine {
             let wt = &conv.wt32;
             for pos in 0..h * w {
                 for (a, &b) in acc[pos * n_out..(pos + 1) * n_out].iter_mut().zip(&conv.bias) {
-                    *a = b as i32;
+                    *a = i32::try_from(b).expect("bias outside the guarded i32 accumulator range");
                 }
             }
             for i in 0..c_in {
@@ -184,7 +184,7 @@ impl TileEngine {
             for o in 0..n_out {
                 for pos in 0..h * w {
                     out.data[o * h * w + pos] =
-                        sat.convert(acc[pos * n_out + o] as i64, shift, out_fmt);
+                        sat.convert(acc[pos * n_out + o] as i64, shift, out_fmt); // as-ok: widening into i64 accumulator math
                 }
             }
         } else {
@@ -219,7 +219,7 @@ impl TileEngine {
                                 &mut acc[(oy * w + ox) * n_out..(oy * w + ox + 1) * n_out];
                             let src = &wt[((i * taps) + ky * conv.kw + kx) * n_out
                                 ..((i * taps) + ky * conv.kw + kx + 1) * n_out];
-                            let vv = v as i64;
+                            let vv = v as i64; // as-ok: widening into i64 accumulator math
                             for (d, &s) in dst.iter_mut().zip(src) {
                                 *d += vv * s;
                             }
@@ -235,16 +235,16 @@ impl TileEngine {
             }
         }
 
-        let total_macs = (conv.c_out * h * w * c_in * conv.kh * conv.kw) as u64;
-        let fan_out = (conv.c_out * conv.kh * conv.kw) as u64;
+        let total_macs = (conv.c_out * h * w * c_in * conv.kh * conv.kw) as u64; // as-ok: widening for 64-bit stat/cycle math
+        let fan_out = (conv.c_out * conv.kh * conv.kw) as u64; // as-ok: widening for 64-bit stat/cycle math
         let sops = if spike_input { nonzero_inputs * fan_out } else { total_macs };
         let stats = UnitStats {
-            cycles: div_ceil(total_macs, cfg.tile_macs as u64).max(1),
+            cycles: div_ceil(total_macs, cfg.tile_macs as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
             sops,
             macs: if spike_input { 0 } else { total_macs },
             adds: if spike_input { total_macs } else { 0 },
-            sram_reads: (input.len() as u64) + total_macs, // acts + weights
-            sram_writes: out.len() as u64,
+            sram_reads: (input.len() as u64) + total_macs, // acts + weights // as-ok: widening for 64-bit stat/cycle math
+            sram_writes: out.len() as u64, // as-ok: widening for 64-bit stat/cycle math
             ..Default::default()
         };
         (out, stats)
@@ -271,16 +271,16 @@ pub fn conv2d_f32_reference(
                 let mut acc = bias[o];
                 for i in 0..c_in {
                     for ky in 0..kh {
-                        let iy = oy as isize + ky as isize - ph as isize;
-                        if iy < 0 || iy >= h as isize {
+                        let iy = oy as isize + ky as isize - ph as isize; // as-ok: signed padding-window arithmetic
+                        if iy < 0 || iy >= h as isize { // as-ok: signed padding-window arithmetic
                             continue;
                         }
                         for kx in 0..kw {
-                            let ix = ox as isize + kx as isize - pw as isize;
-                            if ix < 0 || ix >= w as isize {
+                            let ix = ox as isize + kx as isize - pw as isize; // as-ok: signed padding-window arithmetic
+                            if ix < 0 || ix >= w as isize { // as-ok: signed padding-window arithmetic
                                 continue;
                             }
-                            acc += input[(i * h + iy as usize) * w + ix as usize]
+                            acc += input[(i * h + iy as usize) * w + ix as usize] // as-ok: narrow-int index widening
                                 * wts[((o * c_in + i) * kh + ky) * kw + kx];
                         }
                     }

@@ -4,6 +4,7 @@
 
 pub mod prng;
 pub mod proptest;
+pub mod sync;
 
 pub use prng::Prng;
 

@@ -1,0 +1,128 @@
+//! Pool panic propagation: a task that panics inside `WorkerPool::scope`
+//! must poison/propagate without deadlocking waiters, and a panicking SPS
+//! stage must surface as an inference *error* — never a hang, never a
+//! poisoned pool — on both the overlapped executor path and `infer_batch`
+//! (the "panic parity" contract documented in `accel/executor.rs`).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use spikeformer_accel::accel::{Accelerator, WorkerPool};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+/// A tiny model whose stage-0 conv panics (slice out of bounds in the
+/// scatter walk) the moment the SPS stage touches it.
+fn corrupted_model(seed: u64) -> QuantizedModel {
+    let cfg = SdtModelConfig::tiny();
+    let mut model = QuantizedModel::random(&cfg, seed);
+    // Truncate both scatter layouts so whichever accumulator width the
+    // tile engine picks, the first nonzero input pixel indexes past the
+    // end of the weight row.
+    model.sps_convs[0].wt.truncate(1);
+    model.sps_convs[0].wt32.truncate(1);
+    model
+}
+
+fn test_image(seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+#[test]
+fn overlapped_infer_reports_sps_panic_as_error() {
+    let mut accel = Accelerator::new(corrupted_model(11), AccelConfig::small());
+    let img = test_image(1);
+
+    // The producer task panics on the pool; the contract is an error on
+    // the calling thread, not a deadlocked consumer or a crashed test.
+    let err = accel.infer(&img).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("SPS pipeline stage panicked"),
+        "unexpected error: {err:#}"
+    );
+
+    // The pool must not be poisoned by the caught panic: a second call on
+    // the same accelerator fails the same way instead of hanging.
+    let err = accel.infer(&img).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("SPS pipeline stage panicked"),
+        "second call diverged: {err:#}"
+    );
+}
+
+#[test]
+fn infer_batch_reports_sps_panic_as_error() {
+    let mut accel = Accelerator::new(corrupted_model(12), AccelConfig::small());
+    let images = vec![test_image(2), test_image(3)];
+
+    // Batches of >= 2 take the stage-major `run_batched` path; panic
+    // parity means it fails exactly like the per-call path above.
+    let err = accel.infer_batch(&images).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("SPS pipeline stage panicked"),
+        "unexpected error: {err:#}"
+    );
+
+    // And the accelerator (its pool included) stays usable afterwards.
+    let err = accel.infer_batch(&images).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("SPS pipeline stage panicked"),
+        "second batch diverged: {err:#}"
+    );
+}
+
+#[test]
+fn pool_task_panic_propagates_at_scope_exit() {
+    let pool = WorkerPool::new(2);
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        pool.scope(|s| {
+            s.spawn(|| panic!("injected task panic"));
+        });
+    }));
+    let payload = res.expect_err("scope must re-panic when a task panicked");
+    let msg = payload
+        .downcast_ref::<&str>()
+        .copied()
+        .unwrap_or("<non-str panic payload>");
+    assert_eq!(msg, "worker pool task panicked");
+}
+
+#[test]
+fn panicking_task_does_not_deadlock_siblings_or_later_scopes() {
+    let pool = WorkerPool::new(2);
+    let ran = Arc::new(AtomicUsize::new(0));
+
+    // One poisoned task among healthy siblings: every sibling still runs
+    // to completion and the scope returns (by panicking) rather than
+    // deadlocking its caller-helping waiter.
+    let res = catch_unwind(AssertUnwindSafe(|| {
+        pool.scope(|s| {
+            for _ in 0..4 {
+                let ran = Arc::clone(&ran);
+                s.spawn(move || {
+                    ran.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            s.spawn(|| panic!("poisoned sibling"));
+        });
+    }));
+    assert!(res.is_err(), "scope must propagate the sibling's panic");
+    assert_eq!(ran.load(Ordering::SeqCst), 4, "healthy siblings must still run");
+
+    // The workers survive the caught panic: a later scope on the same
+    // pool completes normally and returns its value.
+    let total = pool.scope(|s| {
+        for _ in 0..8 {
+            let ran = Arc::clone(&ran);
+            s.spawn(move || {
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        7usize
+    });
+    assert_eq!(total, 7);
+    assert_eq!(ran.load(Ordering::SeqCst), 12);
+}

@@ -1,0 +1,652 @@
+//! The repo-invariant lint pass behind `cargo xtask lint`.
+//!
+//! Three rules over `rust/src` (see DESIGN.md "Concurrency model &
+//! verification" for the rationale and the full allowlists):
+//!
+//! * **R1 `unsafe-allowlist`** — every `unsafe` keyword must sit in an
+//!   allowlisted file ([`UNSAFE_ALLOWLIST`]) and carry a `// SAFETY:`
+//!   comment within the preceding [`SAFETY_WINDOW`] lines.
+//! * **R2 `bare-cast`** — no bare `as` numeric casts in the datapath
+//!   modules ([`DATAPATH_DIRS`]): narrowing must go through
+//!   `try_from(..).expect(..)`; deliberate casts (widening, float
+//!   statistics) are annotated in place with `// as-ok: <reason>`.
+//! * **R3 `alloc-in-into`** — no allocating calls ([`ALLOC_PATTERNS`])
+//!   inside `*_into` hot-path functions, enforcing the zero-alloc
+//!   steady-state statically; unavoidable sites (e.g. lifetime-bound
+//!   dispatch scaffolding) are annotated with `// alloc-ok: <reason>`.
+//!
+//! `syn` is unavailable offline, so the scanner is hand-rolled: source is
+//! masked (comments, strings, char literals blanked, geometry preserved)
+//! and then tokenized; `#[cfg(test)]`-gated items are excluded by brace
+//! matching on the masked text. Markers (`as-ok:` / `alloc-ok:` /
+//! `SAFETY:`) are looked up on the *raw* lines, since masking erases them.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Files allowed to contain `unsafe` (repo-relative, forward slashes).
+/// Today: only the pool's lifetime-erasing transmute, whose protocol is
+/// loom- and Miri-checked (`rust/tests/loom_sync.rs`, `rust/tests/miri_lane.rs`).
+pub const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/accel/workers.rs"];
+
+/// How many lines above an `unsafe` the `// SAFETY:` comment may sit.
+pub const SAFETY_WINDOW: usize = 12;
+
+/// Datapath directories where bare `as` numeric casts are forbidden (R2).
+pub const DATAPATH_DIRS: &[&str] = &["rust/src/units/", "rust/src/spike/", "rust/src/accel/"];
+
+/// Numeric primitive types that make an `as` cast a lint target.
+const NUMERIC_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+    "f32", "f64",
+];
+
+/// Substrings that count as allocation inside a `*_into` function (R3).
+pub const ALLOC_PATTERNS: &[&str] =
+    &["Vec::new", "vec!", "Box::new", ".to_vec", ".collect", "with_capacity"];
+
+/// One lint finding, printed as `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Stable rule identifier (`unsafe-allowlist`, `bare-cast`, `alloc-in-into`).
+    pub rule: &'static str,
+    /// Human-readable description of the finding.
+    pub message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank out comments, string/char literals (geometry preserved: every
+/// `\n` survives, everything masked becomes a space). Lifetimes keep their
+/// tick so generic code stays tokenizable.
+fn mask_source(src: &str) -> String {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out: Vec<char> = Vec::with_capacity(chars.len());
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            while i < chars.len() && chars[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        if c == '/' && chars.get(i + 1) == Some(&'*') {
+            let mut depth = 1usize;
+            out.push(' ');
+            out.push(' ');
+            i += 2;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else {
+                    out.push(blank(chars[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw (and raw byte) strings: r"..", r#".."#, br".." ...
+        if (c == 'r' || c == 'b') && (i == 0 || !is_ident_char(chars[i - 1])) {
+            let mut j = i;
+            if chars[j] == 'b' && chars.get(j + 1) == Some(&'r') {
+                j += 1;
+            }
+            if chars[j] == 'r' {
+                let mut k = j + 1;
+                let mut hashes = 0usize;
+                while chars.get(k) == Some(&'#') {
+                    hashes += 1;
+                    k += 1;
+                }
+                if chars.get(k) == Some(&'"') {
+                    for idx in i..=k {
+                        out.push(blank(chars[idx]));
+                    }
+                    i = k + 1;
+                    while i < chars.len() {
+                        if chars[i] == '"'
+                            && (0..hashes).all(|h| chars.get(i + 1 + h) == Some(&'#'))
+                        {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            i += 1 + hashes;
+                            break;
+                        }
+                        out.push(blank(chars[i]));
+                        i += 1;
+                    }
+                    continue;
+                }
+            }
+        }
+        // Byte strings: the `b` masks, the quote path below handles the rest.
+        if c == 'b' && chars.get(i + 1) == Some(&'"') && (i == 0 || !is_ident_char(chars[i - 1]))
+        {
+            out.push(' ');
+            i += 1;
+            mask_str_literal(&chars, &mut i, &mut out);
+            continue;
+        }
+        if c == '"' {
+            mask_str_literal(&chars, &mut i, &mut out);
+            continue;
+        }
+        if c == '\'' {
+            if chars.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: '\n', '\'', '\u{..}'.
+                out.push(' ');
+                out.push(' ');
+                i += 2;
+                while i < chars.len() {
+                    if chars[i] == '\\' {
+                        out.push(' ');
+                        i += 1;
+                        if i < chars.len() {
+                            out.push(blank(chars[i]));
+                            i += 1;
+                        }
+                    } else if chars[i] == '\'' {
+                        out.push(' ');
+                        i += 1;
+                        break;
+                    } else {
+                        out.push(blank(chars[i]));
+                        i += 1;
+                    }
+                }
+            } else if chars.get(i + 2) == Some(&'\'') {
+                // Plain char literal 'x'.
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+            } else {
+                // Lifetime tick.
+                out.push('\'');
+                i += 1;
+            }
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out.into_iter().collect()
+}
+
+/// Mask a `"`-delimited string literal starting at `chars[*i] == '"'`.
+fn mask_str_literal(chars: &[char], i: &mut usize, out: &mut Vec<char>) {
+    out.push(' ');
+    *i += 1;
+    while *i < chars.len() {
+        let c = chars[*i];
+        if c == '\\' {
+            out.push(' ');
+            *i += 1;
+            if *i < chars.len() {
+                out.push(if chars[*i] == '\n' { '\n' } else { ' ' });
+                *i += 1;
+            }
+        } else if c == '"' {
+            out.push(' ');
+            *i += 1;
+            return;
+        } else {
+            out.push(if c == '\n' { '\n' } else { ' ' });
+            *i += 1;
+        }
+    }
+}
+
+/// A code token of the masked source: an identifier/keyword or one
+/// punctuation character, with its 1-based line.
+#[derive(Debug)]
+struct Tok {
+    text: String,
+    line: usize,
+}
+
+fn tokenize(masked: &str) -> Vec<Tok> {
+    let mut toks = Vec::new();
+    let mut line = 1usize;
+    let mut chars = masked.chars().peekable();
+    while let Some(c) = chars.next() {
+        if c == '\n' {
+            line += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            continue;
+        }
+        if is_ident_char(c) {
+            let mut text = String::new();
+            text.push(c);
+            while let Some(&n) = chars.peek() {
+                if is_ident_char(n) {
+                    text.push(n);
+                    chars.next();
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { text, line });
+        } else {
+            toks.push(Tok { text: c.to_string(), line });
+        }
+    }
+    toks
+}
+
+/// Lines covered by `#[cfg(test)]`-gated items (1-based, inclusive),
+/// found by brace-matching the masked text. A gated item without braces
+/// (e.g. a `use`) ends at its `;` and excludes nothing beyond itself.
+fn test_excluded_lines(masked: &str, total_lines: usize) -> Vec<bool> {
+    let mut excluded = vec![false; total_lines + 1];
+    let mut flat_line = Vec::new(); // line number per char
+    {
+        let mut line = 1usize;
+        for c in masked.chars() {
+            flat_line.push(line);
+            if c == '\n' {
+                line += 1;
+            }
+        }
+    }
+    let flat: Vec<char> = masked.chars().collect();
+    let needle: Vec<char> = "#[cfg(test)]".chars().collect();
+    let mut i = 0;
+    while i + needle.len() <= flat.len() {
+        if flat[i..i + needle.len()] != needle[..] {
+            i += 1;
+            continue;
+        }
+        let mut j = i + needle.len();
+        // Find the gated item's opening brace; a `;` first means a
+        // brace-less item.
+        let mut depth = 0usize;
+        let mut open = None;
+        while j < flat.len() {
+            match flat[j] {
+                '{' => {
+                    open = Some(j);
+                    break;
+                }
+                ';' => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(open_at) = open {
+            let mut k = open_at;
+            while k < flat.len() {
+                match flat[k] {
+                    '{' => depth += 1,
+                    '}' => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            let (a, b) = (flat_line[i], flat_line[k.min(flat.len() - 1)]);
+            for item in excluded.iter_mut().take(b + 1).skip(a) {
+                *item = true;
+            }
+            i = k;
+        }
+        i += 1;
+    }
+    excluded
+}
+
+/// Does the masked line invoke allocation pattern `pat`? Requires a call
+/// or turbofish right after the match, so `.collect_stats()` is not
+/// `.collect` and `Vec::new_in` is not `Vec::new`.
+fn alloc_hit(code: &str, pat: &str) -> bool {
+    let mut start = 0;
+    while let Some(p) = code[start..].find(pat) {
+        let end = start + p + pat.len();
+        let next = code[end..].chars().next();
+        let hit = match pat {
+            "vec!" => true,
+            ".collect" => matches!(next, Some('(') | Some(':')),
+            _ => matches!(next, Some('(')),
+        };
+        if hit {
+            return true;
+        }
+        start = end;
+    }
+    false
+}
+
+/// Does the raw line carry `marker` followed by a non-empty reason?
+fn has_marker(raw_line: &str, marker: &str) -> bool {
+    raw_line
+        .find(marker)
+        .map(|p| !raw_line[p + marker.len()..].trim().is_empty())
+        .unwrap_or(false)
+}
+
+/// Lint a single file's source. `rel_path` is repo-relative with forward
+/// slashes (rule applicability and allowlists key off it).
+pub fn lint_source(rel_path: &str, src: &str) -> Vec<Violation> {
+    let masked = mask_source(src);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let excluded = test_excluded_lines(&masked, raw_lines.len());
+    let toks = tokenize(&masked);
+    let mut out = Vec::new();
+
+    let is_datapath = DATAPATH_DIRS.iter().any(|d| rel_path.starts_with(d));
+    let unsafe_allowed = UNSAFE_ALLOWLIST.contains(&rel_path);
+    let is_excluded = |line: usize| excluded.get(line).copied().unwrap_or(false);
+
+    // R1: unsafe allowlist + SAFETY comment.
+    for t in toks.iter().filter(|t| t.text == "unsafe" && !is_excluded(t.line)) {
+        if !unsafe_allowed {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: t.line,
+                rule: "unsafe-allowlist",
+                message: "`unsafe` outside the allowlisted files (see xtask UNSAFE_ALLOWLIST)"
+                    .to_string(),
+            });
+            continue;
+        }
+        let lo = t.line.saturating_sub(SAFETY_WINDOW);
+        let documented = (lo..=t.line)
+            .filter_map(|ln| raw_lines.get(ln.wrapping_sub(1)))
+            .any(|l| l.contains("SAFETY:"));
+        if !documented {
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: t.line,
+                rule: "unsafe-allowlist",
+                message: format!(
+                    "`unsafe` without a `// SAFETY:` comment in the preceding {SAFETY_WINDOW} lines"
+                ),
+            });
+        }
+    }
+
+    // R2: bare numeric `as` casts in datapath modules.
+    if is_datapath {
+        for w in toks.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if a.text != "as" || is_excluded(a.line) {
+                continue;
+            }
+            if !NUMERIC_TYPES.contains(&b.text.as_str()) {
+                continue;
+            }
+            let raw = raw_lines.get(a.line - 1).copied().unwrap_or("");
+            if has_marker(raw, "as-ok:") {
+                continue;
+            }
+            out.push(Violation {
+                file: rel_path.to_string(),
+                line: a.line,
+                rule: "bare-cast",
+                message: format!(
+                    "bare `as {}` cast in a datapath module — use `{}::try_from(..)` or \
+                     annotate with `// as-ok: <reason>`",
+                    b.text, b.text
+                ),
+            });
+        }
+    }
+
+    // R3: allocation inside `*_into` functions.
+    let masked_lines: Vec<&str> = masked.lines().collect();
+    let mut idx = 0;
+    while idx + 1 < toks.len() {
+        if toks[idx].text != "fn" || !toks[idx + 1].text.ends_with("_into") {
+            idx += 1;
+            continue;
+        }
+        let fn_name = toks[idx + 1].text.clone();
+        let fn_line = toks[idx + 1].line;
+        // Find the body's opening brace (a `;` first = trait signature).
+        let mut j = idx + 2;
+        let mut open = None;
+        while j < toks.len() {
+            match toks[j].text.as_str() {
+                "{" => {
+                    open = Some(j);
+                    break;
+                }
+                ";" => break,
+                _ => j += 1,
+            }
+        }
+        let Some(open_at) = open else {
+            idx += 2;
+            continue;
+        };
+        let mut depth = 0usize;
+        let mut close_at = open_at;
+        for (k, t) in toks.iter().enumerate().skip(open_at) {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        close_at = k;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let (body_start, body_end) = (toks[open_at].line, toks[close_at].line);
+        if !is_excluded(fn_line) {
+            for ln in body_start..=body_end {
+                let code = masked_lines.get(ln - 1).copied().unwrap_or("");
+                let raw = raw_lines.get(ln - 1).copied().unwrap_or("");
+                for pat in ALLOC_PATTERNS {
+                    if alloc_hit(code, pat) && !has_marker(raw, "alloc-ok:") {
+                        out.push(Violation {
+                            file: rel_path.to_string(),
+                            line: ln,
+                            rule: "alloc-in-into",
+                            message: format!(
+                                "`{pat}` allocates inside hot-path fn `{fn_name}` — route \
+                                 through ExecScratch or annotate with `// alloc-ok: <reason>`"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        idx = close_at.max(idx + 1);
+    }
+
+    out.sort_by(|x, y| (x.line, x.rule).cmp(&(y.line, y.rule)));
+    out
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted for stable output).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries = std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `<root>/rust/src`. Returns `(files_scanned,
+/// violations)`.
+pub fn lint_tree(root: &Path) -> std::io::Result<(usize, Vec<Violation>)> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)?;
+    let mut all = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(root)
+            .unwrap_or(f)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(f)?;
+        all.extend(lint_source(&rel, &src));
+    }
+    Ok((files.len(), all))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(v: &[Violation]) -> Vec<&'static str> {
+        v.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_outside_allowlist_fires() {
+        let src = "fn f() { unsafe { core::hint::unreachable_unchecked() } }\n";
+        let v = lint_source("rust/src/units/foo.rs", src);
+        assert_eq!(rules(&v), ["unsafe-allowlist"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn unsafe_in_allowlisted_file_needs_safety_comment() {
+        let bare = "fn f() {\n    unsafe { danger() }\n}\n";
+        let v = lint_source("rust/src/accel/workers.rs", bare);
+        assert_eq!(rules(&v), ["unsafe-allowlist"], "missing SAFETY comment must fire");
+        let ok = "fn f() {\n    // SAFETY: scope joins every task first.\n    unsafe { danger() }\n}\n";
+        assert!(lint_source("rust/src/accel/workers.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_window_is_bounded() {
+        let far = format!(
+            "fn f() {{\n    // SAFETY: too far away.\n{}    unsafe {{ danger() }}\n}}\n",
+            "    let x = 1;\n".repeat(SAFETY_WINDOW)
+        );
+        let v = lint_source("rust/src/accel/workers.rs", &far);
+        assert_eq!(rules(&v), ["unsafe-allowlist"]);
+    }
+
+    #[test]
+    fn bare_numeric_cast_fires_in_datapath_only() {
+        let src = "fn f(x: usize) -> u16 { x as u16 }\n";
+        let v = lint_source("rust/src/spike/foo.rs", src);
+        assert_eq!(rules(&v), ["bare-cast"]);
+        assert!(v[0].message.contains("as u16"), "{}", v[0].message);
+        // Same source outside the datapath dirs: clean.
+        assert!(lint_source("rust/src/io/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn as_ok_marker_requires_a_reason() {
+        let with_reason = "fn f(x: u16) -> usize { x as usize } // as-ok: u16 -> usize widening\n";
+        assert!(lint_source("rust/src/units/foo.rs", with_reason).is_empty());
+        let empty_reason = "fn f(x: u16) -> usize { x as usize } // as-ok:\n";
+        assert_eq!(rules(&lint_source("rust/src/units/foo.rs", empty_reason)), ["bare-cast"]);
+    }
+
+    #[test]
+    fn non_numeric_as_is_not_a_cast() {
+        let src = "use std::fmt as f;\nfn g(d: &dyn std::any::Any) { let _ = d as &dyn std::any::Any; }\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn casts_in_cfg_test_modules_are_exempt() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g(x: usize) -> u8 { x as u8 }\n}\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn casts_in_strings_and_comments_are_masked() {
+        let src = "fn f() -> &'static str {\n    // looks like x as u16 but is a comment\n    \"y as u32\"\n}\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_in_into_fn_fires() {
+        let src = "fn run_into(out: &mut Vec<u32>) {\n    let v: Vec<u32> = Vec::new();\n    out.extend(v);\n}\n";
+        let v = lint_source("rust/src/units/foo.rs", src);
+        assert_eq!(rules(&v), ["alloc-in-into"]);
+        assert!(v[0].message.contains("run_into"), "{}", v[0].message);
+    }
+
+    #[test]
+    fn alloc_ok_marker_suppresses_with_reason() {
+        let src = "fn run_into(out: &mut Vec<u32>) {\n    let v: Vec<u32> = Vec::new(); // alloc-ok: lifetime-bound scaffolding\n    out.extend(v);\n}\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn alloc_outside_into_fn_is_fine() {
+        let src = "fn build() -> Vec<u32> {\n    let mut v = Vec::new();\n    v.collect_stats();\n    v\n}\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn every_alloc_pattern_is_detected() {
+        for pat in ["Vec::new()", "vec![0; 4]", "Box::new(x)", "y.to_vec()", "it.collect()", "Vec::with_capacity(4)"] {
+            let src = format!("fn f_into(x: u32) {{\n    let _ = {pat};\n}}\n");
+            let v = lint_source("rust/src/accel/foo.rs", &src);
+            assert_eq!(rules(&v), ["alloc-in-into"], "pattern `{pat}` must fire");
+        }
+    }
+
+    #[test]
+    fn lookalike_method_names_do_not_fire() {
+        let src = "fn f_into(v: &mut V) {\n    v.collect_stats();\n    v.fill_with_capacity_hint();\n}\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_mask_cleanly() {
+        let src = "fn f() {\n    let _ = r#\"a as u8 \"#;\n    let _ = 'x';\n    let _: Option<&'static str> = None;\n}\n";
+        assert!(lint_source("rust/src/units/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn display_format_is_stable() {
+        let v = Violation {
+            file: "rust/src/x.rs".into(),
+            line: 3,
+            rule: "bare-cast",
+            message: "msg".into(),
+        };
+        assert_eq!(v.to_string(), "rust/src/x.rs:3: [bare-cast] msg");
+    }
+}

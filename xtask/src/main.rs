@@ -1,0 +1,79 @@
+//! `cargo xtask` — repo automation. One command today:
+//!
+//! ```text
+//! cargo xtask lint [--root <repo-root>]
+//! ```
+//!
+//! runs the repo-invariant static pass over `rust/src` (see `lint.rs` for
+//! the rules) and exits non-zero when any invariant is violated. The repo
+//! root defaults to the workspace root (this crate's parent directory).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+mod lint;
+
+fn default_root() -> PathBuf {
+    // xtask lives at <repo>/xtask, so the manifest dir's parent is the root.
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().map(PathBuf::from).unwrap_or(manifest)
+}
+
+fn usage() {
+    eprintln!("usage: cargo xtask lint [--root <repo-root>]");
+}
+
+fn run_lint(args: &[String]) -> ExitCode {
+    let mut root = default_root();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("--root requires a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("unknown lint option `{other}`");
+                usage();
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    match lint::lint_tree(&root) {
+        Ok((files, violations)) => {
+            for v in &violations {
+                println!("{v}");
+            }
+            if violations.is_empty() {
+                println!("xtask lint: {files} files scanned, 0 violations");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("xtask lint: {files} files scanned, {} violations", violations.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask lint: cannot scan {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => run_lint(&args[1..]),
+        Some("help") | Some("--help") | None => {
+            usage();
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("unknown xtask command `{other}`");
+            usage();
+            ExitCode::FAILURE
+        }
+    }
+}
