@@ -5,17 +5,24 @@
 //! This is the unit-level version of the paper's redundancy-elimination
 //! claim.
 //!
+//! The density-sweep **crossover** case compares the CSR engine against
+//! the packed-`u64` bitmap engine (modelled cycles, both executed paths)
+//! and reports the density where the word engine starts winning — the
+//! calibration behind `EngineSelect::Adaptive`'s default threshold.
+//!
 //! ```bash
 //! cargo bench --bench units_micro              # full sweep
 //! cargo bench --bench units_micro -- --quick   # CI smoke mode
 //! cargo bench --bench units_micro -- --json    # also write BENCH_encoding.json
 //! ```
 
+use spikeformer_accel::accel::Mapper;
 use spikeformer_accel::benchlib::{bench, black_box, section, BenchResult};
-use spikeformer_accel::hw::{AccelConfig, UnitStats};
+use spikeformer_accel::hw::{AccelConfig, EngineSelect, UnitStats, DEFAULT_ADAPTIVE_THRESHOLD};
 use spikeformer_accel::model::SdtModelConfig;
 use spikeformer_accel::quant::QuantizedLinear;
-use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix, TokenGrid};
+use spikeformer_accel::scratch::ExecScratch;
+use spikeformer_accel::spike::{EncodedSpikes, PackedBitmap, SpikeMatrix, TokenGrid};
 use spikeformer_accel::units::{SpikeLinearUnit, SpikeMaskAddModule, SpikeMaxpoolUnit};
 use spikeformer_accel::util::{div_ceil, Prng};
 
@@ -213,6 +220,134 @@ fn write_json(case: &EncodeSdsaCase) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Dual-engine crossover: modelled cycles of the CSR address-stream engine
+// vs the packed-u64 bitmap engine across a density sweep, for the SLU and
+// the SMAM. Deterministic (cycle model, not wall time); the reported
+// crossover calibrates `EngineSelect::Adaptive`'s default threshold.
+// ---------------------------------------------------------------------------
+
+struct CrossoverRow {
+    density: f64,
+    slu_csr: u64,
+    slu_bitmap: u64,
+    smam_csr: u64,
+    smam_bitmap: u64,
+}
+
+/// First swept density at which the bitmap engine's cycles stop exceeding
+/// the CSR engine's (None: the word engine never wins in this sweep).
+fn first_win(rows: &[CrossoverRow], f: impl Fn(&CrossoverRow) -> (u64, u64)) -> Option<f64> {
+    rows.iter().find(|r| {
+        let (csr, bitmap) = f(r);
+        bitmap <= csr
+    }).map(|r| r.density)
+}
+
+fn crossover_case(quick: bool) -> Vec<CrossoverRow> {
+    let model_cfg = SdtModelConfig::paper();
+    let (c, l) = (model_cfg.embed_dim, model_cfg.num_tokens());
+    let mut csr_cfg = AccelConfig::paper();
+    csr_cfg.engine = EngineSelect::Csr;
+    let mut bm_cfg = AccelConfig::paper();
+    bm_cfg.engine = EngineSelect::Bitmap;
+    let densities: &[f64] = if quick {
+        &[0.005, 0.02, 0.1]
+    } else {
+        &[0.001, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5]
+    };
+
+    section(&format!(
+        "dual-engine crossover: CSR vs packed-u64 bitmap ({c}ch, {l} tok, paper config)"
+    ));
+    let wf: Vec<f32> = {
+        let mut wrng = Prng::new(31);
+        (0..c * c).map(|_| wrng.next_f32_signed() * 0.1).collect()
+    };
+    let layer = QuantizedLinear::from_f32(&wf, &vec![0.0; c], c, c, 0);
+    let smam = SpikeMaskAddModule::new(model_cfg.attn_v_th);
+    let serial = Mapper::serial();
+    let mut scratch = ExecScratch::new();
+    let mut rng = Prng::new(29);
+
+    println!(
+        "{:<12}{:>14}{:>14}{:>14}{:>14}",
+        "density", "slu csr", "slu bitmap", "smam csr", "smam bitmap"
+    );
+    let mut rows = Vec::new();
+    for &d in densities {
+        let x = random_bitmap(&mut rng, c, l, d);
+        let enc = EncodedSpikes::from_bitmap(&x);
+        let packed = PackedBitmap::from_encoded(&enc);
+        let mut slu = SpikeLinearUnit::new();
+        let (_, s_csr) = slu.forward(&enc, &layer, &csr_cfg);
+        let mut slu = SpikeLinearUnit::new();
+        let (_, s_bm) = slu.forward_bitmap(&packed, &layer, &csr_cfg);
+
+        let q = random_encoded(&mut rng, c, l, d);
+        let k = random_encoded(&mut rng, c, l, d);
+        let v = random_encoded(&mut rng, c, l, d);
+        let (_, m_csr) = smam.run_mapped_into(&q, &k, &v, &csr_cfg, &serial, 0, None, &mut scratch);
+        let (_, m_bm) = smam.run_mapped_into(&q, &k, &v, &bm_cfg, &serial, 0, None, &mut scratch);
+
+        println!(
+            "{:<12.3}{:>14}{:>14}{:>14}{:>14}",
+            d, s_csr.cycles, s_bm.cycles, m_csr.cycles, m_bm.cycles
+        );
+        rows.push(CrossoverRow {
+            density: d,
+            slu_csr: s_csr.cycles,
+            slu_bitmap: s_bm.cycles,
+            smam_csr: m_csr.cycles,
+            smam_bitmap: m_bm.cycles,
+        });
+    }
+    let slu_x = first_win(&rows, |r| (r.slu_csr, r.slu_bitmap));
+    let smam_x = first_win(&rows, |r| (r.smam_csr, r.smam_bitmap));
+    println!(
+        "  -> bitmap engine wins from density {} (SLU) / {} (SMAM); default adaptive threshold {DEFAULT_ADAPTIVE_THRESHOLD}",
+        slu_x.map_or("never".into(), |d| format!("{d}")),
+        smam_x.map_or("never".into(), |d| format!("{d}")),
+    );
+    rows
+}
+
+fn write_crossover_json(rows: &[CrossoverRow], channels: usize, tokens: usize) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_encoding.json");
+    let fmt_x = |x: Option<f64>| x.map_or("null".to_string(), |d| format!("{d}"));
+    let mut entry = String::from("{\n");
+    entry.push_str(&format!(
+        "    \"config\": {{\"channels\": {channels}, \"tokens\": {tokens}, \"accel\": \"paper\"}},\n"
+    ));
+    entry.push_str("    \"units\": \"modelled cycles per call (deterministic)\",\n");
+    entry.push_str(&format!(
+        "    \"default_adaptive_threshold\": {DEFAULT_ADAPTIVE_THRESHOLD},\n"
+    ));
+    entry.push_str("    \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        entry.push_str(&format!(
+            "      {{\"density\": {}, \"slu_csr_cycles\": {}, \"slu_bitmap_cycles\": {}, \"smam_csr_cycles\": {}, \"smam_bitmap_cycles\": {}}}{}\n",
+            r.density,
+            r.slu_csr,
+            r.slu_bitmap,
+            r.smam_csr,
+            r.smam_bitmap,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    entry.push_str("    ],\n");
+    entry.push_str(&format!(
+        "    \"bitmap_wins_from_density\": {{\"slu\": {}, \"smam\": {}}}\n",
+        fmt_x(first_win(rows, |r| (r.slu_csr, r.slu_bitmap))),
+        fmt_x(first_win(rows, |r| (r.smam_csr, r.smam_bitmap))),
+    ));
+    entry.push_str("  }");
+    match spikeformer_accel::benchlib::merge_bench_json(path, "crossover", &entry) {
+        Ok(()) => println!("wrote {path} (section \"crossover\")"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -287,10 +422,15 @@ fn main() {
         );
     }
 
+    // The dual-engine density sweep (adaptive-threshold calibration).
+    let model_cfg = SdtModelConfig::paper();
+    let rows = crossover_case(quick);
+
     // The CSR-vs-legacy before/after case (perf trajectory anchor).
     let case = encode_sdsa_case(quick);
     if json {
         write_json(&case);
+        write_crossover_json(&rows, model_cfg.embed_dim, model_cfg.num_tokens());
     }
 
     if quick {

@@ -309,6 +309,38 @@ mod tests {
     }
 
     #[test]
+    fn lpt_head_ties_break_toward_lower_head_index() {
+        let m = mapper(4, 2, MappingPolicy::LoadBalanced);
+        let mut assign = Vec::new();
+        // Heads 1 and 2 tie at the top weight. Placement order must be
+        // h1 (first of the tie) -> core 0, h2 -> core 1, then h0 (7) onto
+        // the core-load tie {9, 9} -> core 0, then h3 -> core 1.
+        m.assign_heads_into(0, 4, 2, &[7, 9, 9, 1], &mut assign);
+        assert_eq!(assign, vec![0, 0, 1, 1]);
+    }
+
+    #[test]
+    fn lpt_core_ties_break_toward_lower_core_index() {
+        let m = mapper(2, 3, MappingPolicy::LoadBalanced);
+        let mut assign = Vec::new();
+        // All three cores start tied at zero load: the heaviest head must
+        // land on core 0, the next on core 1; core 2 stays empty.
+        m.assign_heads_into(0, 2, 3, &[5, 3], &mut assign);
+        assert_eq!(assign, vec![0, 1]);
+    }
+
+    #[test]
+    fn lpt_short_load_slice_defaults_missing_heads_to_unit_load() {
+        let m = mapper(3, 2, MappingPolicy::LoadBalanced);
+        let mut assign = Vec::new();
+        // Only head 0 has a measured load; heads 1 and 2 default to 1 and
+        // tie-break by head index: h0(10) -> core 0, h1 -> core 1, h2 ->
+        // core 1 (1 < 10).
+        m.assign_heads_into(0, 3, 2, &[10], &mut assign);
+        assert_eq!(assign, vec![0, 1, 1]);
+    }
+
+    #[test]
     fn every_policy_covers_all_work_units_exactly_once() {
         for policy in MappingPolicy::ALL {
             for (heads, cores, blocks, timesteps) in

@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::hw::{AccelConfig, UnitStats};
+use crate::hw::{AccelConfig, EngineKind, UnitStats};
 use crate::lif::LifParams;
 use crate::quant::QTensor;
 use crate::scratch::ExecScratch;
@@ -97,7 +97,24 @@ impl SdebCore {
         scratch: &mut ExecScratch,
     ) -> (QTensor, UnitStats) {
         match mode {
-            DatapathMode::Encoded => self.slu.forward_into(x, layer, cfg, scratch),
+            // Encoded mode is the dual-engine dispatch point: the
+            // `cfg.engine` policy reads this tensor's measured density
+            // (per block and timestep) and picks CSR address streaming
+            // or the word-parallel bitmap kernel — values bit-identical,
+            // stats charging whichever engine ran.
+            DatapathMode::Encoded => match cfg.engine.pick(x.density()) {
+                EngineKind::Csr => self.slu.forward_into(x, layer, cfg, scratch),
+                EngineKind::Bitmap => {
+                    let mut bm = scratch.take_bitmap(x.channels, x.tokens);
+                    bm.fill_from_encoded(x);
+                    let out = self.slu.forward_bitmap_into(&bm, layer, cfg, scratch);
+                    scratch.put_bitmap(bm);
+                    out
+                }
+            },
+            // The A1 scalar ablation overrides engine selection: it
+            // models the no-position-encoding baseline, not the word
+            // engine.
             DatapathMode::Bitmap => self.slu.forward_bitmap_baseline_into(x, layer, cfg, scratch),
         }
     }
@@ -295,6 +312,46 @@ mod tests {
             .run_timestep(&model.blocks[0], u, &hw, DatapathMode::Bitmap, 0, None, None, b2.sdeb_for(0), &mut s2, &mut sc2)
             .unwrap();
         assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn engine_select_never_changes_block_values() {
+        use crate::hw::EngineSelect;
+        let (model, u, hw) = setup();
+        let mc = &model.cfg;
+        let run = |engine: EngineSelect| {
+            let mut hw = hw.clone();
+            hw.engine = engine;
+            let mut core =
+                SdebCore::new(0, 64, 64, mc.mlp_hidden, mc.attn_v_th, mc.lif_params());
+            let mut buffers = BufferSet::new(&hw);
+            let mut sink = StatSink::new();
+            let mut scratch = ExecScratch::new();
+            let out = core
+                .run_timestep(
+                    &model.blocks[0],
+                    u.clone(),
+                    &hw,
+                    DatapathMode::Encoded,
+                    0,
+                    None,
+                    None,
+                    buffers.sdeb_for(0),
+                    &mut sink,
+                    &mut scratch,
+                )
+                .unwrap();
+            (out, sink.phases.get("sdeb.qkv").cycles)
+        };
+        let (csr, csr_cycles) = run(EngineSelect::Csr);
+        let (bitmap, bitmap_cycles) = run(EngineSelect::Bitmap);
+        let (adaptive, _) = run(EngineSelect::adaptive());
+        assert_eq!(csr, bitmap, "bitmap engine must be bit-identical");
+        assert_eq!(csr, adaptive, "adaptive engine must be bit-identical");
+        assert_ne!(
+            csr_cycles, bitmap_cycles,
+            "the two engines should charge different QKV cycle counts on this shape"
+        );
     }
 
     #[test]

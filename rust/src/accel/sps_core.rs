@@ -4,7 +4,7 @@
 
 use anyhow::Result;
 
-use crate::hw::AccelConfig;
+use crate::hw::{AccelConfig, EngineKind};
 use crate::lif::LifParams;
 use crate::quant::{QTensor, ACT_FRAC};
 use crate::scratch::ExecScratch;
@@ -92,7 +92,19 @@ impl SpsCore {
             if i == 1 || i == 3 {
                 let grid = TokenGrid::new(side, side);
                 let (pooled, mp_stats) = match mode {
-                    DatapathMode::Encoded => self.smu.pool_into(&enc, grid, cfg, scratch),
+                    // Encoded mode picks the maxpool engine from this
+                    // stage's measured density: CSR address merging or
+                    // word-gather pooling over the packed bitmap.
+                    DatapathMode::Encoded => match cfg.engine.pick(enc.density()) {
+                        EngineKind::Csr => self.smu.pool_into(&enc, grid, cfg, scratch),
+                        EngineKind::Bitmap => {
+                            let mut bm = scratch.take_bitmap(enc.channels, enc.tokens);
+                            bm.fill_from_encoded(&enc);
+                            let out = self.smu.pool_bitmap_into(&bm, grid, cfg, scratch);
+                            scratch.put_bitmap(bm);
+                            out
+                        }
+                    },
                     DatapathMode::Bitmap => {
                         self.smu.pool_dense_baseline_into(&enc, grid, cfg, scratch)
                     }
@@ -209,6 +221,38 @@ mod tests {
             .unwrap();
         assert_eq!(u1, u2, "datapath modes must agree on values");
         assert!(s2.phases.get("sps.maxpool").cycles >= s1.phases.get("sps.maxpool").cycles);
+    }
+
+    #[test]
+    fn maxpool_engines_agree_on_values() {
+        use crate::hw::EngineSelect;
+        let (model, img) = setup();
+        let run = |engine: EngineSelect| {
+            let mut hw = AccelConfig::small();
+            hw.engine = engine;
+            let mut core = SpsCore::new(&model, model.cfg.lif_params());
+            let mut buffers = BufferSet::new(&hw);
+            let mut sink = StatSink::new();
+            let mut scratch = ExecScratch::new();
+            core.run_timestep(
+                &model,
+                &img,
+                &hw,
+                DatapathMode::Encoded,
+                0,
+                &mut buffers.sps,
+                &mut sink,
+                &mut scratch,
+            )
+            .unwrap()
+        };
+        let (u_csr, e_csr) = run(EngineSelect::Csr);
+        let (u_bm, e_bm) = run(EngineSelect::Bitmap);
+        let (u_ad, e_ad) = run(EngineSelect::adaptive());
+        assert_eq!(u_csr, u_bm, "bitmap maxpool must be bit-identical");
+        assert_eq!(e_csr, e_bm);
+        assert_eq!(u_csr, u_ad, "adaptive maxpool must be bit-identical");
+        assert_eq!(e_csr, e_ad);
     }
 
     #[test]

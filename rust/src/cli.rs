@@ -88,6 +88,11 @@ COMMANDS:
              --dram-bw N     external-memory bus bytes/cycle (default 16,
                              the paper's interface; `max` = unlimited —
                              weight streaming can never stall)
+             --engine E      spike datapath engine: csr | bitmap |
+                             adaptive (per-tensor density pick; values are
+                             bit-identical across engines)
+             --engine-threshold X   adaptive crossover density in [0,1]
+                             (implies --engine adaptive; default 0.02)
              --serial        charge phases serially instead of executing
                              the overlapped core pipeline (ablation; no
                              memory lane)
@@ -101,6 +106,7 @@ COMMANDS:
              --pool-workers N   per-simulator SDEB worker pool size
              --sdeb-cores N --mapping P   topology/mapping of sim workers
              --dram-bw N     sim workers' bus bytes/cycle (or `max`)
+             --engine E --engine-threshold X   sim workers' spike engine
              --serial        serial-charging simulator workers (ablation)
   sweep      lane-count x SDEB-core-count parallelism sweep (ablation A2)
   help       this message

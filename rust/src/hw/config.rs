@@ -12,6 +12,121 @@
 
 use anyhow::{bail, Result};
 
+/// Which of the two datapath engines executed a work unit — the value an
+/// [`EngineSelect`] policy resolves to once a density measurement is in
+/// hand. Every spike-consuming unit kernel (SLU/SMU/SMAM) has one
+/// implementation per kind, bit-identical in values and differing only
+/// in `UnitStats` cost accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// Address-streaming CSR engine: scalar loops over encoded `u16`
+    /// spike addresses (the paper's position-encoded datapath).
+    #[default]
+    Csr,
+    /// Word-parallel packed-`u64` bitmap engine: AND/popcount/
+    /// trailing-zeros scans over [`PackedBitmap`](crate::spike::PackedBitmap)
+    /// rows (the FireFly-T-style dense engine).
+    Bitmap,
+}
+
+impl EngineKind {
+    /// Short display name (bench tables, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Csr => "csr",
+            EngineKind::Bitmap => "bitmap",
+        }
+    }
+}
+
+/// Engine-selection policy of the dual-engine datapath (DESIGN.md
+/// "Dual-engine datapath & selection"): decides per (block, head,
+/// timestep) work unit whether the CSR or the packed-bitmap engine runs,
+/// from the measured spike density of that unit's inputs.
+///
+/// The adaptive crossover threshold is calibrated by the `units_micro`
+/// density sweep (`BENCH_encoding.json`, key `crossover`): below it the
+/// CSR merge-join touches fewer positions than the `ceil(L/64)`
+/// words-per-row floor of the bitmap engine; above it word-parallelism
+/// wins.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum EngineSelect {
+    /// Always the CSR address-streaming engine (the paper's datapath;
+    /// the default, and bit-identical to every pre-dual-engine release).
+    #[default]
+    Csr,
+    /// Always the packed-bitmap engine.
+    Bitmap,
+    /// Pick per work unit: bitmap when measured input density >=
+    /// `threshold`, CSR otherwise. The comparison is written so a NaN
+    /// density (impossible by construction — `density()` is total) would
+    /// still fall through to CSR.
+    Adaptive {
+        /// Spike-density crossover in `[0, 1]` (validated).
+        threshold: f64,
+    },
+}
+
+impl EngineSelect {
+    /// Default adaptive crossover density. First-principles estimate from
+    /// the cycle model at the paper point (L = 64 tokens, one word per
+    /// bitmap row): the SMAM merge-join charges `|Q|+|K| ~ 2·d·L`
+    /// comparator steps per channel vs the bitmap engine's 1 word op, so
+    /// the curves cross near `d = 1/(2L) · 64/64 ≈ 0.008`; the SLU's
+    /// word-scan overhead pushes the blended crossover up. Calibrated
+    /// empirically by `cargo bench --bench units_micro -- --json`
+    /// (`BENCH_encoding.json`, key `crossover`).
+    pub const DEFAULT_ADAPTIVE_THRESHOLD: f64 = 0.02;
+
+    /// The adaptive policy at the default calibrated threshold.
+    pub fn adaptive() -> Self {
+        EngineSelect::Adaptive { threshold: Self::DEFAULT_ADAPTIVE_THRESHOLD }
+    }
+
+    /// Resolve the policy for one work unit whose inputs have the given
+    /// measured spike density. Total: every input (including 0.0 from
+    /// empty tensors, and even a hypothetical NaN) yields an engine.
+    pub fn pick(&self, density: f64) -> EngineKind {
+        match *self {
+            EngineSelect::Csr => EngineKind::Csr,
+            EngineSelect::Bitmap => EngineKind::Bitmap,
+            EngineSelect::Adaptive { threshold } => {
+                if density >= threshold {
+                    EngineKind::Bitmap
+                } else {
+                    EngineKind::Csr
+                }
+            }
+        }
+    }
+
+    /// Short display name (CLI echo, bench tables).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineSelect::Csr => "csr",
+            EngineSelect::Bitmap => "bitmap",
+            EngineSelect::Adaptive { .. } => "adaptive",
+        }
+    }
+}
+
+impl std::str::FromStr for EngineSelect {
+    type Err = String;
+
+    /// Parse the `--engine` CLI value: `csr`, `bitmap`, or `adaptive`
+    /// (at the default threshold; `--engine-threshold` overrides it).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "csr" => Ok(EngineSelect::Csr),
+            "bitmap" => Ok(EngineSelect::Bitmap),
+            "adaptive" => Ok(EngineSelect::adaptive()),
+            other => Err(format!(
+                "unknown engine '{other}' (expected csr|bitmap|adaptive)"
+            )),
+        }
+    }
+}
+
 /// How the SMAM comparator fabric maps onto the SDEB cores.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum FabricPartition {
@@ -162,6 +277,12 @@ pub struct AccelConfig {
     pub weight_slots: usize,
     /// Core counts and pipeline shape (Fig. 1 generalized).
     pub topology: CoreTopology,
+    /// Engine-selection policy of the dual-engine spike datapath (the
+    /// `--engine` CLI axis). [`EngineSelect::Csr`] reproduces the
+    /// paper's address-streaming datapath bit- and cycle-exactly; the
+    /// other policies swap in the packed-bitmap engine per work unit
+    /// with bit-identical values and engine-specific cycle accounting.
+    pub engine: EngineSelect,
 }
 
 impl AccelConfig {
@@ -192,6 +313,7 @@ impl AccelConfig {
             weight_buffer_words: 2 * 1024 * 1024,
             weight_slots: 2,
             topology: CoreTopology::paper(),
+            engine: EngineSelect::Csr,
         }
     }
 
@@ -209,6 +331,7 @@ impl AccelConfig {
             weight_buffer_words: 512 * 1024,
             weight_slots: 2,
             topology: CoreTopology::paper(),
+            engine: EngineSelect::Csr,
         }
     }
 
@@ -232,6 +355,7 @@ impl AccelConfig {
             weight_buffer_words: p.weight_buffer_words,
             weight_slots: p.weight_slots,
             topology: p.topology,
+            engine: p.engine,
         };
         cfg.validate().expect("scaled AccelConfig invalid");
         cfg
@@ -293,6 +417,15 @@ impl AccelConfig {
         }
         if !(self.freq_mhz > 0.0) {
             bail!("freq_mhz must be positive");
+        }
+        if let EngineSelect::Adaptive { threshold } = self.engine {
+            if !threshold.is_finite() || !(0.0..=1.0).contains(&threshold) {
+                bail!(
+                    "adaptive engine threshold {} must be a finite density \
+                     in [0, 1]",
+                    threshold
+                );
+            }
         }
         if self.topology.partition == FabricPartition::Split
             && self.topology.sdeb_cores > self.smam_comparators
@@ -473,5 +606,48 @@ mod tests {
     #[should_panic(expected = "scaled AccelConfig invalid")]
     fn with_lanes_zero_panics() {
         let _ = AccelConfig::with_lanes(0);
+    }
+
+    #[test]
+    fn engine_select_pick_is_total() {
+        let a = EngineSelect::Adaptive { threshold: 0.1 };
+        assert_eq!(a.pick(0.05), EngineKind::Csr);
+        assert_eq!(a.pick(0.1), EngineKind::Bitmap, "threshold is inclusive");
+        assert_eq!(a.pick(0.9), EngineKind::Bitmap);
+        // The empty-input density (0.0) and even a NaN fall to CSR: the
+        // selector never panics or mis-selects on degenerate density.
+        assert_eq!(a.pick(0.0), EngineKind::Csr);
+        assert_eq!(a.pick(f64::NAN), EngineKind::Csr);
+        assert_eq!(EngineSelect::Csr.pick(1.0), EngineKind::Csr);
+        assert_eq!(EngineSelect::Bitmap.pick(0.0), EngineKind::Bitmap);
+    }
+
+    #[test]
+    fn engine_select_parses_and_defaults() {
+        assert_eq!("csr".parse::<EngineSelect>().unwrap(), EngineSelect::Csr);
+        assert_eq!("bitmap".parse::<EngineSelect>().unwrap(), EngineSelect::Bitmap);
+        assert_eq!(
+            "adaptive".parse::<EngineSelect>().unwrap(),
+            EngineSelect::Adaptive { threshold: EngineSelect::DEFAULT_ADAPTIVE_THRESHOLD }
+        );
+        assert!("simd".parse::<EngineSelect>().is_err());
+        assert_eq!(EngineSelect::default(), EngineSelect::Csr);
+        assert_eq!(AccelConfig::paper().engine, EngineSelect::Csr);
+        assert_eq!(EngineSelect::adaptive().name(), "adaptive");
+        assert_eq!(EngineKind::Bitmap.name(), "bitmap");
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_adaptive_thresholds() {
+        for bad in [f64::NAN, f64::INFINITY, -0.5, 1.5] {
+            let mut c = AccelConfig::small();
+            c.engine = EngineSelect::Adaptive { threshold: bad };
+            assert!(c.validate().is_err(), "threshold {bad} must be rejected");
+        }
+        let mut c = AccelConfig::small();
+        c.engine = EngineSelect::adaptive();
+        assert!(c.validate().is_ok());
+        c.engine = EngineSelect::Bitmap;
+        assert!(c.validate().is_ok());
     }
 }

@@ -15,7 +15,10 @@ pub mod resources;
 pub mod sram;
 pub mod stats;
 
-pub use config::{AccelConfig, CoreTopology, FabricPartition};
+pub use config::{
+    AccelConfig, CoreTopology, EngineKind, EngineSelect, FabricPartition,
+    DEFAULT_ADAPTIVE_THRESHOLD,
+};
 pub use dram::{BusTimeline, ClientStats, DramBus, MemoryReport};
 pub use energy::EnergyModel;
 pub use resources::{ResourceModel, Resources};

@@ -14,7 +14,7 @@ use spikeformer_accel::coordinator::{
     BackendFactory, BatchPolicy, Coordinator, GoldenBackend, PjrtBackend, Request,
     SimulatorBackend,
 };
-use spikeformer_accel::hw::{AccelConfig, CoreTopology, ResourceModel};
+use spikeformer_accel::hw::{AccelConfig, CoreTopology, EngineSelect, ResourceModel};
 use spikeformer_accel::metrics::{format_table1, AccelRow};
 use spikeformer_accel::model::{load_model, loader::load_test_split, QuantizedModel, SdtModelConfig};
 use spikeformer_accel::runtime::PjrtRuntime;
@@ -63,9 +63,10 @@ fn exec_mode(args: &Args) -> ExecMode {
     }
 }
 
-/// The paper hardware point with the CLI's topology and memory overrides
-/// (`--sdeb-cores N`, `--pipeline-depth N`, `--dram-bw N|max`) applied
-/// and validated.
+/// The paper hardware point with the CLI's topology, memory and engine
+/// overrides (`--sdeb-cores N`, `--pipeline-depth N`, `--dram-bw N|max`,
+/// `--engine csr|bitmap|adaptive`, `--engine-threshold X`) applied and
+/// validated.
 fn hw_from_args(args: &Args) -> Result<AccelConfig> {
     let mut hw = AccelConfig::paper();
     hw.topology.sdeb_cores = args.usize_or("sdeb-cores", hw.topology.sdeb_cores)?;
@@ -73,6 +74,12 @@ fn hw_from_args(args: &Args) -> Result<AccelConfig> {
         args.usize_or("pipeline-depth", hw.topology.pipeline_depth)?;
     if let Some(bw) = args.get("dram-bw") {
         hw.dram_bytes_per_cycle = if bw == "max" { usize::MAX } else { bw.parse()? };
+    }
+    if let Some(e) = args.get("engine") {
+        hw.engine = e.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    }
+    if let Some(th) = args.get("engine-threshold") {
+        hw.engine = EngineSelect::Adaptive { threshold: th.parse()? };
     }
     hw.validate()?;
     Ok(hw)
@@ -94,14 +101,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     let hw = hw_from_args(args)?;
     let policy = mapping_from_args(args)?;
     println!(
-        "model `{}`: D={} T={} blocks={} exec={exec:?} sdeb_cores={} depth={} mapping={}",
+        "model `{}`: D={} T={} blocks={} exec={exec:?} sdeb_cores={} depth={} mapping={} engine={}",
         model.cfg.name,
         model.cfg.embed_dim,
         model.cfg.timesteps,
         model.cfg.num_blocks,
         hw.topology.sdeb_cores,
         hw.topology.pipeline_depth,
-        policy.name()
+        policy.name(),
+        hw.engine.name()
     );
     let mut accel = Accelerator::with_runtime(
         model,

@@ -21,7 +21,7 @@
 //! (who takes, who puts, how tensors migrate between stage pools).
 
 use crate::quant::QTensor;
-use crate::spike::EncodedSpikes;
+use crate::spike::{EncodedSpikes, PackedBitmap};
 
 /// Hit/miss counters of one (or a sum of) scratch pool(s).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -66,6 +66,7 @@ pub struct ExecScratch {
     bufs_u32: Vec<Vec<u32>>,
     bufs_u64: Vec<Vec<u64>>,
     bufs_usize: Vec<Vec<usize>>,
+    bitmaps: Vec<PackedBitmap>,
     hits: u64,
     misses: u64,
 }
@@ -93,6 +94,7 @@ impl ExecScratch {
             + self.bufs_u32.len()
             + self.bufs_u64.len()
             + self.bufs_usize.len()
+            + self.bitmaps.len()
     }
 
     #[inline]
@@ -242,6 +244,30 @@ impl ExecScratch {
     pub fn put_usize(&mut self, v: Vec<usize>) {
         self.bufs_usize.push(v);
     }
+
+    /// Take an all-zero `[channels, tokens]` packed bitmap, reusing a
+    /// pooled word arena when one is available (`PackedBitmap::reset`) —
+    /// the bitmap engine's hand-off buffer, so steady-state engine
+    /// switching allocates nothing.
+    pub fn take_bitmap(&mut self, channels: usize, tokens: usize) -> PackedBitmap {
+        match self.bitmaps.pop() {
+            Some(mut b) => {
+                self.count(true);
+                b.reset(channels, tokens);
+                b
+            }
+            None => {
+                self.count(false);
+                PackedBitmap::zeros(channels, tokens)
+            }
+        }
+    }
+
+    /// Return a packed bitmap to the pool (its word capacity is kept for
+    /// the next [`Self::take_bitmap`]).
+    pub fn put_bitmap(&mut self, b: PackedBitmap) {
+        self.bitmaps.push(b);
+    }
 }
 
 #[cfg(test)]
@@ -328,6 +354,19 @@ mod tests {
         }
         assert_eq!(s.stats().misses, warm.misses, "steady state must not allocate");
         assert_eq!(s.stats().hits, warm.hits + 20);
+    }
+
+    #[test]
+    fn bitmap_pool_reuses_words_as_zeroed() {
+        let mut s = ExecScratch::new();
+        let mut b = s.take_bitmap(2, 70);
+        b.set(1, 65); // dirty it
+        s.put_bitmap(b);
+        let b2 = s.take_bitmap(3, 64);
+        assert_eq!(b2, PackedBitmap::zeros(3, 64), "reused bitmap must be zeroed");
+        assert_eq!(s.stats(), ScratchStats { hits: 1, misses: 1 });
+        s.put_bitmap(b2);
+        assert_eq!(s.pooled_objects(), 1, "bitmaps count toward the leak canary");
     }
 
     #[test]

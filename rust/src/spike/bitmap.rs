@@ -1,0 +1,337 @@
+//! Packed `u64` spike bitmap — the word-parallel second engine of the
+//! dual-engine datapath (DESIGN.md "Dual-engine datapath & selection").
+//!
+//! [`PackedBitmap`] stores the binary spike matrix `[C, L]` channel-major
+//! with 64 token positions per machine word, so the unit kernels that
+//! consume it replace per-address scalar work with word AND / popcount /
+//! trailing-zeros scans: a Q∩K intersection over one channel costs
+//! `ceil(L/64)` word ops regardless of density, which beats the CSR
+//! merge-join once `|Q|+|K|` per channel exceeds the word count — the
+//! FireFly-T-style dense engine that the
+//! [`EngineSelect`](crate::hw::EngineSelect) policy switches to at high
+//! density.
+//!
+//! The bitmap is built from / decoded to [`EncodedSpikes`] at the
+//! existing round-trip points, and both directions are exercised by the
+//! differential harness (`tests/diff_engines.rs`): every kernel here is
+//! bit-identical in values to its CSR twin; only the cycle/cost fields
+//! of `UnitStats` may differ.
+
+use crate::spike::{EncodedSpikes, SpikeMatrix};
+
+/// Bits per storage word of the packed bitmap engine.
+pub const WORD_BITS: usize = 64;
+
+/// A binary spike matrix `[channels, tokens]` packed 64 tokens per `u64`,
+/// channel-major: channel `c` occupies the word row
+/// `words[c*words_per_row .. (c+1)*words_per_row]`, token `l` is bit
+/// `l % 64` of word `l / 64`. Tail bits past `tokens` are always zero
+/// (an invariant every mutator preserves, so popcounts never overcount).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedBitmap {
+    channels: usize,
+    tokens: usize,
+    words_per_row: usize,
+    words: Vec<u64>,
+}
+
+impl PackedBitmap {
+    /// An all-zero bitmap of the given shape.
+    pub fn zeros(channels: usize, tokens: usize) -> Self {
+        let words_per_row = tokens.div_ceil(WORD_BITS);
+        Self {
+            channels,
+            tokens,
+            words_per_row,
+            words: vec![0u64; channels * words_per_row],
+        }
+    }
+
+    /// Reshape in place to an all-zero bitmap of the given shape, reusing
+    /// the word storage (the [`ExecScratch`](crate::scratch::ExecScratch)
+    /// recycling point — steady state allocates nothing once the vector
+    /// has grown to the largest shape seen).
+    pub fn reset(&mut self, channels: usize, tokens: usize) {
+        self.channels = channels;
+        self.tokens = tokens;
+        self.words_per_row = tokens.div_ceil(WORD_BITS);
+        self.words.clear();
+        self.words.resize(channels * self.words_per_row, 0);
+    }
+
+    /// Channel count.
+    pub fn channels(&self) -> usize {
+        self.channels
+    }
+
+    /// Token count per channel.
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// Words per channel row (`ceil(tokens/64)`), the word-parallel
+    /// engine's per-channel work unit.
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Total backing words — the engine's SRAM footprint in 64-bit words.
+    pub fn storage_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Set every bit listed in `src` (one of the two engine hand-off
+    /// points; the other is [`Self::decode_into`]). The bitmap must
+    /// already have `src`'s shape and is NOT cleared first — callers
+    /// recycling through scratch reset it via [`Self::reset`].
+    pub fn fill_from_encoded(&mut self, src: &EncodedSpikes) {
+        assert_eq!(
+            (self.channels, self.tokens),
+            (src.channels, src.tokens),
+            "bitmap/encoded shape mismatch"
+        );
+        for c in 0..src.channels {
+            let row = c * self.words_per_row;
+            for &addr in src.channel_addrs(c) {
+                let a = addr as usize; // as-ok: narrow-int index widening
+                self.words[row + a / WORD_BITS] |= 1u64 << (a % WORD_BITS);
+            }
+        }
+    }
+
+    /// A fresh bitmap holding `src`'s spikes (allocating convenience for
+    /// tests/benches; the hot path pairs `reset` + `fill_from_encoded`
+    /// on a scratch-pooled bitmap).
+    pub fn from_encoded(src: &EncodedSpikes) -> Self {
+        let mut b = Self::zeros(src.channels, src.tokens);
+        b.fill_from_encoded(src);
+        b
+    }
+
+    /// Decode back to the CSR arena (addresses emerge sorted because bits
+    /// are scanned in word order, low bit first). `out` must be empty and
+    /// already shaped `[channels, tokens]` — the `take_enc` contract.
+    pub fn decode_into(&self, out: &mut EncodedSpikes) {
+        assert_eq!(
+            (self.channels, self.tokens),
+            (out.channels, out.tokens),
+            "bitmap/encoded shape mismatch"
+        );
+        for c in 0..self.channels {
+            let row = &self.words[c * self.words_per_row..(c + 1) * self.words_per_row];
+            for (wi, &w) in row.iter().enumerate() {
+                let mut bits = w;
+                while bits != 0 {
+                    let l = wi * WORD_BITS + bits.trailing_zeros() as usize; // as-ok: u32 bit index widening
+                    out.push(c, l);
+                    bits &= bits - 1;
+                }
+            }
+        }
+    }
+
+    /// Bit at `(channel, token)`.
+    pub fn get(&self, c: usize, l: usize) -> bool {
+        assert!(c < self.channels && l < self.tokens, "index out of range");
+        (self.words[c * self.words_per_row + l / WORD_BITS] >> (l % WORD_BITS)) & 1 == 1
+    }
+
+    /// Set bit `(channel, token)` to 1.
+    pub fn set(&mut self, c: usize, l: usize) {
+        assert!(c < self.channels && l < self.tokens, "index out of range");
+        self.words[c * self.words_per_row + l / WORD_BITS] |= 1u64 << (l % WORD_BITS);
+    }
+
+    /// The packed word row of one channel.
+    pub fn row(&self, c: usize) -> &[u64] {
+        assert!(c < self.channels, "channel out of range");
+        &self.words[c * self.words_per_row..(c + 1) * self.words_per_row]
+    }
+
+    /// Total spike count (word-parallel popcount over the arena).
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum() // as-ok: u32 popcount widening
+    }
+
+    /// Spike density in `[0, 1]`; `0.0` for an empty shape (the engine
+    /// selector's no-NaN guarantee — see `EncodedSpikes::density`).
+    pub fn density(&self) -> f64 {
+        let total = self.channels * self.tokens;
+        if total == 0 {
+            return 0.0;
+        }
+        self.count_ones() as f64 / total as f64 // as-ok: count → f64 for a ratio
+    }
+
+    /// Gather `len` bits of channel `c` starting at token `start` into the
+    /// low bits of a `u64` (`len <= 64`; positions past `tokens` read as
+    /// zero). One- or two-word fetch — the SMU's window probe: a pooling
+    /// window row is nonzero iff any covered token fired.
+    pub fn extract_bits(&self, c: usize, start: usize, len: usize) -> u64 {
+        assert!(len <= WORD_BITS, "cannot extract more than one word");
+        assert!(c < self.channels, "channel out of range");
+        if len == 0 || start >= self.tokens {
+            return 0;
+        }
+        let row = c * self.words_per_row;
+        let (wi, bit) = (start / WORD_BITS, start % WORD_BITS);
+        let mut v = self.words[row + wi] >> bit;
+        if bit != 0 && wi + 1 < self.words_per_row {
+            v |= self.words[row + wi + 1] << (WORD_BITS - bit);
+        }
+        if len < WORD_BITS {
+            v &= (1u64 << len) - 1;
+        }
+        // Mask off positions past the end of the token space.
+        let avail = self.tokens - start;
+        if avail < len && avail < WORD_BITS {
+            v &= (1u64 << avail) - 1;
+        }
+        v
+    }
+
+    /// Popcount of the AND of two channel rows — the SMAM's word-parallel
+    /// Q∩K intersection for one channel: `ceil(L/64)` word ops replace the
+    /// CSR merge-join's `|Q|+|K|` comparator steps.
+    pub fn and_popcount_row(&self, c: usize, other: &Self, oc: usize) -> u32 {
+        let (a, b) = (self.row(c), other.row(oc));
+        assert_eq!(a.len(), b.len(), "row width mismatch");
+        a.iter().zip(b).map(|(x, y)| (x & y).count_ones()).sum()
+    }
+
+    /// Dense `SpikeMatrix` view (test/debug helper).
+    pub fn to_matrix(&self) -> SpikeMatrix {
+        let mut m = SpikeMatrix::zeros(self.channels, self.tokens);
+        for c in 0..self.channels {
+            for l in 0..self.tokens {
+                if self.get(c, l) {
+                    m.set(c, l, true);
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+        let mut m = SpikeMatrix::zeros(c, l);
+        for ci in 0..c {
+            for li in 0..l {
+                if rng.bernoulli(p) {
+                    m.set(ci, li, true);
+                }
+            }
+        }
+        EncodedSpikes::from_bitmap(&m)
+    }
+
+    #[test]
+    fn round_trip_is_lossless() {
+        let mut rng = Prng::new(7);
+        for &(c, l, p) in &[(3usize, 10usize, 0.3), (5, 64, 0.5), (4, 130, 0.1), (2, 1, 1.0)] {
+            let enc = random_encoded(&mut rng, c, l, p);
+            let bm = PackedBitmap::from_encoded(&enc);
+            assert_eq!(bm.count_ones(), enc.count_spikes());
+            let mut back = EncodedSpikes::empty(c, l);
+            bm.decode_into(&mut back);
+            assert_eq!(back, enc, "decode(encode(x)) != x at ({c},{l},{p})");
+            assert!(back.is_well_formed());
+        }
+    }
+
+    #[test]
+    fn get_set_and_word_layout() {
+        let mut bm = PackedBitmap::zeros(2, 130);
+        assert_eq!(bm.words_per_row(), 3);
+        assert_eq!(bm.storage_words(), 6);
+        bm.set(0, 0);
+        bm.set(0, 63);
+        bm.set(0, 64);
+        bm.set(1, 129);
+        assert_eq!(bm.row(0)[0], 1 | (1 << 63));
+        assert_eq!(bm.row(0)[1], 1);
+        assert_eq!(bm.row(1)[2], 1 << 1);
+        assert!(bm.get(0, 63) && bm.get(0, 64) && bm.get(1, 129));
+        assert!(!bm.get(1, 0));
+        assert_eq!(bm.count_ones(), 4);
+    }
+
+    #[test]
+    fn reset_reuses_storage_and_clears() {
+        let mut bm = PackedBitmap::zeros(4, 64);
+        bm.set(3, 63);
+        bm.reset(2, 10);
+        assert_eq!((bm.channels(), bm.tokens()), (2, 10));
+        assert_eq!(bm.count_ones(), 0, "reset must clear old bits");
+        bm.reset(4, 64);
+        assert_eq!(bm.count_ones(), 0);
+    }
+
+    #[test]
+    fn extract_bits_spans_word_boundaries() {
+        let mut bm = PackedBitmap::zeros(1, 130);
+        bm.set(0, 62);
+        bm.set(0, 63);
+        bm.set(0, 64);
+        bm.set(0, 65);
+        // Straddle the word 0 / word 1 boundary.
+        assert_eq!(bm.extract_bits(0, 62, 4), 0b1111);
+        assert_eq!(bm.extract_bits(0, 63, 2), 0b11);
+        assert_eq!(bm.extract_bits(0, 0, 62), 0);
+        // Aligned reads and zero-length reads.
+        assert_eq!(bm.extract_bits(0, 64, 2), 0b11);
+        assert_eq!(bm.extract_bits(0, 64, 0), 0);
+        // Past-the-end positions read as zero.
+        bm.set(0, 129);
+        assert_eq!(bm.extract_bits(0, 128, 64), 0b10);
+        assert_eq!(bm.extract_bits(0, 200, 8), 0);
+    }
+
+    #[test]
+    fn and_popcount_matches_scalar_intersection() {
+        let mut rng = Prng::new(9);
+        let a = random_encoded(&mut rng, 4, 100, 0.4);
+        let b = random_encoded(&mut rng, 4, 100, 0.4);
+        let (ba, bb) = (PackedBitmap::from_encoded(&a), PackedBitmap::from_encoded(&b));
+        for c in 0..4 {
+            let mut scalar = 0u32;
+            for l in 0..100 {
+                if ba.get(c, l) && bb.get(c, l) {
+                    scalar += 1;
+                }
+            }
+            assert_eq!(ba.and_popcount_row(c, &bb, c), scalar, "channel {c}");
+        }
+    }
+
+    #[test]
+    fn density_is_defined_for_empty_shapes() {
+        assert_eq!(PackedBitmap::zeros(0, 0).density(), 0.0);
+        assert_eq!(PackedBitmap::zeros(3, 0).density(), 0.0);
+        assert_eq!(PackedBitmap::zeros(0, 7).density(), 0.0);
+        let mut bm = PackedBitmap::zeros(2, 4);
+        bm.set(0, 0);
+        bm.set(1, 3);
+        assert!((bm.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tail_bits_stay_zero() {
+        // tokens=10 leaves 54 tail bits in the single row word; a full
+        // matrix must popcount to exactly channels*tokens.
+        let mut m = SpikeMatrix::zeros(3, 10);
+        for c in 0..3 {
+            for l in 0..10 {
+                m.set(c, l, true);
+            }
+        }
+        let bm = PackedBitmap::from_encoded(&EncodedSpikes::from_bitmap(&m));
+        assert_eq!(bm.count_ones(), 30);
+        assert_eq!(bm.extract_bits(0, 5, 10), 0b11111);
+    }
+}

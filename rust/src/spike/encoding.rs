@@ -226,6 +226,19 @@ impl EncodedSpikes {
         self.addrs.len()
     }
 
+    /// Fraction of ones — the density statistic the adaptive engine
+    /// selector ([`EngineSelect`](crate::hw::EngineSelect)) compares
+    /// against its crossover threshold. Defined (0.0) for empty shapes,
+    /// so the selector can never NaN-select; an empty tensor always takes
+    /// the CSR engine.
+    pub fn density(&self) -> f64 {
+        let total = self.channels * self.tokens;
+        if total == 0 {
+            return 0.0;
+        }
+        self.count_spikes() as f64 / total as f64 // as-ok: reporting ratio, not datapath state
+    }
+
     /// Fraction of zeros — the Fig. 6 measurement.
     pub fn sparsity(&self) -> f64 {
         let total = self.channels * self.tokens;
@@ -463,6 +476,22 @@ mod tests {
         m.set(1, 3, true);
         assert!((m.sparsity() - 0.75).abs() < 1e-12);
         assert!((EncodedSpikes::from_bitmap(&m).sparsity() - 0.75).abs() < 1e-12);
+        assert!((EncodedSpikes::from_bitmap(&m).density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn density_and_sparsity_are_defined_for_empty_shapes() {
+        // The adaptive engine selector divides by channels*tokens; every
+        // empty shape must yield a finite value (0.0 => CSR engine), never
+        // NaN. Covers the zero-channel, zero-token, and zero-both corners.
+        for &(c, l) in &[(0usize, 0usize), (0, 8), (8, 0)] {
+            let enc = EncodedSpikes::empty(c, l);
+            assert_eq!(enc.density(), 0.0, "density must be 0.0 at ({c},{l})");
+            assert_eq!(enc.sparsity(), 0.0, "sparsity must be 0.0 at ({c},{l})");
+            assert!(enc.density().is_finite() && enc.sparsity().is_finite());
+        }
+        let m = SpikeMatrix::zeros(0, 0);
+        assert_eq!(m.sparsity(), 0.0);
     }
 
     #[test]

@@ -11,8 +11,10 @@
 //!   are split into segments with one header word each (DESIGN.md), which
 //!   the storage model accounts for.
 
+pub mod bitmap;
 pub mod encoding;
 pub mod grid;
 
+pub use bitmap::PackedBitmap;
 pub use encoding::{EncodedSpikes, EncodedSpikesBuilder, SpikeMatrix};
 pub use grid::TokenGrid;

@@ -11,7 +11,8 @@
 
 use crate::hw::{AccelConfig, UnitStats};
 use crate::scratch::ExecScratch;
-use crate::spike::{EncodedSpikes, TokenGrid};
+use crate::spike::bitmap::WORD_BITS;
+use crate::spike::{EncodedSpikes, PackedBitmap, TokenGrid};
 use crate::util::div_ceil;
 
 #[derive(Clone, Copy, Debug)]
@@ -93,6 +94,67 @@ impl SpikeMaxpoolUnit {
         };
         scratch.put_bool(covered);
         scratch.put_usize(cover_buf);
+        (out, stats)
+    }
+
+    /// The packed-bitmap engine on an already-materialized input
+    /// (allocating convenience around [`Self::pool_bitmap_into`]).
+    pub fn pool_bitmap(
+        &self,
+        input: &PackedBitmap,
+        grid: TokenGrid,
+        cfg: &AccelConfig,
+    ) -> (EncodedSpikes, UnitStats) {
+        self.pool_bitmap_into(input, grid, cfg, &mut ExecScratch::new())
+    }
+
+    /// Word-parallel pooling engine
+    /// ([`EngineKind::Bitmap`](crate::hw::EngineKind)): a window output
+    /// fires iff any of its `kernel` row-segments is nonzero, probed as
+    /// one [`PackedBitmap::extract_bits`] gather per window row instead
+    /// of per-spike address arithmetic. Bit-identical output to
+    /// [`Self::pool_into`] on the same spikes.
+    ///
+    /// Cycle model: `C x out_tokens x kernel` word gathers spread over
+    /// the `smu_units` array (one gather per unit per cycle) — dense in
+    /// the *window* count but 64-way parallel in the token dimension,
+    /// sitting between the spike-proportional encoded engine and the
+    /// per-position dense baseline.
+    pub fn pool_bitmap_into(
+        &self,
+        input: &PackedBitmap,
+        grid: TokenGrid,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (EncodedSpikes, UnitStats) {
+        assert_eq!(input.tokens(), grid.tokens(), "grid/token mismatch");
+        assert!(self.kernel <= WORD_BITS, "window row wider than one word");
+        let out_grid = grid.pooled(self.kernel, self.stride);
+        let mut out = scratch.take_enc(input.channels(), out_grid.tokens());
+        let mut word_ops: u64 = 0;
+        for c in 0..input.channels() {
+            for oy in 0..out_grid.height {
+                for ox in 0..out_grid.width {
+                    let mut any = false;
+                    for ky in 0..self.kernel {
+                        word_ops += 1;
+                        let start = grid.addr(oy * self.stride + ky, ox * self.stride);
+                        any |= input.extract_bits(c, start, self.kernel) != 0;
+                    }
+                    if any {
+                        out.push(c, out_grid.addr(oy, ox));
+                    }
+                }
+            }
+        }
+        let stats = UnitStats {
+            cycles: div_ceil(word_ops, cfg.smu_units as u64).max(1), // as-ok: widening for 64-bit stat/cycle math
+            sops: input.count_ones() as u64, // as-ok: widening for 64-bit stat/cycle math
+            cmps: word_ops, // per-window-row word probes
+            sram_reads: word_ops,
+            sram_writes: out.storage_words() as u64, // as-ok: widening for 64-bit stat/cycle math
+            ..Default::default()
+        };
         (out, stats)
     }
 
@@ -242,6 +304,47 @@ mod tests {
             s_sparse.cycles,
             s_dense.cycles
         );
+    }
+
+    #[test]
+    fn bitmap_engine_bit_identical_to_encoded() {
+        let mut rng = Prng::new(6);
+        let cfg = AccelConfig::small();
+        for &(h, w, k, s) in &[(8usize, 8usize, 2usize, 2usize), (6, 6, 2, 1), (9, 12, 3, 3)] {
+            let g = TokenGrid::new(h, w);
+            let smu = SpikeMaxpoolUnit::new(k, s);
+            for &p in &[0.0, 0.1, 0.5, 1.0] {
+                let enc = random_encoded(&mut rng, 5, g, p);
+                let bm = PackedBitmap::from_encoded(&enc);
+                let (o1, s1) = smu.pool(&enc, g, &cfg);
+                let (o2, s2) = smu.pool_bitmap(&bm, g, &cfg);
+                assert_eq!(o1, o2, "engines must agree at ({h},{w},{k},{s}) p={p}");
+                assert!(o2.is_well_formed());
+                assert_eq!(s1.sops, s2.sops);
+            }
+        }
+    }
+
+    #[test]
+    fn bitmap_engine_cost_is_window_bound() {
+        // The word engine's cost depends on the window count, not the
+        // spike count: empty and full inputs charge identical cycles.
+        let g = TokenGrid::new(8, 8);
+        let cfg = AccelConfig::small(); // 16 SMUs
+        let smu = SpikeMaxpoolUnit::new(2, 2);
+        let empty = PackedBitmap::zeros(4, 64);
+        let mut full = PackedBitmap::zeros(4, 64);
+        for c in 0..4 {
+            for l in 0..64 {
+                full.set(c, l);
+            }
+        }
+        let (_, s_empty) = smu.pool_bitmap(&empty, g, &cfg);
+        let (_, s_full) = smu.pool_bitmap(&full, g, &cfg);
+        assert_eq!(s_empty.cycles, s_full.cycles);
+        // 4 channels x 16 windows x 2 rows = 128 gathers over 16 units.
+        assert_eq!(s_empty.cmps, 128);
+        assert_eq!(s_empty.cycles, 8);
     }
 
     #[test]

@@ -1,0 +1,201 @@
+//! Differential test harness for the dual-engine datapath: for random
+//! shapes and densities — including all-zero, single-spike and fully-dense
+//! inputs — the CSR address-stream engine, the packed-`u64` bitmap engine
+//! and the dense reference must produce bit-identical outputs for the
+//! SLU, the SMU and the SMAM; and a full inference under
+//! `EngineSelect::Adaptive` must produce the same logits as pure CSR on
+//! random topologies.
+
+use spikeformer_accel::accel::{Accelerator, Mapper, MappingPolicy};
+use spikeformer_accel::hw::{AccelConfig, CoreTopology, EngineSelect};
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::quant::QuantizedLinear;
+use spikeformer_accel::scratch::ExecScratch;
+use spikeformer_accel::spike::{EncodedSpikes, PackedBitmap, SpikeMatrix, TokenGrid};
+use spikeformer_accel::units::{
+    slu::dense_reference, SpikeLinearUnit, SpikeMaskAddModule, SpikeMaxpoolUnit,
+};
+use spikeformer_accel::util::{proptest::check, Prng};
+use spikeformer_accel::{prop_assert, prop_assert_eq};
+
+fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+    let mut m = SpikeMatrix::zeros(c, l);
+    for ci in 0..c {
+        for li in 0..l {
+            if rng.bernoulli(p) {
+                m.set(ci, li, true);
+            }
+        }
+    }
+    EncodedSpikes::from_bitmap(&m)
+}
+
+/// The density grid every property sweeps: the two degenerate extremes
+/// plus a random interior point drawn per case.
+fn density(rng: &mut Prng, case: usize) -> f64 {
+    match case % 4 {
+        0 => 0.0,             // all-zero
+        1 => 1.0,             // fully dense
+        2 => rng.next_f64(),  // random interior
+        _ => 0.02,            // around the adaptive default threshold
+    }
+}
+
+/// A single-spike tensor: exactly one set bit at a random position.
+fn single_spike(rng: &mut Prng, c: usize, l: usize) -> EncodedSpikes {
+    let mut m = SpikeMatrix::zeros(c, l);
+    m.set(rng.gen_range(0, c), rng.gen_range(0, l), true);
+    EncodedSpikes::from_bitmap(&m)
+}
+
+#[test]
+fn prop_slu_engines_and_dense_reference_agree() {
+    check("slu: csr == bitmap == dense", 60, |rng| {
+        let c_in = rng.gen_range(1, 96);
+        let c_out = rng.gen_range(1, 48);
+        let l = rng.gen_range(1, 140);
+        let x = if rng.bernoulli(0.15) {
+            single_spike(rng, c_in, l)
+        } else {
+            let p = density(rng, rng.gen_range(0, 4));
+            random_encoded(rng, c_in, l, p)
+        };
+        let w: Vec<f32> = (0..c_in * c_out).map(|_| rng.next_f32_signed()).collect();
+        let b: Vec<f32> = (0..c_out).map(|_| rng.next_f32_signed()).collect();
+        let layer = QuantizedLinear::from_f32(&w, &b, c_in, c_out, 0);
+        let hw = AccelConfig::with_lanes([16, 64, 1536][rng.gen_range(0, 3)]);
+
+        let mut slu_csr = SpikeLinearUnit::new();
+        let (out_csr, s_csr) = slu_csr.forward(&x, &layer, &hw);
+        let mut slu_bm = SpikeLinearUnit::new();
+        let packed = PackedBitmap::from_encoded(&x);
+        let (out_bm, s_bm) = slu_bm.forward_bitmap(&packed, &layer, &hw);
+
+        prop_assert_eq!(&out_csr, &out_bm);
+        // Same accumulation order, so the saturation telemetry matches too.
+        prop_assert_eq!(slu_csr.sat.saturations, slu_bm.sat.saturations);
+        // Workload stats are engine-independent; only cost fields differ.
+        prop_assert_eq!(s_csr.sops, s_bm.sops);
+        prop_assert_eq!(s_csr.adds, s_bm.adds);
+
+        let want = dense_reference(&x, &layer);
+        let sat = saturate_reference(&want, &layer);
+        prop_assert_eq!(&out_csr.data, &sat);
+        Ok(())
+    });
+}
+
+/// Saturate a dense i64 accumulator exactly as the SLU output stage does.
+fn saturate_reference(acc: &[i64], layer: &QuantizedLinear) -> Vec<i32> {
+    use spikeformer_accel::quant::{rshift_round, sat, ACT_FRAC, MEM_BITS};
+    acc.iter()
+        .map(|&a| sat(rshift_round(a, layer.acc_frac() - ACT_FRAC), MEM_BITS))
+        .collect()
+}
+
+#[test]
+fn prop_smu_engines_and_dense_baseline_agree() {
+    check("smu: csr == bitmap == dense", 60, |rng| {
+        let h = rng.gen_range(2, 14);
+        let w = rng.gen_range(2, 14);
+        let kernel = rng.gen_range(1, 4.min(h.min(w)) + 1);
+        let stride = rng.gen_range(1, kernel + 1);
+        let grid = TokenGrid::new(h, w);
+        let channels = rng.gen_range(1, 10);
+        let enc = if rng.bernoulli(0.15) {
+            single_spike(rng, channels, grid.tokens())
+        } else {
+            let p = density(rng, rng.gen_range(0, 4));
+            random_encoded(rng, channels, grid.tokens(), p)
+        };
+        let smu = SpikeMaxpoolUnit::new(kernel, stride);
+        let hw = AccelConfig::with_lanes([16, 256][rng.gen_range(0, 2)]);
+        let mut scratch = ExecScratch::new();
+
+        let (out_csr, _) = smu.pool(&enc, grid, &hw);
+        let packed = PackedBitmap::from_encoded(&enc);
+        let (out_bm, _) = smu.pool_bitmap_into(&packed, grid, &hw, &mut scratch);
+        let (out_dense, _) = smu.pool_dense_baseline(&enc, grid, &hw);
+
+        prop_assert_eq!(&out_csr, &out_bm);
+        prop_assert_eq!(&out_csr, &out_dense);
+        prop_assert!(out_bm.is_well_formed(), "bitmap engine emitted malformed encoding");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smam_engines_and_dense_baseline_agree() {
+    check("smam: csr == bitmap == adaptive == dense", 50, |rng| {
+        let c = rng.gen_range(1, 48);
+        let l = rng.gen_range(1, 200);
+        let v_th = rng.gen_range(0, 5) as u32;
+        let mk = |rng: &mut Prng| {
+            if rng.bernoulli(0.1) {
+                single_spike(rng, c, l)
+            } else {
+                let p = density(rng, rng.gen_range(0, 4));
+                random_encoded(rng, c, l, p)
+            }
+        };
+        let q = mk(rng);
+        let k = mk(rng);
+        let v = mk(rng);
+        let smam = SpikeMaskAddModule::new(v_th);
+        let mut hw = AccelConfig::with_lanes([16, 1536][rng.gen_range(0, 2)]);
+        let cores = rng.gen_range(1, 5);
+        let policy = MappingPolicy::ALL[rng.gen_range(0, 3)];
+        let mapper = Mapper::new(
+            rng.gen_range(1, 9),
+            CoreTopology::with_sdeb_cores(cores),
+            policy,
+        );
+        let mut scratch = ExecScratch::new();
+
+        let (want, _) = smam.run(&q, &k, &v, &hw);
+        let (dense, _) = smam.run_dense_baseline(&q, &k, &v, &hw);
+        prop_assert_eq!(&want.mask, &dense.mask);
+        prop_assert_eq!(&want.acc, &dense.acc);
+        prop_assert_eq!(&want.masked_v, &dense.masked_v);
+
+        for engine in [
+            EngineSelect::Bitmap,
+            EngineSelect::Adaptive { threshold: rng.next_f64() },
+        ] {
+            hw.engine = engine;
+            let (got, _) =
+                smam.run_mapped_into(&q, &k, &v, &hw, &mapper, 0, None, &mut scratch);
+            prop_assert_eq!(&want.mask, &got.mask);
+            prop_assert_eq!(&want.acc, &got.acc);
+            prop_assert_eq!(&want.masked_v, &got.masked_v);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_inference_matches_csr_on_random_topologies() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 17);
+    check("e2e: adaptive logits == csr logits", 6, |rng| {
+        let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
+        let cores = rng.gen_range(1, 4);
+        let policy = MappingPolicy::ALL[rng.gen_range(0, 3)];
+        let threshold = rng.next_f64();
+        let run = |engine: EngineSelect, img: &[f32]| {
+            let mut hw = AccelConfig::small();
+            hw.topology = CoreTopology::with_sdeb_cores(cores);
+            hw.engine = engine;
+            hw.validate().unwrap();
+            let mut accel =
+                Accelerator::new(model.clone(), hw).with_mapping(policy);
+            accel.infer(img).unwrap()
+        };
+        let base = run(EngineSelect::Csr, &img);
+        for engine in [EngineSelect::Bitmap, EngineSelect::Adaptive { threshold }] {
+            let r = run(engine, &img);
+            prop_assert_eq!(&base.logits, &r.logits);
+        }
+        Ok(())
+    });
+}

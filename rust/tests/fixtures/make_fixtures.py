@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Regenerate the golden SDSA fixtures (q/k/v spike planes and the expected
+mask / accumulator / masked-V outputs) as .npy files.
+
+Pure stdlib on purpose — the npy v1.0 container is hand-assembled so the
+script runs in any environment, and the expected outputs are computed by an
+independent reference implementation of the SDSA semantics (per-channel
+Q∩K popcount, threshold mask, V pass-through), not by the Rust code under
+test. The Rust snapshot test (tests/golden_sdsa.rs) locks both engines to
+these bytes.
+
+Usage:  python3 rust/tests/fixtures/make_fixtures.py
+"""
+
+import os
+import struct
+
+C, L = 32, 70  # 70 tokens spans a u64 word boundary in the bitmap engine
+V_TH = 6  # chosen so the golden mask has both fired and cleared channels
+DENSITY_PCT = 30  # per-position spike probability, percent
+SEED = 0x5EED_CAFE
+
+
+def lcg(state):
+    while True:
+        state = (state * 6364136223846793005 + 1442695040888963407) % (1 << 64)
+        yield state >> 33
+
+
+def npy_bytes(descr, shape, payload):
+    header = "{'descr': '%s', 'fortran_order': False, 'shape': %s, }" % (
+        descr,
+        "(" + ", ".join(str(d) for d in shape) + ("," if len(shape) == 1 else "") + ")",
+    )
+    total = 10 + len(header) + 1
+    header += " " * ((64 - total % 64) % 64) + "\n"
+    return b"\x93NUMPY\x01\x00" + struct.pack("<H", len(header)) + header.encode() + payload
+
+
+def write(path, descr, shape, payload):
+    with open(path, "wb") as f:
+        f.write(npy_bytes(descr, shape, payload))
+    print("wrote %s (%s %s)" % (path, descr, shape))
+
+
+def main():
+    rng = lcg(SEED)
+    planes = {}
+    for name in ("q", "k", "v"):
+        planes[name] = [[1 if next(rng) % 100 < DENSITY_PCT else 0 for _ in range(L)] for _ in range(C)]
+
+    # Reference SDSA: acc[c] = |Q[c] ∩ K[c]|, mask[c] = acc[c] >= V_TH,
+    # masked_v[c] = V[c] when masked else zeros.
+    acc = [sum(planes["q"][c][l] & planes["k"][c][l] for l in range(L)) for c in range(C)]
+    mask = [1 if a >= V_TH else 0 for a in acc]
+    masked_v = [[planes["v"][c][l] if mask[c] else 0 for l in range(L)] for c in range(C)]
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name in ("q", "k", "v"):
+        flat = bytes(b for row in planes[name] for b in row)
+        write(os.path.join(here, "sdsa_%s.npy" % name), "|u1", (C, L), flat)
+    write(os.path.join(here, "sdsa_mask.npy"), "|u1", (C,), bytes(mask))
+    write(
+        os.path.join(here, "sdsa_acc.npy"),
+        "<i4",
+        (C,),
+        b"".join(struct.pack("<i", a) for a in acc),
+    )
+    write(
+        os.path.join(here, "sdsa_masked_v.npy"),
+        "|u1",
+        (C, L),
+        bytes(b for row in masked_v for b in row),
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+//! Golden-vector snapshot test: the committed `.npy` fixtures under
+//! `tests/fixtures/` lock the SDSA head outputs byte-for-byte — both the
+//! CSR engine and the packed-bitmap engine must reproduce the mask,
+//! accumulator and masked-V planes that `make_fixtures.py`'s independent
+//! Python reference computed. Regenerate (only when the SDSA semantics
+//! intentionally change) with:
+//!
+//! ```bash
+//! python3 rust/tests/fixtures/make_fixtures.py
+//! ```
+
+use std::path::Path;
+
+use spikeformer_accel::accel::Mapper;
+use spikeformer_accel::hw::{AccelConfig, EngineSelect};
+use spikeformer_accel::io::npy::NpyArray;
+use spikeformer_accel::scratch::ExecScratch;
+use spikeformer_accel::spike::{EncodedSpikes, SpikeMatrix};
+use spikeformer_accel::units::SpikeMaskAddModule;
+
+/// The fixtures' operating point (see make_fixtures.py).
+const V_TH: u32 = 6;
+
+fn fixture(name: &str) -> NpyArray {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    NpyArray::load(&path).unwrap_or_else(|e| panic!("loading fixture {name}: {e:#}"))
+}
+
+fn encoded_from_plane(arr: &NpyArray) -> EncodedSpikes {
+    assert_eq!(arr.shape.len(), 2, "spike plane must be 2-D");
+    let (c, l) = (arr.shape[0], arr.shape[1]);
+    let data = arr.as_i32().unwrap();
+    let mut m = SpikeMatrix::zeros(c, l);
+    for ci in 0..c {
+        for li in 0..l {
+            if data[ci * l + li] != 0 {
+                m.set(ci, li, true);
+            }
+        }
+    }
+    EncodedSpikes::from_bitmap(&m)
+}
+
+/// Decode an encoding back to a flat 0/1 plane for byte-exact comparison
+/// with the fixture payload.
+fn plane_from_encoded(enc: &EncodedSpikes) -> Vec<i32> {
+    let mut out = vec![0i32; enc.channels * enc.tokens];
+    for c in 0..enc.channels {
+        for &a in enc.channel_addrs(c) {
+            out[c * enc.tokens + a as usize] = 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn sdsa_head_outputs_match_golden_vectors_on_both_engines() {
+    let q = encoded_from_plane(&fixture("sdsa_q.npy"));
+    let k = encoded_from_plane(&fixture("sdsa_k.npy"));
+    let v = encoded_from_plane(&fixture("sdsa_v.npy"));
+    let want_mask = fixture("sdsa_mask.npy").as_i32().unwrap();
+    let want_acc = fixture("sdsa_acc.npy").as_i32().unwrap();
+    let want_masked_v = fixture("sdsa_masked_v.npy").as_i32().unwrap();
+    assert!(
+        want_mask.iter().any(|&m| m == 0) && want_mask.iter().any(|&m| m == 1),
+        "fixture mask must exercise both branches"
+    );
+
+    let smam = SpikeMaskAddModule::new(V_TH);
+    let serial = Mapper::serial();
+    let mut scratch = ExecScratch::new();
+    for engine in [EngineSelect::Csr, EngineSelect::Bitmap, EngineSelect::adaptive()] {
+        let mut hw = AccelConfig::small();
+        hw.engine = engine;
+        let (out, _) = smam.run_mapped_into(&q, &k, &v, &hw, &serial, 0, None, &mut scratch);
+        let got_mask: Vec<i32> = out.mask.iter().map(|&m| i32::from(m)).collect();
+        let got_acc: Vec<i32> = out.acc.iter().map(|&a| a as i32).collect();
+        assert_eq!(got_mask, want_mask, "mask snapshot broken ({})", engine.name());
+        assert_eq!(got_acc, want_acc, "acc snapshot broken ({})", engine.name());
+        assert_eq!(
+            plane_from_encoded(&out.masked_v),
+            want_masked_v,
+            "masked-V snapshot broken ({})",
+            engine.name()
+        );
+    }
+}
