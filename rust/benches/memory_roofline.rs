@@ -34,6 +34,8 @@ struct Row {
     stall_cycles: u64,
     stall_fraction: f64,
     bus_utilization: f64,
+    streamed_bytes_full: u64,
+    streamed_bytes_delta: u64,
 }
 
 fn bw_label(bw: usize) -> String {
@@ -64,6 +66,35 @@ fn main() -> anyhow::Result<()> {
         p.stall_cycles,
         100.0 * p.stall_fraction(),
         r.memory().map(|m| m.weight_bytes() as f64 / 1e6).unwrap_or(0.0)
+    );
+
+    // A second executed inference with `--temporal-delta` on: values must
+    // be bit-identical, and the SDEB input stores must move no more than
+    // the full re-store baseline. The spike-traffic pair is
+    // bandwidth-independent (it is measured by the cores, not the bus),
+    // so it rides along as a column pair on every sweep row below.
+    section("delta pass: executed inference with --temporal-delta on");
+    let mut hw_delta = AccelConfig::paper();
+    hw_delta.temporal_delta = true;
+    let mut accel_delta = Accelerator::new(model.clone(), hw_delta);
+    let rd = accel_delta.infer(&image)?;
+    assert_eq!(r.logits, rd.logits, "--temporal-delta must not change values");
+    let m_off = r.memory().expect("memory lane active");
+    let m_on = rd.memory().expect("memory lane active");
+    assert_eq!(
+        m_off.spike_bytes_moved, m_off.spike_bytes_full,
+        "flag off must move the full stores"
+    );
+    assert!(m_on.spike_bytes_moved <= m_on.spike_bytes_full, "delta must never move more");
+    let (spike_full, spike_delta) = (m_on.spike_bytes_full, m_on.spike_bytes_moved);
+    println!(
+        "spike input stores: full={:.3} MB, delta-moved={:.3} MB ({:.1}% saved); regimes resident={} thrash={} streaming={}",
+        spike_full as f64 / 1e6,
+        spike_delta as f64 / 1e6,
+        100.0 * (1.0 - spike_delta as f64 / spike_full.max(1) as f64),
+        m_on.resident_blocks,
+        m_on.thrash_blocks,
+        m_on.streaming_blocks,
     );
 
     let bws: &[usize] = if quick {
@@ -109,6 +140,8 @@ fn main() -> anyhow::Result<()> {
                 stall_cycles: e.stall_cycles,
                 stall_fraction: e.stall_fraction(),
                 bus_utilization: m.bus_utilization(e.executed_cycles),
+                streamed_bytes_full: m.weight_bytes() + spike_full,
+                streamed_bytes_delta: m.weight_bytes() + spike_delta,
             };
             println!(
                 "{:<10}{:>14}{:>14}{:>11.2}%{:>11.2}%",
@@ -187,13 +220,15 @@ fn main() -> anyhow::Result<()> {
         for (i, row) in rows.iter().enumerate() {
             let bw = if row.dram_bw == usize::MAX { -1i64 } else { row.dram_bw as i64 };
             entry.push_str(&format!(
-                "      {{\"sps_cores\": {}, \"dram_bw\": {}, \"wall_cycles\": {}, \"stall_cycles\": {}, \"stall_fraction\": {:.4}, \"bus_utilization\": {:.4}}}{}\n",
+                "      {{\"sps_cores\": {}, \"dram_bw\": {}, \"wall_cycles\": {}, \"stall_cycles\": {}, \"stall_fraction\": {:.4}, \"bus_utilization\": {:.4}, \"streamed_bytes_full\": {}, \"streamed_bytes_delta\": {}}}{}\n",
                 row.sps_cores,
                 bw,
                 row.wall_cycles,
                 row.stall_cycles,
                 row.stall_fraction,
                 row.bus_utilization,
+                row.streamed_bytes_full,
+                row.streamed_bytes_delta,
                 if i + 1 == rows.len() { "" } else { "," }
             ));
         }
@@ -201,6 +236,25 @@ fn main() -> anyhow::Result<()> {
         match merge_bench_json(path, "memory_roofline", &entry) {
             Ok(()) => println!("\nwrote {path} (section \"memory_roofline\")"),
             Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
+
+        // Temporal-reuse headline: streamed bytes per inference at the
+        // paper point, delta-on vs the full-re-store baseline.
+        let baseline = m_off.streamed_bytes();
+        let with_delta = m_on.streamed_bytes();
+        let temporal = format!(
+            "{{\n    \"config\": {{\"model\": \"paper\", \"accel\": \"paper fabric, sdeb_cores=2, dram_bw=16\", \"image_seed\": 2}},\n    \"units\": \"bytes per inference over the external bus + ESS input stores; baseline = every SDEB input re-stored in full (PR 5 behaviour), delta = --temporal-delta per-channel XOR deltas; logits bit-identical between the two runs\",\n    \"results\": [\n      {{\"streamed_bytes_baseline\": {}, \"streamed_bytes_delta\": {}, \"reduction\": {:.4}, \"resident_blocks\": {}, \"thrash_blocks\": {}, \"streaming_blocks\": {}, \"resident_bytes\": {}}}\n    ]\n  }}",
+            baseline,
+            with_delta,
+            1.0 - with_delta as f64 / baseline.max(1) as f64,
+            m_on.resident_blocks,
+            m_on.thrash_blocks,
+            m_on.streaming_blocks,
+            m_on.resident_bytes,
+        );
+        match merge_bench_json(path, "temporal", &temporal) {
+            Ok(()) => println!("wrote {path} (section \"temporal\")"),
+            Err(e) => eprintln!("failed to write {path}: {e}"),
         }
     }
 

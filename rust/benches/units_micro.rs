@@ -10,6 +10,12 @@
 //! and reports the density where the word engine starts winning — the
 //! calibration behind `EngineSelect::Adaptive`'s default threshold.
 //!
+//! The **delta** case times the XOR-delta kernel against a full re-encode
+//! across a density sweep at three temporal-correlation levels (identical
+//! / 5%-flipped / independent frames) and records the ESS words the
+//! per-channel `DeltaPlan` would move — the unit-level calibration behind
+//! `--temporal-delta`.
+//!
 //! ```bash
 //! cargo bench --bench units_micro              # full sweep
 //! cargo bench --bench units_micro -- --quick   # CI smoke mode
@@ -22,7 +28,9 @@ use spikeformer_accel::hw::{AccelConfig, EngineSelect, UnitStats, DEFAULT_ADAPTI
 use spikeformer_accel::model::SdtModelConfig;
 use spikeformer_accel::quant::QuantizedLinear;
 use spikeformer_accel::scratch::ExecScratch;
-use spikeformer_accel::spike::{EncodedSpikes, PackedBitmap, SpikeMatrix, TokenGrid};
+use spikeformer_accel::spike::{
+    xor_delta_into, EncodedSpikes, PackedBitmap, SpikeMatrix, TokenGrid,
+};
 use spikeformer_accel::units::{SpikeLinearUnit, SpikeMaskAddModule, SpikeMaxpoolUnit};
 use spikeformer_accel::util::{div_ceil, Prng};
 
@@ -348,6 +356,130 @@ fn write_crossover_json(rows: &[CrossoverRow], channels: usize, tokens: usize) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Temporal delta: the XOR-delta kernel vs a full re-encode of the next
+// frame, across a density sweep at three temporal-correlation levels
+// (identical frames / 5%-of-positions flipped / independent frames). Host
+// wall time plus the modelled ESS word traffic the per-channel DeltaPlan
+// would move — the unit-level version of the `--temporal-delta` claim.
+// ---------------------------------------------------------------------------
+
+struct DeltaRow {
+    density: f64,
+    correlation: &'static str,
+    xor_delta: BenchResult,
+    reencode: BenchResult,
+    moved_words: usize,
+    full_words: usize,
+}
+
+fn delta_case(quick: bool) -> Vec<DeltaRow> {
+    let model_cfg = SdtModelConfig::paper();
+    let (c, l) = (model_cfg.embed_dim, model_cfg.num_tokens());
+    let densities: &[f64] = if quick {
+        &[0.02, 0.1, 0.5]
+    } else {
+        &[0.001, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.5]
+    };
+    // (label, flip probability): negative = fresh independent frame.
+    let correlations: &[(&'static str, f64)] =
+        &[("identical", 0.0), ("flip5", 0.05), ("independent", -1.0)];
+    let (warmup, iters) = if quick { (1, 3) } else { (3, 50) };
+
+    section(&format!(
+        "temporal delta: XOR-delta kernel vs full re-encode ({c}ch, {l} tok, paper config)"
+    ));
+    println!(
+        "{:<10}{:<14}{:>14}{:>14}{:>12}{:>12}",
+        "density", "correlation", "delta s", "re-encode s", "moved wd", "full wd"
+    );
+    let mut scratch = ExecScratch::new();
+    let mut rng = Prng::new(37);
+    let mut rows = Vec::new();
+    for &d in densities {
+        let prev_m = random_bitmap(&mut rng, c, l, d);
+        let prev = EncodedSpikes::from_bitmap(&prev_m);
+        let pb = PackedBitmap::from_encoded(&prev);
+        for &(label, flip) in correlations {
+            let mut curr_m = prev_m.clone();
+            if flip < 0.0 {
+                curr_m = random_bitmap(&mut rng, c, l, d);
+            } else if flip > 0.0 {
+                for ci in 0..c {
+                    for li in 0..l {
+                        if rng.bernoulli(flip) {
+                            let v = curr_m.get(ci, li);
+                            curr_m.set(ci, li, !v);
+                        }
+                    }
+                }
+            }
+            let curr = EncodedSpikes::from_bitmap(&curr_m);
+            let cb = PackedBitmap::from_encoded(&curr);
+            let full_words = curr.storage_words();
+            let moved_words = spikeformer_accel::spike::delta::moved_words(&pb, &cb, &curr);
+            assert!(moved_words <= full_words, "DeltaPlan must never move more than full");
+            if label == "identical" {
+                assert_eq!(moved_words, 0, "identical frames must move zero words");
+            }
+            let xor_delta =
+                bench(&format!("xor-delta @d={d} {label}"), warmup, iters, || {
+                    let mut out = scratch.take_enc(c, l);
+                    xor_delta_into(&pb, &cb, &mut out);
+                    black_box(&out);
+                    scratch.put_enc(out);
+                });
+            let reencode =
+                bench(&format!("re-encode @d={d} {label}"), warmup, iters, || {
+                    let e = EncodedSpikes::from_bitmap(&curr_m);
+                    black_box(e);
+                });
+            println!(
+                "{:<10.3}{:<14}{:>14.9}{:>14.9}{:>12}{:>12}",
+                d, label, xor_delta.median_s, reencode.median_s, moved_words, full_words
+            );
+            rows.push(DeltaRow {
+                density: d,
+                correlation: label,
+                xor_delta,
+                reencode,
+                moved_words,
+                full_words,
+            });
+        }
+    }
+    rows
+}
+
+fn write_delta_json(rows: &[DeltaRow], channels: usize, tokens: usize) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_encoding.json");
+    let mut entry = String::from("{\n");
+    entry.push_str(&format!(
+        "    \"config\": {{\"channels\": {channels}, \"tokens\": {tokens}, \"accel\": \"paper\"}},\n"
+    ));
+    entry.push_str(
+        "    \"units\": \"seconds (median wall time per iteration, release build); moved_words = ESS words the per-channel DeltaPlan ships vs a full re-store\",\n",
+    );
+    entry.push_str("    \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        entry.push_str(&format!(
+            "      {{\"density\": {}, \"correlation\": \"{}\", \"xor_delta_s\": {:.9}, \"reencode_s\": {:.9}, \"moved_words\": {}, \"full_words\": {}}}{}\n",
+            r.density,
+            r.correlation,
+            r.xor_delta.median_s,
+            r.reencode.median_s,
+            r.moved_words,
+            r.full_words,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    entry.push_str("    ]\n  }");
+    match spikeformer_accel::benchlib::merge_bench_json(path, "delta", &entry) {
+        Ok(()) => println!("wrote {path} (section \"delta\")"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
@@ -426,11 +558,15 @@ fn main() {
     let model_cfg = SdtModelConfig::paper();
     let rows = crossover_case(quick);
 
+    // The temporal-delta kernel sweep (`--temporal-delta` calibration).
+    let delta_rows = delta_case(quick);
+
     // The CSR-vs-legacy before/after case (perf trajectory anchor).
     let case = encode_sdsa_case(quick);
     if json {
         write_json(&case);
         write_crossover_json(&rows, model_cfg.embed_dim, model_cfg.num_tokens());
+        write_delta_json(&delta_rows, model_cfg.embed_dim, model_cfg.num_tokens());
     }
 
     if quick {

@@ -152,6 +152,26 @@ impl CoreBuffers {
         Ok(())
     }
 
+    /// Store an encoded tensor of which only `moved_words` actually cross
+    /// the write ports — the `--temporal-delta` path, where the slot still
+    /// reserves the full tensor (the previous frame's copy is patched in
+    /// place) but only the changed addresses are written. With
+    /// `moved_words == enc.storage_words()` this is exactly
+    /// [`Self::store_encoded`].
+    pub fn store_encoded_moved(
+        &mut self,
+        enc: &EncodedSpikes,
+        moved_words: usize,
+        t: usize,
+    ) -> Result<()> {
+        let words = enc.storage_words();
+        let depth = self.slots.len();
+        let bank = &mut self.slots[t % depth];
+        bank.alloc_delta(words, moved_words.min(words))?;
+        bank.free(words); // consumed within the layer pass (buffer ring)
+        Ok(())
+    }
+
     /// Reset every slot's access counters.
     pub fn reset_counters(&mut self) {
         for s in &mut self.slots {
@@ -280,6 +300,25 @@ mod tests {
             assert_eq!(slot.used, 0);
             assert!(slot.writes > 0, "every ring slot exercised");
         }
+    }
+
+    #[test]
+    fn delta_store_charges_only_moved_words() {
+        let cfg = AccelConfig::small();
+        let mut b = BufferSet::new(&cfg);
+        let mut m = SpikeMatrix::zeros(4, 64);
+        for l in 0..8 {
+            m.set(0, l, true);
+        }
+        let enc = EncodedSpikes::from_bitmap(&m);
+        b.sdeb_for(0).store_encoded(&enc, 0).unwrap();
+        let full = b.sdeb[0].writes();
+        assert_eq!(full, enc.storage_words() as u64);
+        b.sdeb_for(0).store_encoded_moved(&enc, 3, 1).unwrap();
+        assert_eq!(b.sdeb[0].writes() - full, 3);
+        // moved == full degenerates to the plain store.
+        b.sdeb_for(0).store_encoded_moved(&enc, enc.storage_words(), 2).unwrap();
+        assert_eq!(b.sdeb[0].writes(), 2 * full + 3);
     }
 
     #[test]

@@ -370,7 +370,7 @@ impl Accelerator {
                 // sets' movement over the shared bus and gate the
                 // executed schedule on weights-resident.
                 let dma = DmaEngine::new(&self.model, &self.hw);
-                let exec = PipelineExecution::with_memory(
+                let mut exec = PipelineExecution::with_memory(
                     io_in_cycles,
                     io_out_cycles,
                     sps_per,
@@ -378,7 +378,12 @@ impl Accelerator {
                     &self.hw.topology,
                     Some(&dma),
                 );
-                if let Some(m) = &exec.memory {
+                if let Some(m) = exec.memory.as_mut() {
+                    // SDEB-input store traffic measured by the cores
+                    // (words are 2 B, like streamed weights).
+                    m.spike_bytes_full = sink.spike_full_words * super::dma::WEIGHT_STREAM_BYTES;
+                    m.spike_bytes_moved =
+                        sink.spike_moved_words * super::dma::WEIGHT_STREAM_BYTES;
                     // The streamed words pass through the weight buffer.
                     self.buffers
                         .weight
@@ -546,7 +551,7 @@ impl Accelerator {
             let io_out = self.io_output_stats();
             let io_out_cycles = io_out.cycles;
             sink.add("io.output", io_out);
-            let exec = PipelineExecution::with_memory(
+            let mut exec = PipelineExecution::with_memory(
                 io_in_cycles,
                 io_out_cycles,
                 std::mem::take(&mut sps_per_t[i]),
@@ -554,7 +559,9 @@ impl Accelerator {
                 &self.hw.topology,
                 Some(&dma),
             );
-            if let Some(m) = &exec.memory {
+            if let Some(m) = exec.memory.as_mut() {
+                m.spike_bytes_full = sink.spike_full_words * super::dma::WEIGHT_STREAM_BYTES;
+                m.spike_bytes_moved = sink.spike_moved_words * super::dma::WEIGHT_STREAM_BYTES;
                 self.buffers
                     .weight
                     .record_stream_writes(m.weight_bytes() / super::dma::WEIGHT_STREAM_BYTES);

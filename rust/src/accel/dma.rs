@@ -16,14 +16,23 @@
 //!   inference** (a prefetch ahead of its first use) and then stays on
 //!   chip.
 //! * **Thrash** — every set fits one slot but the core hosts more sets
-//!   than slots: the cyclic rotation evicts each set before its next use
-//!   (classic LRU thrash), so every use re-streams. The transfer for a
-//!   use may start once the slot it refills frees — when the use
-//!   `weight_slots` back on that core finishes — which is the ping/pong
-//!   prefetch running one working set ahead.
-//! * **Streaming** — the set is larger than one slot: it cannot be
-//!   double-buffered at all and streams through on every use, its
-//!   transfer gated on the core's previous use finishing.
+//!   than slots, so the cyclic rotation evicts each set eventually. Since
+//!   PR 8's weight-resident timestep scheduling, any set that *fits a
+//!   slot* also streams **once per inference**: the controller
+//!   interchanges the loops for fitting blocks (block-outer,
+//!   timestep-inner — dataflow-valid because block `b` at timestep `t`
+//!   needs only block `b-1`'s output at `t`, already complete, and its
+//!   own LIF state at `t-1`, sequential within the block), so the set is
+//!   hot across all T of its uses before the rotation reclaims its slot.
+//!   The transfer for a first use may start once the slot it refills
+//!   frees — when the use `weight_slots` back on that core finishes —
+//!   the ping/pong prefetch running one working set ahead.
+//! * **Streaming** — the set is larger than one slot: it cannot stay
+//!   resident at all and streams through on **every** use. The head of
+//!   the next use's stream (up to one slot's worth, with the transfer's
+//!   bus cycles split so head + tail cost exactly the unsplit transfer)
+//!   prefetches into the slot freed `weight_slots` uses back; the tail is
+//!   gated on the core's previous use finishing.
 //!
 //! The SPS Core's convolution weights are **pinned**: they are reused by
 //! every timestep, live in the SPS core's own buffer, and are charged at
@@ -62,11 +71,12 @@ pub const WEIGHT_STREAM_BYTES: u64 = 2;
 pub enum WeightResidency {
     /// Streams once per inference, then stays on chip.
     Resident,
-    /// Fits a slot but is evicted between uses: re-streams every use,
-    /// double-buffered one working set ahead.
+    /// Fits a slot but shares the core with more sets than slots: streams
+    /// once per inference under the block-outer timestep schedule (hot
+    /// across all its uses), then is evicted by the slot rotation.
     Thrash,
-    /// Larger than a slot: streams through on every use, no prefetch
-    /// overlap with the core's previous use.
+    /// Larger than a slot: streams through on every use, the head of each
+    /// stream prefetched into the freed ping/pong slot one use ahead.
     Streaming,
 }
 
@@ -85,8 +95,12 @@ pub struct BlockPlan {
 
 impl BlockPlan {
     /// Does this set re-stream on every use (vs once per inference)?
+    /// Only sets larger than a slot do: fitting sets — Resident *and*
+    /// Thrash — stream once under the weight-resident timestep schedule
+    /// (block-outer loop order keeps a fitting set hot across all its
+    /// uses; see the module docs).
     pub fn streams_every_use(&self) -> bool {
-        self.residency != WeightResidency::Resident
+        self.residency == WeightResidency::Streaming
     }
 }
 
@@ -113,6 +127,10 @@ pub struct DmaEngine {
     pub bytes_per_cycle: usize,
     /// Ping/pong slots per SDEB-core weight buffer.
     pub slots: usize,
+    /// Capacity of one slot in bus bytes — how much of an oversized
+    /// Streaming set the executor may prefetch into the freed ping/pong
+    /// slot ahead of the block's previous use finishing.
+    pub slot_bytes: u64,
     /// Per-block movement plans, in block order.
     pub blocks: Vec<BlockPlan>,
     /// Input-image transfer size in bytes (10-bit activations packed
@@ -173,6 +191,7 @@ impl DmaEngine {
         Self {
             bytes_per_cycle: hw.dram_bytes_per_cycle,
             slots,
+            slot_bytes: slot_words * WEIGHT_STREAM_BYTES,
             blocks,
             input_bytes: (cfg.in_channels * cfg.img_size * cfg.img_size * 2) as u64, // as-ok: widening for 64-bit stat/cycle math
             output_bytes: (cfg.num_classes * 4) as u64, // as-ok: widening for 64-bit stat/cycle math
@@ -181,13 +200,36 @@ impl DmaEngine {
     }
 
     /// Total weight bytes one inference of `timesteps` timesteps streams
-    /// over the bus under this plan: resident sets once, streaming/thrash
-    /// sets once per use.
+    /// over the bus under this plan: every fitting set (Resident and
+    /// Thrash — the weight-resident timestep schedule) once, oversized
+    /// Streaming sets once per use.
     pub fn streamed_bytes_per_inference(&self, timesteps: usize) -> u64 {
         self.blocks
             .iter()
             .map(|b| if b.streams_every_use() { b.bytes * timesteps as u64 } else { b.bytes }) // as-ok: widening for 64-bit stat/cycle math
             .sum()
+    }
+
+    /// Per-block regime classification counts `(resident, thrash,
+    /// streaming)` — the roofline-readability numbers surfaced in
+    /// [`MemoryReport`](crate::hw::MemoryReport) and the run summary.
+    pub fn regime_counts(&self) -> (usize, usize, usize) {
+        let mut counts = (0usize, 0usize, 0usize);
+        for b in &self.blocks {
+            match b.residency {
+                WeightResidency::Resident => counts.0 += 1,
+                WeightResidency::Thrash => counts.1 += 1,
+                WeightResidency::Streaming => counts.2 += 1,
+            }
+        }
+        counts
+    }
+
+    /// Bytes of weight working sets that stream once per inference and
+    /// then sit on chip for all their uses (Resident + Thrash blocks
+    /// under the weight-resident timestep schedule).
+    pub fn resident_bytes(&self) -> u64 {
+        self.blocks.iter().filter(|b| !b.streams_every_use()).map(|b| b.bytes).sum()
     }
 
     /// Does any block re-stream per use (i.e. does the plan generate
@@ -257,6 +299,8 @@ mod tests {
             2 * dma.blocks[0].bytes * cfg.timesteps as u64
         );
         assert!(dma.pinned_sps_words > 0);
+        assert_eq!(dma.regime_counts(), (0, 0, 2));
+        assert_eq!(dma.resident_bytes(), 0);
     }
 
     #[test]
@@ -268,6 +312,13 @@ mod tests {
         let dma = DmaEngine::new(&m, &hw);
         assert!(dma.blocks.iter().all(|b| b.residency == WeightResidency::Thrash));
         assert!(dma.blocks.iter().all(|b| b.core == 0));
+        // Weight-resident timestep scheduling: fitting sets stream once
+        // per inference even when the slot rotation evicts them later.
+        let once: u64 = dma.blocks.iter().map(|b| b.bytes).sum();
+        assert_eq!(dma.streamed_bytes_per_inference(4), once);
+        assert!(!dma.has_sustained_traffic());
+        assert_eq!(dma.regime_counts(), (0, 3, 0));
+        assert_eq!(dma.resident_bytes(), once);
         // Spreading the same blocks over 3 cores restores residency.
         let dma = DmaEngine::new(
             &m,

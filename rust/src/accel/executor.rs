@@ -77,9 +77,14 @@ use super::workers::WorkerPool;
 /// weight working set, streamed over the shared
 /// [`DramBus`](crate::hw::DramBus) by the
 /// [`DmaEngine`](super::DmaEngine)'s plan — a segment's finish time is
-/// `max(compute-ready + compute, weights-resident)`, the excess is
-/// recorded as stall, and every transfer queues FIFO behind the input
-/// load and earlier weight streams. At unlimited bandwidth
+/// `max(compute-ready + compute, weights-resident, prefetch-issued)`,
+/// the excess is recorded as stall, and every transfer queues FIFO
+/// behind the input load and earlier weight streams. Resident blocks
+/// stream once; Thrash blocks stream once at first use (the block-outer
+/// loop order keeps a fitting block's set live across all timesteps);
+/// Streaming blocks re-stream every use, with the head of the transfer
+/// (up to one slot) prefetched into the slot freed `slots` uses ago
+/// while the tail waits for the previous use's slot. At unlimited bandwidth
 /// (`dram_bytes_per_cycle == usize::MAX`) every transfer completes
 /// instantly and the schedule is bit-identical to the memory-blind
 /// recurrence — the invariance the memory tests pin down.
@@ -250,21 +255,52 @@ impl PipelineExecution {
                             // overwriting on-chip state? (module docs of
                             // `accel::dma` — the stall formula.)
                             let recent = &core_use_done[plan.core];
-                            let release = match plan.residency {
-                                WeightResidency::Resident => 0,
-                                WeightResidency::Streaming => {
-                                    recent.last().copied().unwrap_or(0)
+                            let prev_use = recent.last().copied().unwrap_or(0);
+                            let slot_free = if recent.len() >= d.slots {
+                                recent[recent.len() - d.slots]
+                            } else {
+                                0
+                            };
+                            let client = &client_names[b];
+                            let tdone = match plan.residency {
+                                // Fitting sets stream once, released at
+                                // their slot's ring position (0 for a
+                                // Resident core that never rotates).
+                                WeightResidency::Resident => {
+                                    tl.request(client, plan.bytes, 0).1
                                 }
                                 WeightResidency::Thrash => {
-                                    if recent.len() >= d.slots {
-                                        recent[recent.len() - d.slots]
+                                    tl.request(client, plan.bytes, slot_free).1
+                                }
+                                // Oversized set: head/tail prefetch split.
+                                // Up to one slot of the stream moves into
+                                // the ping/pong slot freed `slots` uses
+                                // back, overlapping the previous use; the
+                                // tail waits for that use to finish. The
+                                // cycle split keeps head + tail at exactly
+                                // transfer_cycles(bytes), so the split
+                                // never costs more than the unsplit (PR 5)
+                                // stream at any bandwidth.
+                                WeightResidency::Streaming => {
+                                    let head_bytes = plan.bytes.min(d.slot_bytes);
+                                    let tail_bytes = plan.bytes - head_bytes;
+                                    if d.slots >= 2 && head_bytes > 0 && tail_bytes > 0 {
+                                        let bus = DramBus::new(d.bytes_per_cycle);
+                                        let tail_cycles = bus.transfer_cycles(tail_bytes);
+                                        let head_cycles =
+                                            bus.transfer_cycles(plan.bytes) - tail_cycles;
+                                        tl.request_with_cycles(
+                                            client, head_bytes, head_cycles, slot_free,
+                                        );
+                                        tl.request_with_cycles(
+                                            client, tail_bytes, tail_cycles, prev_use,
+                                        )
+                                        .1
                                     } else {
-                                        0
+                                        tl.request(client, plan.bytes, prev_use).1
                                     }
                                 }
                             };
-                            let client = &client_names[b];
-                            let (_, tdone) = tl.request(client, plan.bytes, release);
                             let done = (pos + compute).max(tdone);
                             let stall = done - (pos + compute);
                             if stall > 0 {
@@ -296,7 +332,13 @@ impl PipelineExecution {
         let memory = match (dma, timeline) {
             (Some(d), Some(mut tl)) => {
                 tl.book("output", d.output_bytes, io_output_cycles);
-                Some(tl.into_report())
+                let mut m = tl.into_report();
+                let (resident, thrash, streaming) = d.regime_counts();
+                m.resident_blocks = resident;
+                m.thrash_blocks = thrash;
+                m.streaming_blocks = streaming;
+                m.resident_bytes = d.resident_bytes();
+                Some(m)
             }
             _ => None,
         };
@@ -740,6 +782,10 @@ mod tests {
         DmaEngine {
             bytes_per_cycle: bw,
             slots: 2,
+            // No prefetch capacity: these pinned-value tests exercise the
+            // unsplit (PR 5) stream timing; the prefetch split has its own
+            // tests below.
+            slot_bytes: 0,
             blocks: (0..nblocks)
                 .map(|b| BlockPlan { words: bytes / 2, bytes, core: b % 2, residency })
                 .collect(),

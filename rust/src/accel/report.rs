@@ -12,6 +12,14 @@ use super::executor::PipelineExecution;
 pub struct StatSink {
     /// Phase-tagged stats.
     pub phases: PhaseStats,
+    /// Words a full re-store of every SDEB input tensor would write
+    /// (the `--temporal-delta` denominator; recorded whether or not the
+    /// flag is on).
+    pub spike_full_words: u64,
+    /// Words actually moved into the ESS for the SDEB input tensors —
+    /// equal to [`Self::spike_full_words`] with `--temporal-delta` off,
+    /// smaller when the per-channel XOR delta wins.
+    pub spike_moved_words: u64,
     /// (module, zeros, total) accumulated over timesteps.
     sparsity_acc: Vec<(String, u64, u64)>,
 }
@@ -25,6 +33,13 @@ impl StatSink {
     /// Accumulate `stats` under `phase`.
     pub fn add(&mut self, phase: &str, stats: UnitStats) {
         self.phases.add(phase, stats);
+    }
+
+    /// Record one SDEB input store: `full` words for a full re-store,
+    /// `moved` words actually written (equal with `--temporal-delta` off).
+    pub fn spike_traffic(&mut self, full: u64, moved: u64) {
+        self.spike_full_words += full;
+        self.spike_moved_words += moved;
     }
 
     /// Record the sparsity of an encoded spike tensor under `name`.
@@ -46,6 +61,8 @@ impl StatSink {
         for (name, st) in other.phases.phases {
             self.phases.add(&name, st);
         }
+        self.spike_full_words += other.spike_full_words;
+        self.spike_moved_words += other.spike_moved_words;
         for (name, zeros, total) in other.sparsity_acc {
             if let Some(r) = self.sparsity_acc.iter_mut().find(|r| r.0 == name) {
                 r.1 += zeros;
@@ -233,6 +250,15 @@ impl RunReport {
                 } else {
                     m.bytes_per_cycle.to_string()
                 }
+            ));
+            s.push_str(&format!(
+                "temporal: regimes resident={} thrash={} streaming={}  resident={:.2} MB  spike stores={:.3} MB moved / {:.3} MB full\n",
+                m.resident_blocks,
+                m.thrash_blocks,
+                m.streaming_blocks,
+                m.resident_bytes as f64 / 1e6, // as-ok: reporting ratio, not datapath state
+                m.spike_bytes_moved as f64 / 1e6, // as-ok: reporting ratio, not datapath state
+                m.spike_bytes_full as f64 / 1e6, // as-ok: reporting ratio, not datapath state
             ));
         }
         for (name, st) in &self.phases.phases {

@@ -9,6 +9,7 @@ use crate::hw::{AccelConfig, EngineKind, UnitStats};
 use crate::lif::LifParams;
 use crate::quant::QTensor;
 use crate::scratch::ExecScratch;
+use crate::spike::PackedBitmap;
 use crate::units::{
     AdderModule, SmamOutput, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule,
 };
@@ -35,6 +36,11 @@ pub struct SdebCore {
     adder: AdderModule,
     tokens: usize,
     dim: usize,
+    // Previous timestep's SDEB input bitmap for `--temporal-delta`: the
+    // buffer is kept across `reset()` (recycled, not reallocated) while
+    // the flag below gates its validity.
+    prev_in: Option<PackedBitmap>,
+    prev_in_valid: bool,
 }
 
 impl SdebCore {
@@ -60,11 +66,14 @@ impl SdebCore {
             adder: AdderModule::new(),
             tokens,
             dim,
+            prev_in: None,
+            prev_in_valid: false,
         }
     }
 
     /// Clear every encode site's LIF membrane state (between inferences).
     pub fn reset(&mut self) {
+        self.prev_in_valid = false;
         self.sea_in.reset();
         self.sea_q.reset();
         self.sea_k.reset();
@@ -155,7 +164,27 @@ impl SdebCore {
         let (s_in, st) = self.sea_in.encode_into(&cl, cfg, scratch);
         sink.add("sdeb.encode", st);
         sink.sparsity(&format!("block{bi}.in.spikes"), &s_in);
-        buffers.store_encoded(&s_in, t)?;
+        // Temporal-delta accounting for the ESS input store: with the flag
+        // on, only the per-channel cheaper of (XOR delta vs full re-store)
+        // crosses the write ports; values are untouched either way — this
+        // is charging, not datapath state.
+        let full_words = s_in.storage_words();
+        let mut moved_words = full_words;
+        if cfg.temporal_delta {
+            let mut curr = scratch.take_bitmap(s_in.channels, s_in.tokens);
+            curr.fill_from_encoded(&s_in);
+            if self.prev_in_valid {
+                if let Some(prev) = self.prev_in.as_ref() {
+                    moved_words = crate::spike::delta::moved_words(prev, &curr, &s_in);
+                }
+            }
+            if let Some(old) = self.prev_in.replace(curr) {
+                scratch.put_bitmap(old);
+            }
+            self.prev_in_valid = true;
+        }
+        sink.spike_traffic(full_words as u64, moved_words as u64); // as-ok: widening for 64-bit stat/cycle math
+        buffers.store_encoded_moved(&s_in, moved_words, t)?;
 
         // Q/K/V projections on the Spike Linear Array + SEA fire.
         let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, mode, scratch);

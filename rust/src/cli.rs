@@ -93,6 +93,10 @@ COMMANDS:
                              bit-identical across engines)
              --engine-threshold X   adaptive crossover density in [0,1]
                              (implies --engine adaptive; default 0.02)
+             --temporal-delta   charge the SDEB input load with only the
+                             addresses that changed since the previous
+                             timestep (per-channel XOR delta vs full
+                             re-store; values stay bit-identical)
              --serial        charge phases serially instead of executing
                              the overlapped core pipeline (ablation; no
                              memory lane)
@@ -107,6 +111,7 @@ COMMANDS:
              --sdeb-cores N --mapping P   topology/mapping of sim workers
              --dram-bw N     sim workers' bus bytes/cycle (or `max`)
              --engine E --engine-threshold X   sim workers' spike engine
+             --temporal-delta   delta-charge sim workers' SDEB input loads
              --serial        serial-charging simulator workers (ablation)
   sweep      lane-count x SDEB-core-count parallelism sweep (ablation A2)
   help       this message

@@ -12,6 +12,11 @@
 
 use anyhow::{bail, Result};
 
+/// Module-level alias of [`EngineSelect::DEFAULT_ADAPTIVE_THRESHOLD`] so
+/// benches and tools can import the calibrated crossover density without
+/// naming the policy enum (re-exported from [`crate::hw`]).
+pub const DEFAULT_ADAPTIVE_THRESHOLD: f64 = EngineSelect::DEFAULT_ADAPTIVE_THRESHOLD;
+
 /// Which of the two datapath engines executed a work unit — the value an
 /// [`EngineSelect`] policy resolves to once a density measurement is in
 /// hand. Every spike-consuming unit kernel (SLU/SMU/SMAM) has one
@@ -283,6 +288,17 @@ pub struct AccelConfig {
     /// other policies swap in the packed-bitmap engine per work unit
     /// with bit-identical values and engine-specific cycle accounting.
     pub engine: EngineSelect,
+    /// Temporal-reuse delta streaming for the SDEB input spike load (the
+    /// `--temporal-delta` CLI flag; see DESIGN.md "Temporal reuse & delta
+    /// streaming"). When on, each SDEB core compares timestep `t`'s input
+    /// spike frame against timestep `t-1`'s and charges the ESS store for
+    /// only the changed addresses whenever the per-channel XOR delta is
+    /// cheaper than a full re-store. Values, phases and `UnitStats` are
+    /// bit-identical with the flag on or off — only the modelled spike
+    /// traffic (SRAM write counters, `MemoryReport` spike bytes) moves.
+    /// Default off until the `units_micro` delta bench proves the
+    /// crossover on a given workload.
+    pub temporal_delta: bool,
 }
 
 impl AccelConfig {
@@ -314,6 +330,7 @@ impl AccelConfig {
             weight_slots: 2,
             topology: CoreTopology::paper(),
             engine: EngineSelect::Csr,
+            temporal_delta: false,
         }
     }
 
@@ -332,6 +349,7 @@ impl AccelConfig {
             weight_slots: 2,
             topology: CoreTopology::paper(),
             engine: EngineSelect::Csr,
+            temporal_delta: false,
         }
     }
 
@@ -356,6 +374,7 @@ impl AccelConfig {
             weight_slots: p.weight_slots,
             topology: p.topology,
             engine: p.engine,
+            temporal_delta: p.temporal_delta,
         };
         cfg.validate().expect("scaled AccelConfig invalid");
         cfg
@@ -635,6 +654,15 @@ mod tests {
         assert_eq!(AccelConfig::paper().engine, EngineSelect::Csr);
         assert_eq!(EngineSelect::adaptive().name(), "adaptive");
         assert_eq!(EngineKind::Bitmap.name(), "bitmap");
+    }
+
+    #[test]
+    fn temporal_delta_defaults_off_everywhere() {
+        assert!(!AccelConfig::paper().temporal_delta);
+        assert!(!AccelConfig::small().temporal_delta);
+        assert!(!AccelConfig::with_lanes(512).temporal_delta);
+        // The module-level alias tracks the policy constant.
+        assert_eq!(DEFAULT_ADAPTIVE_THRESHOLD, EngineSelect::DEFAULT_ADAPTIVE_THRESHOLD);
     }
 
     #[test]

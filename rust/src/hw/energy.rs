@@ -67,6 +67,16 @@ impl EnergyModel {
         bytes as f64 * self.pj_dram_byte * 1e-12
     }
 
+    /// Informational: SRAM write energy saved by a delta spike store that
+    /// moved `moved` of `full` words, in Joules. The report's energy
+    /// basis already counts only the moved words (the cores charge
+    /// `sram_writes` through the delta-aware store), so this helper
+    /// exists for analysis output — it is never added to or subtracted
+    /// from a stats record.
+    pub fn spike_store_saved_j(&self, full: u64, moved: u64) -> f64 {
+        full.saturating_sub(moved) as f64 * self.pj_sram_write * 1e-12
+    }
+
     /// Dynamic energy of a stats record, in Joules.
     pub fn dynamic_j(&self, s: &UnitStats) -> f64 {
         (s.adds as f64 * self.pj_add
@@ -159,6 +169,15 @@ mod tests {
             let s = UnitStats { dram_bytes: bytes, ..Default::default() };
             assert!((m.weight_stream_j(bytes) - m.dynamic_j(&s)).abs() < 1e-24, "{bytes}");
         }
+    }
+
+    #[test]
+    fn spike_store_savings_price_the_write_term() {
+        let m = EnergyModel::default();
+        let s = UnitStats { sram_writes: 70, ..Default::default() };
+        assert!((m.spike_store_saved_j(100, 30) - m.dynamic_j(&s)).abs() < 1e-24);
+        assert_eq!(m.spike_store_saved_j(30, 30), 0.0);
+        assert_eq!(m.spike_store_saved_j(30, 100), 0.0, "moved > full saturates to zero");
     }
 
     #[test]

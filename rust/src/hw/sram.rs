@@ -46,6 +46,27 @@ impl SramBank {
         Ok(())
     }
 
+    /// Allocate `n` words but charge only `written` word writes — the
+    /// delta-store path, where the bank must hold the full tensor (the
+    /// prior frame's copy is patched in place) yet only the changed
+    /// addresses cross the write ports. `written` never exceeds `n`.
+    pub fn alloc_delta(&mut self, n: usize, written: usize) -> Result<()> {
+        debug_assert!(written <= n, "delta writes exceed the full store in `{}`", self.name);
+        if self.used + n > self.words {
+            bail!(
+                "SRAM bank `{}` overflow: {} + {} > {} words",
+                self.name,
+                self.used,
+                n,
+                self.words
+            );
+        }
+        self.used += n;
+        self.peak_used = self.peak_used.max(self.used);
+        self.writes += written as u64;
+        Ok(())
+    }
+
     /// Free `n` words (consumed by a downstream unit / double-buffer swap).
     pub fn free(&mut self, n: usize) {
         debug_assert!(n <= self.used, "freeing more than allocated in `{}`", self.name);
@@ -112,6 +133,17 @@ mod tests {
         b.alloc(100).unwrap();
         b.free(100);
         assert!((b.utilization() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delta_alloc_reserves_full_but_charges_partial() {
+        let mut b = SramBank::new("ess0", 100);
+        b.alloc_delta(60, 12).unwrap();
+        assert_eq!(b.used, 60);
+        assert_eq!(b.peak_used, 60);
+        assert_eq!(b.writes, 12);
+        // Capacity is still checked against the full reservation.
+        assert!(b.alloc_delta(50, 0).is_err());
     }
 
     #[test]

@@ -65,8 +65,8 @@ fn exec_mode(args: &Args) -> ExecMode {
 
 /// The paper hardware point with the CLI's topology, memory and engine
 /// overrides (`--sdeb-cores N`, `--pipeline-depth N`, `--dram-bw N|max`,
-/// `--engine csr|bitmap|adaptive`, `--engine-threshold X`) applied and
-/// validated.
+/// `--engine csr|bitmap|adaptive`, `--engine-threshold X`,
+/// `--temporal-delta`) applied and validated.
 fn hw_from_args(args: &Args) -> Result<AccelConfig> {
     let mut hw = AccelConfig::paper();
     hw.topology.sdeb_cores = args.usize_or("sdeb-cores", hw.topology.sdeb_cores)?;
@@ -80,6 +80,9 @@ fn hw_from_args(args: &Args) -> Result<AccelConfig> {
     }
     if let Some(th) = args.get("engine-threshold") {
         hw.engine = EngineSelect::Adaptive { threshold: th.parse()? };
+    }
+    if args.has_flag("temporal-delta") {
+        hw.temporal_delta = true;
     }
     hw.validate()?;
     Ok(hw)

@@ -190,6 +190,22 @@ impl PackedBitmap {
         v
     }
 
+    /// XOR every word of `other` into `self` (shape-asserted). The
+    /// temporal-delta apply/undo primitive: `prev ^= delta` reconstructs
+    /// the current frame from the previous one, and XOR-ing twice restores
+    /// it — both directions are exercised by the `spike::delta` round-trip
+    /// tests. Tail bits stay zero because both operands keep theirs zero.
+    pub fn xor_with(&mut self, other: &Self) {
+        assert_eq!(
+            (self.channels, self.tokens),
+            (other.channels, other.tokens),
+            "bitmap shape mismatch"
+        );
+        for (w, &o) in self.words.iter_mut().zip(&other.words) {
+            *w ^= o;
+        }
+    }
+
     /// Popcount of the AND of two channel rows — the SMAM's word-parallel
     /// Q∩K intersection for one channel: `ceil(L/64)` word ops replace the
     /// CSR merge-join's `|Q|+|K|` comparator steps.
@@ -318,6 +334,27 @@ mod tests {
         bm.set(0, 0);
         bm.set(1, 3);
         assert!((bm.density() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn xor_with_is_an_involution() {
+        let mut rng = Prng::new(11);
+        let a = PackedBitmap::from_encoded(&random_encoded(&mut rng, 3, 70, 0.3));
+        let b = PackedBitmap::from_encoded(&random_encoded(&mut rng, 3, 70, 0.3));
+        let mut x = a.clone();
+        x.xor_with(&b);
+        // Tail bits stay zero, so the popcount is the symmetric difference.
+        let mut diff = 0usize;
+        for c in 0..3 {
+            for l in 0..70 {
+                if a.get(c, l) != b.get(c, l) {
+                    diff += 1;
+                }
+            }
+        }
+        assert_eq!(x.count_ones(), diff);
+        x.xor_with(&b);
+        assert_eq!(x, a, "xor twice must restore the original");
     }
 
     #[test]

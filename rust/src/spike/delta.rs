@@ -1,0 +1,352 @@
+//! Temporal delta encoding between consecutive spike frames (DESIGN.md
+//! "Temporal reuse & delta streaming").
+//!
+//! A spike-driven transformer runs T highly-correlated timesteps of the
+//! same image, so the frame a SDEB core loads at timestep `t` usually
+//! differs from the one it loaded at `t-1` in only a few addresses. This
+//! module provides the two delta kernels of the `--temporal-delta` path:
+//!
+//! * [`xor_delta_into`] — the word-parallel kernel on [`PackedBitmap`]:
+//!   XOR the two frames word by word and extract the changed bits with
+//!   the PR 7 trailing-zeros word-scan;
+//! * [`csr_delta_into`] — the address-streaming twin on
+//!   [`EncodedSpikes`]: a two-pointer symmetric-difference merge over the
+//!   sorted per-channel address slices.
+//!
+//! Both emit the same encoded delta (enforced by the tests below), and
+//! applying a delta is a plain [`PackedBitmap::xor_with`]:
+//! `prev ⊕ delta = curr`, and XOR-ing again restores `prev`.
+//!
+//! [`DeltaPlan`] is the per-channel decision — ship the delta only when
+//! its ESS word cost (changed addresses + headers of the segments they
+//! touch) undercuts a full re-store of the channel — and
+//! [`moved_words`] is the per-tensor measurement the SDEB core charges
+//! its input load with. Counting kernels are allocation-free; the
+//! `*_into` emitters follow the `take_enc` contract (empty, pre-shaped
+//! output arena) like every other hot-path producer.
+
+use crate::quant::SEGMENT_TOKENS;
+use crate::spike::bitmap::WORD_BITS;
+use crate::spike::{EncodedSpikes, PackedBitmap};
+
+/// Packed words covered by one 256-token address segment. The word-scan
+/// segment accounting below relies on `WORD_BITS` dividing
+/// `SEGMENT_TOKENS` so no word straddles a segment boundary (asserted in
+/// the tests).
+const WORDS_PER_SEGMENT: usize = SEGMENT_TOKENS / WORD_BITS;
+
+/// Per-(channel) transfer decision of the temporal-reuse path — the
+/// delta analogue of the PR 7 `EnginePlan`: given the measured cost of
+/// shipping only the changed addresses versus re-storing the channel in
+/// full, pick whichever moves fewer ESS words. Chosen independently per
+/// channel because temporal correlation is channel-local: a channel
+/// whose firing pattern repeats verbatim costs zero words under
+/// [`DeltaPlan::Delta`] even while a neighbouring channel churns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeltaPlan {
+    /// Re-store the channel's full address stream (the PR 5 behaviour;
+    /// also the forced choice for the first frame, which has no
+    /// predecessor to diff against).
+    Full,
+    /// Ship only the XOR delta against the previous frame.
+    Delta,
+}
+
+impl DeltaPlan {
+    /// Pick the cheaper transfer for one channel. Ties go to `Full`: at
+    /// equal cost the straight re-store needs no reconstruction step.
+    pub fn choose(delta_words: usize, full_words: usize) -> Self {
+        if delta_words < full_words {
+            DeltaPlan::Delta
+        } else {
+            DeltaPlan::Full
+        }
+    }
+
+    /// ESS words the chosen plan moves for this channel.
+    pub fn moved_words(delta_words: usize, full_words: usize) -> usize {
+        delta_words.min(full_words)
+    }
+
+    /// Short display name (bench tables, reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            DeltaPlan::Full => "full",
+            DeltaPlan::Delta => "delta",
+        }
+    }
+}
+
+/// ESS words channel `c`'s XOR delta would move: one word per changed
+/// address plus one header word per distinct 256-token segment a change
+/// touches — the same storage rule [`EncodedSpikes::storage_words`]
+/// charges a full stream with. Counting only; nothing is materialized.
+pub fn channel_delta_words(prev: &PackedBitmap, curr: &PackedBitmap, c: usize) -> usize {
+    let (a, b) = (prev.row(c), curr.row(c));
+    assert_eq!(a.len(), b.len(), "frame shape mismatch");
+    let mut addrs = 0usize;
+    let mut segs = 0usize;
+    let mut prev_seg = usize::MAX;
+    for (wi, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let d = x ^ y;
+        if d == 0 {
+            continue;
+        }
+        addrs += d.count_ones() as usize; // as-ok: u32 popcount widening
+        let seg = wi / WORDS_PER_SEGMENT;
+        if seg != prev_seg {
+            segs += 1;
+            prev_seg = seg;
+        }
+    }
+    addrs + segs
+}
+
+/// ESS words the whole-tensor input load moves under the per-channel
+/// [`DeltaPlan`]: for every channel, the cheaper of its XOR delta against
+/// the previous frame and a full re-store (`full` is the current frame's
+/// encoded form, whose per-channel cost is
+/// [`EncodedSpikes::channel_storage_words`]). This is the quantity the
+/// SDEB core charges the ESS store with when `--temporal-delta` is on;
+/// it never exceeds `full.storage_words()`.
+pub fn moved_words(prev: &PackedBitmap, curr: &PackedBitmap, full: &EncodedSpikes) -> usize {
+    assert_eq!(
+        (curr.channels(), curr.tokens()),
+        (full.channels, full.tokens),
+        "bitmap/encoded shape mismatch"
+    );
+    let mut total = 0usize;
+    for c in 0..full.channels {
+        let delta = channel_delta_words(prev, curr, c);
+        total += DeltaPlan::moved_words(delta, full.channel_storage_words(c));
+    }
+    total
+}
+
+/// Materialize the XOR delta of two frames into `out` (changed addresses,
+/// channel-major, sorted — the word-scan emits low bit first). `out` must
+/// be empty and shaped like the frames (the `take_enc` contract). The
+/// result satisfies `prev ⊕ out = curr` under
+/// [`PackedBitmap::xor_with`].
+pub fn xor_delta_into(prev: &PackedBitmap, curr: &PackedBitmap, out: &mut EncodedSpikes) {
+    assert_eq!(
+        (prev.channels(), prev.tokens()),
+        (curr.channels(), curr.tokens()),
+        "frame shape mismatch"
+    );
+    assert_eq!(
+        (curr.channels(), curr.tokens()),
+        (out.channels, out.tokens),
+        "bitmap/encoded shape mismatch"
+    );
+    for c in 0..curr.channels() {
+        let (a, b) = (prev.row(c), curr.row(c));
+        for (wi, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let mut bits = x ^ y;
+            while bits != 0 {
+                let l = wi * WORD_BITS + bits.trailing_zeros() as usize; // as-ok: u32 bit index widening
+                out.push(c, l);
+                bits &= bits - 1;
+            }
+        }
+    }
+}
+
+/// The CSR twin of [`xor_delta_into`]: per channel, a two-pointer
+/// symmetric-difference merge over the two sorted address slices —
+/// addresses present in exactly one frame are the changed ones. Same
+/// output contract; bit-identical to the word-parallel kernel (the
+/// engine-duality property the tests enforce).
+pub fn csr_delta_into(prev: &EncodedSpikes, curr: &EncodedSpikes, out: &mut EncodedSpikes) {
+    assert_eq!(
+        (prev.channels, prev.tokens),
+        (curr.channels, curr.tokens),
+        "frame shape mismatch"
+    );
+    assert_eq!(
+        (curr.channels, curr.tokens),
+        (out.channels, out.tokens),
+        "frame shape mismatch"
+    );
+    for c in 0..curr.channels {
+        let (a, b) = (prev.channel_addrs(c), curr.channel_addrs(c));
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => {
+                    out.push(c, a[i] as usize); // as-ok: narrow-int index widening
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(c, b[j] as usize); // as-ok: narrow-int index widening
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        for &l in &a[i..] {
+            out.push(c, l as usize); // as-ok: narrow-int index widening
+        }
+        for &l in &b[j..] {
+            out.push(c, l as usize); // as-ok: narrow-int index widening
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spike::SpikeMatrix;
+    use crate::util::Prng;
+
+    fn random_encoded(rng: &mut Prng, c: usize, l: usize, p: f64) -> EncodedSpikes {
+        let mut m = SpikeMatrix::zeros(c, l);
+        for ci in 0..c {
+            for li in 0..l {
+                if rng.bernoulli(p) {
+                    m.set(ci, li, true);
+                }
+            }
+        }
+        EncodedSpikes::from_bitmap(&m)
+    }
+
+    /// Flip each position of `base` with probability `flip` — the
+    /// temporally-correlated next frame.
+    fn correlated_next(rng: &mut Prng, base: &EncodedSpikes, flip: f64) -> EncodedSpikes {
+        let mut m = base.to_bitmap();
+        for c in 0..m.channels {
+            for l in 0..m.tokens {
+                if rng.bernoulli(flip) {
+                    let v = m.get(c, l);
+                    m.set(c, l, !v);
+                }
+            }
+        }
+        EncodedSpikes::from_bitmap(&m)
+    }
+
+    #[test]
+    fn word_bits_divide_the_segment() {
+        // channel_delta_words maps word index -> segment by integer
+        // division; a word must never straddle two segments.
+        assert_eq!(SEGMENT_TOKENS % WORD_BITS, 0);
+        assert!(WORDS_PER_SEGMENT >= 1);
+    }
+
+    #[test]
+    fn identical_frames_have_zero_delta() {
+        let mut rng = Prng::new(21);
+        let e = random_encoded(&mut rng, 6, 300, 0.3);
+        let bm = PackedBitmap::from_encoded(&e);
+        for c in 0..6 {
+            assert_eq!(channel_delta_words(&bm, &bm, c), 0);
+        }
+        assert_eq!(moved_words(&bm, &bm, &e), 0);
+        let mut out = EncodedSpikes::empty(6, 300);
+        xor_delta_into(&bm, &bm, &mut out);
+        assert_eq!(out.count_spikes(), 0);
+        let mut out2 = EncodedSpikes::empty(6, 300);
+        csr_delta_into(&e, &e, &mut out2);
+        assert_eq!(out2.count_spikes(), 0);
+    }
+
+    #[test]
+    fn xor_and_csr_kernels_agree() {
+        let mut rng = Prng::new(22);
+        for &(c, l, p, flip) in
+            &[(4usize, 64usize, 0.2, 0.05), (3, 300, 0.5, 0.3), (2, 1024, 0.05, 1.0)]
+        {
+            let prev = random_encoded(&mut rng, c, l, p);
+            let curr = correlated_next(&mut rng, &prev, flip);
+            let (pb, cb) = (PackedBitmap::from_encoded(&prev), PackedBitmap::from_encoded(&curr));
+            let mut via_xor = EncodedSpikes::empty(c, l);
+            xor_delta_into(&pb, &cb, &mut via_xor);
+            let mut via_csr = EncodedSpikes::empty(c, l);
+            csr_delta_into(&prev, &curr, &mut via_csr);
+            assert_eq!(via_xor, via_csr, "kernel mismatch at ({c},{l},{p},{flip})");
+            assert!(via_xor.is_well_formed());
+        }
+    }
+
+    #[test]
+    fn counting_kernel_matches_materialized_delta() {
+        let mut rng = Prng::new(23);
+        let prev = random_encoded(&mut rng, 5, 700, 0.2);
+        let curr = correlated_next(&mut rng, &prev, 0.1);
+        let (pb, cb) = (PackedBitmap::from_encoded(&prev), PackedBitmap::from_encoded(&curr));
+        let mut delta = EncodedSpikes::empty(5, 700);
+        xor_delta_into(&pb, &cb, &mut delta);
+        for c in 0..5 {
+            assert_eq!(
+                channel_delta_words(&pb, &cb, c),
+                delta.channel_storage_words(c),
+                "channel {c}: count-only kernel must price exactly the \
+                 words the materialized delta stores"
+            );
+        }
+    }
+
+    #[test]
+    fn delta_applies_and_round_trips() {
+        let mut rng = Prng::new(24);
+        let prev = random_encoded(&mut rng, 4, 200, 0.3);
+        let curr = correlated_next(&mut rng, &prev, 0.15);
+        let (pb, cb) = (PackedBitmap::from_encoded(&prev), PackedBitmap::from_encoded(&curr));
+        let mut delta = EncodedSpikes::empty(4, 200);
+        xor_delta_into(&pb, &cb, &mut delta);
+        let delta_bm = PackedBitmap::from_encoded(&delta);
+        let mut frame = pb.clone();
+        frame.xor_with(&delta_bm);
+        assert_eq!(frame, cb, "prev ^ delta must reconstruct curr");
+        frame.xor_with(&delta_bm);
+        assert_eq!(frame, pb, "applying the delta twice must restore prev");
+    }
+
+    #[test]
+    fn plan_picks_the_cheaper_transfer() {
+        assert_eq!(DeltaPlan::choose(3, 10), DeltaPlan::Delta);
+        assert_eq!(DeltaPlan::choose(10, 3), DeltaPlan::Full);
+        assert_eq!(DeltaPlan::choose(4, 4), DeltaPlan::Full, "ties re-store");
+        assert_eq!(DeltaPlan::moved_words(3, 10), 3);
+        assert_eq!(DeltaPlan::moved_words(10, 3), 3);
+        assert_eq!(DeltaPlan::Delta.name(), "delta");
+        assert_eq!(DeltaPlan::Full.name(), "full");
+    }
+
+    #[test]
+    fn moved_words_never_exceeds_a_full_restore() {
+        let mut rng = Prng::new(25);
+        for &flip in &[0.0, 0.05, 0.5, 1.0] {
+            let prev = random_encoded(&mut rng, 6, 400, 0.4);
+            let curr = correlated_next(&mut rng, &prev, flip);
+            let (pb, cb) =
+                (PackedBitmap::from_encoded(&prev), PackedBitmap::from_encoded(&curr));
+            let moved = moved_words(&pb, &cb, &curr);
+            assert!(
+                moved <= curr.storage_words(),
+                "moved {moved} > full {} at flip {flip}",
+                curr.storage_words()
+            );
+        }
+    }
+
+    #[test]
+    fn uncorrelated_frames_fall_back_to_full_per_channel() {
+        // An all-ones -> all-zeros step: the delta (every address) is
+        // strictly worse than re-storing the (empty) current frame, so the
+        // per-channel min must take the full side.
+        let mut m = SpikeMatrix::zeros(2, 64);
+        for l in 0..64 {
+            m.set(0, l, true);
+        }
+        let prev = EncodedSpikes::from_bitmap(&m);
+        let curr = EncodedSpikes::empty(2, 64);
+        let (pb, cb) = (PackedBitmap::from_encoded(&prev), PackedBitmap::from_encoded(&curr));
+        assert_eq!(channel_delta_words(&pb, &cb, 0), 64 + 1);
+        assert_eq!(moved_words(&pb, &cb, &curr), 0, "empty full stream wins");
+    }
+}

@@ -349,6 +349,14 @@ impl EncodedSpikes {
         self.addrs.len() + self.seg_headers.iter().map(|&h| h as usize).sum::<usize>() // as-ok: narrow-int index widening
     }
 
+    /// ESS storage words of channel `c` alone (addresses + that channel's
+    /// segment headers) — the per-channel cost the temporal delta plan
+    /// ([`DeltaPlan`](crate::spike::DeltaPlan)) compares a changed-address
+    /// stream against. O(1): both terms are maintained incrementally.
+    pub fn channel_storage_words(&self, c: usize) -> usize {
+        self.channel_len(c) + self.seg_headers[c] as usize // as-ok: narrow-int index widening
+    }
+
     /// Validity check used by property tests: offsets contiguous and
     /// monotone, addresses strictly sorted and in range per channel, and
     /// segment-header counts consistent with the addresses.

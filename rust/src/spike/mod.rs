@@ -12,9 +12,11 @@
 //!   the storage model accounts for.
 
 pub mod bitmap;
+pub mod delta;
 pub mod encoding;
 pub mod grid;
 
 pub use bitmap::PackedBitmap;
+pub use delta::{csr_delta_into, xor_delta_into, DeltaPlan};
 pub use encoding::{EncodedSpikes, EncodedSpikesBuilder, SpikeMatrix};
 pub use grid::TokenGrid;

@@ -640,6 +640,24 @@ mod tests {
     }
 
     #[test]
+    fn delta_kernel_hot_paths_are_covered() {
+        // The temporal-delta emitters (`rust/src/spike/delta.rs`) follow
+        // the same `*_into` zero-alloc contract as every other hot-path
+        // producer: R3 must fire on an allocating delta kernel and R2 on
+        // an unannotated cast in the same file.
+        let bad = "pub fn xor_delta_into(a: &B, b: &B, out: &mut E) {\n    \
+                   let tmp: Vec<u64> = a.words().to_vec();\n    \
+                   let _ = tmp.len() as u64;\n    out.use_words(&tmp);\n}\n";
+        let v = lint_source("rust/src/spike/delta.rs", bad);
+        assert_eq!(rules(&v), ["alloc-in-into", "bare-cast"]);
+        let ok = "pub fn xor_delta_into(a: &B, b: &B, out: &mut E) {\n    \
+                  for (wi, w) in a.words().iter().enumerate() {\n        \
+                  let l = wi + w.trailing_zeros() as usize; // as-ok: u32 bit index widening\n        \
+                  out.push(0, l);\n    }\n}\n";
+        assert!(lint_source("rust/src/spike/delta.rs", ok).is_empty());
+    }
+
+    #[test]
     fn display_format_is_stable() {
         let v = Violation {
             file: "rust/src/x.rs".into(),
