@@ -18,7 +18,7 @@ use anyhow::Result;
 use spikeformer_accel::accel::{DatapathMode, ExecMode};
 use spikeformer_accel::coordinator::{
     BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, PjrtBackend, Request,
-    SimulatorBackend,
+    SchedulerConfig, ServeMode, SimulatorBackend,
 };
 use spikeformer_accel::hw::AccelConfig;
 use spikeformer_accel::model::{load_model, QuantizedModel, SdtModelConfig};
@@ -35,10 +35,20 @@ fn run_session(
     policy: BatchPolicy,
     imgs: &[Vec<f32>],
 ) -> Result<()> {
+    run_session_sched(label, factories, policy, SchedulerConfig::default(), imgs)
+}
+
+fn run_session_sched(
+    label: &str,
+    factories: Vec<BackendFactory>,
+    policy: BatchPolicy,
+    sched: SchedulerConfig,
+    imgs: &[Vec<f32>],
+) -> Result<()> {
     let started = Instant::now();
-    let mut co = Coordinator::new(factories, policy);
+    let mut co = Coordinator::with_scheduler(factories, policy, sched);
     for (i, img) in imgs.iter().enumerate() {
-        co.submit(Request { id: i as u64, image: img.clone() });
+        co.submit(Request::new(i as u64, img.clone()));
     }
     let (responses, report) = co.finish(started)?;
     assert_eq!(responses.len(), imgs.len());
@@ -87,6 +97,23 @@ fn main() -> Result<()> {
         );
         let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
         run_session(&format!("simulator workers={workers} max_batch=8"), factories, policy, &imgs)?;
+    }
+
+    println!("\n== continuous in-flight batching (lane refill between stage passes) ==");
+    for (workers, lanes) in [(2usize, 2usize), (2, 4)] {
+        let factories = GoldenBackend::factories(workers, &model);
+        let sched = SchedulerConfig {
+            mode: ServeMode::Continuous,
+            lane_capacity: lanes,
+            ..SchedulerConfig::default()
+        };
+        run_session_sched(
+            &format!("golden continuous workers={workers} lanes={lanes}"),
+            factories,
+            BatchPolicy::default(),
+            sched,
+            &imgs,
+        )?;
     }
 
     if Path::new("artifacts/model.hlo.txt").exists() {

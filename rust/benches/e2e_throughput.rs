@@ -38,7 +38,7 @@ fn drive(
     let started = Instant::now();
     let mut co = Coordinator::new(factories, policy);
     for (i, img) in imgs.iter().enumerate() {
-        co.submit(Request { id: i as u64, image: img.clone() });
+        co.submit(Request::new(i as u64, img.clone()));
     }
     let (_, report) = co.finish(started)?;
     Ok(report)

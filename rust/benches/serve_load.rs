@@ -1,0 +1,363 @@
+//! Bench S2 — open-loop serving latency under load: continuous in-flight
+//! batching vs release-a-batch-and-wait across arrival rates and fleet
+//! shapes.
+//!
+//! Latency numbers come from the deterministic virtual-clock fleet model
+//! (`coordinator::loadsim`), fed with *measured* per-request service
+//! times: each request's service demand is an accelerator inference's
+//! modelled wall cycles converted to seconds at the shape's clock, and
+//! heterogeneous worker speeds are probed cycle ratios between shapes.
+//! Arrivals come from the seeded open-loop generator
+//! (`benchlib::ArrivalSpec`), so every cell of the sweep replays
+//! bit-identically — no wall-clock flake, which is what lets `--quick`
+//! *assert* that continuous batching beats closed batching on p99.
+//!
+//! A small real-`Coordinator` burst cross-check runs at the end (host
+//! wall-clock, printed but never asserted) to tie the model back to the
+//! actual serving stack.
+//!
+//! ```bash
+//! cargo bench --bench serve_load                    # full sweep
+//! cargo bench --bench serve_load -- --quick         # CI smoke: small sweep + p99 assertion
+//! cargo bench --bench serve_load -- --json          # merge into BENCH_serving.json
+//! cargo bench --bench serve_load -- --arrival burst:8:0.05   # override the arrival process
+//! cargo bench --bench serve_load -- --requests N    # offered load per cell
+//! ```
+
+use std::time::{Duration, Instant};
+
+use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
+use spikeformer_accel::benchlib::{
+    arg_str, arg_value, arrival_offsets, merge_bench_json, section, ArrivalSpec,
+};
+use spikeformer_accel::coordinator::loadsim::{
+    simulate, SimConfig, SimMode, SimOutcome, SimRequest,
+};
+use spikeformer_accel::coordinator::{
+    BatchPolicy, Coordinator, Priority, Request, SchedulerConfig, ServeMode, SimulatorBackend,
+};
+use spikeformer_accel::hw::AccelConfig;
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+/// Seed for probe images and arrival draws.
+const SEED: u64 = 0x10ad;
+
+/// One swept cell's outcome row.
+struct Row {
+    fleet: &'static str,
+    mode: &'static str,
+    arrival: String,
+    util: f64,
+    offered: usize,
+    served: usize,
+    shed: usize,
+    mean_s: f64,
+    p50_s: f64,
+    p99_s: f64,
+    attainment: Option<f64>,
+}
+
+/// Measure per-request service seconds on the reference shape: modelled
+/// wall cycles of real inferences at the shape's clock.
+fn probe_services(model: &QuantizedModel, hw: &AccelConfig, n: usize) -> Vec<f64> {
+    let mut accel = Accelerator::with_runtime(
+        model.clone(),
+        *hw,
+        DatapathMode::Encoded,
+        ExecMode::Overlapped,
+        0,
+    );
+    let cfg = &model.cfg;
+    let mut rng = Prng::new(SEED);
+    (0..n)
+        .map(|_| {
+            let img: Vec<f32> = (0..cfg.in_channels * cfg.img_size * cfg.img_size)
+                .map(|_| rng.next_f32_signed())
+                .collect();
+            let report = accel.infer(&img).expect("probe inference failed");
+            hw.seconds(report.wall_cycles())
+        })
+        .collect()
+}
+
+/// Probe a shape's relative speed against the reference shape (same
+/// probe image, cycle ratio) — mirrors `SimulatorBackend::fleet_factories`.
+fn probe_speed(model: &QuantizedModel, reference: &AccelConfig, hw: &AccelConfig) -> f64 {
+    let cfg = &model.cfg;
+    let img: Vec<f32> = {
+        let mut rng = Prng::new(SEED);
+        (0..cfg.in_channels * cfg.img_size * cfg.img_size)
+            .map(|_| rng.next_f32_signed())
+            .collect()
+    };
+    let cycles = |shape: &AccelConfig| {
+        let mut accel = Accelerator::with_runtime(
+            model.clone(),
+            *shape,
+            DatapathMode::Encoded,
+            ExecMode::Overlapped,
+            0,
+        );
+        accel.infer(&img).expect("speed probe failed").wall_cycles().max(1) as f64
+    };
+    cycles(reference) / cycles(hw)
+}
+
+/// Deterministic priority mix: every 4th request High (with the SLO as a
+/// hard deadline), every 5th Low, the rest Normal.
+fn class_of(i: usize) -> Priority {
+    if i % 4 == 0 {
+        Priority::High
+    } else if i % 5 == 4 {
+        Priority::Low
+    } else {
+        Priority::Normal
+    }
+}
+
+fn build_requests(
+    offsets: &[f64],
+    services: &[f64],
+    slo_s: f64,
+) -> Vec<SimRequest> {
+    offsets
+        .iter()
+        .enumerate()
+        .map(|(i, &arrival)| {
+            let class = class_of(i);
+            SimRequest {
+                id: i as u64,
+                class,
+                arrival,
+                service: services[i % services.len()],
+                deadline: if class == Priority::High { Some(slo_s) } else { None },
+            }
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    fleet: &'static str,
+    speeds: &[f64],
+    mode_name: &'static str,
+    mode: SimMode,
+    arrival: &str,
+    util: f64,
+    reqs: &[SimRequest],
+    timesteps: u32,
+    slo_s: f64,
+) -> (Row, SimOutcome) {
+    let cfg = SimConfig {
+        mode,
+        speeds: speeds.to_vec(),
+        admission: None,
+        age_after: Some(slo_s * 4.0),
+        timesteps,
+    };
+    let out = simulate(&cfg, reqs);
+    let row = Row {
+        fleet,
+        mode: mode_name,
+        arrival: arrival.to_string(),
+        util,
+        offered: reqs.len(),
+        served: out.served(),
+        shed: out.shed(),
+        mean_s: out.mean_s(),
+        p50_s: out.p50_s(),
+        p99_s: out.p99_s(),
+        attainment: out.attainment(Some(slo_s)),
+    };
+    (row, out)
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<12} {:<11} {:<14} util={:<4.2} served={:<4} shed={:<3} p50={:>9.3} ms  p99={:>9.3} ms  slo={}",
+        r.fleet,
+        r.mode,
+        r.arrival,
+        r.util,
+        r.served,
+        r.shed,
+        r.p50_s * 1e3,
+        r.p99_s * 1e3,
+        r.attainment.map_or_else(|| "-".to_string(), |a| format!("{:.0}%", a * 100.0)),
+    );
+}
+
+fn write_json(model_name: &str, mean_service_s: f64, rows: &[Row]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
+    let mut entry = String::from("{\n");
+    entry.push_str(&format!(
+        "    \"config\": {{\"model\": \"{model_name}\", \"accel\": \"paper\", \"mean_service_s\": {mean_service_s:.6e}}},\n"
+    ));
+    entry.push_str(
+        "    \"units\": \"virtual-clock fleet model over measured service times (modelled accelerator cycles at the shape clock); util = offered rate / fleet capacity; p50_s/p99_s/mean_s = end-to-end served latency in seconds; attainment = fraction of SLO-targeted requests served in time (null when untargeted)\",\n",
+    );
+    entry.push_str("    \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        entry.push_str(&format!(
+            "      {{\"fleet\": \"{}\", \"mode\": \"{}\", \"arrival\": \"{}\", \"util\": {:.2}, \"offered\": {}, \"served\": {}, \"shed\": {}, \"mean_s\": {:.6e}, \"p50_s\": {:.6e}, \"p99_s\": {:.6e}, \"attainment\": {}}}{}\n",
+            r.fleet,
+            r.mode,
+            r.arrival,
+            r.util,
+            r.offered,
+            r.served,
+            r.shed,
+            r.mean_s,
+            r.p50_s,
+            r.p99_s,
+            r.attainment.map_or_else(|| "null".to_string(), |a| format!("{a:.4}")),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    entry.push_str("    ]\n  }");
+    match merge_bench_json(path, "serve_load", &entry) {
+        Ok(()) => println!("\nwrote {path} (section \"serve_load\")"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+/// Real-`Coordinator` burst cross-check: a small closed-vs-continuous run
+/// on the actual serving stack with simulator backends. Host wall-clock,
+/// printed for context, never asserted (that is what the virtual clock is
+/// for).
+fn coordinator_cross_check(model: &QuantizedModel, n_req: usize) {
+    section("real-coordinator cross-check (host wall-clock, not asserted)");
+    let cfg = &model.cfg;
+    let mut rng = Prng::new(SEED ^ 0xc0de);
+    let imgs: Vec<Vec<f32>> = (0..n_req)
+        .map(|_| {
+            (0..cfg.in_channels * cfg.img_size * cfg.img_size)
+                .map(|_| rng.next_f32_signed())
+                .collect()
+        })
+        .collect();
+    for (name, mode) in
+        [("closed-batch", ServeMode::ClosedBatch), ("continuous", ServeMode::Continuous)]
+    {
+        let (factories, speeds) = SimulatorBackend::fleet_factories(
+            model,
+            &[AccelConfig::paper(), AccelConfig::paper()],
+            DatapathMode::Encoded,
+            ExecMode::Overlapped,
+            0,
+            MappingPolicy::default(),
+        )
+        .expect("fleet construction failed");
+        let sched = SchedulerConfig {
+            mode,
+            lane_capacity: 4,
+            slo: Some(Duration::from_secs(30)),
+            worker_speeds: speeds,
+            ..SchedulerConfig::default()
+        };
+        let mut coord = Coordinator::with_scheduler(factories, BatchPolicy::default(), sched);
+        let started = Instant::now();
+        for (i, img) in imgs.iter().enumerate() {
+            coord
+                .submit(Request::new(i as u64, img.clone()).with_priority(class_of(i)));
+        }
+        let (responses, report) = coord.finish(started).expect("serving failed");
+        assert_eq!(responses.len(), n_req);
+        assert!(responses.iter().all(|r| r.is_ok()), "cross-check must serve everything");
+        println!("{name:<13} {}", report.summary());
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json = args.iter().any(|a| a == "--json");
+
+    // Same shape as the e2e bench: multi-head, multi-block so the probed
+    // service time reflects a pipeline with real head mapping.
+    let cfg = SdtModelConfig {
+        name: "serve".into(),
+        num_blocks: 2,
+        num_heads: 8,
+        ..SdtModelConfig::tiny()
+    };
+    let model = QuantizedModel::random(&cfg, 42);
+    let timesteps = u32::try_from(cfg.timesteps.max(1)).unwrap_or(u32::MAX);
+    let paper = AccelConfig::paper();
+    let half = AccelConfig::with_lanes(paper.lanes / 2);
+
+    section("probing service times (modelled cycles at the shape clock)");
+    let services = probe_services(&model, &paper, if quick { 3 } else { 8 });
+    let mean_service: f64 = services.iter().sum::<f64>() / services.len() as f64;
+    let half_speed = probe_speed(&model, &paper, &half);
+    println!(
+        "mean service {:.3} ms on paper shape; half-lane shape speed {:.2}x",
+        mean_service * 1e3,
+        half_speed
+    );
+    let slo_s = 8.0 * mean_service;
+
+    // Fleet shapes: homogeneous single/dual and a heterogeneous pair.
+    let fleets: Vec<(&'static str, Vec<f64>)> = vec![
+        ("1x-paper", vec![1.0]),
+        ("2x-paper", vec![1.0, 1.0]),
+        ("paper+half", vec![1.0, half_speed]),
+    ];
+    let utils: &[f64] = if quick { &[0.7] } else { &[0.3, 0.5, 0.7, 0.9] };
+    let n_req = arg_value(&args, "--requests").unwrap_or(if quick { 96 } else { 512 });
+    let arrival_override = arg_str(&args, "--arrival");
+
+    let mut rows = Vec::new();
+    let mut quick_pair: Option<(f64, f64)> = None; // (closed p99, continuous p99)
+    section("virtual-clock sweep: arrival rate x fleet x scheduling mode");
+    for (fleet, speeds) in &fleets {
+        let fleet = *fleet;
+        let capacity_rps = speeds.iter().sum::<f64>() / mean_service;
+        for &util in utils {
+            let rate = util * capacity_rps;
+            let spec_str = arrival_override
+                .clone()
+                .unwrap_or_else(|| format!("poisson:{rate:.3}"));
+            let spec = ArrivalSpec::parse(&spec_str).expect("bad --arrival spec");
+            let offsets = arrival_offsets(&spec, n_req, SEED);
+            let reqs = build_requests(&offsets, &services, slo_s);
+            let closed = SimMode::Closed { max_batch: 8, max_wait: 2.0 * mean_service };
+            let cont = SimMode::Continuous { lane_capacity: 4 };
+            let (row_c, out_c) = run_cell(
+                fleet, speeds, "closed", closed, &spec_str, util, &reqs, timesteps, slo_s,
+            );
+            let (row_k, out_k) = run_cell(
+                fleet, speeds, "continuous", cont, &spec_str, util, &reqs, timesteps, slo_s,
+            );
+            print_row(&row_c);
+            print_row(&row_k);
+            if fleet == "1x-paper" && (util - 0.7).abs() < 1e-9 && arrival_override.is_none() {
+                quick_pair = Some((out_c.p99_s(), out_k.p99_s()));
+            }
+            rows.push(row_c);
+            rows.push(row_k);
+        }
+    }
+
+    // The bench's headline claim, asserted on the deterministic model:
+    // at a fixed Poisson rate, continuous batching strictly beats the
+    // closed-batch discipline on p99.
+    if let Some((closed_p99, cont_p99)) = quick_pair {
+        assert!(
+            cont_p99 < closed_p99,
+            "continuous p99 {cont_p99} must be strictly below closed p99 {closed_p99}"
+        );
+        println!(
+            "\np99 check: continuous {:.3} ms < closed {:.3} ms at util 0.70 (poisson, 1x-paper)",
+            cont_p99 * 1e3,
+            closed_p99 * 1e3
+        );
+    }
+
+    coordinator_cross_check(&model, if quick { 6 } else { 16 });
+
+    if json {
+        write_json(&cfg.name, mean_service, &rows);
+    }
+}

@@ -104,6 +104,25 @@ impl BatchLane {
     }
 }
 
+/// One in-flight continuous-batching request: a checked-out [`BatchLane`]
+/// plus everything [`Accelerator::run_batched`] keeps per image, so a
+/// request admitted mid-flight accumulates exactly the accounting a
+/// batch-resident image would — retirement assembles a [`RunReport`]
+/// bit-identical to the per-call path.
+struct ActiveLane {
+    id: u64,
+    lane: BatchLane,
+    /// Next timestep this lane will execute (retires at `cfg.timesteps`).
+    t: usize,
+    qimg: QTensor,
+    io_in: UnitStats,
+    sps_sink: StatSink,
+    sdeb_sink: StatSink,
+    sps_per_t: Vec<u64>,
+    sdeb_segs: Vec<Vec<u64>>,
+    head_counts: Vec<u64>,
+}
+
 /// A full accelerator instance bound to one quantized model.
 pub struct Accelerator {
     /// Structural hardware parameters of this instance.
@@ -133,6 +152,9 @@ pub struct Accelerator {
     /// Per-image unit lanes for [`Self::infer_batch`], grown on demand and
     /// reused across batches.
     lanes: Vec<BatchLane>,
+    /// In-flight continuous-batching requests ([`Self::lane_admit`] /
+    /// [`Self::lane_step`]); empty outside continuous serving.
+    active: Vec<ActiveLane>,
 }
 
 impl Accelerator {
@@ -203,6 +225,7 @@ impl Accelerator {
             scratch_sps: ExecScratch::new(),
             scratch_sdeb: ExecScratch::new(),
             lanes: Vec::new(),
+            active: Vec::new(),
         }
     }
 
@@ -313,6 +336,11 @@ impl Accelerator {
 
     /// Run a full inference of one image (f32 CHW pixels).
     pub fn infer(&mut self, image: &[f32]) -> Result<RunReport> {
+        if !self.active.is_empty() {
+            return Err(anyhow!(
+                "continuous lanes in flight; drain lane_step before infer"
+            ));
+        }
         let cfg = self.model.cfg.clone();
         assert_eq!(image.len(), cfg.in_channels * cfg.img_size * cfg.img_size);
         self.reset();
@@ -415,6 +443,11 @@ impl Accelerator {
 
     /// The stage-major batched loop behind [`Self::infer_batch`].
     fn run_batched(&mut self, images: &[Vec<f32>]) -> Result<Vec<RunReport>> {
+        if !self.active.is_empty() {
+            return Err(anyhow!(
+                "continuous lanes in flight; drain lane_step before infer_batch"
+            ));
+        }
         let cfg = self.model.cfg.clone();
         let n = images.len();
         let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
@@ -572,6 +605,211 @@ impl Accelerator {
             self.scratch_sps.put_tensor(qimg);
         }
         Ok(reports)
+    }
+
+    /// Admit one request into a continuous-batching lane. The request
+    /// joins the in-flight set at timestep 0 and advances one timestep per
+    /// [`Self::lane_step`] pass alongside whatever else is in flight —
+    /// admission happens *between stage passes*, not at batch boundaries.
+    ///
+    /// Input transfer and quantization are charged here, exactly as
+    /// [`Self::infer_batch`] charges them at batch admission. Requires the
+    /// overlapped executor ([`ExecMode::Overlapped`]); request ids must be
+    /// unique within the in-flight set.
+    pub fn lane_admit(&mut self, id: u64, image: &[f32]) -> Result<()> {
+        if self.exec == ExecMode::Serial {
+            return Err(anyhow!("continuous lanes require the overlapped executor"));
+        }
+        let cfg = self.model.cfg.clone();
+        let want = cfg.in_channels * cfg.img_size * cfg.img_size;
+        if image.len() != want {
+            return Err(anyhow!(
+                "lane_admit: image has {} pixels, model wants {want}",
+                image.len()
+            ));
+        }
+        if self.active.iter().any(|a| a.id == id) {
+            return Err(anyhow!("lane_admit: request id {id} already in flight"));
+        }
+        self.buffers.reset();
+        let io_in = self.buffers.load_external(image.len() * 2, &self.hw)?;
+        let qimg = Self::quantize_image(
+            &mut self.scratch_sps,
+            image,
+            &[cfg.in_channels, cfg.img_size, cfg.img_size],
+        );
+        let mut lane = self.lanes.pop().unwrap_or_else(|| BatchLane::new(&self.model));
+        lane.reset();
+        self.active.push(ActiveLane {
+            id,
+            lane,
+            t: 0,
+            qimg,
+            io_in,
+            sps_sink: StatSink::new(),
+            sdeb_sink: StatSink::new(),
+            sps_per_t: Vec::with_capacity(cfg.timesteps),
+            sdeb_segs: Vec::with_capacity(cfg.timesteps),
+            head_counts: vec![0u64; cfg.embed_dim],
+        });
+        Ok(())
+    }
+
+    /// Advance every in-flight lane by one timestep (stage-major across
+    /// the set, like one timestep of [`Self::run_batched`]) and retire the
+    /// lanes that completed their final timestep, returning their
+    /// `(id, report)` pairs. Reports are bit-identical to a fresh
+    /// [`Self::infer`] of the same image.
+    ///
+    /// On error the whole in-flight set is aborted (abort semantics: the
+    /// partially-run requests are dropped and their unit lanes are
+    /// rebuilt on demand); the caller owns re-submission policy.
+    pub fn lane_step(&mut self) -> Result<Vec<(u64, RunReport)>> {
+        if self.active.is_empty() {
+            return Ok(Vec::new());
+        }
+        let timesteps = self.model.cfg.timesteps;
+        let mut active = std::mem::take(&mut self.active);
+        if let Err(e) = self.step_pass(&mut active) {
+            drop(active);
+            return Err(e);
+        }
+        let mut done = Vec::new();
+        for a in active {
+            if a.t >= timesteps {
+                done.push(self.retire_lane(a));
+            } else {
+                self.active.push(a);
+            }
+        }
+        Ok(done)
+    }
+
+    /// Number of requests currently in flight on continuous lanes.
+    pub fn lanes_in_flight(&self) -> usize {
+        self.active.len()
+    }
+
+    /// One stage-major pass over the in-flight set: SPS for every lane,
+    /// then every lane through block 0, block 1, ..., then head readout —
+    /// the [`Self::run_batched`] timestep body, except each lane runs its
+    /// *own* timestep `a.t` (lanes admitted mid-flight lag the rest).
+    fn step_pass(&mut self, active: &mut [ActiveLane]) -> Result<()> {
+        let cfg = self.model.cfg.clone();
+        let (l, d) = (cfg.num_tokens(), cfg.embed_dim);
+        let mapper = self.mapper;
+        let sdeb_rings = self.buffers.sdeb.len().max(1);
+        let n = active.len();
+        let mut streams: Vec<Option<QTensor>> = (0..n).map(|_| None).collect();
+
+        // SPS stage, every in-flight lane (conv weights stay hot).
+        for (i, a) in active.iter_mut().enumerate() {
+            let before = a.sps_sink.phases.total().cycles;
+            // Panic parity with the overlapped executor's producer task
+            // (see `run_batched`).
+            let sps_res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                a.lane.sps.run_timestep(
+                    &self.model,
+                    &a.qimg,
+                    &self.hw,
+                    self.mode,
+                    a.t,
+                    &mut self.buffers.sps,
+                    &mut a.sps_sink,
+                    &mut self.scratch_sps,
+                )
+            }));
+            let (u0_cl, enc3) = match sps_res {
+                Ok(res) => res?,
+                Err(_) => return Err(anyhow!("SPS pipeline stage panicked")),
+            };
+            a.sps_per_t.push(a.sps_sink.phases.total().cycles - before);
+            let mut u = self.scratch_sps.take_tensor(&[l, d], ACT_FRAC);
+            executor::u0_to_token_major_into(&u0_cl, l, d, &mut u);
+            self.scratch_sps.put_tensor(u0_cl);
+            self.scratch_sps.put_enc(enc3);
+            streams[i] = Some(u);
+        }
+        // SDEB stage, block-major across the in-flight set.
+        let mut seg_cursor: Vec<u64> =
+            active.iter().map(|a| a.sdeb_sink.phases.total().cycles).collect();
+        for a in active.iter_mut() {
+            a.sdeb_segs.push(Vec::with_capacity(cfg.num_blocks + 1));
+        }
+        for bi in 0..cfg.num_blocks {
+            for (i, a) in active.iter_mut().enumerate() {
+                let u = streams[i].take().expect("token tensor present");
+                let u = a.lane.sdebs[bi].run_timestep(
+                    &self.model.blocks[bi],
+                    u,
+                    &self.hw,
+                    self.mode,
+                    a.t,
+                    Some(mapper),
+                    Some(&self.pool),
+                    &mut self.buffers.sdeb[bi % sdeb_rings],
+                    &mut a.sdeb_sink,
+                    &mut self.scratch_sdeb,
+                )?;
+                streams[i] = Some(u);
+                let now = a.sdeb_sink.phases.total().cycles;
+                a.sdeb_segs.last_mut().unwrap().push(now - seg_cursor[i]);
+                seg_cursor[i] = now;
+            }
+        }
+        // Head readout, then advance each lane's clock.
+        for (i, a) in active.iter_mut().enumerate() {
+            let u = streams[i].take().expect("token tensor present");
+            executor::head_readout(
+                &mut a.lane.sea_head,
+                &u,
+                l,
+                d,
+                &self.hw,
+                &mut a.sdeb_sink,
+                &mut a.head_counts,
+                &mut self.scratch_sdeb,
+            );
+            self.scratch_sps.put_tensor(u);
+            let now = a.sdeb_sink.phases.total().cycles;
+            a.sdeb_segs.last_mut().unwrap().push(now - seg_cursor[i]);
+            seg_cursor[i] = now;
+            a.t += 1;
+        }
+        Ok(())
+    }
+
+    /// Assemble a completed lane's [`RunReport`] — the `run_batched`
+    /// report assembly, verbatim — and return its unit lane to the pool.
+    fn retire_lane(&mut self, a: ActiveLane) -> (u64, RunReport) {
+        let mut sink = StatSink::new();
+        let io_in_cycles = a.io_in.cycles;
+        sink.add("io.input", a.io_in);
+        sink.absorb(a.sps_sink);
+        sink.absorb(a.sdeb_sink);
+        let logits = self.head_logits(&a.head_counts);
+        let io_out = self.io_output_stats();
+        let io_out_cycles = io_out.cycles;
+        sink.add("io.output", io_out);
+        let dma = DmaEngine::new(&self.model, &self.hw);
+        let mut exec = PipelineExecution::with_memory(
+            io_in_cycles,
+            io_out_cycles,
+            a.sps_per_t,
+            a.sdeb_segs,
+            &self.hw.topology,
+            Some(&dma),
+        );
+        if let Some(m) = exec.memory.as_mut() {
+            m.spike_bytes_full = sink.spike_full_words * super::dma::WEIGHT_STREAM_BYTES;
+            m.spike_bytes_moved = sink.spike_moved_words * super::dma::WEIGHT_STREAM_BYTES;
+            self.buffers
+                .weight
+                .record_stream_writes(m.weight_bytes() / super::dma::WEIGHT_STREAM_BYTES);
+        }
+        self.scratch_sps.put_tensor(a.qimg);
+        self.lanes.push(a.lane);
+        (a.id, RunReport::from_sink_pipelined(logits, sink, exec, &self.hw, &self.energy))
     }
 
     /// The serial timestep loop: every phase charged back to back, no
@@ -739,6 +977,61 @@ mod tests {
         let r = accel.infer(&random_image(8)).unwrap();
         assert!(r.pipeline.is_none());
         assert_eq!(r.wall_cycles(), r.total.cycles);
+    }
+
+    #[test]
+    fn continuous_lanes_match_per_call_reports_bit_exactly() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let imgs: Vec<Vec<f32>> = (0..3).map(|s| random_image(40 + s)).collect();
+        let mut fresh = Accelerator::new(model.clone(), AccelConfig::small());
+        let want: Vec<_> = imgs.iter().map(|img| fresh.infer(img).unwrap()).collect();
+
+        let mut accel = Accelerator::new(model, AccelConfig::small());
+        // Staggered admission: lane 2 joins after the others have run a
+        // pass — the in-flight refill continuous serving relies on.
+        accel.lane_admit(0, &imgs[0]).unwrap();
+        accel.lane_admit(1, &imgs[1]).unwrap();
+        assert!(accel.infer(&imgs[0]).is_err(), "infer must refuse while lanes are in flight");
+        let mut got: Vec<Option<RunReport>> = vec![None, None, None];
+        let mut admitted_third = false;
+        while got.iter().any(|g| g.is_none()) {
+            for (id, report) in accel.lane_step().unwrap() {
+                let slot = usize::try_from(id).unwrap();
+                assert!(got[slot].is_none(), "request {id} retired twice");
+                got[slot] = Some(report);
+            }
+            if !admitted_third {
+                accel.lane_admit(2, &imgs[2]).unwrap();
+                admitted_third = true;
+            }
+        }
+        assert_eq!(accel.lanes_in_flight(), 0);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            let g = g.as_ref().unwrap();
+            assert_eq!(g.logits, w.logits, "image {i}: logits diverge");
+            assert_eq!(g.total.cycles, w.total.cycles, "image {i}: cycles diverge");
+            assert_eq!(g.wall_cycles(), w.wall_cycles(), "image {i}: schedule diverges");
+        }
+        // Lanes returned to the pool; per-call path usable again.
+        accel.infer(&imgs[0]).unwrap();
+    }
+
+    #[test]
+    fn lane_admit_rejects_bad_input_and_duplicates() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 11);
+        let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
+        assert!(accel.lane_admit(0, &[0.0; 7]).is_err(), "wrong pixel count must be refused");
+        accel.lane_admit(0, &random_image(1)).unwrap();
+        assert!(accel.lane_admit(0, &random_image(2)).is_err(), "duplicate id must be refused");
+        let mut serial = Accelerator::with_modes(
+            model,
+            AccelConfig::small(),
+            DatapathMode::Encoded,
+            ExecMode::Serial,
+        );
+        assert!(serial.lane_admit(0, &random_image(3)).is_err(), "serial exec has no lanes");
     }
 
     #[test]

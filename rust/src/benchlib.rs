@@ -250,6 +250,116 @@ pub fn merge_bench_json(path: &str, key: &str, entry_json: &str) -> std::io::Res
     std::fs::write(path, out)
 }
 
+/// Open-loop arrival process for load benches and the CLI `serve`
+/// command: where request *offsets* (seconds from session start) come
+/// from. Always seeded/explicit, so a given spec replays bit-identically.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalSpec {
+    /// Poisson process at `rate_rps` requests per second (seeded
+    /// exponential inter-arrival gaps).
+    Poisson {
+        /// Mean arrival rate, requests per second.
+        rate_rps: f64,
+    },
+    /// `burst` simultaneous requests every `period_s` seconds — the
+    /// worst case for a release-a-batch-and-wait scheduler.
+    Burst {
+        /// Requests per burst.
+        burst: usize,
+        /// Seconds between bursts.
+        period_s: f64,
+    },
+    /// Explicit offsets (seconds, one per request), e.g. replayed from a
+    /// production trace file. Wraps around if shorter than the request
+    /// count, shifting each wrap by the trace's span.
+    Trace(Vec<f64>),
+}
+
+impl ArrivalSpec {
+    /// Parse `poisson:RATE`, `burst:N:PERIOD_S`, or `trace:FILE` (one
+    /// float offset per line; `#` comments and blank lines ignored).
+    pub fn parse(s: &str) -> Result<ArrivalSpec, String> {
+        if let Some(rate) = s.strip_prefix("poisson:") {
+            let rate_rps: f64 =
+                rate.parse().map_err(|e| format!("bad poisson rate `{rate}`: {e}"))?;
+            if !(rate_rps.is_finite() && rate_rps > 0.0) {
+                return Err(format!("poisson rate must be positive, got `{rate}`"));
+            }
+            return Ok(ArrivalSpec::Poisson { rate_rps });
+        }
+        if let Some(rest) = s.strip_prefix("burst:") {
+            let (n, period) = rest
+                .split_once(':')
+                .ok_or_else(|| format!("burst spec `{rest}` needs N:PERIOD_S"))?;
+            let burst: usize = n.parse().map_err(|e| format!("bad burst size `{n}`: {e}"))?;
+            let period_s: f64 =
+                period.parse().map_err(|e| format!("bad burst period `{period}`: {e}"))?;
+            if burst == 0 || !(period_s.is_finite() && period_s >= 0.0) {
+                return Err(format!("burst spec `{rest}` needs N >= 1 and PERIOD_S >= 0"));
+            }
+            return Ok(ArrivalSpec::Burst { burst, period_s });
+        }
+        if let Some(file) = s.strip_prefix("trace:") {
+            let text = std::fs::read_to_string(file)
+                .map_err(|e| format!("cannot read trace `{file}`: {e}"))?;
+            let mut offsets = Vec::new();
+            for (ln, line) in text.lines().enumerate() {
+                let line = line.trim();
+                if line.is_empty() || line.starts_with('#') {
+                    continue;
+                }
+                let v: f64 = line
+                    .parse()
+                    .map_err(|e| format!("trace `{file}` line {}: {e}", ln + 1))?;
+                if !(v.is_finite() && v >= 0.0) {
+                    return Err(format!("trace `{file}` line {}: offsets must be >= 0", ln + 1));
+                }
+                offsets.push(v);
+            }
+            if offsets.is_empty() {
+                return Err(format!("trace `{file}` has no offsets"));
+            }
+            return Ok(ArrivalSpec::Trace(offsets));
+        }
+        Err(format!("unknown arrival spec `{s}` (poisson:RATE | burst:N:PERIOD_S | trace:FILE)"))
+    }
+}
+
+/// Generate `n` non-decreasing arrival offsets (seconds from session
+/// start) for a spec. Deterministic in `(spec, n, seed)`.
+pub fn arrival_offsets(spec: &ArrivalSpec, n: usize, seed: u64) -> Vec<f64> {
+    match spec {
+        ArrivalSpec::Poisson { rate_rps } => {
+            let rate = *rate_rps;
+            let mut rng = crate::util::Prng::new(seed);
+            let mut t = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    // Exponential inter-arrival gap via inverse CDF;
+                    // 1 - u is in (0, 1] so the log is always finite.
+                    let u = rng.next_f64();
+                    t += -(1.0 - u).ln() / rate;
+                    t
+                })
+                .collect()
+        }
+        ArrivalSpec::Burst { burst, period_s } => {
+            let (burst, period) = ((*burst).max(1), *period_s);
+            (0..n).map(|i| (i / burst) as f64 * period).collect()
+        }
+        ArrivalSpec::Trace(offsets) => {
+            // Wrap: repeat the trace shifted by its span per lap.
+            let span = offsets.last().copied().unwrap_or(0.0);
+            (0..n)
+                .map(|i| {
+                    let lap = i / offsets.len();
+                    offsets[i % offsets.len()] + lap as f64 * span
+                })
+                .collect()
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,5 +443,59 @@ mod tests {
             ]
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seeded_monotone_and_near_rate() {
+        let spec = ArrivalSpec::parse("poisson:100").unwrap();
+        let a = arrival_offsets(&spec, 2000, 7);
+        let b = arrival_offsets(&spec, 2000, 7);
+        assert_eq!(a, b, "same seed must replay bit-identically");
+        let c = arrival_offsets(&spec, 2000, 8);
+        assert_ne!(a, c, "different seed must differ");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets are non-decreasing");
+        // 2000 arrivals at 100 rps should span ~20 s; allow wide slack.
+        let span = *a.last().unwrap();
+        assert!((15.0..25.0).contains(&span), "poisson span {span} far from 20 s");
+    }
+
+    #[test]
+    fn burst_arrivals_group_exactly() {
+        let spec = ArrivalSpec::parse("burst:4:0.5").unwrap();
+        let offs = arrival_offsets(&spec, 10, 0);
+        assert_eq!(
+            offs,
+            vec![0.0, 0.0, 0.0, 0.0, 0.5, 0.5, 0.5, 0.5, 1.0, 1.0],
+            "4-wide bursts every 0.5 s"
+        );
+    }
+
+    #[test]
+    fn trace_arrivals_wrap_with_span_shift() {
+        let spec = ArrivalSpec::Trace(vec![0.0, 0.1, 0.4]);
+        let offs = arrival_offsets(&spec, 5, 0);
+        assert_eq!(offs, vec![0.0, 0.1, 0.4, 0.4, 0.5], "second lap shifts by the 0.4 s span");
+    }
+
+    #[test]
+    fn trace_files_parse_with_comments() {
+        let dir = std::env::temp_dir()
+            .join(format!("benchlib_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.txt");
+        std::fs::write(&path, "# offsets\n0.0\n\n0.25\n1.5\n").unwrap();
+        let spec = ArrivalSpec::parse(&format!("trace:{}", path.display())).unwrap();
+        assert_eq!(spec, ArrivalSpec::Trace(vec![0.0, 0.25, 1.5]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn arrival_spec_rejects_malformed() {
+        assert!(ArrivalSpec::parse("poisson:0").is_err());
+        assert!(ArrivalSpec::parse("poisson:abc").is_err());
+        assert!(ArrivalSpec::parse("burst:0:1.0").is_err());
+        assert!(ArrivalSpec::parse("burst:4").is_err());
+        assert!(ArrivalSpec::parse("trace:/no/such/file").is_err());
+        assert!(ArrivalSpec::parse("uniform:5").is_err());
     }
 }

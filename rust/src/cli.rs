@@ -107,6 +107,24 @@ COMMANDS:
              --weights DIR   --limit N
   serve      batched serving demo through the coordinator
              --workers N --requests N --backend sim|golden|pjrt --batch N
+             --continuous    continuous in-flight batching: workers refill
+                             drained lanes between stage passes instead of
+                             waiting for a whole batch to finish
+             --lanes N       per-worker in-flight lane cap (default 4;
+                             continuous mode only)
+             --fleet L1,L2,..   heterogeneous sim fleet: one worker per
+                             lane count, speed-aware dispatch (overrides
+                             --workers; sim backend only)
+             --arrival S     open-loop arrivals: poisson:RATE |
+                             burst:N:PERIOD_S | trace:FILE (one offset per
+                             line); default submits every request at once
+             --admission N   bounded admission queue: a push over capacity
+                             sheds the oldest lowest-class request
+             --priority-split F   fraction of traffic in the High class
+                             (and the same fraction Low); seeded draws
+             --slo MS        latency SLO for per-class attainment reports
+                             (also the deadline on High requests)
+             --seed N        arrival + priority draw seed
              --pool-workers N   per-simulator SDEB worker pool size
              --sdeb-cores N --mapping P   topology/mapping of sim workers
              --dram-bw N     sim workers' bus bytes/cycle (or `max`)

@@ -25,6 +25,34 @@ pub trait InferBackend {
     fn modelled_cycles(&self) -> u64 {
         0
     }
+
+    /// Largest number of in-flight continuous-batching lanes this backend
+    /// supports (`0` = lanes unsupported; a continuous-mode worker then
+    /// serves each admitted request as an immediate batch of one).
+    fn lane_capacity(&self) -> usize {
+        0
+    }
+
+    /// Admit one image into a free lane under caller ticket `id`
+    /// (continuous in-flight batching). The default implementation
+    /// refuses — see [`Self::lane_capacity`].
+    fn lane_admit(&mut self, _id: u64, _image: &[f32]) -> Result<()> {
+        anyhow::bail!("{}: continuous-batching lanes unsupported", self.name())
+    }
+
+    /// Advance every in-flight lane one stage pass, returning
+    /// `(id, logits)` for lanes that completed. On `Err` every in-flight
+    /// lane is aborted — the caller must answer the affected tickets
+    /// (the coordinator worker turns this into per-request error
+    /// responses).
+    fn lane_step(&mut self) -> Result<Vec<(u64, Vec<f32>)>> {
+        Ok(Vec::new())
+    }
+
+    /// Number of admitted-but-unfinished lanes.
+    fn lanes_in_flight(&self) -> usize {
+        0
+    }
 }
 
 /// Constructor run inside the worker thread that will own the backend.
@@ -101,6 +129,56 @@ impl SimulatorBackend {
             })
             .collect()
     }
+
+    /// One worker per hardware shape — a heterogeneous fleet with
+    /// distinct [`AccelConfig`]/`CoreTopology` per worker. Returns the
+    /// factories plus a relative speed hint per worker for
+    /// least-outstanding-work dispatch
+    /// ([`SchedulerConfig::worker_speeds`](super::SchedulerConfig)):
+    /// each shape runs one probe inference host-side and
+    /// `hint = shape0_cycles / shape_cycles` (worker 0 ≡ 1.0), so a
+    /// 2x-faster shape advertises a 2.0 hint and absorbs twice the
+    /// estimated outstanding work.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fleet_factories(
+        model: &QuantizedModel,
+        shapes: &[AccelConfig],
+        mode: DatapathMode,
+        exec: ExecMode,
+        pool_workers: usize,
+        policy: MappingPolicy,
+    ) -> Result<(Vec<BackendFactory>, Vec<f64>)> {
+        anyhow::ensure!(!shapes.is_empty(), "fleet needs at least one hardware shape");
+        let cfg = &model.cfg;
+        let probe: Vec<f32> = {
+            let mut rng = crate::util::Prng::new(0x5eed);
+            (0..cfg.in_channels * cfg.img_size * cfg.img_size)
+                .map(|_| rng.next_f32_signed())
+                .collect()
+        };
+        let mut probe_cycles = Vec::with_capacity(shapes.len());
+        for hw in shapes {
+            hw.validate()?;
+            let mut accel =
+                Accelerator::with_runtime(model.clone(), *hw, mode, exec, pool_workers)
+                    .with_mapping(policy);
+            probe_cycles.push(accel.infer(&probe)?.wall_cycles().max(1));
+        }
+        let reference = probe_cycles[0] as f64;
+        let speeds = probe_cycles.iter().map(|&c| reference / c as f64).collect();
+        let factories = shapes
+            .iter()
+            .map(|&hw| {
+                let m = model.clone();
+                Box::new(move || {
+                    let accel = Accelerator::with_runtime(m, hw, mode, exec, pool_workers)
+                        .with_mapping(policy);
+                    Ok(Box::new(Self { accel, cycles: 0 }) as Box<dyn InferBackend>)
+                }) as BackendFactory
+            })
+            .collect();
+        Ok((factories, speeds))
+    }
 }
 
 impl InferBackend for SimulatorBackend {
@@ -127,17 +205,48 @@ impl InferBackend for SimulatorBackend {
     fn modelled_cycles(&self) -> u64 {
         self.cycles
     }
+
+    fn lane_capacity(&self) -> usize {
+        match self.accel.exec {
+            // Lanes grow on demand; the coordinator bounds in-flight work.
+            ExecMode::Overlapped => usize::MAX,
+            // The serial ablation path is per-call only.
+            ExecMode::Serial => 0,
+        }
+    }
+
+    fn lane_admit(&mut self, id: u64, image: &[f32]) -> Result<()> {
+        self.accel.lane_admit(id, image)
+    }
+
+    fn lane_step(&mut self) -> Result<Vec<(u64, Vec<f32>)>> {
+        let done = self.accel.lane_step()?;
+        let mut out = Vec::with_capacity(done.len());
+        for (id, report) in done {
+            self.cycles += report.wall_cycles();
+            out.push((id, report.logits));
+        }
+        Ok(out)
+    }
+
+    fn lanes_in_flight(&self) -> usize {
+        self.accel.lanes_in_flight()
+    }
 }
 
 /// The dense golden executor (no hw accounting; fastest host path).
+/// Lane support is trivial — an admitted request completes on the next
+/// [`InferBackend::lane_step`] — which makes it the fast backend for
+/// scheduler tests.
 pub struct GoldenBackend {
     model: QuantizedModel,
+    pending: Vec<(u64, Vec<f32>)>,
 }
 
 impl GoldenBackend {
     /// Wrap a model.
     pub fn new(model: QuantizedModel) -> Self {
-        Self { model }
+        Self { model, pending: Vec::new() }
     }
 
     /// `n` identical worker factories for the
@@ -162,6 +271,28 @@ impl InferBackend for GoldenBackend {
     fn infer_batch(&mut self, images: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         let exec = GoldenExecutor::new(&self.model);
         Ok(images.iter().map(|img| exec.infer(img).logits).collect())
+    }
+
+    fn lane_capacity(&self) -> usize {
+        usize::MAX
+    }
+
+    fn lane_admit(&mut self, id: u64, image: &[f32]) -> Result<()> {
+        self.pending.push((id, image.to_vec()));
+        Ok(())
+    }
+
+    fn lane_step(&mut self) -> Result<Vec<(u64, Vec<f32>)>> {
+        let exec = GoldenExecutor::new(&self.model);
+        Ok(self
+            .pending
+            .drain(..)
+            .map(|(id, img)| (id, exec.infer(&img).logits))
+            .collect())
+    }
+
+    fn lanes_in_flight(&self) -> usize {
+        self.pending.len()
     }
 }
 
@@ -269,6 +400,54 @@ mod tests {
             over.modelled_cycles(),
             serial.modelled_cycles()
         );
+    }
+
+    #[test]
+    fn simulator_lane_engine_matches_batched_logits() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 19);
+        let imgs = images(3);
+        let mut batched = SimulatorBackend::new(model.clone(), AccelConfig::small());
+        let want = batched.infer_batch(&imgs).unwrap();
+        let mut cont = SimulatorBackend::new(model, AccelConfig::small());
+        assert!(cont.lane_capacity() > 0, "overlapped simulator must support lanes");
+        // Staggered admission: two up front, the third between passes —
+        // the in-flight refill the continuous coordinator relies on.
+        cont.lane_admit(0, &imgs[0]).unwrap();
+        cont.lane_admit(1, &imgs[1]).unwrap();
+        let mut got: Vec<Option<Vec<f32>>> = vec![None, None, None];
+        let mut admitted_third = false;
+        while got.iter().any(|g| g.is_none()) {
+            for (id, logits) in cont.lane_step().unwrap() {
+                got[id as usize] = Some(logits);
+            }
+            if !admitted_third {
+                cont.lane_admit(2, &imgs[2]).unwrap();
+                admitted_third = true;
+            }
+        }
+        assert_eq!(cont.lanes_in_flight(), 0);
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.as_ref().unwrap(), w, "continuous lanes diverge from batched");
+        }
+        assert!(cont.modelled_cycles() > 0);
+    }
+
+    #[test]
+    fn golden_lane_support_is_immediate() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 23);
+        let imgs = images(2);
+        let mut g = GoldenBackend::new(model.clone());
+        let want = g.infer_batch(&imgs).unwrap();
+        g.lane_admit(5, &imgs[0]).unwrap();
+        g.lane_admit(9, &imgs[1]).unwrap();
+        assert_eq!(g.lanes_in_flight(), 2);
+        let done = g.lane_step().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0], (5, want[0].clone()));
+        assert_eq!(done[1], (9, want[1].clone()));
+        assert_eq!(g.lanes_in_flight(), 0);
     }
 
     #[test]

@@ -1,20 +1,101 @@
 //! L3 request coordinator: a router + dynamic batcher + worker pool that
 //! drives inference backends (the cycle simulator, the dense golden
 //! executor, or the PJRT-compiled JAX model) and reports serving metrics
-//! (throughput, p50/p99 latency).
+//! (throughput, per-class p50/p99 latency, SLO attainment).
 //!
 //! The paper's contribution is the accelerator itself, so per the
 //! system-prompt taxonomy L3 here is a *thin but real* serving layer:
 //! process lifecycle, request queues, batching policy and metrics — enough
 //! that `examples/serve_batched` exercises a realistic deployment loop.
+//!
+//! Two serving disciplines are available ([`ServeMode`]):
+//!
+//! * **Closed-batch** — the classic release-a-batch-and-wait loop: the
+//!   [`DynamicBatcher`] closes a batch (size cap / wait timeout /
+//!   deadline pressure) and a worker runs it to completion.
+//! * **Continuous** — in-flight batching: workers admit requests into
+//!   backend lanes *between stage passes*
+//!   ([`InferBackend::lane_admit`] / [`InferBackend::lane_step`]), so a
+//!   drained lane refills immediately instead of idling until the whole
+//!   batch finishes — the batch-boundary-bubble elimination of LLM
+//!   serving engines, applied to spike-driven inference.
 
 pub mod backend;
 pub mod batcher;
+pub mod loadsim;
 pub mod server;
 
 pub use backend::{BackendFactory, GoldenBackend, InferBackend, PjrtBackend, SimulatorBackend};
 pub use batcher::{BatchPolicy, DynamicBatcher};
-pub use server::{Coordinator, ServeReport};
+pub use server::{
+    estimate_cost, ClassReport, Coordinator, DispatchPolicy, SchedulerConfig, ServeMode,
+    ServeReport,
+};
+
+use std::time::Duration;
+
+/// Scheduling class of a request: `High` is served first, `Low` is shed
+/// first under admission pressure. The batcher's aging rule keeps the
+/// classes starvation-free: a request that has waited past the aging
+/// threshold is scheduled as `High` regardless of its class.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive traffic, scheduled before the other classes.
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+    /// Best-effort traffic: scheduled last, shed first.
+    Low,
+}
+
+impl Priority {
+    /// Every class, in scheduling order (served-first first).
+    pub const ALL: [Priority; 3] = [Priority::High, Priority::Normal, Priority::Low];
+
+    /// Scheduling rank: 0 is served first, 2 is shed first.
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Lower-case class name for reports and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "high" => Ok(Priority::High),
+            "normal" => Ok(Priority::Normal),
+            "low" => Ok(Priority::Low),
+            other => Err(format!("unknown priority `{other}` (high|normal|low)")),
+        }
+    }
+}
+
+/// How a request left the system.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    /// Served successfully; `logits`/`predicted` are valid.
+    Ok,
+    /// Shed by admission control before reaching a worker.
+    Shed,
+    /// A worker accepted it but could not serve it; carries the backend
+    /// (or backend-construction) error text.
+    Error(String),
+}
 
 /// A single inference request.
 #[derive(Clone, Debug)]
@@ -23,6 +104,31 @@ pub struct Request {
     pub id: u64,
     /// CHW f32 pixels.
     pub image: Vec<f32>,
+    /// Scheduling class (default [`Priority::Normal`]).
+    pub priority: Priority,
+    /// Optional latency SLO measured from submission: feeds the
+    /// batcher's deadline-aware release and the report's SLO-attainment
+    /// accounting.
+    pub deadline: Option<Duration>,
+}
+
+impl Request {
+    /// A normal-priority request with no deadline.
+    pub fn new(id: u64, image: Vec<f32>) -> Self {
+        Self { id, image, priority: Priority::Normal, deadline: None }
+    }
+
+    /// Set the scheduling class.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the latency SLO (measured from submission).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// The completed response.
@@ -30,10 +136,54 @@ pub struct Request {
 pub struct Response {
     /// The originating request's id.
     pub id: u64,
-    /// Model output logits.
+    /// Model output logits (empty unless [`Outcome::Ok`]).
     pub logits: Vec<f32>,
-    /// Argmax class.
+    /// Argmax class (0 unless [`Outcome::Ok`]).
     pub predicted: usize,
-    /// Host wall-clock latency (queue + compute), seconds.
+    /// Host wall-clock latency (queue + service), seconds.
     pub latency_s: f64,
+    /// Seconds spent queued before a worker admitted the request.
+    pub queue_s: f64,
+    /// Seconds from worker admission to completion.
+    pub service_s: f64,
+    /// The originating request's scheduling class.
+    pub priority: Priority,
+    /// The originating request's deadline, seconds (if any).
+    pub deadline_s: Option<f64>,
+    /// How the request left the system.
+    pub outcome: Outcome,
+}
+
+impl Response {
+    /// True when the request was served successfully.
+    pub fn is_ok(&self) -> bool {
+        self.outcome == Outcome::Ok
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_ranks_and_names_round_trip() {
+        for p in Priority::ALL {
+            assert_eq!(p.name().parse::<Priority>().unwrap(), p);
+        }
+        assert!(Priority::High.rank() < Priority::Normal.rank());
+        assert!(Priority::Normal.rank() < Priority::Low.rank());
+        assert!("urgent".parse::<Priority>().is_err());
+        assert_eq!(Priority::default(), Priority::Normal);
+    }
+
+    #[test]
+    fn request_builders_set_class_and_deadline() {
+        let r = Request::new(7, vec![0.0; 4])
+            .with_priority(Priority::Low)
+            .with_deadline(Duration::from_millis(30));
+        assert_eq!(r.id, 7);
+        assert_eq!(r.priority, Priority::Low);
+        assert_eq!(r.deadline, Some(Duration::from_millis(30)));
+        assert_eq!(Request::new(8, vec![]).priority, Priority::Normal);
+    }
 }

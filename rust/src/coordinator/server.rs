@@ -1,15 +1,36 @@
 //! The coordinator proper: a submission queue feeding worker threads, each
-//! owning one backend instance; dynamic batching at the queue head;
+//! owning one backend instance; SLO-aware scheduling at the queue head;
 //! latency/throughput statistics on completion.
 //!
 //! Built on std threads + channels (tokio is unavailable offline); the
 //! topology — router thread, N workers, response collector — mirrors the
 //! vllm-style leader/worker layout the architecture guide calls for.
+//!
+//! Two serving disciplines ([`ServeMode`]):
+//!
+//! * **Closed-batch** — the [`DynamicBatcher`] closes a batch and one
+//!   worker runs it to completion; every request in the batch waits for
+//!   the slowest lane.
+//! * **Continuous** — each request is admitted into a backend lane the
+//!   moment a worker has one free ([`super::backend::InferBackend::lane_admit`]),
+//!   and workers interleave admission with stage passes
+//!   ([`super::backend::InferBackend::lane_step`]) — no batch-boundary
+//!   bubble.
+//!
+//! Dispatch is per-worker (one channel per worker, no shared queue racing)
+//! and load-aware: each worker exports outstanding-work gauges the
+//! dispatcher reads ([`DispatchPolicy`]); heterogeneous fleets weight the
+//! gauges by relative worker speed.
 
-use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use crate::util::sync::thread::JoinHandle;
-use crate::util::sync::{Arc, Mutex};
-use std::time::Instant;
+use crate::util::sync::Arc;
+// The dispatch gauges use std atomics directly (not the loom-swapped
+// `util::sync::atomic`): the coordinator is not part of the loom-modeled
+// concurrency core, and the gauges are monotone best-effort hints whose
+// worst-case staleness only affects load balance, never correctness.
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -17,16 +38,148 @@ use crate::util::{mean, percentile};
 
 use super::backend::BackendFactory;
 use super::batcher::{BatchPolicy, DynamicBatcher};
-use super::{Request, Response};
+use super::{Outcome, Priority, Request, Response};
 
-/// Serving statistics over one session.
+/// Which serving discipline the coordinator runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ServeMode {
+    /// Release-a-batch-and-wait (the PR 3 baseline policy).
+    #[default]
+    ClosedBatch,
+    /// Continuous in-flight batching: lanes refill between stage passes.
+    Continuous,
+}
+
+/// How the dispatcher picks a worker for the next batch/admission.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Least outstanding estimated work (speed-weighted cycle proxy from
+    /// [`estimate_cost`]) — the default.
+    #[default]
+    LeastOutstandingWork,
+    /// Least outstanding request count (speed-weighted queue depth).
+    QueueDepth,
+    /// Blind rotation (the PR 3 shared-channel behaviour, kept as the
+    /// ablation baseline).
+    RoundRobin,
+}
+
+/// Scheduling configuration beyond the batch-release policy.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Serving discipline.
+    pub mode: ServeMode,
+    /// Worker-selection policy.
+    pub dispatch: DispatchPolicy,
+    /// Per-worker in-flight lane cap in [`ServeMode::Continuous`]
+    /// (clamped to at least 1).
+    pub lane_capacity: usize,
+    /// Bounded admission queue (`None` = unbounded): a push over capacity
+    /// sheds the oldest request of the lowest class that does not outrank
+    /// the newcomer.
+    pub admission: Option<usize>,
+    /// Deadline-aware batch release: close a batch once a queued request
+    /// has burned this fraction of its SLO budget waiting.
+    pub deadline_frac: Option<f64>,
+    /// Session-wide latency SLO applied to requests without their own
+    /// deadline; feeds per-class SLO-attainment accounting.
+    pub slo: Option<Duration>,
+    /// Relative worker speeds for heterogeneous fleets (1.0 = reference;
+    /// padded with 1.0 / truncated to the worker count). See
+    /// [`super::backend::SimulatorBackend::fleet_factories`].
+    pub worker_speeds: Vec<f64>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            mode: ServeMode::ClosedBatch,
+            dispatch: DispatchPolicy::LeastOutstandingWork,
+            lane_capacity: 4,
+            admission: None,
+            deadline_frac: None,
+            slo: None,
+            worker_speeds: Vec::new(),
+        }
+    }
+}
+
+/// Host-side dispatch cost proxy for one request: a fixed per-request
+/// overhead plus the number of pixels whose magnitude clears the first
+/// encoding threshold — a deterministic stand-in for the encoded-spike
+/// count that drives the accelerator's input-dependent cycle cost.
+/// Recomputed identically on the dispatcher and the worker, so gauge
+/// increments always match decrements.
+pub fn estimate_cost(image: &[f32]) -> u64 {
+    let spiky = image.iter().filter(|v| v.abs() > 0.25).count();
+    1000 + u64::try_from(spiky).unwrap_or(u64::MAX)
+}
+
+/// Per-class serving statistics.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    /// Class name (`high` / `normal` / `low`).
+    pub class: &'static str,
+    /// Requests served successfully.
+    pub completed: usize,
+    /// Requests shed by admission control.
+    pub shed: usize,
+    /// Requests that terminated with a backend error.
+    pub errors: usize,
+    /// Mean latency over served requests, seconds.
+    pub mean_s: f64,
+    /// Median latency over served requests, seconds.
+    pub p50_s: f64,
+    /// p99 latency over served requests, seconds.
+    pub p99_s: f64,
+    /// Mean time-in-queue over served requests, seconds.
+    pub queue_mean_s: f64,
+    /// Mean time-in-service over served requests, seconds.
+    pub service_mean_s: f64,
+    /// The session SLO this class was measured against (seconds), if any.
+    pub slo_target_s: Option<f64>,
+    /// Fraction of requests with a latency target (own deadline or the
+    /// session SLO) that were served within it; shed/errored requests
+    /// with a target count as misses. `None` when no request had one.
+    pub slo_attainment: Option<f64>,
+}
+
+impl ClassReport {
+    /// One-line rendering for logs and benches.
+    pub fn summary(&self) -> String {
+        let slo = match self.slo_attainment {
+            Some(a) => format!("  slo_attainment={:.1}%", a * 100.0),
+            None => String::new(),
+        };
+        format!(
+            "class={:<6} completed={} shed={} errors={}  mean={:.2}ms p50={:.2}ms p99={:.2}ms  queue={:.2}ms service={:.2}ms{}",
+            self.class,
+            self.completed,
+            self.shed,
+            self.errors,
+            self.mean_s * 1e3,
+            self.p50_s * 1e3,
+            self.p99_s * 1e3,
+            self.queue_mean_s * 1e3,
+            self.service_mean_s * 1e3,
+            slo
+        )
+    }
+}
+
+/// Serving statistics over one session. Latency statistics cover served
+/// requests only; shed and errored requests are counted separately.
 #[derive(Clone, Debug)]
 pub struct ServeReport {
-    /// Requests completed.
+    /// Requests served successfully.
     pub completed: usize,
+    /// Requests shed by admission control.
+    pub shed: usize,
+    /// Requests that terminated with a backend error.
+    pub errors: usize,
     /// Wall-clock seconds of the session.
     pub wall_s: f64,
-    /// Completed requests per second.
+    /// Served requests per second.
     pub throughput_rps: f64,
     /// Mean request latency, seconds.
     pub latency_mean_s: f64,
@@ -34,25 +187,35 @@ pub struct ServeReport {
     pub latency_p50_s: f64,
     /// p99 request latency, seconds.
     pub latency_p99_s: f64,
-    /// Batches dispatched.
+    /// Mean time-in-queue, seconds.
+    pub queue_mean_s: f64,
+    /// Mean time-in-service, seconds.
+    pub service_mean_s: f64,
+    /// Batches dispatched (each continuous-mode admission counts as one).
     pub batches: usize,
-    /// Mean batch size.
+    /// Mean requests per dispatched batch.
     pub mean_batch: f64,
     /// Modelled accelerator cycles (simulator backends), summed over workers.
     pub modelled_cycles: u64,
+    /// Per-class breakdown (classes that saw traffic, scheduling order).
+    pub per_class: Vec<ClassReport>,
 }
 
 impl ServeReport {
     /// One-line rendering for logs and benches.
     pub fn summary(&self) -> String {
         format!(
-            "completed={}  wall={:.3}s  throughput={:.1} req/s  latency mean={:.2}ms p50={:.2}ms p99={:.2}ms  batches={} (mean size {:.2})",
+            "completed={} shed={} errors={}  wall={:.3}s  throughput={:.1} req/s  latency mean={:.2}ms p50={:.2}ms p99={:.2}ms (queue {:.2}ms + service {:.2}ms)  batches={} (mean size {:.2})",
             self.completed,
+            self.shed,
+            self.errors,
             self.wall_s,
             self.throughput_rps,
             self.latency_mean_s * 1e3,
             self.latency_p50_s * 1e3,
             self.latency_p99_s * 1e3,
+            self.queue_mean_s * 1e3,
+            self.service_mean_s * 1e3,
             self.batches,
             self.mean_batch
         )
@@ -60,161 +223,31 @@ impl ServeReport {
 }
 
 enum WorkerMsg {
+    /// A closed batch: run to completion, respond per request.
     Batch(Vec<(Request, Instant)>),
+    /// A continuous-mode admission: join the worker's in-flight lane set.
+    Admit(Request, Instant),
     Stop,
 }
 
-/// Multi-worker batching coordinator.
-pub struct Coordinator {
-    batcher: Arc<Mutex<DynamicBatcher>>,
-    workers: Vec<JoinHandle<u64>>,
-    work_tx: Sender<WorkerMsg>,
-    resp_rx: Receiver<(Response, usize)>,
-    dispatched: usize,
+/// Outstanding-work gauges one worker exports to the dispatcher:
+/// estimated cycles ([`estimate_cost`]) and request count. Incremented by
+/// the dispatcher at send, decremented by the worker *before* each
+/// response is sent — so once the coordinator has drained a response, the
+/// gauges already reflect the freed capacity and lane refill can proceed.
+struct WorkerShared {
+    cost: AtomicU64,
+    reqs: AtomicU64,
 }
 
-impl Coordinator {
-    /// Spawn one worker per factory; each worker constructs its own
-    /// backend in-thread (PJRT handles are not `Send`).
-    pub fn new(factories: Vec<BackendFactory>, policy: BatchPolicy) -> Self {
-        let (work_tx, work_rx) = channel::<WorkerMsg>();
-        let work_rx = Arc::new(Mutex::new(work_rx));
-        let (resp_tx, resp_rx) = channel::<(Response, usize)>();
-        let mut workers = Vec::new();
-        for factory in factories {
-            let rx = Arc::clone(&work_rx);
-            let tx = resp_tx.clone();
-            workers.push(crate::util::sync::thread::spawn(move || -> u64 {
-                let mut backend = match factory() {
-                    Ok(b) => b,
-                    Err(e) => {
-                        eprintln!("backend construction failed: {e:#}");
-                        return 0;
-                    }
-                };
-                loop {
-                    let msg = { rx.lock().unwrap().recv() };
-                    match msg {
-                        Ok(WorkerMsg::Batch(batch)) => {
-                            let size = batch.len();
-                            let images: Vec<Vec<f32>> =
-                                batch.iter().map(|(r, _)| r.image.clone()).collect();
-                            match backend.infer_batch(&images) {
-                                Ok(logits) => {
-                                    let done = Instant::now();
-                                    for ((req, t0), lg) in batch.into_iter().zip(logits) {
-                                        let predicted = argmax(&lg);
-                                        let resp = Response {
-                                            id: req.id,
-                                            logits: lg,
-                                            predicted,
-                                            latency_s: done.duration_since(t0).as_secs_f64(),
-                                        };
-                                        let _ = tx.send((resp, size));
-                                    }
-                                }
-                                Err(e) => {
-                                    eprintln!("worker backend error: {e:#}");
-                                }
-                            }
-                        }
-                        Ok(WorkerMsg::Stop) | Err(_) => break,
-                    }
-                }
-                backend.modelled_cycles()
-            }));
-        }
-        Self {
-            batcher: Arc::new(Mutex::new(DynamicBatcher::new(policy))),
-            workers,
-            work_tx,
-            resp_rx,
-            dispatched: 0,
-        }
-    }
-
-    /// Enqueue a request.
-    pub fn submit(&mut self, req: Request) {
-        self.batcher.lock().unwrap().push(req);
-        self.pump(false);
-    }
-
-    /// Move ready batches from the queue to the workers.
-    fn pump(&mut self, flush: bool) {
-        let mut b = self.batcher.lock().unwrap();
-        loop {
-            let batch = if flush {
-                let all = b.drain_all();
-                if all.is_empty() {
-                    None
-                } else {
-                    // respect max_batch even when flushing
-                    let mut rest = all;
-                    let take = rest.len().min(b.policy.max_batch);
-                    let batch: Vec<_> = rest.drain(..take).collect();
-                    for item in rest {
-                        b.push_back_with_time(item);
-                    }
-                    Some(batch)
-                }
-            } else {
-                b.take_batch(Instant::now())
-            };
-            match batch {
-                Some(batch) if !batch.is_empty() => {
-                    self.dispatched += batch.len();
-                    let _ = self.work_tx.send(WorkerMsg::Batch(batch));
-                }
-                _ => break,
-            }
-        }
-    }
-
-    /// Flush the queue, wait for all responses, stop workers, and report.
-    pub fn finish(mut self, started: Instant) -> Result<(Vec<Response>, ServeReport)> {
-        // Flush any waiting partial batches.
-        self.pump(true);
-        let mut responses = Vec::with_capacity(self.dispatched);
-        let mut batch_sizes = Vec::new();
-        while responses.len() < self.dispatched {
-            let (resp, size) = self.resp_rx.recv()?;
-            responses.push(resp);
-            batch_sizes.push(size);
-        }
-        for _ in 0..self.workers.len() {
-            let _ = self.work_tx.send(WorkerMsg::Stop);
-        }
-        let mut modelled_cycles = 0;
-        for w in self.workers {
-            modelled_cycles += w.join().unwrap_or(0);
-        }
-
-        let wall = started.elapsed().as_secs_f64();
-        let lats: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
-        // unique batches: every response carries its batch size; weight by 1/size
-        let batches = batch_sizes.iter().map(|&s| 1.0 / s as f64).sum::<f64>().round() as usize;
-        let report = ServeReport {
-            completed: responses.len(),
-            wall_s: wall,
-            throughput_rps: responses.len() as f64 / wall.max(1e-9),
-            latency_mean_s: mean(&lats),
-            latency_p50_s: percentile(&lats, 50.0),
-            latency_p99_s: percentile(&lats, 99.0),
-            batches,
-            mean_batch: if batches > 0 { responses.len() as f64 / batches as f64 } else { 0.0 },
-            modelled_cycles,
-        };
-        responses.sort_by_key(|r| r.id);
-        Ok((responses, report))
-    }
-}
-
-impl DynamicBatcher {
-    /// Requeue an already-timestamped item at the back (flush splitting).
-    pub fn push_back_with_time(&mut self, item: (Request, Instant)) {
-        // used only by the coordinator's flush path
-        self.push_raw(item);
-    }
+/// One request in a worker's continuous-mode lane set.
+struct InflightReq {
+    id: u64,
+    t0: Instant,
+    admitted: Instant,
+    est: u64,
+    priority: Priority,
+    deadline: Option<Duration>,
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -225,15 +258,582 @@ fn argmax(xs: &[f32]) -> usize {
         .unwrap_or(0)
 }
 
+/// Decrement the gauges and send a served response.
+#[allow(clippy::too_many_arguments)]
+fn respond_ok(
+    tx: &Sender<Response>,
+    shared: &WorkerShared,
+    est: u64,
+    id: u64,
+    priority: Priority,
+    deadline: Option<Duration>,
+    t0: Instant,
+    service_start: Instant,
+    done: Instant,
+    logits: Vec<f32>,
+) {
+    shared.cost.fetch_sub(est, Ordering::Relaxed);
+    shared.reqs.fetch_sub(1, Ordering::Relaxed);
+    let _ = tx.send(Response {
+        id,
+        predicted: argmax(&logits),
+        logits,
+        latency_s: done.duration_since(t0).as_secs_f64(),
+        queue_s: service_start.duration_since(t0).as_secs_f64(),
+        service_s: done.duration_since(service_start).as_secs_f64(),
+        priority,
+        deadline_s: deadline.map(|d| d.as_secs_f64()),
+        outcome: Outcome::Ok,
+    });
+}
+
+/// Decrement the gauges and send an error-terminated response, so the
+/// coordinator's drain always terminates (the PR 3 coordinator dropped
+/// failed batches on the floor and `finish()` hung forever).
+fn respond_error(
+    tx: &Sender<Response>,
+    shared: &WorkerShared,
+    req: Request,
+    t0: Instant,
+    now: Instant,
+    msg: &str,
+) {
+    shared.cost.fetch_sub(estimate_cost(&req.image), Ordering::Relaxed);
+    shared.reqs.fetch_sub(1, Ordering::Relaxed);
+    let wait = now.duration_since(t0).as_secs_f64();
+    let _ = tx.send(Response {
+        id: req.id,
+        logits: Vec::new(),
+        predicted: 0,
+        latency_s: wait,
+        queue_s: wait,
+        service_s: 0.0,
+        priority: req.priority,
+        deadline_s: req.deadline.map(|d| d.as_secs_f64()),
+        outcome: Outcome::Error(msg.to_string()),
+    });
+}
+
+/// The worker thread body. Returns the backend's modelled cycles, or the
+/// construction-failure message (propagated out of
+/// [`Coordinator::finish`] as an `Err`).
+fn run_worker(
+    factory: BackendFactory,
+    rx: Receiver<WorkerMsg>,
+    tx: Sender<Response>,
+    shared: Arc<WorkerShared>,
+) -> std::result::Result<u64, String> {
+    let mut backend = match factory() {
+        Ok(b) => b,
+        Err(e) => {
+            let msg = format!("backend construction failed: {e:#}");
+            // Keep answering so every routed request terminates with an
+            // error outcome instead of hanging the coordinator's drain.
+            while let Ok(m) = rx.recv() {
+                match m {
+                    WorkerMsg::Batch(batch) => {
+                        let now = Instant::now();
+                        for (req, t0) in batch {
+                            respond_error(&tx, &shared, req, t0, now, &msg);
+                        }
+                    }
+                    WorkerMsg::Admit(req, t0) => {
+                        respond_error(&tx, &shared, req, t0, Instant::now(), &msg);
+                    }
+                    WorkerMsg::Stop => break,
+                }
+            }
+            return Err(msg);
+        }
+    };
+    let lanes_ok = backend.lane_capacity() > 0;
+    let mut inflight: Vec<InflightReq> = Vec::new();
+    let mut stopping = false;
+    loop {
+        // Message intake: block when idle, poll when lanes are in flight
+        // — the poll between stage passes IS the continuous-batching
+        // refill point.
+        let mut msgs: Vec<WorkerMsg> = Vec::new();
+        if inflight.is_empty() && !stopping {
+            match rx.recv() {
+                Ok(m) => msgs.push(m),
+                Err(_) => stopping = true,
+            }
+        }
+        while !stopping {
+            match rx.try_recv() {
+                Ok(m) => msgs.push(m),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    stopping = true;
+                    break;
+                }
+            }
+        }
+        for m in msgs {
+            match m {
+                WorkerMsg::Stop => stopping = true,
+                WorkerMsg::Batch(batch) => {
+                    let service_start = Instant::now();
+                    let images: Vec<Vec<f32>> =
+                        batch.iter().map(|(r, _)| r.image.clone()).collect();
+                    match backend.infer_batch(&images) {
+                        Ok(all_logits) => {
+                            let done = Instant::now();
+                            for ((req, t0), logits) in batch.into_iter().zip(all_logits) {
+                                respond_ok(
+                                    &tx,
+                                    &shared,
+                                    estimate_cost(&req.image),
+                                    req.id,
+                                    req.priority,
+                                    req.deadline,
+                                    t0,
+                                    service_start,
+                                    done,
+                                    logits,
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            let msg = format!("worker backend error: {e:#}");
+                            let now = Instant::now();
+                            for (req, t0) in batch {
+                                respond_error(&tx, &shared, req, t0, now, &msg);
+                            }
+                        }
+                    }
+                }
+                WorkerMsg::Admit(req, t0) => {
+                    let service_start = Instant::now();
+                    if !lanes_ok {
+                        // Lane-less backends (serial simulator, PJRT)
+                        // degrade to an immediate batch of one.
+                        match backend.infer_batch(std::slice::from_ref(&req.image)) {
+                            Ok(mut all_logits) => respond_ok(
+                                &tx,
+                                &shared,
+                                estimate_cost(&req.image),
+                                req.id,
+                                req.priority,
+                                req.deadline,
+                                t0,
+                                service_start,
+                                Instant::now(),
+                                all_logits.pop().unwrap_or_default(),
+                            ),
+                            Err(e) => {
+                                let msg = format!("worker backend error: {e:#}");
+                                respond_error(&tx, &shared, req, t0, Instant::now(), &msg);
+                            }
+                        }
+                    } else {
+                        match backend.lane_admit(req.id, &req.image) {
+                            Ok(()) => inflight.push(InflightReq {
+                                id: req.id,
+                                t0,
+                                admitted: service_start,
+                                est: estimate_cost(&req.image),
+                                priority: req.priority,
+                                deadline: req.deadline,
+                            }),
+                            Err(e) => {
+                                let msg = format!("lane admission failed: {e:#}");
+                                respond_error(&tx, &shared, req, t0, Instant::now(), &msg);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !inflight.is_empty() {
+            match backend.lane_step() {
+                Ok(done) => {
+                    let now = Instant::now();
+                    for (id, logits) in done {
+                        let pos = inflight
+                            .iter()
+                            .position(|f| f.id == id)
+                            .expect("retired lane id is tracked");
+                        let f = inflight.swap_remove(pos);
+                        respond_ok(
+                            &tx,
+                            &shared,
+                            f.est,
+                            f.id,
+                            f.priority,
+                            f.deadline,
+                            f.t0,
+                            f.admitted,
+                            now,
+                            logits,
+                        );
+                    }
+                }
+                Err(e) => {
+                    // Abort semantics: the backend dropped its whole
+                    // in-flight set; error-terminate every ticket.
+                    let msg = format!("worker backend error: {e:#}");
+                    let now = Instant::now();
+                    for f in inflight.drain(..) {
+                        shared.cost.fetch_sub(f.est, Ordering::Relaxed);
+                        shared.reqs.fetch_sub(1, Ordering::Relaxed);
+                        let _ = tx.send(Response {
+                            id: f.id,
+                            logits: Vec::new(),
+                            predicted: 0,
+                            latency_s: now.duration_since(f.t0).as_secs_f64(),
+                            queue_s: f.admitted.duration_since(f.t0).as_secs_f64(),
+                            service_s: now.duration_since(f.admitted).as_secs_f64(),
+                            priority: f.priority,
+                            deadline_s: f.deadline.map(|d| d.as_secs_f64()),
+                            outcome: Outcome::Error(msg.clone()),
+                        });
+                    }
+                }
+            }
+        } else if stopping {
+            break;
+        }
+    }
+    Ok(backend.modelled_cycles())
+}
+
+/// Multi-worker scheduling coordinator.
+pub struct Coordinator {
+    batcher: DynamicBatcher,
+    workers: Vec<JoinHandle<std::result::Result<u64, String>>>,
+    worker_tx: Vec<Sender<WorkerMsg>>,
+    shared: Vec<Arc<WorkerShared>>,
+    speeds: Vec<f64>,
+    sched: SchedulerConfig,
+    resp_rx: Receiver<Response>,
+    /// Responses already in hand: drained worker responses plus
+    /// coordinator-side shed responses.
+    local: Vec<Response>,
+    dispatched: usize,
+    received: usize,
+    batches: usize,
+    rr: usize,
+}
+
+impl Coordinator {
+    /// Closed-batch coordinator with default scheduling — the PR 3
+    /// constructor, kept for existing callers.
+    pub fn new(factories: Vec<BackendFactory>, policy: BatchPolicy) -> Self {
+        Self::with_scheduler(factories, policy, SchedulerConfig::default())
+    }
+
+    /// Spawn one worker per factory; each worker constructs its own
+    /// backend in-thread (PJRT handles are not `Send`). Each worker gets
+    /// its own channel — dispatch picks the worker, workers never race on
+    /// a shared queue.
+    pub fn with_scheduler(
+        factories: Vec<BackendFactory>,
+        policy: BatchPolicy,
+        sched: SchedulerConfig,
+    ) -> Self {
+        assert!(!factories.is_empty(), "coordinator needs at least one worker");
+        let n = factories.len();
+        let (resp_tx, resp_rx) = channel::<Response>();
+        let mut workers = Vec::with_capacity(n);
+        let mut worker_tx = Vec::with_capacity(n);
+        let mut shared = Vec::with_capacity(n);
+        for factory in factories {
+            let (tx, rx) = channel::<WorkerMsg>();
+            let share = Arc::new(WorkerShared { cost: AtomicU64::new(0), reqs: AtomicU64::new(0) });
+            let resp = resp_tx.clone();
+            let ws = Arc::clone(&share);
+            workers.push(crate::util::sync::thread::spawn(move || run_worker(factory, rx, resp, ws)));
+            worker_tx.push(tx);
+            shared.push(share);
+        }
+        let mut speeds = sched.worker_speeds.clone();
+        speeds.truncate(n);
+        speeds.resize(n, 1.0);
+        for s in &mut speeds {
+            if !s.is_finite() || *s <= 0.0 {
+                *s = 1.0;
+            }
+        }
+        let batcher = DynamicBatcher::with_admission(policy, sched.admission, sched.deadline_frac);
+        Self {
+            batcher,
+            workers,
+            worker_tx,
+            shared,
+            speeds,
+            sched,
+            resp_rx,
+            local: Vec::new(),
+            dispatched: 0,
+            received: 0,
+            batches: 0,
+            rr: 0,
+        }
+    }
+
+    /// Enqueue a request. May shed (admission control): the victim gets an
+    /// [`Outcome::Shed`] response in the final response set.
+    pub fn submit(&mut self, req: Request) {
+        if let Some((victim, t0)) = self.batcher.push(req) {
+            self.local.push(shed_response(victim, t0, Instant::now()));
+        }
+        self.pump(false);
+    }
+
+    /// Speed-weighted outstanding-work score of worker `w` (lower = less
+    /// loaded).
+    fn worker_score(&self, w: usize) -> f64 {
+        let speed = self.speeds[w].max(1e-9);
+        match self.sched.dispatch {
+            DispatchPolicy::LeastOutstandingWork => {
+                self.shared[w].cost.load(Ordering::Relaxed) as f64 / speed
+            }
+            DispatchPolicy::QueueDepth => self.shared[w].reqs.load(Ordering::Relaxed) as f64 / speed,
+            DispatchPolicy::RoundRobin => 0.0,
+        }
+    }
+
+    /// Worker for the next closed batch (always succeeds).
+    fn pick_worker(&mut self) -> usize {
+        let n = self.workers.len();
+        if self.sched.dispatch == DispatchPolicy::RoundRobin {
+            let w = self.rr % n;
+            self.rr += 1;
+            return w;
+        }
+        let mut best = 0;
+        let mut best_score = f64::INFINITY;
+        for w in 0..n {
+            let score = self.worker_score(w);
+            if score < best_score {
+                best = w;
+                best_score = score;
+            }
+        }
+        best
+    }
+
+    /// Worker with a free continuous-mode lane, if any.
+    fn pick_lane_worker(&mut self) -> Option<usize> {
+        let n = self.workers.len();
+        let cap = u64::try_from(self.sched.lane_capacity.max(1)).unwrap_or(u64::MAX);
+        if self.sched.dispatch == DispatchPolicy::RoundRobin {
+            for k in 0..n {
+                let w = (self.rr + k) % n;
+                if self.shared[w].reqs.load(Ordering::Relaxed) < cap {
+                    self.rr = w + 1;
+                    return Some(w);
+                }
+            }
+            return None;
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for w in 0..n {
+            if self.shared[w].reqs.load(Ordering::Relaxed) >= cap {
+                continue;
+            }
+            let score = self.worker_score(w);
+            match best {
+                Some((_, b)) if score >= b => {}
+                _ => best = Some((w, score)),
+            }
+        }
+        best.map(|(w, _)| w)
+    }
+
+    /// Move work from the queue to the workers: ready batches
+    /// (closed-batch mode) or individual admissions into free lanes
+    /// (continuous mode). `flush` forces partial batches out.
+    fn pump(&mut self, flush: bool) {
+        match self.sched.mode {
+            ServeMode::ClosedBatch => loop {
+                let now = Instant::now();
+                let batch = if flush {
+                    self.batcher.take_batch_forced(now)
+                } else {
+                    match self.batcher.take_batch(now) {
+                        Some(b) => b,
+                        None => break,
+                    }
+                };
+                if batch.is_empty() {
+                    break;
+                }
+                let w = self.pick_worker();
+                for (req, _) in &batch {
+                    self.shared[w].cost.fetch_add(estimate_cost(&req.image), Ordering::Relaxed);
+                    self.shared[w].reqs.fetch_add(1, Ordering::Relaxed);
+                }
+                self.dispatched += batch.len();
+                self.batches += 1;
+                let _ = self.worker_tx[w].send(WorkerMsg::Batch(batch));
+            },
+            ServeMode::Continuous => loop {
+                if self.batcher.is_empty() {
+                    break;
+                }
+                let Some(w) = self.pick_lane_worker() else { break };
+                let Some((req, t0)) = self.batcher.pop_next(Instant::now()) else { break };
+                self.shared[w].cost.fetch_add(estimate_cost(&req.image), Ordering::Relaxed);
+                self.shared[w].reqs.fetch_add(1, Ordering::Relaxed);
+                self.dispatched += 1;
+                self.batches += 1;
+                let _ = self.worker_tx[w].send(WorkerMsg::Admit(req, t0));
+            },
+        }
+    }
+
+    /// Drain the queue and all in-flight work, stop the workers, and
+    /// report. Terminates even when backends fail: failed requests carry
+    /// [`Outcome::Error`] responses, and a backend-construction failure
+    /// surfaces as an `Err` after the drain.
+    pub fn finish(mut self, started: Instant) -> Result<(Vec<Response>, ServeReport)> {
+        loop {
+            self.pump(true);
+            if self.received >= self.dispatched && self.batcher.is_empty() {
+                break;
+            }
+            // Workers decrement their gauges before responding, so after
+            // this recv the next pump sees the freed capacity — the drain
+            // makes progress even with every lane at capacity.
+            let resp = self.resp_rx.recv()?;
+            self.received += 1;
+            self.local.push(resp);
+        }
+        for tx in &self.worker_tx {
+            let _ = tx.send(WorkerMsg::Stop);
+        }
+        let mut modelled_cycles = 0u64;
+        let mut fatal: Vec<String> = Vec::new();
+        for w in self.workers {
+            match w.join() {
+                Ok(Ok(cycles)) => modelled_cycles += cycles,
+                Ok(Err(msg)) => fatal.push(msg),
+                Err(_) => fatal.push("worker thread panicked".to_string()),
+            }
+        }
+        if !fatal.is_empty() {
+            anyhow::bail!("{}", fatal.join("; "));
+        }
+        let wall = started.elapsed().as_secs_f64();
+        let mut responses = self.local;
+        responses.sort_by_key(|r| r.id);
+        let report = build_report(
+            &responses,
+            wall,
+            self.batches,
+            self.dispatched,
+            modelled_cycles,
+            self.sched.slo,
+        );
+        Ok((responses, report))
+    }
+}
+
+impl DynamicBatcher {
+    /// Requeue an already-timestamped item at the back (requeue paths;
+    /// bypasses admission control — the item was already admitted once).
+    pub fn push_back_with_time(&mut self, item: (Request, Instant)) {
+        self.push_raw(item);
+    }
+}
+
+fn shed_response(req: Request, t0: Instant, now: Instant) -> Response {
+    let wait = now.duration_since(t0).as_secs_f64();
+    Response {
+        id: req.id,
+        logits: Vec::new(),
+        predicted: 0,
+        latency_s: wait,
+        queue_s: wait,
+        service_s: 0.0,
+        priority: req.priority,
+        deadline_s: req.deadline.map(|d| d.as_secs_f64()),
+        outcome: Outcome::Shed,
+    }
+}
+
+fn class_report(class: Priority, responses: &[Response], slo_s: Option<f64>) -> Option<ClassReport> {
+    let rs: Vec<&Response> = responses.iter().filter(|r| r.priority == class).collect();
+    if rs.is_empty() {
+        return None;
+    }
+    let lats: Vec<f64> = rs.iter().filter(|r| r.is_ok()).map(|r| r.latency_s).collect();
+    let queues: Vec<f64> = rs.iter().filter(|r| r.is_ok()).map(|r| r.queue_s).collect();
+    let services: Vec<f64> = rs.iter().filter(|r| r.is_ok()).map(|r| r.service_s).collect();
+    let mut with_target = 0usize;
+    let mut hit = 0usize;
+    for r in &rs {
+        if let Some(target) = r.deadline_s.or(slo_s) {
+            with_target += 1;
+            if r.is_ok() && r.latency_s <= target {
+                hit += 1;
+            }
+        }
+    }
+    Some(ClassReport {
+        class: class.name(),
+        completed: lats.len(),
+        shed: rs.iter().filter(|r| r.outcome == Outcome::Shed).count(),
+        errors: rs.iter().filter(|r| matches!(r.outcome, Outcome::Error(_))).count(),
+        mean_s: mean(&lats),
+        p50_s: percentile(&lats, 50.0),
+        p99_s: percentile(&lats, 99.0),
+        queue_mean_s: mean(&queues),
+        service_mean_s: mean(&services),
+        slo_target_s: slo_s,
+        slo_attainment: if with_target > 0 {
+            Some(hit as f64 / with_target as f64)
+        } else {
+            None
+        },
+    })
+}
+
+fn build_report(
+    responses: &[Response],
+    wall_s: f64,
+    batches: usize,
+    dispatched: usize,
+    modelled_cycles: u64,
+    slo: Option<Duration>,
+) -> ServeReport {
+    let slo_s = slo.map(|d| d.as_secs_f64());
+    let lats: Vec<f64> = responses.iter().filter(|r| r.is_ok()).map(|r| r.latency_s).collect();
+    let queues: Vec<f64> = responses.iter().filter(|r| r.is_ok()).map(|r| r.queue_s).collect();
+    let services: Vec<f64> =
+        responses.iter().filter(|r| r.is_ok()).map(|r| r.service_s).collect();
+    ServeReport {
+        completed: lats.len(),
+        shed: responses.iter().filter(|r| r.outcome == Outcome::Shed).count(),
+        errors: responses.iter().filter(|r| matches!(r.outcome, Outcome::Error(_))).count(),
+        wall_s,
+        throughput_rps: lats.len() as f64 / wall_s.max(1e-9),
+        latency_mean_s: mean(&lats),
+        latency_p50_s: percentile(&lats, 50.0),
+        latency_p99_s: percentile(&lats, 99.0),
+        queue_mean_s: mean(&queues),
+        service_mean_s: mean(&services),
+        batches,
+        mean_batch: if batches > 0 { dispatched as f64 / batches as f64 } else { 0.0 },
+        modelled_cycles,
+        per_class: Priority::ALL
+            .iter()
+            .filter_map(|&class| class_report(class, responses, slo_s))
+            .collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::backend::GoldenBackend;
-    use crate::hw::AccelConfig;
     use crate::coordinator::backend::SimulatorBackend;
+    use crate::hw::AccelConfig;
     use crate::model::{QuantizedModel, SdtModelConfig};
     use crate::util::Prng;
-    use std::time::Duration;
 
     fn image(seed: u64) -> Vec<f32> {
         let mut rng = Prng::new(seed);
@@ -253,17 +853,24 @@ mod tests {
         let started = Instant::now();
         let mut co = Coordinator::new(backends, policy);
         for i in 0..10 {
-            co.submit(Request { id: i, image: image(i) });
+            co.submit(Request::new(i, image(i)));
         }
         let (responses, report) = co.finish(started).unwrap();
         assert_eq!(responses.len(), 10);
         assert_eq!(report.completed, 10);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.errors, 0);
         for (i, r) in responses.iter().enumerate() {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.logits.len(), 10);
+            assert!(r.is_ok());
             assert!(r.latency_s >= 0.0);
+            assert!(r.latency_s + 1e-12 >= r.queue_s.max(r.service_s));
         }
         assert!(report.throughput_rps > 0.0);
+        assert!(!report.per_class.is_empty());
+        assert_eq!(report.per_class[0].class, "normal");
+        assert_eq!(report.per_class[0].completed, 10);
     }
 
     #[test]
@@ -276,10 +883,11 @@ mod tests {
             golden_factory(model),
         ];
         let started = Instant::now();
-        let mut co = Coordinator::new(backends, BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
+        let mut co =
+            Coordinator::new(backends, BatchPolicy { max_batch: 1, max_wait: Duration::ZERO });
         let img = image(42);
         for i in 0..9 {
-            co.submit(Request { id: i, image: img.clone() });
+            co.submit(Request::new(i, img.clone()));
         }
         let (responses, _) = co.finish(started).unwrap();
         for r in &responses[1..] {
@@ -297,9 +905,82 @@ mod tests {
         let started = Instant::now();
         let mut co = Coordinator::new(backends, BatchPolicy::default());
         for i in 0..3 {
-            co.submit(Request { id: i, image: image(i) });
+            co.submit(Request::new(i, image(i)));
         }
         let (_, report) = co.finish(started).unwrap();
         assert!(report.modelled_cycles > 0);
+    }
+
+    #[test]
+    fn batch_accounting_counts_dispatches_directly() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 24);
+        let backends = vec![golden_factory(model)];
+        // Huge max_wait: nothing releases until the finish() flush, which
+        // ships ceil(10 / 4) = 3 batches.
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(100) };
+        let started = Instant::now();
+        let mut co = Coordinator::new(backends, policy);
+        for i in 0..10 {
+            co.submit(Request::new(i, image(i)));
+        }
+        let (_, report) = co.finish(started).unwrap();
+        assert_eq!(report.batches, 3);
+        assert!((report.mean_batch - 10.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn continuous_mode_serves_everything_with_golden_lanes() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 25);
+        let backends = vec![golden_factory(model.clone()), golden_factory(model.clone())];
+        let sched = SchedulerConfig {
+            mode: ServeMode::Continuous,
+            lane_capacity: 2,
+            ..SchedulerConfig::default()
+        };
+        let started = Instant::now();
+        let mut co = Coordinator::with_scheduler(backends, BatchPolicy::default(), sched);
+        for i in 0..8 {
+            co.submit(Request::new(i, image(100 + i)));
+        }
+        let (responses, report) = co.finish(started).unwrap();
+        assert_eq!(report.completed, 8);
+        assert_eq!(report.errors, 0);
+        // Continuous-vs-serial equivalence: every answer matches a fresh
+        // serial golden run of the same image.
+        let mut serial = GoldenBackend::new(model);
+        for (i, r) in responses.iter().enumerate() {
+            assert!(r.is_ok());
+            let want =
+                crate::coordinator::backend::InferBackend::infer_batch(
+                    &mut serial,
+                    std::slice::from_ref(&image(100 + i as u64)),
+                )
+                .unwrap();
+            assert_eq!(r.logits, want[0], "request {i} diverges from serial golden");
+        }
+    }
+
+    #[test]
+    fn admission_control_sheds_and_reports() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 26);
+        let backends = vec![golden_factory(model)];
+        // Batches never release on their own; the admission queue holds 2.
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(100) };
+        let sched = SchedulerConfig { admission: Some(2), ..SchedulerConfig::default() };
+        let started = Instant::now();
+        let mut co = Coordinator::with_scheduler(backends, policy, sched);
+        for i in 0..5 {
+            co.submit(Request::new(i, image(i)).with_priority(Priority::Low));
+        }
+        let (responses, report) = co.finish(started).unwrap();
+        assert_eq!(responses.len(), 5, "shed requests still get responses");
+        assert_eq!(report.shed, 3);
+        assert_eq!(report.completed, 2);
+        let shed_ids: Vec<u64> =
+            responses.iter().filter(|r| r.outcome == Outcome::Shed).map(|r| r.id).collect();
+        assert_eq!(shed_ids, vec![0, 1, 2], "oldest lows are shed first");
     }
 }

@@ -3,16 +3,17 @@
 //! regeneration, the batched-serving demo and the parallelism sweep.
 
 use std::path::Path;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use spikeformer_accel::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
 use spikeformer_accel::baselines::{aicas23_row, iscas22_row, tcad22_row};
+use spikeformer_accel::benchlib::{arrival_offsets, ArrivalSpec};
 use spikeformer_accel::cli::{Args, USAGE};
 use spikeformer_accel::coordinator::{
-    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, PjrtBackend, Request,
-    SimulatorBackend,
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, PjrtBackend, Priority, Request,
+    SchedulerConfig, ServeMode, SimulatorBackend,
 };
 use spikeformer_accel::hw::{AccelConfig, CoreTopology, EngineSelect, ResourceModel};
 use spikeformer_accel::metrics::{format_table1, AccelRow};
@@ -69,6 +70,13 @@ fn exec_mode(args: &Args) -> ExecMode {
 /// `--temporal-delta`) applied and validated.
 fn hw_from_args(args: &Args) -> Result<AccelConfig> {
     let mut hw = AccelConfig::paper();
+    apply_hw_overrides(args, &mut hw)?;
+    Ok(hw)
+}
+
+/// Apply the shared topology/memory/engine overrides to any base shape
+/// (the paper point or a `--fleet` lane-scaled variant) and validate it.
+fn apply_hw_overrides(args: &Args, hw: &mut AccelConfig) -> Result<()> {
     hw.topology.sdeb_cores = args.usize_or("sdeb-cores", hw.topology.sdeb_cores)?;
     hw.topology.pipeline_depth =
         args.usize_or("pipeline-depth", hw.topology.pipeline_depth)?;
@@ -85,7 +93,7 @@ fn hw_from_args(args: &Args) -> Result<AccelConfig> {
         hw.temporal_delta = true;
     }
     hw.validate()?;
-    Ok(hw)
+    Ok(())
 }
 
 /// The `--mapping P` SDSA head->core policy (default round-robin).
@@ -225,24 +233,50 @@ fn cmd_fig6(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let workers = args.usize_or("workers", 2)?;
+    let mut workers = args.usize_or("workers", 2)?;
     let requests = args.usize_or("requests", 32)?;
     let batch = args.usize_or("batch", 8)?;
     let backend = args.get_or("backend", "golden");
+    let seed = args.usize_or("seed", 1)? as u64;
     let model = get_model(args)?;
 
     let exec = exec_mode(args);
     let pool_workers = args.usize_or("pool-workers", 0)?;
+
+    // --fleet L1,L2,... : a heterogeneous simulator fleet, one worker per
+    // lane count, with probed relative speeds feeding speed-aware dispatch.
+    let mut speeds: Vec<f64> = Vec::new();
     let factories: Vec<BackendFactory> = match backend.as_str() {
-        "sim" => SimulatorBackend::factories_with_mapping(
-            workers,
-            &model,
-            hw_from_args(args)?,
-            DatapathMode::Encoded,
-            exec,
-            pool_workers,
-            mapping_from_args(args)?,
-        ),
+        "sim" => match args.get("fleet") {
+            Some(fleet) => {
+                let mut shapes = Vec::new();
+                for lanes in fleet.split(',') {
+                    let mut hw = AccelConfig::with_lanes(lanes.trim().parse()?);
+                    apply_hw_overrides(args, &mut hw)?;
+                    shapes.push(hw);
+                }
+                let (factories, probed) = SimulatorBackend::fleet_factories(
+                    &model,
+                    &shapes,
+                    DatapathMode::Encoded,
+                    exec,
+                    pool_workers,
+                    mapping_from_args(args)?,
+                )?;
+                workers = shapes.len();
+                speeds = probed;
+                factories
+            }
+            None => SimulatorBackend::factories_with_mapping(
+                workers,
+                &model,
+                hw_from_args(args)?,
+                DatapathMode::Encoded,
+                exec,
+                pool_workers,
+                mapping_from_args(args)?,
+            ),
+        },
         "golden" => GoldenBackend::factories(workers, &model),
         "pjrt" => (0..workers)
             .map(|_| {
@@ -258,15 +292,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
         other => bail!("unknown backend `{other}`"),
     };
 
+    // Scheduling: closed batches by default, continuous in-flight
+    // batching with --continuous; bounded admission and an SLO on request.
+    let slo_ms = args.usize_or("slo", 0)?;
+    let slo = (slo_ms > 0).then(|| Duration::from_millis(slo_ms as u64));
+    let sched = SchedulerConfig {
+        mode: if args.has_flag("continuous") {
+            ServeMode::Continuous
+        } else {
+            ServeMode::ClosedBatch
+        },
+        lane_capacity: args.usize_or("lanes", 4)?,
+        admission: args.get("admission").map(str::parse).transpose()?,
+        slo,
+        worker_speeds: speeds,
+        ..SchedulerConfig::default()
+    };
+    let mode_name = match sched.mode {
+        ServeMode::Continuous => "continuous",
+        ServeMode::ClosedBatch => "closed-batch",
+    };
+
+    // Open-loop arrivals (--arrival poisson:RATE | burst:N:PERIOD_S |
+    // trace:FILE); without the flag every request is submitted at once.
+    let offsets: Vec<f64> = match args.get("arrival") {
+        Some(spec) => {
+            let spec = ArrivalSpec::parse(spec).map_err(|e| anyhow::anyhow!(e))?;
+            arrival_offsets(&spec, requests, seed)
+        }
+        None => vec![0.0; requests],
+    };
+
+    // --priority-split F: F of the traffic High (carrying the SLO as a
+    // deadline), F Low, the rest Normal; draws are seeded.
+    let split: f64 = match args.get("priority-split") {
+        Some(v) => {
+            let f: f64 = v.parse()?;
+            anyhow::ensure!((0.0..=0.5).contains(&f), "--priority-split must be in [0, 0.5]");
+            f
+        }
+        None => 0.0,
+    };
+    let mut class_rng = Prng::new(seed ^ 0x9e37_79b9);
+
     let policy = BatchPolicy { max_batch: batch, ..Default::default() };
     let started = Instant::now();
-    let mut co = Coordinator::new(factories, policy);
-    for i in 0..requests {
-        co.submit(Request { id: i as u64, image: random_image(i as u64) });
+    let mut co = Coordinator::with_scheduler(factories, policy, sched);
+    for (i, &offset) in offsets.iter().enumerate() {
+        let target = Duration::from_secs_f64(offset);
+        let elapsed = started.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let u = class_rng.next_f64();
+        let mut req = Request::new(i as u64, random_image(i as u64));
+        if u < split {
+            req = req.with_priority(Priority::High);
+            if let Some(slo) = slo {
+                req = req.with_deadline(slo);
+            }
+        } else if u > 1.0 - split {
+            req = req.with_priority(Priority::Low);
+        }
+        co.submit(req);
     }
     let (_, report) = co.finish(started)?;
-    println!("backend={backend} workers={workers}");
+    println!("backend={backend} workers={workers} mode={mode_name}");
     println!("{}", report.summary());
+    for class in &report.per_class {
+        println!("  {}", class.summary());
+    }
     Ok(())
 }
 

@@ -7,7 +7,7 @@ use std::time::{Duration, Instant};
 
 use spikeformer_accel::accel::Accelerator;
 use spikeformer_accel::coordinator::{
-    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, Request,
+    BackendFactory, BatchPolicy, Coordinator, GoldenBackend, InferBackend, Outcome, Request,
 };
 use spikeformer_accel::hw::AccelConfig;
 use spikeformer_accel::io::{Manifest, NpyArray};
@@ -105,35 +105,92 @@ impl InferBackend for FailingBackend {
 #[test]
 fn healthy_worker_carries_load_when_peer_fails() {
     // One failing worker + one healthy worker: requests routed to the
-    // failing worker are lost (logged), but the healthy worker's results
-    // are still correct and the coordinator does not deadlock on them.
+    // failing worker come back as per-request `Outcome::Error` responses
+    // (they are never silently lost), the healthy worker's results are
+    // bit-correct, and `finish()` terminates.
     let cfg = SdtModelConfig::tiny();
     let model = QuantizedModel::random(&cfg, 6);
+    let failing: BackendFactory = Box::new(|| Ok(Box::new(FailingBackend) as _));
     let healthy: BackendFactory = {
         let m = model.clone();
         Box::new(move || Ok(Box::new(GoldenBackend::new(m)) as _))
     };
-    // Single healthy worker, batch=1: all 4 requests must complete.
     let started = Instant::now();
     let mut co = Coordinator::new(
-        vec![healthy],
+        vec![failing, healthy],
         BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
     );
     let mut rng = Prng::new(2);
-    for i in 0..4u64 {
-        let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect();
-        co.submit(Request { id: i, image: img });
+    let imgs: Vec<Vec<f32>> =
+        (0..6).map(|_| (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()).collect();
+    for (i, img) in imgs.iter().enumerate() {
+        co.submit(Request::new(i as u64, img.clone()));
     }
     let (responses, report) = co.finish(started).unwrap();
-    assert_eq!(responses.len(), 4);
-    assert_eq!(report.completed, 4);
+    assert_eq!(responses.len(), 6, "every request gets a response");
+    assert_eq!(report.completed + report.errors, 6);
+    // The first dispatch goes to the (first-listed, equally-idle) failing
+    // worker, so at least one per-request error must surface.
+    assert!(report.errors >= 1, "failing worker's requests surface as errors");
+    let mut serial = GoldenBackend::new(model);
+    for resp in &responses {
+        match &resp.outcome {
+            Outcome::Ok => {
+                let want = InferBackend::infer_batch(
+                    &mut serial,
+                    std::slice::from_ref(&imgs[usize::try_from(resp.id).unwrap()]),
+                )
+                .unwrap();
+                assert_eq!(resp.logits, want[0], "healthy response {} wrong", resp.id);
+            }
+            Outcome::Error(msg) => {
+                assert!(msg.contains("injected"), "error carries the backend text: {msg}")
+            }
+            Outcome::Shed => panic!("nothing should be shed here"),
+        }
+    }
 }
 
 #[test]
-fn failing_backend_logs_and_does_not_panic() {
-    // All-failing pool: finish() would wait forever for lost responses,
-    // so this test exercises the worker error path directly.
-    let mut b = FailingBackend;
-    let err = b.infer_batch(&[vec![0.0; 4]]).unwrap_err();
-    assert!(err.to_string().contains("injected"));
+fn all_failing_pool_reports_errors_without_hanging() {
+    // Every worker fails on every batch: `finish()` must still terminate
+    // with one `Outcome::Error` response per request (this used to hang
+    // forever waiting for responses that never came).
+    let started = Instant::now();
+    let mut co = Coordinator::new(
+        vec![
+            Box::new(|| Ok(Box::new(FailingBackend) as _)) as BackendFactory,
+            Box::new(|| Ok(Box::new(FailingBackend) as _)) as BackendFactory,
+        ],
+        BatchPolicy { max_batch: 2, max_wait: Duration::ZERO },
+    );
+    for i in 0..5u64 {
+        co.submit(Request::new(i, vec![0.1; 3 * 32 * 32]));
+    }
+    let (responses, report) = co.finish(started).unwrap();
+    assert_eq!(responses.len(), 5);
+    assert_eq!(report.errors, 5);
+    assert_eq!(report.completed, 0);
+    assert!(responses.iter().all(|r| matches!(&r.outcome, Outcome::Error(m) if m.contains("injected"))));
+}
+
+#[test]
+fn backend_construction_failure_fails_finish_loudly() {
+    // A worker whose backend factory errors answers its traffic with
+    // per-request errors and then makes `finish()` return `Err` so the
+    // deployment failure cannot be mistaken for a healthy run.
+    let broken: BackendFactory = Box::new(|| anyhow::bail!("no such device"));
+    let started = Instant::now();
+    let mut co = Coordinator::new(
+        vec![broken],
+        BatchPolicy { max_batch: 1, max_wait: Duration::ZERO },
+    );
+    for i in 0..3u64 {
+        co.submit(Request::new(i, vec![0.0; 3 * 32 * 32]));
+    }
+    let err = co.finish(started).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("no such device"),
+        "factory error must propagate: {err:#}"
+    );
 }

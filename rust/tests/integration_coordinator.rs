@@ -42,7 +42,7 @@ fn coordinator_results_match_direct_execution() {
         BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
     );
     for (i, img) in imgs.iter().enumerate() {
-        co.submit(Request { id: i as u64, image: img.clone() });
+        co.submit(Request::new(i as u64, img.clone()));
     }
     let (responses, report) = co.finish(started).unwrap();
     assert_eq!(report.completed, imgs.len());
@@ -68,7 +68,7 @@ fn mixed_simulator_and_golden_workers_agree() {
         BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
     );
     for (i, img) in imgs.iter().enumerate() {
-        co.submit(Request { id: i as u64, image: img.clone() });
+        co.submit(Request::new(i as u64, img.clone()));
     }
     let (responses, report) = co.finish(started).unwrap();
     for (i, resp) in responses.iter().enumerate() {
@@ -86,7 +86,7 @@ fn single_request_is_released_by_timeout() {
         vec![golden_factory(&model)],
         BatchPolicy { max_batch: 64, max_wait: Duration::from_millis(1) },
     );
-    co.submit(Request { id: 0, image: images(1, 3).pop().unwrap() });
+    co.submit(Request::new(0, images(1, 3).pop().unwrap()));
     let (responses, _) = co.finish(started).unwrap();
     assert_eq!(responses.len(), 1);
 }
@@ -102,7 +102,7 @@ fn large_burst_all_served() {
         BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) },
     );
     for (i, img) in imgs.iter().enumerate() {
-        co.submit(Request { id: i as u64, image: img.clone() });
+        co.submit(Request::new(i as u64, img.clone()));
     }
     let (responses, report) = co.finish(started).unwrap();
     assert_eq!(responses.len(), 40);

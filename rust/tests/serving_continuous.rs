@@ -1,0 +1,190 @@
+//! Integration: continuous in-flight batching end-to-end — bursty
+//! arrivals served exactly once with logits bit-identical to a fresh
+//! serial backend, SLO machinery (admission shed, aging), and the
+//! lane-level worker error path.
+
+use std::time::{Duration, Instant};
+
+use spikeformer_accel::benchlib::{arrival_offsets, ArrivalSpec};
+use spikeformer_accel::coordinator::{
+    BackendFactory, BatchPolicy, Coordinator, DynamicBatcher, GoldenBackend, InferBackend,
+    Outcome, Priority, Request, SchedulerConfig, ServeMode,
+};
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = Prng::new(seed);
+    (0..3 * 32 * 32).map(|_| rng.next_f32_signed()).collect()
+}
+
+fn golden_factory(model: &QuantizedModel) -> BackendFactory {
+    let m = model.clone();
+    Box::new(move || Ok(Box::new(GoldenBackend::new(m)) as _))
+}
+
+/// The tentpole property: under seeded bursty open-loop arrivals with a
+/// random priority mix, a continuous-batching fleet serves every request
+/// exactly once and each response is bit-identical to running that image
+/// alone through a fresh serial backend.
+#[test]
+fn bursty_continuous_serving_is_bit_identical_to_serial() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 77);
+    for seed in [11u64, 23, 47] {
+        let n = 18usize;
+        // Compressed Poisson burst: offsets land within a few tens of ms.
+        let offsets = arrival_offsets(&ArrivalSpec::Poisson { rate_rps: 600.0 }, n, seed);
+        let mut rng = Prng::new(seed ^ 0xabcd);
+        let sched = SchedulerConfig {
+            mode: ServeMode::Continuous,
+            lane_capacity: 3,
+            slo: Some(Duration::from_secs(5)),
+            ..SchedulerConfig::default()
+        };
+        let started = Instant::now();
+        let mut co = Coordinator::with_scheduler(
+            vec![golden_factory(&model), golden_factory(&model)],
+            BatchPolicy::default(),
+            sched,
+        );
+        for (i, &off) in offsets.iter().enumerate() {
+            let target = Duration::from_secs_f64(off);
+            let elapsed = started.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            let class = match rng.gen_range(0, 3) {
+                0 => Priority::High,
+                1 => Priority::Low,
+                _ => Priority::Normal,
+            };
+            co.submit(Request::new(i as u64, image(seed * 1000 + i as u64)).with_priority(class));
+        }
+        let (responses, report) = co.finish(started).unwrap();
+
+        // Exactly once: one response per id, all Ok, none shed or errored.
+        assert_eq!(responses.len(), n, "seed {seed}: every request answered");
+        let ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>(), "seed {seed}: ids unique+sorted");
+        assert_eq!(report.completed, n, "seed {seed}");
+        assert_eq!(report.shed + report.errors, 0, "seed {seed}");
+
+        // Bit-identical to a fresh serial backend per image.
+        let mut serial = GoldenBackend::new(model.clone());
+        for resp in &responses {
+            let want = InferBackend::infer_batch(
+                &mut serial,
+                std::slice::from_ref(&image(seed * 1000 + resp.id)),
+            )
+            .unwrap();
+            assert_eq!(resp.logits, want[0], "seed {seed}: response {} diverged", resp.id);
+            assert_eq!(resp.outcome, Outcome::Ok);
+        }
+    }
+}
+
+/// Continuous mode with a bounded admission queue: overflow sheds the
+/// oldest low-priority requests, everything else is served.
+#[test]
+fn continuous_admission_bound_sheds_low_priority() {
+    let cfg = SdtModelConfig::tiny();
+    let model = QuantizedModel::random(&cfg, 78);
+    let sched = SchedulerConfig {
+        mode: ServeMode::Continuous,
+        lane_capacity: 1,
+        admission: Some(3),
+        ..SchedulerConfig::default()
+    };
+    let started = Instant::now();
+    let mut co = Coordinator::with_scheduler(
+        vec![golden_factory(&model)],
+        BatchPolicy::default(),
+        sched,
+    );
+    // Burst of 8 Low requests into one single-lane worker with a 3-deep
+    // queue: the overflow must shed rather than queue without bound.
+    for i in 0..8u64 {
+        co.submit(Request::new(i, image(500 + i)).with_priority(Priority::Low));
+    }
+    let (responses, report) = co.finish(started).unwrap();
+    assert_eq!(responses.len(), 8);
+    assert!(report.shed > 0, "queue bound must shed under the burst");
+    assert_eq!(report.completed + report.shed, 8);
+    assert!(responses
+        .iter()
+        .all(|r| matches!(r.outcome, Outcome::Ok | Outcome::Shed)));
+}
+
+/// A backend whose lane engine accepts work and then dies mid-pass.
+struct LaneFailBackend;
+
+impl InferBackend for LaneFailBackend {
+    fn name(&self) -> &'static str {
+        "lane-fail"
+    }
+
+    fn infer_batch(&mut self, _images: &[Vec<f32>]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::bail!("batch path unused here")
+    }
+
+    fn lane_capacity(&self) -> usize {
+        4
+    }
+
+    fn lane_admit(&mut self, _id: u64, _image: &[f32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn lane_step(&mut self) -> anyhow::Result<Vec<(u64, Vec<f32>)>> {
+        anyhow::bail!("injected lane failure")
+    }
+}
+
+/// A lane-engine failure drains every in-flight request to a per-request
+/// error response instead of hanging `finish()`.
+#[test]
+fn lane_step_failure_drains_inflight_to_errors() {
+    let sched = SchedulerConfig {
+        mode: ServeMode::Continuous,
+        lane_capacity: 4,
+        ..SchedulerConfig::default()
+    };
+    let started = Instant::now();
+    let mut co = Coordinator::with_scheduler(
+        vec![Box::new(|| Ok(Box::new(LaneFailBackend) as _)) as BackendFactory],
+        BatchPolicy::default(),
+        sched,
+    );
+    for i in 0..4u64 {
+        co.submit(Request::new(i, vec![0.2; 3 * 32 * 32]));
+    }
+    let (responses, report) = co.finish(started).unwrap();
+    assert_eq!(responses.len(), 4);
+    assert_eq!(report.errors, 4);
+    assert!(responses
+        .iter()
+        .all(|r| matches!(&r.outcome, Outcome::Error(m) if m.contains("injected lane failure"))));
+}
+
+/// Deterministic starvation check on the scheduler core: a Low request
+/// that has aged past the promotion threshold is popped ahead of fresher
+/// High traffic (virtual timestamps, no sleeping).
+#[test]
+fn aged_low_priority_request_overtakes_fresh_high_traffic() {
+    let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(10) };
+    let mut b = DynamicBatcher::new(policy);
+    let t0 = Instant::now();
+    b.push_at(Request::new(0, vec![0.0; 4]).with_priority(Priority::Low), t0);
+    // Fresh High arrivals long after: without aging they would win forever.
+    let late = t0 + Duration::from_millis(200);
+    for i in 1..4u64 {
+        b.push_at(Request::new(i, vec![0.0; 4]).with_priority(Priority::High), late);
+    }
+    // At t0 + 200ms the Low request has waited 20x max_wait — far past
+    // the 8x aging threshold — so it is scheduled as High and, being
+    // oldest, pops first.
+    let (first, _) = b.pop_next(late).expect("queue is non-empty");
+    assert_eq!(first.id, 0, "aged Low request must not be starved");
+    assert_eq!(first.priority, Priority::Low, "class is preserved, only scheduling rank ages");
+}
