@@ -1,0 +1,217 @@
+//! Bench D1 — autoregressive decode over the spike-stream KV cache:
+//! TTFT (prefill cycles), inter-token latency and tokens/s across
+//! hardware shape x spike engine.
+//!
+//! All latency numbers are *modelled accelerator cycles* converted to
+//! seconds at the shape's clock, so every cell replays bit-identically —
+//! which is what lets `--quick` assert the decode path's headline
+//! properties instead of eyeballing them: the generated tokens are
+//! identical across every engine (the engines are bit-identical by
+//! construction), and the inter-token latency grows with the causal
+//! prefix (each step masks the new Q row against a longer cached K
+//! stream).
+//!
+//! ```bash
+//! cargo bench --bench decode_bench                   # full sweep
+//! cargo bench --bench decode_bench -- --quick        # CI smoke: small sweep + assertions
+//! cargo bench --bench decode_bench -- --json         # merge into BENCH_decode.json
+//! cargo bench --bench decode_bench -- --prompt-len N --gen-len N
+//! ```
+
+use std::time::Instant;
+
+use spikeformer_accel::accel::{Accelerator, DatapathMode, DecodeReport, ExecMode};
+use spikeformer_accel::benchlib::{arg_value, merge_bench_json, section};
+use spikeformer_accel::hw::{AccelConfig, EngineSelect};
+use spikeformer_accel::model::{QuantizedModel, SdtModelConfig};
+use spikeformer_accel::util::Prng;
+
+const SEED: u64 = 0xdec0;
+
+/// One swept cell's outcome row.
+struct Row {
+    shape: &'static str,
+    engine: &'static str,
+    prompt_len: usize,
+    gen_len: usize,
+    ttft_cycles: u64,
+    itl_mean_cycles: f64,
+    itl_p99_cycles: u64,
+    tokens_per_s: f64,
+    cache_words: u64,
+    host_s: f64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn run_cell(
+    shape: &'static str,
+    engine: &'static str,
+    model: &QuantizedModel,
+    hw: AccelConfig,
+    prompt: &[usize],
+    gen_len: usize,
+) -> (Row, DecodeReport) {
+    let mut accel = Accelerator::with_runtime(
+        model.clone(),
+        hw,
+        DatapathMode::Encoded,
+        ExecMode::Overlapped,
+        0,
+    );
+    let t0 = Instant::now();
+    let r = accel.decode(prompt, gen_len).expect("decode failed");
+    let host_s = t0.elapsed().as_secs_f64();
+    let gen_cycles: u64 = r.token_cycles.iter().sum();
+    let mut sorted = r.token_cycles.clone();
+    sorted.sort_unstable();
+    let row = Row {
+        shape,
+        engine,
+        prompt_len: r.prompt_len,
+        gen_len: r.gen_len,
+        ttft_cycles: r.prefill_cycles,
+        itl_mean_cycles: gen_cycles as f64 / r.token_cycles.len().max(1) as f64,
+        itl_p99_cycles: percentile(&sorted, 0.99),
+        tokens_per_s: r.gen_len as f64 / hw.seconds(gen_cycles.max(1)),
+        cache_words: r.cache_words,
+        host_s,
+    };
+    (row, r)
+}
+
+fn print_row(r: &Row) {
+    println!(
+        "{:<12} {:<9} prompt={:<3} gen={:<3} ttft={:>9} cyc  itl mean={:>9.0} p99={:>9} cyc  {:>10.1} tok/s  kv={:>6} words  host {:.3} s",
+        r.shape,
+        r.engine,
+        r.prompt_len,
+        r.gen_len,
+        r.ttft_cycles,
+        r.itl_mean_cycles,
+        r.itl_p99_cycles,
+        r.tokens_per_s,
+        r.cache_words,
+        r.host_s,
+    );
+}
+
+fn write_json(model_name: &str, rows: &[Row]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_decode.json");
+    let mut entry = String::from("{\n");
+    entry.push_str(&format!("    \"config\": {{\"model\": \"{model_name}\"}},\n"));
+    entry.push_str(
+        "    \"units\": \"modelled accelerator cycles at the shape clock; ttft_cycles = prefill (time to first token); itl_* = per-generated-token cycles (inter-token latency, grows with the causal prefix); tokens_per_s = generated tokens over modelled generation seconds; cache_words = final KV-cache CSR storage words; host_s = host wall seconds for the whole session (not a hardware number)\",\n",
+    );
+    entry.push_str("    \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        entry.push_str(&format!(
+            "      {{\"shape\": \"{}\", \"engine\": \"{}\", \"prompt_len\": {}, \"gen_len\": {}, \"ttft_cycles\": {}, \"itl_mean_cycles\": {:.1}, \"itl_p99_cycles\": {}, \"tokens_per_s\": {:.1}, \"cache_words\": {}, \"host_s\": {:.6e}}}{}\n",
+            r.shape,
+            r.engine,
+            r.prompt_len,
+            r.gen_len,
+            r.ttft_cycles,
+            r.itl_mean_cycles,
+            r.itl_p99_cycles,
+            r.tokens_per_s,
+            r.cache_words,
+            r.host_s,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    entry.push_str("    ]\n  }");
+    match merge_bench_json(path, "decode", &entry) {
+        Ok(()) => println!("\nwrote {path} (section \"decode\")"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json = args.iter().any(|a| a == "--json");
+
+    // Multi-block, multi-head decoder so the swept engines see real head
+    // bucketing; `tiny_decoder` scale keeps the quick lane CI-friendly.
+    let cfg = if quick {
+        SdtModelConfig::tiny_decoder()
+    } else {
+        SdtModelConfig {
+            name: "decode-bench".into(),
+            num_blocks: 2,
+            num_heads: 8,
+            ..SdtModelConfig::tiny_decoder()
+        }
+    };
+    let model = QuantizedModel::random(&cfg, 42);
+    let max_seq = cfg.decoder_shape().expect("decoder config").max_seq_len;
+    let prompt_len = arg_value(&args, "--prompt-len").unwrap_or(if quick { 4 } else { 16 });
+    let gen_len = arg_value(&args, "--gen-len").unwrap_or(if quick { 6 } else { 32 });
+    assert!(
+        prompt_len >= 1 && gen_len >= 1 && prompt_len + gen_len <= max_seq,
+        "need prompt >= 1, gen >= 1, prompt+gen <= max_seq_len {max_seq}"
+    );
+    let vocab = cfg.vocab() as u64;
+    let mut rng = Prng::new(SEED);
+    let prompt: Vec<usize> = (0..prompt_len).map(|_| (rng.next_u64() % vocab) as usize).collect();
+
+    let paper = AccelConfig::paper();
+    let half = AccelConfig::with_lanes(paper.lanes / 2);
+    let shapes: &[(&'static str, AccelConfig)] = &[("paper", paper), ("half-lanes", half)];
+    let engines: &[(&'static str, EngineSelect)] = &[
+        ("csr", EngineSelect::Csr),
+        ("bitmap", EngineSelect::Bitmap),
+        ("adaptive", EngineSelect::adaptive()),
+    ];
+
+    section("decode sweep: shape x engine (modelled cycles)");
+    let mut rows = Vec::new();
+    let mut per_engine_tokens: Vec<Vec<usize>> = Vec::new();
+    let mut paper_csr: Option<DecodeReport> = None;
+    for &(shape, hw) in shapes {
+        for &(engine, eng) in engines {
+            let mut hw = hw;
+            hw.engine = eng;
+            hw.validate().expect("swept shape must validate");
+            let (row, report) = run_cell(shape, engine, &model, hw, &prompt, gen_len);
+            print_row(&row);
+            rows.push(row);
+            if shape == "paper" {
+                per_engine_tokens.push(report.generated.clone());
+                if engine == "csr" {
+                    paper_csr = Some(report);
+                }
+            }
+        }
+    }
+
+    // Headline checks on the deterministic model (always on: they are
+    // cheap relative to the sweep itself).
+    for toks in &per_engine_tokens[1..] {
+        assert_eq!(
+            toks, &per_engine_tokens[0],
+            "engines must generate identical tokens (bit-identical datapaths)"
+        );
+    }
+    let r = paper_csr.expect("paper/csr cell ran");
+    let (first, last) = (r.token_cycles[0], *r.token_cycles.last().unwrap());
+    assert!(
+        last >= first,
+        "inter-token latency must not shrink as the causal prefix grows ({last} < {first})"
+    );
+    println!(
+        "\nchecks: engines agree on {} generated tokens; itl grows {} -> {} cycles",
+        r.gen_len, first, last
+    );
+
+    if json {
+        write_json(&cfg.name, &rows);
+    }
+}

@@ -36,6 +36,7 @@ use crate::model::QuantizedModel;
 use crate::util::div_ceil;
 
 use super::buffers::BufferSet;
+use super::decode::{argmax, DecodeReport, DecodeSession};
 use super::dma::DmaEngine;
 use super::executor::{self, PipelineExecution};
 use super::mapper::{Mapper, MappingPolicy};
@@ -123,6 +124,69 @@ struct ActiveLane {
     head_counts: Vec<u64>,
 }
 
+/// One in-flight autoregressive decode request: a checked-out
+/// [`DecodeSession`] plus the report bookkeeping. Advanced one token per
+/// [`Accelerator::lane_step`] pass, so decode requests interleave with
+/// whatever else is in flight and their per-token latencies are observable
+/// at lane granularity.
+struct ActiveDecode {
+    id: u64,
+    session: DecodeSession,
+    prompt: Vec<usize>,
+    /// Prompt tokens consumed so far (prefill cursor).
+    fed: usize,
+    /// Generation steps still to run after prefill.
+    remaining: usize,
+    /// Next token to feed (the previous position's argmax).
+    next_token: Option<usize>,
+    generated: Vec<usize>,
+    prefill_cycles: u64,
+    token_cycles: Vec<u64>,
+}
+
+impl ActiveDecode {
+    /// Feed exactly one token position (prompt or generated) through the
+    /// session — the per-pass work quantum of a decode lane.
+    fn advance(&mut self, model: &QuantizedModel, hw: &AccelConfig) -> Result<()> {
+        if self.fed < self.prompt.len() {
+            let logits = self.session.step(model, hw, self.prompt[self.fed])?;
+            self.fed += 1;
+            if self.fed == self.prompt.len() {
+                self.prefill_cycles = self.session.cycles();
+                self.next_token = Some(argmax(&logits));
+            }
+        } else if self.remaining > 0 {
+            let tok = self.next_token.take().expect("argmax from the previous position");
+            self.generated.push(tok);
+            let before = self.session.cycles();
+            let (next, _) = self.session.decode_step(model, hw, tok)?;
+            self.token_cycles.push(self.session.cycles() - before);
+            self.next_token = Some(next);
+            self.remaining -= 1;
+        }
+        Ok(())
+    }
+
+    fn finished(&self) -> bool {
+        self.fed == self.prompt.len() && self.remaining == 0
+    }
+
+    /// Assemble the completed lane's report and hand the session back.
+    fn retire(self) -> (u64, DecodeReport, DecodeSession) {
+        let report = DecodeReport {
+            prompt_len: self.prompt.len(),
+            gen_len: self.generated.len(),
+            generated: self.generated,
+            prefill_cycles: self.prefill_cycles,
+            token_cycles: self.token_cycles,
+            total_cycles: self.session.cycles(),
+            cache_words: self.session.cache_words(),
+            sparsity: self.session.sink().sparsity_table(),
+        };
+        (self.id, report, self.session)
+    }
+}
+
 /// A full accelerator instance bound to one quantized model.
 pub struct Accelerator {
     /// Structural hardware parameters of this instance.
@@ -155,6 +219,14 @@ pub struct Accelerator {
     /// In-flight continuous-batching requests ([`Self::lane_admit`] /
     /// [`Self::lane_step`]); empty outside continuous serving.
     active: Vec<ActiveLane>,
+    /// Pooled decode sessions recycled (via reset) across
+    /// [`Self::decode`] calls and decode lanes.
+    decode_pool: Vec<DecodeSession>,
+    /// In-flight autoregressive decode requests, advanced one token per
+    /// [`Self::lane_step`] pass alongside the vision lanes.
+    decode_active: Vec<ActiveDecode>,
+    /// Completed decode lanes awaiting [`Self::take_decoded`].
+    decode_done: Vec<(u64, DecodeReport)>,
 }
 
 impl Accelerator {
@@ -226,6 +298,9 @@ impl Accelerator {
             scratch_sdeb: ExecScratch::new(),
             lanes: Vec::new(),
             active: Vec::new(),
+            decode_pool: Vec::new(),
+            decode_active: Vec::new(),
+            decode_done: Vec::new(),
         }
     }
 
@@ -665,29 +740,155 @@ impl Accelerator {
     /// partially-run requests are dropped and their unit lanes are
     /// rebuilt on demand); the caller owns re-submission policy.
     pub fn lane_step(&mut self) -> Result<Vec<(u64, RunReport)>> {
-        if self.active.is_empty() {
-            return Ok(Vec::new());
-        }
-        let timesteps = self.model.cfg.timesteps;
-        let mut active = std::mem::take(&mut self.active);
-        if let Err(e) = self.step_pass(&mut active) {
-            drop(active);
-            return Err(e);
-        }
         let mut done = Vec::new();
-        for a in active {
-            if a.t >= timesteps {
-                done.push(self.retire_lane(a));
-            } else {
-                self.active.push(a);
+        if !self.active.is_empty() {
+            let timesteps = self.model.cfg.timesteps;
+            let mut active = std::mem::take(&mut self.active);
+            if let Err(e) = self.step_pass(&mut active) {
+                drop(active);
+                return Err(e);
+            }
+            for a in active {
+                if a.t >= timesteps {
+                    done.push(self.retire_lane(a));
+                } else {
+                    self.active.push(a);
+                }
             }
         }
+        self.step_decode_lanes()?;
         Ok(done)
     }
 
     /// Number of requests currently in flight on continuous lanes.
     pub fn lanes_in_flight(&self) -> usize {
         self.active.len()
+    }
+
+    /// Number of autoregressive decode requests currently in flight.
+    pub fn decode_lanes_in_flight(&self) -> usize {
+        self.decode_active.len()
+    }
+
+    /// Run one full autoregressive request serially: prefill the prompt,
+    /// then greedily generate `gen_len` tokens, each decode step masking
+    /// the new position against the session's spike-stream KV cache.
+    /// Bit-identical to driving a [`DecodeSession`] by hand (and, on the
+    /// logits, to the dense golden decoder) — the session is checked out
+    /// of the same pool the decode lanes use, so steady-state calls
+    /// allocate nothing.
+    pub fn decode(&mut self, prompt: &[usize], gen_len: usize) -> Result<DecodeReport> {
+        let max_seq_len = self.model.cfg.decoder_shape()?.max_seq_len;
+        if prompt.is_empty() {
+            return Err(anyhow!("decode: empty prompt"));
+        }
+        if prompt.len() + gen_len > max_seq_len {
+            return Err(anyhow!(
+                "decode: {} prompt + {gen_len} generated tokens exceed max_seq_len {max_seq_len}",
+                prompt.len()
+            ));
+        }
+        let mut session = self.checkout_decode_session()?;
+        let logits = session.prefill(&self.model, &self.hw, prompt)?;
+        let prefill_cycles = session.cycles();
+        let mut next = argmax(&logits);
+        let mut generated = Vec::with_capacity(gen_len);
+        let mut token_cycles = Vec::with_capacity(gen_len);
+        for _ in 0..gen_len {
+            generated.push(next);
+            let before = session.cycles();
+            let (n2, _) = session.decode_step(&self.model, &self.hw, next)?;
+            token_cycles.push(session.cycles() - before);
+            next = n2;
+        }
+        let report = DecodeReport {
+            prompt_len: prompt.len(),
+            gen_len,
+            generated,
+            prefill_cycles,
+            token_cycles,
+            total_cycles: session.cycles(),
+            cache_words: session.cache_words(),
+            sparsity: session.sink().sparsity_table(),
+        };
+        session.reset();
+        self.decode_pool.push(session);
+        Ok(report)
+    }
+
+    /// Admit one autoregressive request into a decode lane. The request
+    /// advances one token position per [`Self::lane_step`] pass — prompt
+    /// tokens first (prefill), then greedy generation — interleaved with
+    /// any vision lanes in flight. Completed requests are queued for
+    /// [`Self::take_decoded`]. Requires a decoder-shaped model; ids must
+    /// be unique within the in-flight decode set.
+    pub fn lane_admit_decode(&mut self, id: u64, prompt: &[usize], gen_len: usize) -> Result<()> {
+        let max_seq_len = self.model.cfg.decoder_shape()?.max_seq_len;
+        if prompt.is_empty() {
+            return Err(anyhow!("lane_admit_decode: empty prompt"));
+        }
+        if prompt.len() + gen_len > max_seq_len {
+            return Err(anyhow!(
+                "lane_admit_decode: {} prompt + {gen_len} generated tokens exceed max_seq_len {max_seq_len}",
+                prompt.len()
+            ));
+        }
+        if self.decode_active.iter().any(|a| a.id == id) {
+            return Err(anyhow!("lane_admit_decode: request id {id} already in flight"));
+        }
+        let session = self.checkout_decode_session()?;
+        self.decode_active.push(ActiveDecode {
+            id,
+            session,
+            prompt: prompt.to_vec(),
+            fed: 0,
+            remaining: gen_len,
+            next_token: None,
+            generated: Vec::with_capacity(gen_len),
+            prefill_cycles: 0,
+            token_cycles: Vec::with_capacity(gen_len),
+        });
+        Ok(())
+    }
+
+    /// Drain the completed decode-lane reports accumulated by
+    /// [`Self::lane_step`] since the last drain.
+    pub fn take_decoded(&mut self) -> Vec<(u64, DecodeReport)> {
+        std::mem::take(&mut self.decode_done)
+    }
+
+    /// Check a pooled decode session out (or build the first one).
+    /// Pooled sessions were reset on return, so checkout is free.
+    fn checkout_decode_session(&mut self) -> Result<DecodeSession> {
+        match self.decode_pool.pop() {
+            Some(s) => Ok(s),
+            None => DecodeSession::new(&self.model, &self.hw),
+        }
+    }
+
+    /// Advance every in-flight decode lane by one token position and
+    /// retire the finished ones into the [`Self::take_decoded`] queue.
+    /// Abort semantics mirror the vision lanes: on error the whole
+    /// in-flight decode set is dropped.
+    fn step_decode_lanes(&mut self) -> Result<()> {
+        if self.decode_active.is_empty() {
+            return Ok(());
+        }
+        let mut lanes = std::mem::take(&mut self.decode_active);
+        for a in lanes.iter_mut() {
+            a.advance(&self.model, &self.hw)?;
+        }
+        for a in lanes {
+            if a.finished() {
+                let (id, report, mut session) = a.retire();
+                session.reset();
+                self.decode_pool.push(session);
+                self.decode_done.push((id, report));
+            } else {
+                self.decode_active.push(a);
+            }
+        }
+        Ok(())
     }
 
     /// One stage-major pass over the in-flight set: SPS for every lane,
@@ -1056,5 +1257,101 @@ mod tests {
         let mut accel = Accelerator::new(model, AccelConfig::small()).with_pool_workers(4);
         assert_eq!(accel.pool_workers(), 4);
         accel.infer(&random_image(9)).unwrap(); // oversized pool still correct
+    }
+
+    #[test]
+    fn serial_decode_matches_a_manual_session() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 11);
+        let hw = AccelConfig::small();
+        let mut accel = Accelerator::new(model.clone(), hw);
+        let prompt = [1usize, 5, 2];
+        let r = accel.decode(&prompt, 4).unwrap();
+        assert_eq!(r.prompt_len, 3);
+        assert_eq!(r.gen_len, 4);
+        assert_eq!(r.generated.len(), 4);
+        assert_eq!(r.token_cycles.len(), 4);
+
+        // Drive a session by hand: the controller path must be a pure
+        // wrapper around it (bit-identical trace).
+        let mut session = DecodeSession::new(&model, &hw).unwrap();
+        let logits = session.prefill(&model, &hw, &prompt).unwrap();
+        assert_eq!(r.prefill_cycles, session.cycles());
+        let mut next = argmax(&logits);
+        for (i, tc) in r.token_cycles.iter().enumerate() {
+            assert_eq!(r.generated[i], next, "token {i} diverged");
+            let before = session.cycles();
+            let (n2, _) = session.decode_step(&model, &hw, next).unwrap();
+            assert_eq!(*tc, session.cycles() - before, "token {i} cycle charge diverged");
+            next = n2;
+        }
+        assert_eq!(r.total_cycles, session.cycles());
+        assert_eq!(r.cache_words, session.cache_words());
+
+        // Second call reuses the pooled (reset) session bit-exactly.
+        let again = accel.decode(&prompt, 4).unwrap();
+        assert_eq!(again.generated, r.generated);
+        assert_eq!(again.total_cycles, r.total_cycles);
+    }
+
+    #[test]
+    fn decode_lanes_interleave_and_match_serial_decode() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 11);
+        let hw = AccelConfig::small();
+        let mut fresh = Accelerator::new(model.clone(), hw);
+        let want_a = fresh.decode(&[1, 5, 2], 3).unwrap();
+        let want_b = fresh.decode(&[4, 0], 5).unwrap();
+
+        let mut accel = Accelerator::new(model, hw);
+        accel.lane_admit_decode(7, &[1, 5, 2], 3).unwrap();
+        // A vision lane in flight at the same time: decoder models keep
+        // the vision front-end, so both request kinds share the runtime.
+        accel.lane_admit(1, &random_image(3)).unwrap();
+        assert_eq!(accel.decode_lanes_in_flight(), 1);
+        let mut vision_done = false;
+        let mut decoded = Vec::new();
+        let mut admitted_second = false;
+        while decoded.len() < 2 {
+            for (id, _report) in accel.lane_step().unwrap() {
+                assert_eq!(id, 1);
+                vision_done = true;
+            }
+            decoded.extend(accel.take_decoded());
+            if !admitted_second {
+                accel.lane_admit_decode(9, &[4, 0], 5).unwrap();
+                admitted_second = true;
+            }
+        }
+        assert!(vision_done, "vision lane must retire alongside decode lanes");
+        assert_eq!(accel.decode_lanes_in_flight(), 0);
+        decoded.sort_by_key(|(id, _)| *id);
+        let (id_a, got_a) = &decoded[0];
+        let (id_b, got_b) = &decoded[1];
+        assert_eq!((*id_a, *id_b), (7, 9));
+        assert_eq!(got_a.generated, want_a.generated);
+        assert_eq!(got_a.prefill_cycles, want_a.prefill_cycles);
+        assert_eq!(got_a.token_cycles, want_a.token_cycles);
+        assert_eq!(got_a.total_cycles, want_a.total_cycles);
+        assert_eq!(got_b.generated, want_b.generated);
+        assert_eq!(got_b.total_cycles, want_b.total_cycles);
+    }
+
+    #[test]
+    fn decode_admission_rejects_bad_requests() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 11);
+        let mut accel = Accelerator::new(model.clone(), AccelConfig::small());
+        let max = cfg.decoder.as_ref().unwrap().max_seq_len;
+        assert!(accel.decode(&[], 2).is_err(), "empty prompt");
+        assert!(accel.decode(&[1], max).is_err(), "prompt + gen exceeds max_seq_len");
+        assert!(accel.lane_admit_decode(0, &[], 2).is_err(), "empty prompt lane");
+        assert!(accel.lane_admit_decode(0, &[1], max).is_err(), "overlong lane");
+        accel.lane_admit_decode(0, &[1], 1).unwrap();
+        assert!(accel.lane_admit_decode(0, &[2], 1).is_err(), "duplicate id");
+        let vision = QuantizedModel::random(&SdtModelConfig::tiny(), 1);
+        let mut v = Accelerator::new(vision, AccelConfig::small());
+        assert!(v.decode(&[1], 1).is_err(), "vision models cannot decode");
+        assert!(v.lane_admit_decode(0, &[1], 1).is_err());
     }
 }

@@ -1,0 +1,314 @@
+//! Autoregressive decode sessions: prefill/decode split over the
+//! spike-stream KV cache (ISSUE 10, DESIGN.md "Decode & KV cache").
+//!
+//! A [`DecodeSession`] owns a decoder-shaped unit complement — one
+//! single-token [`SdebCore`] per block, a head SEA, the
+//! [`KvCache`] and its own scratch/sink/buffer state — and processes one
+//! token position at a time: `u0` is the token's embedding row (static
+//! across SNN timesteps), each `(block, timestep)` runs
+//! [`SdebCore::run_decode_timestep`] appending K/V to its cache lane and
+//! masking the new Q row against the cached causal prefix, and the head
+//! readout pools this token's spikes into per-position logits.
+//!
+//! Bit-identity contract (proved by `tests/decode_incremental.rs`): the
+//! session is *prefix-deterministic* — after processing tokens
+//! `t_0..t_p` its logits, unit stats and cache state are bit-identical
+//! to a fresh session replaying the same prefix, and its logits match
+//! the dense [`GoldenDecoder`](crate::model::GoldenDecoder) oracle.
+//! Prefill is literally a loop of single-token steps, so cumulative
+//! charges decompose additively and TTFT/ITL fall out of one counter.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::hw::AccelConfig;
+use crate::model::QuantizedModel;
+use crate::quant::ACT_FRAC;
+use crate::scratch::ExecScratch;
+use crate::spike::KvCache;
+use crate::units::SpikeEncodingArray;
+
+use super::buffers::BufferSet;
+use super::executor::head_readout;
+use super::report::StatSink;
+use super::sdeb_core::SdebCore;
+
+/// Greedy (deterministic first-max) token choice over logits.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Outcome of one [`Accelerator::decode`](super::Accelerator::decode)
+/// run: the generated tokens plus the latency decomposition the decode
+/// bench reports (TTFT = prefill cycles, ITL = per-token cycles).
+#[derive(Clone, Debug)]
+pub struct DecodeReport {
+    /// Prompt tokens consumed by prefill.
+    pub prompt_len: usize,
+    /// Tokens generated after the prompt.
+    pub gen_len: usize,
+    /// The generated token ids (greedy argmax).
+    pub generated: Vec<usize>,
+    /// Modelled cycles spent in prefill — the time-to-first-token proxy.
+    pub prefill_cycles: u64,
+    /// Modelled cycles of each generation step — the inter-token
+    /// latencies (grow with the causal prefix).
+    pub token_cycles: Vec<u64>,
+    /// Total modelled cycles of the session.
+    pub total_cycles: u64,
+    /// Final CSR storage words held by the KV cache.
+    pub cache_words: u64,
+    /// (module, spike sparsity) table accumulated over the session.
+    pub sparsity: Vec<(String, f64)>,
+}
+
+/// One autoregressive inference session: per-block single-token SDEB
+/// cores, the session-lifetime KV cache, and the accumulated charges.
+///
+/// The session state is the per-site LIF membranes plus the cache; both
+/// persist across token positions and reset together ([`Self::reset`]),
+/// so steady-state sessions allocate nothing (arena pooling via
+/// `clear_reuse`, scratch via [`ExecScratch`]).
+pub struct DecodeSession {
+    cores: Vec<SdebCore>,
+    sea_head: SpikeEncodingArray,
+    cache: KvCache,
+    buffers: BufferSet,
+    sink: StatSink,
+    scratch: ExecScratch,
+    head_counts: Vec<u64>,
+    pos: usize,
+    heads: usize,
+    timesteps: usize,
+    dim: usize,
+    max_seq_len: usize,
+}
+
+impl DecodeSession {
+    /// Build a session for `model` (which must be decoder-shaped) on the
+    /// `hw` instance.
+    pub fn new(model: &QuantizedModel, hw: &AccelConfig) -> Result<Self> {
+        let cfg = &model.cfg;
+        let shape = cfg.decoder_shape()?;
+        ensure!(model.embed.is_some(), "model `{}` has no embedding table", cfg.name);
+        let d = cfg.embed_dim;
+        let cores = (0..cfg.num_blocks)
+            .map(|b| SdebCore::new(b, 1, d, cfg.mlp_hidden, cfg.attn_v_th, cfg.lif_params()))
+            .collect();
+        Ok(Self {
+            cores,
+            sea_head: SpikeEncodingArray::new(d, 1, cfg.lif_params()),
+            cache: KvCache::new(cfg.num_blocks, cfg.timesteps, shape.max_seq_len, d),
+            buffers: BufferSet::new(hw),
+            sink: StatSink::new(),
+            scratch: ExecScratch::new(),
+            head_counts: vec![0u64; d],
+            pos: 0,
+            heads: cfg.num_heads,
+            timesteps: cfg.timesteps,
+            dim: d,
+            max_seq_len: shape.max_seq_len,
+        })
+    }
+
+    /// Token positions processed so far (prompt + generated).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Total modelled cycles accumulated so far (sum over phases — the
+    /// decode path is serial, so phase cycles add).
+    pub fn cycles(&self) -> u64 {
+        self.sink.phases.total().cycles
+    }
+
+    /// The session's accumulated stat sink (phase charges + sparsity).
+    pub fn sink(&self) -> &StatSink {
+        &self.sink
+    }
+
+    /// CSR storage words currently held by the KV cache.
+    pub fn cache_words(&self) -> u64 {
+        self.cache.storage_words()
+    }
+
+    /// Process one token and return the logits at its position.
+    ///
+    /// This is *the* decode primitive: prefill and generation both loop
+    /// over it, so cumulative charges decompose additively per position.
+    pub fn step(&mut self, model: &QuantizedModel, hw: &AccelConfig, token: usize) -> Result<Vec<f32>> {
+        ensure!(
+            self.pos < self.max_seq_len,
+            "decode session full: {} positions (max_seq_len)",
+            self.max_seq_len
+        );
+        let d = self.dim;
+        let row = model.embed_row(token)?;
+        self.head_counts.fill(0);
+        for t in 0..self.timesteps {
+            // u0 is the embedding row, identical at every timestep.
+            let mut u = self.scratch.take_tensor(&[1, d], ACT_FRAC);
+            u.data.copy_from_slice(row);
+            for (bi, blk) in model.blocks.iter().enumerate() {
+                u = self.cores[bi].run_decode_timestep(
+                    blk,
+                    u,
+                    hw,
+                    self.heads,
+                    t,
+                    self.cache.stream_mut(bi, t),
+                    self.buffers.sdeb_for(bi),
+                    &mut self.sink,
+                    &mut self.scratch,
+                )?;
+            }
+            head_readout(
+                &mut self.sea_head,
+                &u,
+                1,
+                d,
+                hw,
+                &mut self.sink,
+                &mut self.head_counts,
+                &mut self.scratch,
+            );
+            self.scratch.put_tensor(u);
+        }
+        self.cache.finish_token().context("kv cache invariant after decode step")?;
+        self.pos += 1;
+
+        // Host-side head on this position's pooled spike rates.
+        let denom = self.timesteps as f32; // as-ok: small count to f32 rate denominator
+        let mut logits = model.head_b.clone();
+        for (c, &cnt) in self.head_counts.iter().enumerate() {
+            let rate = cnt as f32 / denom; // as-ok: spike count to rate
+            if rate != 0.0 {
+                for (k, lg) in logits.iter_mut().enumerate() {
+                    *lg += rate * model.head_w[c * model.cfg.num_classes + k];
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Consume the whole prompt (a loop of [`Self::step`]) and return
+    /// the logits at its last position — the first generation decision.
+    pub fn prefill(
+        &mut self,
+        model: &QuantizedModel,
+        hw: &AccelConfig,
+        prompt: &[usize],
+    ) -> Result<Vec<f32>> {
+        ensure!(!prompt.is_empty(), "prefill needs at least one prompt token");
+        let mut last = Vec::new();
+        for &tok in prompt {
+            last = self.step(model, hw, tok)?;
+        }
+        Ok(last)
+    }
+
+    /// Process `token` and greedily pick the next one from its logits.
+    pub fn decode_step(
+        &mut self,
+        model: &QuantizedModel,
+        hw: &AccelConfig,
+        token: usize,
+    ) -> Result<(usize, Vec<f32>)> {
+        let logits = self.step(model, hw, token)?;
+        Ok((argmax(&logits), logits))
+    }
+
+    /// Reset all session state (LIF membranes, cache, charges) for a
+    /// fresh sequence, keeping every arena/buffer capacity.
+    pub fn reset(&mut self) {
+        for c in &mut self.cores {
+            c.reset();
+        }
+        self.sea_head.reset();
+        self.cache.reset();
+        self.buffers.reset();
+        self.sink = StatSink::new();
+        self.head_counts.fill(0);
+        self.pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SdtModelConfig;
+
+    fn setup() -> (QuantizedModel, AccelConfig) {
+        let cfg = SdtModelConfig::tiny_decoder();
+        (QuantizedModel::random(&cfg, 11), AccelConfig::small())
+    }
+
+    #[test]
+    fn session_is_prefix_deterministic() {
+        let (model, hw) = setup();
+        let mut a = DecodeSession::new(&model, &hw).unwrap();
+        let mut b = DecodeSession::new(&model, &hw).unwrap();
+        let la = a.prefill(&model, &hw, &[1, 5, 2]).unwrap();
+        let lb = b.prefill(&model, &hw, &[1, 5, 2]).unwrap();
+        assert_eq!(la, lb);
+        assert_eq!(a.cycles(), b.cycles());
+        assert_eq!(a.cache_words(), b.cache_words());
+    }
+
+    #[test]
+    fn reset_restores_a_fresh_session_bit_exactly() {
+        let (model, hw) = setup();
+        let mut s = DecodeSession::new(&model, &hw).unwrap();
+        let first = s.prefill(&model, &hw, &[3, 1, 4]).unwrap();
+        let cycles = s.cycles();
+        s.reset();
+        assert_eq!(s.pos(), 0);
+        assert_eq!(s.cache_words(), 0);
+        let again = s.prefill(&model, &hw, &[3, 1, 4]).unwrap();
+        assert_eq!(first, again, "reset session must replay bit-exactly");
+        assert_eq!(s.cycles(), cycles);
+    }
+
+    #[test]
+    fn step_cost_grows_with_the_prefix() {
+        let (model, hw) = setup();
+        let mut s = DecodeSession::new(&model, &hw).unwrap();
+        s.step(&model, &hw, 0).unwrap();
+        let early = s.cycles();
+        for p in 1..8 {
+            s.step(&model, &hw, p % model.cfg.vocab()).unwrap();
+        }
+        let before = s.cycles();
+        s.step(&model, &hw, 1).unwrap();
+        let late_step = s.cycles() - before;
+        assert!(
+            late_step > early / 2,
+            "attention over a deeper prefix cannot be nearly free"
+        );
+        assert_eq!(s.pos(), 9);
+    }
+
+    #[test]
+    fn session_rejects_overflow_and_vision_models() {
+        let (model, hw) = setup();
+        let mut s = DecodeSession::new(&model, &hw).unwrap();
+        let max = model.cfg.decoder_shape().unwrap().max_seq_len;
+        for p in 0..max {
+            s.step(&model, &hw, p % model.cfg.vocab()).unwrap();
+        }
+        assert!(s.step(&model, &hw, 0).is_err(), "past max_seq_len");
+        let vision = QuantizedModel::random(&SdtModelConfig::tiny(), 1);
+        assert!(DecodeSession::new(&vision, &hw).is_err());
+    }
+
+    #[test]
+    fn argmax_is_first_max_deterministic() {
+        assert_eq!(argmax(&[0.0, 2.0, 2.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -17,6 +17,7 @@
 
 pub mod buffers;
 pub mod controller;
+pub mod decode;
 pub mod dma;
 pub mod executor;
 pub mod mapper;
@@ -28,6 +29,7 @@ pub mod workers;
 
 pub use buffers::SlotRing;
 pub use controller::{Accelerator, DatapathMode, ExecMode};
+pub use decode::{DecodeReport, DecodeSession};
 pub use dma::{BlockPlan, DmaEngine, WeightResidency, WEIGHT_STREAM_BYTES};
 pub use mapper::{Mapper, MappingPolicy, WorkUnit};
 pub use workers::WorkerPool;

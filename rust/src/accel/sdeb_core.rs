@@ -9,7 +9,7 @@ use crate::hw::{AccelConfig, EngineKind, UnitStats};
 use crate::lif::LifParams;
 use crate::quant::QTensor;
 use crate::scratch::ExecScratch;
-use crate::spike::PackedBitmap;
+use crate::spike::{KvCacheStream, PackedBitmap};
 use crate::units::{
     AdderModule, SmamOutput, SpikeEncodingArray, SpikeLinearUnit, SpikeMaskAddModule,
 };
@@ -273,6 +273,131 @@ impl SdebCore {
 
         Ok(u3)
     }
+
+    /// One decode-mode timestep of the block for a single new token.
+    ///
+    /// The autoregressive twin of [`Self::run_timestep`], with three
+    /// deliberate differences (DESIGN.md "Decode & KV cache"):
+    /// * the core must be built with `tokens == 1` — `u` is the new
+    ///   token's `[1, D]` residual-stream row;
+    /// * the K/V spike rows are appended to this `(block, timestep)`
+    ///   lane's [`KvCacheStream`] (charged as ESS writes under the
+    ///   `sdeb.kvcache` phase) instead of the transient ESS ring, and the
+    ///   SDSA pass is [`SpikeMaskAddModule::run_incremental_into`] over
+    ///   the cached causal prefix;
+    /// * temporal-delta charging is skipped: consecutive *positions* are
+    ///   different tokens, not re-presentations of one input, so the
+    ///   input store always moves its full words.
+    ///
+    /// Always runs the encoded datapath (the A1 bitmap-baseline ablation
+    /// is vision-only); `cfg.engine` still resolves CSR vs word engine
+    /// per work unit inside the SLU and the incremental SMAM.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_decode_timestep(
+        &mut self,
+        blk: &QuantizedBlock,
+        u: QTensor,
+        cfg: &AccelConfig,
+        heads: usize,
+        t: usize,
+        cache: &mut KvCacheStream,
+        buffers: &mut CoreBuffers,
+        sink: &mut StatSink,
+        scratch: &mut ExecScratch,
+    ) -> Result<QTensor> {
+        assert_eq!(self.tokens, 1, "decode cores process one token position at a time");
+        let bi = self.index;
+        let d = self.dim;
+        let mut cl = scratch.take_i32(0);
+
+        // SEA encode the new token's residual row.
+        self.to_cl_into(&u, d, &mut cl);
+        let (s_in, st) = self.sea_in.encode_into(&cl, cfg, scratch);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.in.spikes"), &s_in);
+        let full_words = s_in.storage_words() as u64; // as-ok: widening for 64-bit stat/cycle math
+        sink.spike_traffic(full_words, full_words);
+        buffers.store_encoded(&s_in, t)?;
+
+        // Q/K/V projections + SEA fire, exactly as the vision path.
+        let (qv, st) = self.slu_forward(&s_in, &blk.q, cfg, DatapathMode::Encoded, scratch);
+        sink.add("sdeb.qkv", st);
+        self.to_cl_into(&qv, d, &mut cl);
+        let (q_s, st) = self.sea_q.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(qv);
+        sink.add("sdeb.encode", st);
+        let (kv, st) = self.slu_forward(&s_in, &blk.k, cfg, DatapathMode::Encoded, scratch);
+        sink.add("sdeb.qkv", st);
+        self.to_cl_into(&kv, d, &mut cl);
+        let (k_s, st) = self.sea_k.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(kv);
+        sink.add("sdeb.encode", st);
+        let (vv, st) = self.slu_forward(&s_in, &blk.v, cfg, DatapathMode::Encoded, scratch);
+        sink.add("sdeb.qkv", st);
+        self.to_cl_into(&vv, d, &mut cl);
+        let (v_s, st) = self.sea_v.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(vv);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.q.spikes"), &q_s);
+        sink.sparsity(&format!("block{bi}.k.spikes"), &k_s);
+        sink.sparsity(&format!("block{bi}.v.spikes"), &v_s);
+        buffers.store_encoded(&q_s, t)?;
+        scratch.put_enc(s_in);
+
+        // K/V rows join the session-lifetime cache (ESS write charge);
+        // the transient ring never sees them in decode mode.
+        let app = cache.append_into(&k_s, &v_s);
+        sink.add(
+            "sdeb.kvcache",
+            UnitStats { sram_writes: app.words, ..Default::default() },
+        );
+        scratch.put_enc(k_s);
+        scratch.put_enc(v_s);
+
+        // Incremental SDSA: the new Q row against the cached K stream
+        // (which now includes this token's own row).
+        let (attn, st) = self.smam.run_incremental_into(&q_s, cache, heads, cfg, scratch);
+        sink.add("sdeb.smam", st);
+        sink.sparsity(&format!("block{bi}.sdsa.spikes"), &attn);
+        scratch.put_enc(q_s);
+
+        // Output projection + residual.
+        let (ov, st) = self.slu_forward(&attn, &blk.o, cfg, DatapathMode::Encoded, scratch);
+        sink.add("sdeb.proj", st);
+        scratch.put_enc(attn);
+        let (u2, st) = self.adder.add_into(&u, &ov, cfg, scratch);
+        sink.add("sdeb.residual", st);
+        scratch.put_tensor(u);
+        scratch.put_tensor(ov);
+        let u = u2;
+
+        // MLP: encode -> SLU -> encode -> SLU -> residual.
+        self.to_cl_into(&u, d, &mut cl);
+        let (s2, st) = self.sea_mlp_in.encode_into(&cl, cfg, scratch);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.mlp.in.spikes"), &s2);
+        buffers.store_encoded(&s2, t)?;
+        let (hv, st) = self.slu_forward(&s2, &blk.mlp1, cfg, DatapathMode::Encoded, scratch);
+        sink.add("sdeb.mlp", st);
+        scratch.put_enc(s2);
+        let h = blk.mlp1.out_dim;
+        self.to_cl_into(&hv, h, &mut cl);
+        let (s3, st) = self.sea_mlp_hidden.encode_into(&cl, cfg, scratch);
+        scratch.put_tensor(hv);
+        sink.add("sdeb.encode", st);
+        sink.sparsity(&format!("block{bi}.mlp.hidden.spikes"), &s3);
+        buffers.store_encoded(&s3, t)?;
+        let (m2, st) = self.slu_forward(&s3, &blk.mlp2, cfg, DatapathMode::Encoded, scratch);
+        sink.add("sdeb.mlp", st);
+        scratch.put_enc(s3);
+        let (u3, st) = self.adder.add_into(&u, &m2, cfg, scratch);
+        sink.add("sdeb.residual", st);
+        scratch.put_tensor(u);
+        scratch.put_tensor(m2);
+        scratch.put_i32(cl);
+
+        Ok(u3)
+    }
 }
 
 #[cfg(test)]
@@ -381,6 +506,42 @@ mod tests {
             csr_cycles, bitmap_cycles,
             "the two engines should charge different QKV cycle counts on this shape"
         );
+    }
+
+    #[test]
+    fn decode_timestep_appends_cache_and_charges_kvcache_phase() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 9);
+        let hw = AccelConfig::small();
+        let mut core = SdebCore::new(0, 1, 64, cfg.mlp_hidden, cfg.attn_v_th, cfg.lif_params());
+        let mut cache = KvCacheStream::new(cfg.decoder_shape().unwrap().max_seq_len, 64);
+        let mut buffers = BufferSet::new(&hw);
+        let mut sink = StatSink::new();
+        let mut scratch = ExecScratch::new();
+        for p in 0..3 {
+            let row = model.embed_row(p).unwrap();
+            let u = QTensor { shape: vec![1, 64], frac: ACT_FRAC, data: row.to_vec() };
+            let out = core
+                .run_decode_timestep(
+                    &model.blocks[0],
+                    u,
+                    &hw,
+                    cfg.num_heads,
+                    0,
+                    &mut cache,
+                    buffers.sdeb_for(0),
+                    &mut sink,
+                    &mut scratch,
+                )
+                .unwrap();
+            assert_eq!(out.shape, vec![1, 64]);
+            assert_eq!(cache.len(), p + 1, "cache grows by one per position");
+            scratch.put_tensor(out);
+        }
+        assert!(sink.phases.get("sdeb.kvcache").sram_writes > 0, "cache writes charged");
+        assert!(sink.phases.get("sdeb.smam").cycles > 0);
+        // Decode SMAM cost at position p reflects a 3-deep causal scan.
+        assert!(sink.phases.get("sdeb.smam").sops > 0);
     }
 
     #[test]

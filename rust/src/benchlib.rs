@@ -302,7 +302,7 @@ impl ArrivalSpec {
         if let Some(file) = s.strip_prefix("trace:") {
             let text = std::fs::read_to_string(file)
                 .map_err(|e| format!("cannot read trace `{file}`: {e}"))?;
-            let mut offsets = Vec::new();
+            let mut offsets: Vec<f64> = Vec::new();
             for (ln, line) in text.lines().enumerate() {
                 let line = line.trim();
                 if line.is_empty() || line.starts_with('#') {
@@ -313,6 +313,16 @@ impl ArrivalSpec {
                     .map_err(|e| format!("trace `{file}` line {}: {e}", ln + 1))?;
                 if !(v.is_finite() && v >= 0.0) {
                     return Err(format!("trace `{file}` line {}: offsets must be >= 0", ln + 1));
+                }
+                // The wrap logic in `arrival_offsets` shifts each lap by
+                // the *last* offset, which is only the trace's span when
+                // offsets are sorted — refuse out-of-order timestamps.
+                if offsets.last().is_some_and(|&prev| v < prev) {
+                    return Err(format!(
+                        "trace `{file}` line {}: offsets must be non-decreasing ({v} after {})",
+                        ln + 1,
+                        offsets.last().unwrap()
+                    ));
                 }
                 offsets.push(v);
             }
@@ -486,6 +496,53 @@ mod tests {
         std::fs::write(&path, "# offsets\n0.0\n\n0.25\n1.5\n").unwrap();
         let spec = ArrivalSpec::parse(&format!("trace:{}", path.display())).unwrap();
         assert_eq!(spec, ArrivalSpec::Trace(vec![0.0, 0.25, 1.5]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_file_rejects_empty_and_non_monotone() {
+        let dir = std::env::temp_dir()
+            .join(format!("benchlib_trace_edge_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let empty = dir.join("empty.txt");
+        std::fs::write(&empty, "").unwrap();
+        let err = ArrivalSpec::parse(&format!("trace:{}", empty.display())).unwrap_err();
+        assert!(err.contains("no offsets"), "empty file: {err}");
+        let comments = dir.join("comments.txt");
+        std::fs::write(&comments, "# only\n\n# comments\n").unwrap();
+        let err = ArrivalSpec::parse(&format!("trace:{}", comments.display())).unwrap_err();
+        assert!(err.contains("no offsets"), "comments-only file: {err}");
+        let unsorted = dir.join("unsorted.txt");
+        std::fs::write(&unsorted, "0.0\n2.0\n1.0\n").unwrap();
+        let err = ArrivalSpec::parse(&format!("trace:{}", unsorted.display())).unwrap_err();
+        assert!(
+            err.contains("non-decreasing") && err.contains("line 3"),
+            "out-of-order timestamps must name the offending line: {err}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn trace_file_trailing_newline_and_huge_gaps_parse() {
+        let dir = std::env::temp_dir()
+            .join(format!("benchlib_trace_edge2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // Trailing newline (and no trailing newline) parse identically.
+        let a = dir.join("nl.txt");
+        std::fs::write(&a, "0.0\n0.5\n").unwrap();
+        let b = dir.join("nonl.txt");
+        std::fs::write(&b, "0.0\n0.5").unwrap();
+        let sa = ArrivalSpec::parse(&format!("trace:{}", a.display())).unwrap();
+        let sb = ArrivalSpec::parse(&format!("trace:{}", b.display())).unwrap();
+        assert_eq!(sa, sb);
+        assert_eq!(sa, ArrivalSpec::Trace(vec![0.0, 0.5]));
+        // Huge but finite gaps are legal; the wrap shifts by the span.
+        let big = dir.join("big.txt");
+        std::fs::write(&big, "0.0\n1e6\n").unwrap();
+        let spec = ArrivalSpec::parse(&format!("trace:{}", big.display())).unwrap();
+        let offs = arrival_offsets(&spec, 4, 0);
+        assert_eq!(offs, vec![0.0, 1e6, 1e6, 2e6]);
+        assert!(offs.windows(2).all(|w| w[0] <= w[1]));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -100,6 +100,16 @@ COMMANDS:
              --serial        charge phases serially instead of executing
                              the overlapped core pipeline (ablation; no
                              memory lane)
+             --decode        autoregressive decode session instead of a
+                             vision inference: prefill a random prompt,
+                             then greedy generation over the spike-stream
+                             KV cache (reports TTFT / inter-token latency
+                             / tokens/s; logits bit-identical to full
+                             recompute)
+             --config tiny-decoder|paper-decoder   decoder model scale
+                             (decode mode only; default tiny-decoder)
+             --prompt-len N  prompt tokens to prefill (default 8)
+             --gen-len N     tokens to generate (default 8)
   accuracy   held-out accuracy: quantized simulator vs float PJRT model
              --weights DIR   --limit N
   table1     regenerate Table I (comparison with SNN accelerators)

@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::accel::{Accelerator, DatapathMode, ExecMode, MappingPolicy};
 use crate::hw::AccelConfig;
-use crate::model::{GoldenExecutor, QuantizedModel};
+use crate::model::{GoldenDecoder, GoldenExecutor, QuantizedModel};
 use crate::runtime::{LoadedHlo, PjrtRuntime};
 
 /// A backend executes batches of images and returns per-image logits.
@@ -52,6 +52,19 @@ pub trait InferBackend {
     /// Number of admitted-but-unfinished lanes.
     fn lanes_in_flight(&self) -> usize {
         0
+    }
+
+    /// Whether this backend accepts autoregressive decode requests
+    /// (decoder-shaped models only).
+    fn supports_decode(&self) -> bool {
+        false
+    }
+
+    /// Run one autoregressive request: prefill `prompt`, then greedily
+    /// generate `gen_len` tokens, returning the generated ids. The
+    /// default implementation refuses — see [`Self::supports_decode`].
+    fn decode(&mut self, _prompt: &[usize], _gen_len: usize) -> Result<Vec<usize>> {
+        anyhow::bail!("{}: autoregressive decode unsupported", self.name())
     }
 }
 
@@ -232,6 +245,16 @@ impl InferBackend for SimulatorBackend {
     fn lanes_in_flight(&self) -> usize {
         self.accel.lanes_in_flight()
     }
+
+    fn supports_decode(&self) -> bool {
+        self.accel.model().cfg.decoder.is_some()
+    }
+
+    fn decode(&mut self, prompt: &[usize], gen_len: usize) -> Result<Vec<usize>> {
+        let report = self.accel.decode(prompt, gen_len)?;
+        self.cycles += report.total_cycles;
+        Ok(report.generated)
+    }
 }
 
 /// The dense golden executor (no hw accounting; fastest host path).
@@ -293,6 +316,30 @@ impl InferBackend for GoldenBackend {
 
     fn lanes_in_flight(&self) -> usize {
         self.pending.len()
+    }
+
+    fn supports_decode(&self) -> bool {
+        self.model.cfg.decoder.is_some()
+    }
+
+    /// Greedy generation by **full recompute**: every step replays the
+    /// whole prefix through the dense [`GoldenDecoder`] — the oracle the
+    /// simulator's incremental KV-cache path is proved bit-identical to.
+    fn decode(&mut self, prompt: &[usize], gen_len: usize) -> Result<Vec<usize>> {
+        let decoder = GoldenDecoder::new(&self.model)?;
+        let mut seq = prompt.to_vec();
+        for _ in 0..gen_len {
+            let res = decoder.run(&seq)?;
+            let last = res.logits.last().expect("non-empty sequence has logits");
+            let mut best = 0usize;
+            for (i, &v) in last.iter().enumerate() {
+                if v > last[best] {
+                    best = i;
+                }
+            }
+            seq.push(best);
+        }
+        Ok(seq.split_off(prompt.len()))
     }
 }
 
@@ -448,6 +495,31 @@ mod tests {
         assert_eq!(done[0], (5, want[0].clone()));
         assert_eq!(done[1], (9, want[1].clone()));
         assert_eq!(g.lanes_in_flight(), 0);
+    }
+
+    #[test]
+    fn simulator_decode_matches_golden_full_recompute() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 29);
+        let mut sim = SimulatorBackend::new(model.clone(), AccelConfig::small());
+        let mut gold = GoldenBackend::new(model);
+        assert!(sim.supports_decode() && gold.supports_decode());
+        let a = sim.decode(&[1, 5, 2], 4).unwrap();
+        let b = gold.decode(&[1, 5, 2], 4).unwrap();
+        assert_eq!(a.len(), 4);
+        assert_eq!(a, b, "incremental KV-cache decode must match full recompute");
+        assert!(sim.modelled_cycles() > 0);
+    }
+
+    #[test]
+    fn vision_backends_refuse_decode() {
+        let cfg = SdtModelConfig::tiny();
+        let model = QuantizedModel::random(&cfg, 31);
+        let mut sim = SimulatorBackend::new(model.clone(), AccelConfig::small());
+        let mut gold = GoldenBackend::new(model);
+        assert!(!sim.supports_decode() && !gold.supports_decode());
+        assert!(sim.decode(&[1], 1).is_err());
+        assert!(gold.decode(&[1], 1).is_err());
     }
 
     #[test]

@@ -46,6 +46,8 @@ fn get_model(args: &Args) -> Result<QuantizedModel> {
     let cfg = match args.get_or("config", "tiny").as_str() {
         "tiny" => SdtModelConfig::tiny(),
         "paper" => SdtModelConfig::paper(),
+        "tiny-decoder" => SdtModelConfig::tiny_decoder(),
+        "paper-decoder" => SdtModelConfig::paper_decoder(),
         other => bail!("unknown config `{other}`"),
     };
     Ok(QuantizedModel::random(&cfg, 42))
@@ -105,6 +107,9 @@ fn mapping_from_args(args: &Args) -> Result<MappingPolicy> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
+    if args.has_flag("decode") {
+        return cmd_run_decode(args);
+    }
     let model = get_model(args)?;
     let seed = args.usize_or("seed", 1)? as u64;
     let exec = exec_mode(args);
@@ -133,6 +138,51 @@ fn cmd_run(args: &Args) -> Result<()> {
     let report = accel.infer(&random_image(seed))?;
     println!("{}", report.summary());
     println!("predicted class: {}", report.argmax());
+    Ok(())
+}
+
+/// `run --decode`: one autoregressive session on the cycle simulator —
+/// prefill a random prompt, then greedy generation over the spike-stream
+/// KV cache — reporting TTFT, inter-token latency and tokens/s.
+fn cmd_run_decode(args: &Args) -> Result<()> {
+    let cfg = match args.get_or("config", "tiny-decoder").as_str() {
+        "tiny-decoder" => SdtModelConfig::tiny_decoder(),
+        "paper-decoder" => SdtModelConfig::paper_decoder(),
+        other => bail!("--decode needs a decoder config (tiny-decoder|paper-decoder), got `{other}`"),
+    };
+    let model = QuantizedModel::random(&cfg, 42);
+    let prompt_len = args.usize_or("prompt-len", 8)?;
+    let gen_len = args.usize_or("gen-len", 8)?;
+    let seed = args.usize_or("seed", 1)? as u64;
+    let exec = exec_mode(args);
+    let workers = args.usize_or("workers", 0)?;
+    let hw = hw_from_args(args)?;
+    let policy = mapping_from_args(args)?;
+    println!(
+        "decode `{}`: D={} T={} blocks={} max_seq_len={} prompt={prompt_len} gen={gen_len} engine={}",
+        cfg.name,
+        cfg.embed_dim,
+        cfg.timesteps,
+        cfg.num_blocks,
+        cfg.decoder_shape()?.max_seq_len,
+        hw.engine.name()
+    );
+    let vocab = cfg.vocab() as u64;
+    let mut rng = Prng::new(seed);
+    let prompt: Vec<usize> =
+        (0..prompt_len).map(|_| (rng.next_u64() % vocab) as usize).collect();
+    let mut accel =
+        Accelerator::with_runtime(model, hw, DatapathMode::Encoded, exec, workers)
+            .with_mapping(policy);
+    let r = accel.decode(&prompt, gen_len)?;
+    let hz = hw.freq_mhz as f64 * 1e6;
+    let gen_cycles: u64 = r.token_cycles.iter().sum();
+    let itl_mean = gen_cycles as f64 / r.token_cycles.len().max(1) as f64;
+    println!("generated tokens: {:?}", r.generated);
+    println!("prefill (TTFT):   {} cycles ({:.3} ms)", r.prefill_cycles, 1e3 * r.prefill_cycles as f64 / hz);
+    println!("inter-token mean: {itl_mean:.0} cycles ({:.3} ms)", 1e3 * itl_mean / hz);
+    println!("tokens/s:         {:.1}", r.gen_len as f64 * hz / gen_cycles.max(1) as f64);
+    println!("total:            {} cycles, kv cache {} words", r.total_cycles, r.cache_words);
     Ok(())
 }
 

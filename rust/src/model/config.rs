@@ -7,6 +7,18 @@ use crate::io::ModelConfigFile;
 use crate::lif::LifParams;
 
 #[derive(Clone, Debug, PartialEq)]
+/// Decoder-mode shape for autoregressive token workloads: the block stack
+/// runs one token position at a time against a growing spike-stream K/V
+/// cache (prefill/decode split), with the classifier head doubling as the
+/// vocabulary projection — `vocab == num_classes` — and a token-embedding
+/// table replacing the SPS conv front-end.
+pub struct DecoderShape {
+    /// Maximum sequence length a decode session may reach (prompt plus
+    /// generated tokens); sizes the K/V cache's position space.
+    pub max_seq_len: usize,
+}
+
+#[derive(Clone, Debug, PartialEq)]
 /// Hyper-parameters of one Spike-driven Transformer model.
 pub struct SdtModelConfig {
     /// Config name (`tiny`, `paper`, ...).
@@ -35,6 +47,8 @@ pub struct SdtModelConfig {
     pub lif_v_reset: f32,
     /// LIF leak factor.
     pub lif_gamma: f32,
+    /// Decoder-mode shape; `None` for the single-shot vision workloads.
+    pub decoder: Option<DecoderShape>,
 }
 
 impl SdtModelConfig {
@@ -54,8 +68,21 @@ impl SdtModelConfig {
             lif_v_th: 1.0,
             lif_v_reset: 0.0,
             lif_gamma: 0.5,
+            decoder: None,
         };
         c.validate().expect("builtin tiny config invalid");
+        c
+    }
+
+    /// The `tiny` shape in decoder mode: same block stack, a 64-position
+    /// K/V cache, and the 10-way head reinterpreted as the vocabulary.
+    pub fn tiny_decoder() -> Self {
+        let c = Self {
+            name: "tiny-decoder".into(),
+            decoder: Some(DecoderShape { max_seq_len: 64 }),
+            ..Self::tiny()
+        };
+        c.validate().expect("builtin tiny-decoder config invalid");
         c
     }
 
@@ -75,8 +102,20 @@ impl SdtModelConfig {
             lif_v_th: 1.0,
             lif_v_reset: 0.0,
             lif_gamma: 0.5,
+            decoder: None,
         };
         c.validate().expect("builtin paper config invalid");
+        c
+    }
+
+    /// The paper operating point in decoder mode (128-position cache).
+    pub fn paper_decoder() -> Self {
+        let c = Self {
+            name: "paper-decoder".into(),
+            decoder: Some(DecoderShape { max_seq_len: 128 }),
+            ..Self::paper()
+        };
+        c.validate().expect("builtin paper-decoder config invalid");
         c
     }
 
@@ -114,6 +153,11 @@ impl SdtModelConfig {
             lif_v_th: f.f32("lif_v_th")?,
             lif_v_reset: f.f32("lif_v_reset")?,
             lif_gamma: f.f32("lif_gamma")?,
+            // Decoder mode is opt-in: a `max_seq_len` key turns it on.
+            decoder: match f.kv.get("max_seq_len") {
+                Some(v) => Some(DecoderShape { max_seq_len: v.parse()? }),
+                None => None,
+            },
         };
         c.validate()?;
         Ok(c)
@@ -155,7 +199,40 @@ impl SdtModelConfig {
                 self.embed_dim
             );
         }
+        if let Some(dec) = &self.decoder {
+            if dec.max_seq_len == 0 {
+                bail!("decoder max_seq_len must be nonzero");
+            }
+            // The K/V cache stores positions in the CSR arena's u16
+            // address space (see `spike::kvcache`).
+            if dec.max_seq_len > u16::MAX as usize + 1 {
+                bail!(
+                    "decoder max_seq_len {} exceeds the u16 position space of \
+                     the spike-stream K/V cache",
+                    dec.max_seq_len
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Vocabulary size in decoder mode: the classifier head doubles as the
+    /// vocabulary projection, so this is [`Self::num_classes`].
+    pub fn vocab(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Decoder shape, or an error for vision-only configs — the decode
+    /// entry points call this so a missing shape fails loudly.
+    pub fn decoder_shape(&self) -> Result<&DecoderShape> {
+        match &self.decoder {
+            Some(d) => Ok(d),
+            None => bail!(
+                "model `{}` has no decoder shape: decode mode needs a config \
+                 with `max_seq_len` (e.g. tiny_decoder)",
+                self.name
+            ),
+        }
     }
 
     /// The integer LIF parameters of this config.
@@ -270,6 +347,35 @@ mod tests {
             let f = ModelConfigFile::parse(&tiny_text_with(k, v));
             assert!(SdtModelConfig::from_file(&f).is_err(), "{k}={v}");
         }
+    }
+
+    #[test]
+    fn decoder_shape_is_optional_and_validated() {
+        let c = SdtModelConfig::tiny();
+        assert!(c.decoder.is_none());
+        assert!(c.decoder_shape().is_err());
+        let d = SdtModelConfig::tiny_decoder();
+        assert_eq!(d.decoder_shape().unwrap().max_seq_len, 64);
+        assert_eq!(d.vocab(), d.num_classes);
+        assert_eq!(SdtModelConfig::paper_decoder().decoder_shape().unwrap().max_seq_len, 128);
+        // Zero and >u16-space cache lengths are rejected.
+        let mut bad = SdtModelConfig::tiny_decoder();
+        bad.decoder = Some(DecoderShape { max_seq_len: 0 });
+        assert!(bad.validate().is_err());
+        bad.decoder = Some(DecoderShape { max_seq_len: 1 << 17 });
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn from_file_parses_max_seq_len() {
+        let base = "name d\nimg_size 32\nin_channels 3\nnum_classes 10\ntimesteps 2\n\
+                    embed_dim 64\nnum_blocks 1\nnum_heads 1\nmlp_hidden 128\nattn_v_th 2\n\
+                    lif_v_th 1.0\nlif_v_reset 0.0\nlif_gamma 0.5\n";
+        let f = ModelConfigFile::parse(base);
+        assert!(SdtModelConfig::from_file(&f).unwrap().decoder.is_none());
+        let f = ModelConfigFile::parse(&format!("{base}max_seq_len 48\n"));
+        let c = SdtModelConfig::from_file(&f).unwrap();
+        assert_eq!(c.decoder.unwrap().max_seq_len, 48);
     }
 
     #[test]

@@ -254,6 +254,9 @@ pub fn load_checkpoint(path: &Path) -> Result<QuantizedModel> {
         lif_v_th: r_f32(&mut r)?,
         lif_v_reset: r_f32(&mut r)?,
         lif_gamma: r_f32(&mut r)?,
+        // Checkpoints come from the vision training pipeline; decoder-mode
+        // models are constructed in-process (QuantizedModel::random).
+        decoder: None,
     };
     let n_convs = r_u32(&mut r)? as usize;
     ensure!(n_convs == 5, "expected 5 SPS convs, found {n_convs}");
@@ -273,7 +276,7 @@ pub fn load_checkpoint(path: &Path) -> Result<QuantizedModel> {
     let head_w = r_vec_f32(&mut r)?;
     let head_b = r_vec_f32(&mut r)?;
     ensure!(head_w.len() == cfg.embed_dim * cfg.num_classes, "head shape mismatch");
-    Ok(QuantizedModel { cfg, sps_convs, blocks, head_w, head_b })
+    Ok(QuantizedModel { cfg, sps_convs, blocks, head_w, head_b, embed: None })
 }
 
 #[cfg(test)]

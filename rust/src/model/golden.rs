@@ -322,6 +322,182 @@ impl<'m> GoldenExecutor<'m> {
     }
 }
 
+/// Result of a golden autoregressive decode pass.
+#[derive(Clone, Debug)]
+pub struct GoldenDecodeResult {
+    /// Logits after each processed token (`logits[p]` = classification /
+    /// next-token scores with the causal prefix `tokens[0..=p]`).
+    pub logits: Vec<Vec<f32>>,
+    /// Total spikes fired anywhere in the network.
+    pub total_spikes: u64,
+}
+
+/// Dense reference decoder: the autoregressive twin of
+/// [`GoldenExecutor`], recomputing every token from plain `Vec<bool>`
+/// history with O(n²) loops — no CSR arenas, no KV cache, no engine
+/// dispatch. The accelerator's incremental decode path
+/// (`DecodeSession`) must match it bit-exactly
+/// (`tests/decode_incremental.rs`).
+///
+/// Session semantics (mirrored by the accelerator, documented in
+/// DESIGN.md "Decode & KV cache"):
+/// * `u0` of token `p` is its embedding row, static across SNN
+///   timesteps (the decoder has no SPS front-end);
+/// * LIF membrane state persists across token positions — the session
+///   state is the neuron membranes plus the K/V history;
+/// * per head `h` (balanced contiguous channel ranges) and cached
+///   position `p' <= p`, the attention count is `|Q_p ∩ K_p'|`
+///   restricted to `h`'s channels; at count `>= attn_v_th` position
+///   `p'`'s V spikes in `h`'s channels are OR-ed into the output row;
+/// * head-pool spike counts reset per token (logits are per-position),
+///   the head LIF membrane does not.
+pub struct GoldenDecoder<'m> {
+    /// The quantized decoder model being executed.
+    pub model: &'m QuantizedModel,
+}
+
+impl<'m> GoldenDecoder<'m> {
+    /// Bind to a decoder-shaped model (must carry an embedding table).
+    pub fn new(model: &'m QuantizedModel) -> anyhow::Result<Self> {
+        model.cfg.decoder_shape()?;
+        anyhow::ensure!(
+            model.embed.is_some(),
+            "model `{}` has no embedding table",
+            model.cfg.name
+        );
+        Ok(Self { model })
+    }
+
+    /// Process `tokens` sequentially from a fresh session and return the
+    /// logits after every position. Deterministic, and prefix-stable:
+    /// running a prefix of `tokens` yields the same leading logits.
+    pub fn run(&self, tokens: &[usize]) -> anyhow::Result<GoldenDecodeResult> {
+        let cfg = &self.model.cfg;
+        let shape = cfg.decoder_shape()?;
+        anyhow::ensure!(!tokens.is_empty(), "decode needs at least one token");
+        anyhow::ensure!(
+            tokens.len() <= shape.max_seq_len,
+            "sequence of {} exceeds max_seq_len {}",
+            tokens.len(),
+            shape.max_seq_len
+        );
+        let exec = GoldenExecutor::new(self.model);
+        let (d, steps, heads) = (cfg.embed_dim, cfg.timesteps, cfg.num_heads.max(1).min(cfg.embed_dim));
+        let mut st = SaturationTruncation::new();
+        let mut total_spikes: u64 = 0;
+
+        let mut lif_block: Vec<[LifArray; 6]> = (0..cfg.num_blocks)
+            .map(|_| {
+                [
+                    LifArray::new(d, cfg.lif_params()), // in
+                    LifArray::new(d, cfg.lif_params()), // q
+                    LifArray::new(d, cfg.lif_params()), // k
+                    LifArray::new(d, cfg.lif_params()), // v
+                    LifArray::new(d, cfg.lif_params()), // mlp in
+                    LifArray::new(cfg.mlp_hidden, cfg.lif_params()), // mlp hidden
+                ]
+            })
+            .collect();
+        let mut lif_head = LifArray::new(d, cfg.lif_params());
+
+        // Dense K/V history per (block, timestep): position-major
+        // `[n*d]` bool rows, appended as tokens are processed.
+        let lanes = cfg.num_blocks * steps;
+        let mut k_hist: Vec<Vec<bool>> = vec![Vec::new(); lanes];
+        let mut v_hist: Vec<Vec<bool>> = vec![Vec::new(); lanes];
+
+        let mut all_logits = Vec::with_capacity(tokens.len());
+        for (p, &tok) in tokens.iter().enumerate() {
+            let row = self.model.embed_row(tok)?;
+            let mut counts = vec![0u64; d];
+            for t in 0..steps {
+                let mut u: Vec<i32> = row.to_vec();
+                for (bi, blk) in self.model.blocks.iter().enumerate() {
+                    let lifs = &mut lif_block[bi];
+                    let fire = |vals: &[i32], lif: &mut LifArray| -> Vec<bool> {
+                        vals.iter().enumerate().map(|(j, &v)| lif.step_one(j, v)).collect()
+                    };
+                    let s_in = fire(&u, &mut lifs[0]);
+                    let qv = exec.linear(&s_in, 1, &blk.q, &mut st);
+                    let kv = exec.linear(&s_in, 1, &blk.k, &mut st);
+                    let vv = exec.linear(&s_in, 1, &blk.v, &mut st);
+                    let q_s = fire(&qv, &mut lifs[1]);
+                    let k_s = fire(&kv, &mut lifs[2]);
+                    let v_s = fire(&vv, &mut lifs[3]);
+                    total_spikes += (s_in.iter().chain(&q_s).chain(&k_s).chain(&v_s))
+                        .filter(|&&b| b)
+                        .count() as u64;
+
+                    let lane = bi * steps + t;
+                    k_hist[lane].extend_from_slice(&k_s);
+                    v_hist[lane].extend_from_slice(&v_s);
+                    debug_assert_eq!(k_hist[lane].len(), (p + 1) * d);
+
+                    // Causal row-wise per-head SDSA over the history
+                    // (including the token's own row).
+                    let mut attn = vec![false; d];
+                    for pp in 0..=p {
+                        for h in 0..heads {
+                            // Balanced contiguous head ranges (the first
+                            // `d % heads` heads take one extra channel).
+                            let base = d / heads;
+                            let rem = d % heads;
+                            let start = h * base + h.min(rem);
+                            let end = start + base + usize::from(h < rem);
+                            let count = (start..end)
+                                .filter(|&c| q_s[c] && k_hist[lane][pp * d + c])
+                                .count() as u32;
+                            if count >= cfg.attn_v_th {
+                                for c in start..end {
+                                    attn[c] |= v_hist[lane][pp * d + c];
+                                }
+                            }
+                        }
+                    }
+
+                    let ov = exec.linear(&attn, 1, &blk.o, &mut st);
+                    for (uu, &o) in u.iter_mut().zip(&ov) {
+                        *uu = sat(*uu as i64 + o as i64, MEM_BITS);
+                    }
+
+                    let mut s2 = vec![false; d];
+                    for (j, &v) in u.iter().enumerate() {
+                        s2[j] = lifs[4].step_one(j, v);
+                    }
+                    let hv = exec.linear(&s2, 1, &blk.mlp1, &mut st);
+                    let s3 = fire(&hv, &mut lifs[5]);
+                    total_spikes += (s2.iter().chain(&s3)).filter(|&&b| b).count() as u64;
+                    let m2 = exec.linear(&s3, 1, &blk.mlp2, &mut st);
+                    for (uu, &o) in u.iter_mut().zip(&m2) {
+                        *uu = sat(*uu as i64 + o as i64, MEM_BITS);
+                    }
+                }
+
+                for (j, &v) in u.iter().enumerate() {
+                    if lif_head.step_one(j, v) {
+                        counts[j] += 1;
+                        total_spikes += 1;
+                    }
+                }
+            }
+
+            // Host-side head on this token's pooled spike rates.
+            let denom = steps as f32;
+            let mut logits = self.model.head_b.clone();
+            for (c, &cnt) in counts.iter().enumerate() {
+                let rate = cnt as f32 / denom;
+                if rate != 0.0 {
+                    for (k, lg) in logits.iter_mut().enumerate() {
+                        *lg += rate * self.model.head_w[c * cfg.num_classes + k];
+                    }
+                }
+            }
+            all_logits.push(logits);
+        }
+        Ok(GoldenDecodeResult { logits: all_logits, total_spikes })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,5 +545,48 @@ mod tests {
         let a = GoldenExecutor::new(&model).infer(&random_image(1, 3 * 32 * 32));
         let b = GoldenExecutor::new(&model).infer(&random_image(9, 3 * 32 * 32));
         assert_ne!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn golden_decoder_is_deterministic_and_prefix_stable() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 5);
+        let dec = GoldenDecoder::new(&model).unwrap();
+        let tokens = [1usize, 4, 2, 7];
+        let a = dec.run(&tokens).unwrap();
+        let b = dec.run(&tokens).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.total_spikes, b.total_spikes);
+        assert_eq!(a.logits.len(), tokens.len());
+        assert!(a.logits.iter().flatten().all(|v| v.is_finite()));
+        // Running a prefix reproduces the leading logits exactly: the
+        // session state at position p depends only on tokens[0..=p].
+        let pre = dec.run(&tokens[..2]).unwrap();
+        assert_eq!(pre.logits[..], a.logits[..2]);
+    }
+
+    #[test]
+    fn golden_decoder_logits_depend_on_the_prefix() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 5);
+        let dec = GoldenDecoder::new(&model).unwrap();
+        let a = dec.run(&[1, 4, 2]).unwrap();
+        let b = dec.run(&[3, 0, 2]).unwrap();
+        // Same last token, different causal prefix -> different logits
+        // (the KV history genuinely feeds the output).
+        assert_ne!(a.logits[2], b.logits[2]);
+    }
+
+    #[test]
+    fn golden_decoder_rejects_bad_inputs() {
+        let vision = QuantizedModel::random(&SdtModelConfig::tiny(), 1);
+        assert!(GoldenDecoder::new(&vision).is_err(), "vision model has no decoder shape");
+        let cfg = SdtModelConfig::tiny_decoder();
+        let model = QuantizedModel::random(&cfg, 1);
+        let dec = GoldenDecoder::new(&model).unwrap();
+        assert!(dec.run(&[]).is_err(), "empty sequence");
+        let max = cfg.decoder_shape().unwrap().max_seq_len;
+        assert!(dec.run(&vec![0; max + 1]).is_err(), "over-length sequence");
+        assert!(dec.run(&[cfg.vocab()]).is_err(), "out-of-vocab token");
     }
 }

@@ -60,7 +60,7 @@ pub fn load_model(dir: &Path) -> Result<QuantizedModel> {
     let (head_b, _) = m.load_f32("head.b")?;
     ensure!(hs == vec![cfg.embed_dim, cfg.num_classes], "head shape {hs:?}");
 
-    Ok(QuantizedModel { cfg, sps_convs, blocks, head_w, head_b })
+    Ok(QuantizedModel { cfg, sps_convs, blocks, head_w, head_b, embed: None })
 }
 
 /// Load the exported held-out split (`test_images.npy` / `test_labels.npy`).

@@ -10,8 +10,8 @@ pub mod golden;
 pub mod loader;
 pub mod weights;
 
-pub use config::SdtModelConfig;
+pub use config::{DecoderShape, SdtModelConfig};
 pub use export::{load_checkpoint, save_checkpoint};
-pub use golden::GoldenExecutor;
+pub use golden::{GoldenDecodeResult, GoldenDecoder, GoldenExecutor};
 pub use loader::load_model;
 pub use weights::{QuantizedBlock, QuantizedModel};

@@ -2,7 +2,7 @@
 //! generator for the paper-scale hardware benchmarks where trained weights
 //! are unnecessary (cycle/energy accounting only needs realistic sparsity).
 
-use crate::quant::{QuantizedLinear, ACT_FRAC};
+use crate::quant::{QFormat, QuantizedLinear, ACT_FRAC, MEM_BITS};
 use crate::units::QuantizedConv;
 use crate::util::Prng;
 
@@ -38,6 +38,11 @@ pub struct QuantizedModel {
     pub head_w: Vec<f32>, // [D, classes]
     /// Classifier bias.
     pub head_b: Vec<f32>,
+    /// Decoder-mode token embedding table, `[vocab, D]` row-major in the
+    /// membrane integer format (replaces the SPS front-end: `u0` for a
+    /// token is its row, static across SNN timesteps). `None` for
+    /// vision-only models.
+    pub embed: Option<Vec<i32>>,
 }
 
 impl QuantizedModel {
@@ -70,8 +75,35 @@ impl QuantizedModel {
 
         let head_w = (0..d * cfg.num_classes).map(|_| rng.next_f32_signed()).collect();
         let head_b = (0..cfg.num_classes).map(|_| rng.next_f32_signed() * 0.1).collect();
-        Self { cfg: cfg.clone(), sps_convs, blocks, head_w, head_b }
+        let embed = cfg.decoder.as_ref().map(|_| random_embed(&mut rng, cfg.vocab(), d));
+        Self { cfg: cfg.clone(), sps_convs, blocks, head_w, head_b, embed }
     }
+
+    /// Decoder embedding row of `token` (`[D]` membrane-format values), or
+    /// an error for vision-only models / out-of-vocab tokens.
+    pub fn embed_row(&self, token: usize) -> anyhow::Result<&[i32]> {
+        let table = self
+            .embed
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("model `{}` has no embedding table", self.cfg.name))?;
+        let d = self.cfg.embed_dim;
+        anyhow::ensure!(
+            token < self.cfg.vocab(),
+            "token {token} out of vocabulary ({} entries)",
+            self.cfg.vocab()
+        );
+        Ok(&table[token * d..(token + 1) * d])
+    }
+}
+
+/// Random `[vocab, D]` embedding table in the membrane integer format,
+/// scaled so a token row drives realistic (~10-30%) first-layer spike
+/// rates just like the random conv front-end does for vision inputs.
+fn random_embed(rng: &mut Prng, vocab: usize, d: usize) -> Vec<i32> {
+    let fmt = QFormat::new(MEM_BITS, ACT_FRAC);
+    (0..vocab * d)
+        .map(|_| fmt.from_f32(0.35 + 0.8 * rng.next_f32_signed()))
+        .collect()
 }
 
 fn random_conv(rng: &mut Prng, c_out: usize, c_in: usize, in_frac: i32, stage: usize) -> QuantizedConv {
@@ -116,6 +148,21 @@ mod tests {
         let b = QuantizedModel::random(&cfg, 7);
         assert_eq!(a.sps_convs[0].w, b.sps_convs[0].w);
         assert_eq!(a.blocks[0].q.w, b.blocks[0].q.w);
+    }
+
+    #[test]
+    fn decoder_models_carry_an_embedding_table() {
+        let cfg = SdtModelConfig::tiny_decoder();
+        let m = QuantizedModel::random(&cfg, 3);
+        let table = m.embed.as_ref().expect("decoder model has an embedding");
+        assert_eq!(table.len(), cfg.vocab() * cfg.embed_dim);
+        let row = m.embed_row(0).unwrap();
+        assert_eq!(row.len(), cfg.embed_dim);
+        assert!(m.embed_row(cfg.vocab()).is_err(), "out-of-vocab token rejected");
+        // Vision models have none, and embed_row fails loudly.
+        let v = QuantizedModel::random(&SdtModelConfig::tiny(), 3);
+        assert!(v.embed.is_none());
+        assert!(v.embed_row(0).is_err());
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Spike-stream KV cache for autoregressive decode (ISSUE 10).
+//!
+//! The decoder keeps, per SDEB block and per SNN timestep, the K and V
+//! spike rows of every already-processed token position. Two dual
+//! representations are held side by side, one per SMAM engine:
+//!
+//! * **Position-major CSR** ([`EncodedSpikes`]): the arena's *channels*
+//!   are token positions (capacity `max_seq_len`) and the stored
+//!   *addresses* are embedding-channel indices (`u16 < D`). Appending
+//!   token `p` is a single [`EncodedSpikes::extend_channel`] call — the
+//!   same packed ESS banks as the vision path, just transposed so the
+//!   causal scan of the incremental SMAM walks channels `0..len` in
+//!   order and the append never reshuffles existing rows.
+//! * **Packed word rows** (`Vec<u64>`, `ceil(D/64)` words per position):
+//!   the bitmap engine's resident copy, so dense decode steps can AND +
+//!   popcount against per-head word masks instead of merging address
+//!   lists. Values are bit-identical between the two views by
+//!   construction (both are written from the same incoming row).
+//!
+//! Pooling: the arenas live for the whole decode session and are reset
+//! with [`EncodedSpikes::clear_reuse`]; the word buffer is sized once at
+//! construction. Steady-state decode therefore appends without any heap
+//! allocation (`append_into` is covered by the `xtask lint`
+//! alloc-in-into rule).
+
+use crate::spike::EncodedSpikes;
+
+/// Storage charged by one [`KvCacheStream::append_into`] call, so the
+/// caller can bill the ESS write port for the cache growth.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KvAppendStats {
+    /// Spikes appended to the K stream.
+    pub k_spikes: u64,
+    /// Spikes appended to the V stream.
+    pub v_spikes: u64,
+    /// CSR storage words (addresses + segment headers) the append grew
+    /// the two arenas by — the ESS-format footprint of the new row pair.
+    pub words: u64,
+}
+
+/// One block × timestep lane of the cache: appended K and V spike rows
+/// for positions `0..len()`, in both CSR and packed-word form.
+#[derive(Clone, Debug)]
+pub struct KvCacheStream {
+    /// Position-major K rows: channel `p` holds the sorted embedding
+    /// channels that spiked in K at position `p`.
+    k: EncodedSpikes,
+    /// Position-major V rows, same layout as `k`.
+    v: EncodedSpikes,
+    /// Packed K rows, `words_per_row` u64 words per position.
+    k_words: Vec<u64>,
+    /// Packed V rows, same layout as `k_words`.
+    v_words: Vec<u64>,
+    /// Staging row reused across appends (embedding channels of one row).
+    row_buf: Vec<u16>,
+    /// Embedding dimension `D` (the address space of each row).
+    dim: usize,
+    /// Maximum cached positions (the arena's channel capacity).
+    max_seq_len: usize,
+    /// Words per packed row: `ceil(dim / 64)`.
+    words_per_row: usize,
+    /// Cached positions so far.
+    len: usize,
+}
+
+impl KvCacheStream {
+    /// An empty stream able to hold up to `max_seq_len` positions of
+    /// `dim`-channel spike rows. The packed-word buffer is fully sized
+    /// here so appends never allocate.
+    pub fn new(max_seq_len: usize, dim: usize) -> Self {
+        assert!(max_seq_len > 0, "kv cache needs at least one position");
+        let u16_space = usize::from(u16::MAX) + 1;
+        assert!(dim > 0 && dim <= u16_space, "embedding dim must fit u16 addresses");
+        let words_per_row = dim.div_ceil(64);
+        Self {
+            k: EncodedSpikes::empty(max_seq_len, dim),
+            v: EncodedSpikes::empty(max_seq_len, dim),
+            k_words: vec![0u64; max_seq_len * words_per_row],
+            v_words: vec![0u64; max_seq_len * words_per_row],
+            row_buf: Vec::with_capacity(dim),
+            dim,
+            max_seq_len,
+            words_per_row,
+            len: 0,
+        }
+    }
+
+    /// Cached positions so far (grows by exactly one per decode step).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before the first append.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Embedding dimension of each cached row.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Position capacity of the stream.
+    pub fn max_seq_len(&self) -> usize {
+        self.max_seq_len
+    }
+
+    /// Packed u64 words per cached row.
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
+    /// Total K spikes cached (O(1) — arena spike counter).
+    pub fn k_spikes(&self) -> u64 {
+        self.k.count_spikes() as u64 // as-ok: widening spike count for stats
+    }
+
+    /// Total V spikes cached (O(1)).
+    pub fn v_spikes(&self) -> u64 {
+        self.v.count_spikes() as u64 // as-ok: widening spike count for stats
+    }
+
+    /// Total CSR storage words (addresses + segment headers) of both
+    /// streams — the ESS footprint of this lane.
+    pub fn storage_words(&self) -> u64 {
+        (self.k.storage_words() + self.v.storage_words()) as u64 // as-ok: widening word counts for stats
+    }
+
+    /// Sorted embedding channels of the K row at position `p`.
+    pub fn k_row(&self, p: usize) -> &[u16] {
+        assert!(p < self.len, "k_row({p}) past cache length {}", self.len);
+        self.k.channel_addrs(p)
+    }
+
+    /// Sorted embedding channels of the V row at position `p`.
+    pub fn v_row(&self, p: usize) -> &[u16] {
+        assert!(p < self.len, "v_row({p}) past cache length {}", self.len);
+        self.v.channel_addrs(p)
+    }
+
+    /// Packed K row at position `p` (`words_per_row` words).
+    pub fn k_word_row(&self, p: usize) -> &[u64] {
+        assert!(p < self.len, "k_word_row({p}) past cache length {}", self.len);
+        &self.k_words[p * self.words_per_row..(p + 1) * self.words_per_row]
+    }
+
+    /// Packed V row at position `p` (`words_per_row` words).
+    pub fn v_word_row(&self, p: usize) -> &[u64] {
+        assert!(p < self.len, "v_word_row({p}) past cache length {}", self.len);
+        &self.v_words[p * self.words_per_row..(p + 1) * self.words_per_row]
+    }
+
+    /// Append the new token's K and V spike rows (each a `[dim, 1]`
+    /// channel-major encode from the SEA) as the next cached position.
+    /// Returns the storage charged. Steady-state: no allocation — the
+    /// staging row and word buffer are reused, the arenas grow in place.
+    pub fn append_into(&mut self, k_new: &EncodedSpikes, v_new: &EncodedSpikes) -> KvAppendStats {
+        assert!(self.len < self.max_seq_len, "kv cache overflow at {} positions", self.len);
+        let before = self.storage_words();
+        let p = self.len;
+        let k_spikes = Self::append_row(&mut self.k, &mut self.k_words, &mut self.row_buf, k_new, p, self.words_per_row, self.dim);
+        let v_spikes = Self::append_row(&mut self.v, &mut self.v_words, &mut self.row_buf, v_new, p, self.words_per_row, self.dim);
+        self.len += 1;
+        KvAppendStats { k_spikes, v_spikes, words: self.storage_words() - before }
+    }
+
+    /// Transpose one `[dim, 1]` encode into position row `p` of `enc` +
+    /// its packed mirror. Returns the spike count of the row.
+    fn append_row(
+        enc: &mut EncodedSpikes,
+        words: &mut [u64],
+        row_buf: &mut Vec<u16>,
+        new: &EncodedSpikes,
+        p: usize,
+        words_per_row: usize,
+        dim: usize,
+    ) -> u64 {
+        assert_eq!(new.channels, dim, "row channel count");
+        assert_eq!(new.tokens, 1, "decode appends single-token rows");
+        row_buf.clear();
+        let wrow = &mut words[p * words_per_row..(p + 1) * words_per_row];
+        for c in 0..dim {
+            if new.channel_len(c) > 0 {
+                let addr = u16::try_from(c).expect("dim checked <= u16 space at construction");
+                row_buf.push(addr);
+                wrow[c / 64] |= 1u64 << (c % 64);
+            }
+        }
+        enc.extend_channel(p, row_buf);
+        row_buf.len() as u64 // as-ok: widening spike count for stats
+    }
+
+    /// Drop all cached positions but keep every arena and buffer
+    /// capacity, so the next session appends allocation-free.
+    pub fn reset(&mut self) {
+        // Zero only the words the session actually touched.
+        let used = self.len * self.words_per_row;
+        for w in &mut self.k_words[..used] {
+            *w = 0;
+        }
+        for w in &mut self.v_words[..used] {
+            *w = 0;
+        }
+        self.k.clear_reuse();
+        self.v.clear_reuse();
+        self.len = 0;
+    }
+}
+
+/// The full decode-session cache: one [`KvCacheStream`] per
+/// `(block, timestep)` pair, plus the token counter the per-stream
+/// lengths are checked against (`finish_token`).
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    streams: Vec<KvCacheStream>,
+    blocks: usize,
+    timesteps: usize,
+    tokens: usize,
+}
+
+impl KvCache {
+    /// Build an empty cache for `blocks × timesteps` lanes of up to
+    /// `max_seq_len` positions at embedding dim `dim`.
+    pub fn new(blocks: usize, timesteps: usize, max_seq_len: usize, dim: usize) -> Self {
+        assert!(blocks > 0 && timesteps > 0, "cache needs at least one lane");
+        let streams =
+            (0..blocks * timesteps).map(|_| KvCacheStream::new(max_seq_len, dim)).collect();
+        Self { streams, blocks, timesteps, tokens: 0 }
+    }
+
+    /// Number of SDEB blocks covered.
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+
+    /// Number of SNN timesteps covered.
+    pub fn timesteps(&self) -> usize {
+        self.timesteps
+    }
+
+    /// Tokens fully processed so far (every lane has exactly this many
+    /// cached positions between `finish_token` calls).
+    pub fn tokens(&self) -> usize {
+        self.tokens
+    }
+
+    /// The lane of `(block, timestep)`.
+    pub fn stream(&self, block: usize, t: usize) -> &KvCacheStream {
+        assert!(block < self.blocks && t < self.timesteps, "lane ({block},{t}) out of range");
+        &self.streams[block * self.timesteps + t]
+    }
+
+    /// Mutable lane of `(block, timestep)` — the decode step appends here.
+    pub fn stream_mut(&mut self, block: usize, t: usize) -> &mut KvCacheStream {
+        assert!(block < self.blocks && t < self.timesteps, "lane ({block},{t}) out of range");
+        &mut self.streams[block * self.timesteps + t]
+    }
+
+    /// Close out one decoded token: every lane must have grown to
+    /// exactly `tokens() + 1` positions (the cache-length ==
+    /// tokens-emitted invariant), then the counter advances.
+    pub fn finish_token(&mut self) -> anyhow::Result<()> {
+        let want = self.tokens + 1;
+        for (i, s) in self.streams.iter().enumerate() {
+            anyhow::ensure!(
+                s.len() == want,
+                "kv lane {} holds {} positions after token {} (want {want})",
+                i,
+                s.len(),
+                self.tokens
+            );
+        }
+        self.tokens = want;
+        Ok(())
+    }
+
+    /// Total CSR storage words across all lanes (session ESS footprint).
+    pub fn storage_words(&self) -> u64 {
+        self.streams.iter().map(|s| s.storage_words()).sum()
+    }
+
+    /// Reset every lane for a fresh session, keeping all capacity.
+    pub fn reset(&mut self) {
+        for s in &mut self.streams {
+            s.reset();
+        }
+        self.tokens = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a `[dim, 1]` channel-major encode with spikes at `chans`.
+    fn row(dim: usize, chans: &[usize]) -> EncodedSpikes {
+        let mut e = EncodedSpikes::empty(dim, 1);
+        for &c in chans {
+            e.push(c, 0);
+        }
+        e
+    }
+
+    #[test]
+    fn append_preserves_order_and_both_views_agree() {
+        let mut s = KvCacheStream::new(8, 70);
+        let st = s.append_into(&row(70, &[0, 3, 69]), &row(70, &[5]));
+        assert_eq!(st.k_spikes, 3);
+        assert_eq!(st.v_spikes, 1);
+        assert!(st.words >= 4, "4 addresses plus headers, got {}", st.words);
+        s.append_into(&row(70, &[64]), &row(70, &[]));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.k_row(0), &[0u16, 3, 69]);
+        assert_eq!(s.k_row(1), &[64u16]);
+        assert_eq!(s.v_row(0), &[5u16]);
+        assert_eq!(s.v_row(1), &[] as &[u16]);
+        // packed mirror carries the same bits (dim 70 -> 2 words per row)
+        assert_eq!(s.words_per_row(), 2);
+        assert_eq!(s.k_word_row(0)[0], (1u64 << 0) | (1 << 3));
+        assert_eq!(s.k_word_row(0)[1], 1u64 << (69 - 64));
+        assert_eq!(s.k_word_row(1)[1], 1u64 << 0);
+        assert_eq!(s.v_word_row(0)[0], 1u64 << 5);
+        assert_eq!(s.k_spikes(), 4);
+        assert_eq!(s.v_spikes(), 1);
+    }
+
+    #[test]
+    fn reset_reuses_arena_across_sessions() {
+        let mut s = KvCacheStream::new(4, 32);
+        for _ in 0..4 {
+            s.append_into(&row(32, &[1, 2]), &row(32, &[7]));
+        }
+        assert_eq!(s.len(), 4);
+        s.reset();
+        assert!(s.is_empty());
+        assert_eq!(s.k_spikes(), 0);
+        assert_eq!(s.storage_words(), 0);
+        // A second session sees a truly fresh stream, including the
+        // packed rows the first session dirtied.
+        s.append_into(&row(32, &[9]), &row(32, &[]));
+        assert_eq!(s.k_row(0), &[9u16]);
+        assert_eq!(s.k_word_row(0), &[1u64 << 9]);
+        assert_eq!(s.v_word_row(0), &[0u64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_past_max_seq_len_panics() {
+        let mut s = KvCacheStream::new(1, 8);
+        s.append_into(&row(8, &[0]), &row(8, &[0]));
+        s.append_into(&row(8, &[1]), &row(8, &[1]));
+    }
+
+    #[test]
+    fn cache_enforces_length_equals_tokens_invariant() {
+        let mut c = KvCache::new(2, 2, 8, 16);
+        // Token 0: append to every lane, then finish.
+        for b in 0..2 {
+            for t in 0..2 {
+                c.stream_mut(b, t).append_into(&row(16, &[b + t]), &row(16, &[3]));
+            }
+        }
+        c.finish_token().unwrap();
+        assert_eq!(c.tokens(), 1);
+        // Token 1: miss one lane -> finish_token reports the bad lane.
+        c.stream_mut(0, 0).append_into(&row(16, &[5]), &row(16, &[]));
+        let err = c.finish_token().unwrap_err().to_string();
+        assert!(err.contains("positions after token 1"), "{err}");
+        assert_eq!(c.tokens(), 1, "failed finish must not advance");
+    }
+
+    #[test]
+    fn cache_reset_clears_every_lane() {
+        let mut c = KvCache::new(1, 2, 4, 8);
+        c.stream_mut(0, 0).append_into(&row(8, &[0]), &row(8, &[1]));
+        c.stream_mut(0, 1).append_into(&row(8, &[2]), &row(8, &[3]));
+        c.finish_token().unwrap();
+        assert!(c.storage_words() > 0);
+        c.reset();
+        assert_eq!(c.tokens(), 0);
+        assert_eq!(c.storage_words(), 0);
+        assert!(c.stream(0, 0).is_empty() && c.stream(0, 1).is_empty());
+    }
+}

@@ -15,8 +15,10 @@ pub mod bitmap;
 pub mod delta;
 pub mod encoding;
 pub mod grid;
+pub mod kvcache;
 
 pub use bitmap::PackedBitmap;
 pub use delta::{csr_delta_into, xor_delta_into, DeltaPlan};
 pub use encoding::{EncodedSpikes, EncodedSpikesBuilder, SpikeMatrix};
 pub use grid::TokenGrid;
+pub use kvcache::{KvAppendStats, KvCache, KvCacheStream};

@@ -21,7 +21,7 @@ use crate::accel::workers::WorkerPool;
 use crate::hw::{AccelConfig, EngineKind, EngineSelect, UnitStats};
 use crate::scratch::ExecScratch;
 use crate::spike::bitmap::WORD_BITS;
-use crate::spike::{EncodedSpikes, PackedBitmap};
+use crate::spike::{EncodedSpikes, KvCacheStream, PackedBitmap};
 use crate::util::div_ceil;
 
 /// Assignment of attention heads to physical SDEB cores for the SDSA pass.
@@ -595,6 +595,221 @@ impl SpikeMaskAddModule {
         };
         (SmamOutput { mask, acc, masked_v }, stats)
     }
+
+    /// Incremental (decode-mode) SDSA: mask the single new token's Q row
+    /// against the cached K stream and aggregate the attended cached V
+    /// rows — the autoregressive twin of [`Self::run_mapped_into`].
+    ///
+    /// Causal row-wise semantics (the decoder variant of Fig. 4): for the
+    /// new position and each cached position `p` (the cache already holds
+    /// the new token's own K/V row, so `p` ranges over the full causal
+    /// prefix *including self*), per head `h` (a contiguous channel range,
+    /// [`HeadShard::head_channels`]) the comparator counts
+    /// `|Q_new ∩ K_p|` restricted to `h`'s channels; when the count
+    /// reaches the mask-neuron threshold `v_th`, position `p` is
+    /// *attended* for head `h` and its V spikes in `h`'s channels are
+    /// OR-ed into the output row. Cost is O(cache length) per token — the
+    /// whole point of caching K/V instead of recomputing the prefix.
+    ///
+    /// Dual-engine: `cfg.engine` resolves once per step from the measured
+    /// Q-plus-cached-K density. The CSR engine runs one two-pointer merge
+    /// per cached position over the full channel axis, bucketing matches
+    /// per head on the fly (heads are sorted contiguous ranges, so one
+    /// monotone boundary pointer suffices); the bitmap engine ANDs the
+    /// packed Q row against each cached K word row with per-head masked
+    /// popcounts, `words_per_row` word ops per position. Output spikes,
+    /// per-head counts, `sops` and `adds` are bit-identical between
+    /// engines by construction; comparator steps and SRAM traffic charge
+    /// whichever engine ran. Decode is latency-bound on one token, so the
+    /// step runs on a single resident comparator array (no head→core
+    /// sharding): `cycles = ceil(steps/comps) + ceil(heads·positions/
+    /// comps) + ceil(v_ops/comps)`.
+    ///
+    /// Returns the `[D, 1]` output spike row and the step's charges.
+    pub fn run_incremental_into(
+        &self,
+        q: &EncodedSpikes,
+        cache: &KvCacheStream,
+        heads: usize,
+        cfg: &AccelConfig,
+        scratch: &mut ExecScratch,
+    ) -> (EncodedSpikes, UnitStats) {
+        let d = q.channels;
+        assert_eq!(q.tokens, 1, "incremental SDSA takes a single-token Q row");
+        assert_eq!(cache.dim(), d, "Q/cache channel mismatch");
+        let n = cache.len();
+        assert!(n > 0, "the cache must already hold the new token's own K/V row");
+        let heads = heads.max(1).min(d.max(1));
+        let comps = cfg.smam_comparators as u64; // as-ok: widening for 64-bit stat/cycle math
+
+        let q_spikes = q.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
+        let k_cached = cache.k_spikes();
+        // Engine resolution from the step's measured density over the
+        // Q row plus all cached K rows (empty work => 0.0 => CSR).
+        let positions_total = d * (n + 1);
+        let density = if positions_total == 0 {
+            0.0
+        } else {
+            (q_spikes + k_cached) as f64 / positions_total as f64 // as-ok: measured-density ratio
+        };
+        let engine = cfg.engine.pick(density);
+
+        // Sorted spiking channels of the Q row, streamed once per step.
+        let mut q_row = scratch.take_usize();
+        q_row.clear();
+        q_row.extend((0..d).filter(|&c| q.channel_len(c) > 0));
+        // Exclusive end channel of each head, for monotone head lookup.
+        let mut head_end = scratch.take_usize();
+        head_end.clear();
+        head_end.extend((0..heads).map(|h| HeadShard::head_channels(h, heads, d).end));
+
+        let mut head_acc = scratch.take_u32(heads);
+        let mut head_fire = scratch.take_bool(heads);
+        let mut out_mask = scratch.take_bool(d);
+        let (mut steps, mut matches, mut retained, mut v_ops) = (0u64, 0u64, 0u64, 0u64);
+
+        match engine {
+            EngineKind::Csr => {
+                for p in 0..n {
+                    head_acc[..heads].fill(0);
+                    let kl = cache.k_row(p);
+                    let (mut i, mut j, mut cur) = (0usize, 0usize, 0usize);
+                    while i < q_row.len() && j < kl.len() {
+                        steps += 1;
+                        let (qc, kc) = (q_row[i], usize::from(kl[j]));
+                        match qc.cmp(&kc) {
+                            std::cmp::Ordering::Equal => {
+                                matches += 1;
+                                while qc >= head_end[cur] {
+                                    cur += 1;
+                                }
+                                head_acc[cur] += 1;
+                                i += 1;
+                                j += 1;
+                            }
+                            std::cmp::Ordering::Less => i += 1,
+                            std::cmp::Ordering::Greater => j += 1,
+                        }
+                    }
+                    let mut any = false;
+                    for h in 0..heads {
+                        head_fire[h] = head_acc[h] >= self.v_th;
+                        any |= head_fire[h];
+                    }
+                    if any {
+                        let vl = cache.v_row(p);
+                        v_ops += vl.len() as u64; // as-ok: widening for 64-bit stat/cycle math
+                        let mut cur = 0usize;
+                        for &vc in vl {
+                            let c = usize::from(vc);
+                            while c >= head_end[cur] {
+                                cur += 1;
+                            }
+                            if head_fire[cur] {
+                                out_mask[c] = true;
+                                retained += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            EngineKind::Bitmap => {
+                let wpr = cache.words_per_row();
+                // Packed Q row + per-head channel masks, built once per step.
+                let mut q_words = scratch.take_u64(wpr);
+                let mut head_masks = scratch.take_u64(heads * wpr);
+                for &c in q_row.iter() {
+                    q_words[c / WORD_BITS] |= 1u64 << (c % WORD_BITS);
+                }
+                for h in 0..heads {
+                    for c in HeadShard::head_channels(h, heads, d) {
+                        head_masks[h * wpr + c / WORD_BITS] |= 1u64 << (c % WORD_BITS);
+                    }
+                }
+                for p in 0..n {
+                    // One AND+popcount word pass per cached row; per-head
+                    // bucketing is wiring in the popcount tree, so the
+                    // charge matches `intersect_head_bitmap`'s per-row
+                    // word-op count.
+                    steps += wpr as u64; // as-ok: widening for 64-bit stat/cycle math
+                    let kw = cache.k_word_row(p);
+                    let mut any = false;
+                    for h in 0..heads {
+                        let hm = &head_masks[h * wpr..(h + 1) * wpr];
+                        let mut count = 0u32;
+                        for w in 0..wpr {
+                            count += ((q_words[w] & kw[w]) & hm[w]).count_ones();
+                        }
+                        matches += u64::from(count);
+                        head_acc[h] = count;
+                        head_fire[h] = count >= self.v_th;
+                        any |= head_fire[h];
+                    }
+                    if any {
+                        let vw = cache.v_word_row(p);
+                        v_ops += wpr as u64; // as-ok: widening for 64-bit stat/cycle math
+                        for w in 0..wpr {
+                            let mut fired = 0u64;
+                            for h in 0..heads {
+                                if head_fire[h] {
+                                    fired |= head_masks[h * wpr + w];
+                                }
+                            }
+                            let mut bits = vw[w] & fired;
+                            retained += u64::from(bits.count_ones());
+                            while bits != 0 {
+                                let b = bits.trailing_zeros() as usize; // as-ok: u32 bit index widening
+                                out_mask[w * WORD_BITS + b] = true;
+                                bits &= bits - 1;
+                            }
+                        }
+                    }
+                }
+                scratch.put_u64(head_masks);
+                scratch.put_u64(q_words);
+            }
+        }
+
+        let mut out = scratch.take_enc(d, 1);
+        for (c, &m) in out_mask.iter().enumerate() {
+            if m {
+                out.push(c, 0);
+            }
+        }
+        let out_spikes = out.count_spikes() as u64; // as-ok: widening for 64-bit stat/cycle math
+
+        let threshold_cmps = (heads * n) as u64; // as-ok: widening for 64-bit stat/cycle math
+        let qk_reads = match engine {
+            // Q row pinned in the comparator-side register file (read
+            // once); every cached K spike streams through per step.
+            EngineKind::Csr => q_spikes + k_cached,
+            EngineKind::Bitmap => {
+                let wpr = cache.words_per_row() as u64; // as-ok: widening for 64-bit stat/cycle math
+                wpr + wpr * n as u64 // as-ok: widening for 64-bit stat/cycle math
+            }
+        };
+        let stats = UnitStats {
+            cycles: div_ceil(steps, comps).max(1)
+                + div_ceil(threshold_cmps, comps)
+                + div_ceil(v_ops, comps),
+            // Workload SOPs are engine-independent: the Q row and every
+            // cached K spike traverse the comparator, retained V spikes
+            // traverse the mask gate.
+            sops: q_spikes + k_cached + retained,
+            adds: matches,
+            cmps: steps + threshold_cmps,
+            sram_reads: qk_reads + v_ops,
+            sram_writes: out_spikes,
+            ..Default::default()
+        };
+
+        scratch.put_bool(out_mask);
+        scratch.put_bool(head_fire);
+        scratch.put_u32(head_acc);
+        scratch.put_usize(head_end);
+        scratch.put_usize(q_row);
+        (out, stats)
+    }
 }
 
 #[cfg(test)]
@@ -1086,6 +1301,190 @@ mod tests {
             scratch.stats().misses,
             warm_misses,
             "warm bitmap-engine passes must not allocate (bitmaps pooled)"
+        );
+    }
+
+    /// Build a decode cache from dense per-position channel lists.
+    fn cache_from_rows(rows_k: &[Vec<usize>], rows_v: &[Vec<usize>], d: usize) -> KvCacheStream {
+        let mut s = KvCacheStream::new(rows_k.len().max(1), d);
+        for (kr, vr) in rows_k.iter().zip(rows_v) {
+            let mut ke = EncodedSpikes::empty(d, 1);
+            for &c in kr {
+                ke.push(c, 0);
+            }
+            let mut ve = EncodedSpikes::empty(d, 1);
+            for &c in vr {
+                ve.push(c, 0);
+            }
+            s.append_into(&ke, &ve);
+        }
+        s
+    }
+
+    fn random_rows(rng: &mut Prng, n: usize, d: usize, p: f64) -> Vec<Vec<usize>> {
+        (0..n).map(|_| (0..d).filter(|_| rng.bernoulli(p)).collect()).collect()
+    }
+
+    /// Dense row-wise reference of the decoder SDSA semantics.
+    fn naive_incremental(
+        q_chans: &[usize],
+        s: &KvCacheStream,
+        heads: usize,
+        v_th: u32,
+        d: usize,
+    ) -> Vec<bool> {
+        let mut q = vec![false; d];
+        for &c in q_chans {
+            q[c] = true;
+        }
+        let mut out = vec![false; d];
+        for p in 0..s.len() {
+            for h in 0..heads {
+                let r = HeadShard::head_channels(h, heads, d);
+                let count = s
+                    .k_row(p)
+                    .iter()
+                    .filter(|&&kc| r.contains(&usize::from(kc)) && q[usize::from(kc)])
+                    .count() as u32;
+                if count >= v_th {
+                    for &vc in s.v_row(p) {
+                        if r.contains(&usize::from(vc)) {
+                            out[usize::from(vc)] = true;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn enc_row(d: usize, chans: &[usize]) -> EncodedSpikes {
+        let mut e = EncodedSpikes::empty(d, 1);
+        for &c in chans {
+            e.push(c, 0);
+        }
+        e
+    }
+
+    #[test]
+    fn incremental_matches_naive_rowwise_reference_on_both_engines() {
+        use crate::hw::EngineSelect;
+        let mut rng = Prng::new(41);
+        let mut scratch = ExecScratch::new();
+        let d = 70; // 2 words/row: exercises cross-word head boundaries
+        for &p in &[0.05, 0.3, 0.8] {
+            for &heads in &[1usize, 3, 8] {
+                for &v_th in &[1u32, 2, 4] {
+                    let rows_k = random_rows(&mut rng, 5, d, p);
+                    let rows_v = random_rows(&mut rng, 5, d, p);
+                    let cache = cache_from_rows(&rows_k, &rows_v, d);
+                    let q_chans: Vec<usize> =
+                        (0..d).filter(|_| rng.bernoulli(p)).collect();
+                    let q = enc_row(d, &q_chans);
+                    let want = naive_incremental(&q_chans, &cache, heads, v_th, d);
+                    let smam = SpikeMaskAddModule::new(v_th);
+                    let mut cfg_csr = AccelConfig::small();
+                    cfg_csr.engine = EngineSelect::Csr;
+                    let mut cfg_bm = AccelConfig::small();
+                    cfg_bm.engine = EngineSelect::Bitmap;
+                    let (o_csr, st_csr) =
+                        smam.run_incremental_into(&q, &cache, heads, &cfg_csr, &mut scratch);
+                    let (o_bm, st_bm) =
+                        smam.run_incremental_into(&q, &cache, heads, &cfg_bm, &mut scratch);
+                    let got: Vec<bool> = (0..d).map(|c| o_csr.channel_len(c) > 0).collect();
+                    assert_eq!(got, want, "p={p} heads={heads} v_th={v_th}");
+                    assert_eq!(o_csr, o_bm, "engines must agree bit-exactly");
+                    // Workload charges are engine-independent; the
+                    // comparator-step and SRAM charges are not.
+                    assert_eq!(st_csr.sops, st_bm.sops);
+                    assert_eq!(st_csr.adds, st_bm.adds);
+                    assert_eq!(st_csr.sram_writes, st_bm.sram_writes);
+                    scratch.put_enc(o_csr);
+                    scratch.put_enc(o_bm);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_threshold_zero_attends_every_position() {
+        let d = 16;
+        let cache = cache_from_rows(
+            &[vec![], vec![1, 2]],
+            &[vec![0, 7], vec![9]],
+            d,
+        );
+        let q = enc_row(d, &[]);
+        let cfg = AccelConfig::small();
+        let mut scratch = ExecScratch::new();
+        let (out, st) =
+            SpikeMaskAddModule::new(0).run_incremental_into(&q, &cache, 2, &cfg, &mut scratch);
+        // Every position attended for every head: output is the OR of V.
+        assert_eq!(out.channel_addrs(0), &[0u16][..]);
+        assert!(out.channel_len(7) > 0 && out.channel_len(9) > 0);
+        assert_eq!(out.count_spikes(), 3);
+        assert_eq!(st.sram_writes, 3);
+    }
+
+    #[test]
+    fn incremental_empty_q_never_attends_at_positive_threshold() {
+        let d = 16;
+        let cache = cache_from_rows(&[vec![0, 5], vec![3]], &[vec![1], vec![2]], d);
+        let q = enc_row(d, &[]);
+        let cfg = AccelConfig::small();
+        let mut scratch = ExecScratch::new();
+        let (out, st) =
+            SpikeMaskAddModule::new(1).run_incremental_into(&q, &cache, 4, &cfg, &mut scratch);
+        assert_eq!(out.count_spikes(), 0);
+        assert_eq!(st.adds, 0);
+        assert!(st.cycles >= 1, "charged floor cycle");
+    }
+
+    #[test]
+    fn incremental_cost_grows_with_cache_length() {
+        let mut rng = Prng::new(42);
+        let d = 64;
+        let cfg = AccelConfig::small();
+        let smam = SpikeMaskAddModule::new(2);
+        let mut scratch = ExecScratch::new();
+        let rows_k = random_rows(&mut rng, 32, d, 0.3);
+        let rows_v = random_rows(&mut rng, 32, d, 0.3);
+        let q = enc_row(d, &(0..d).filter(|_| rng.bernoulli(0.3)).collect::<Vec<_>>());
+        let short = cache_from_rows(&rows_k[..4], &rows_v[..4], d);
+        let long = cache_from_rows(&rows_k, &rows_v, d);
+        let (o1, st_short) = smam.run_incremental_into(&q, &short, 4, &cfg, &mut scratch);
+        let (o2, st_long) = smam.run_incremental_into(&q, &long, 4, &cfg, &mut scratch);
+        assert!(
+            st_long.cycles > st_short.cycles && st_long.sops > st_short.sops,
+            "decode cost must scale with the causal prefix"
+        );
+        scratch.put_enc(o1);
+        scratch.put_enc(o2);
+    }
+
+    #[test]
+    fn incremental_steady_state_reuses_scratch() {
+        let mut rng = Prng::new(43);
+        let d = 70;
+        let cfg = AccelConfig::small();
+        let smam = SpikeMaskAddModule::new(2);
+        let rows_k = random_rows(&mut rng, 6, d, 0.4);
+        let rows_v = random_rows(&mut rng, 6, d, 0.4);
+        let cache = cache_from_rows(&rows_k, &rows_v, d);
+        let q = enc_row(d, &(0..d).filter(|_| rng.bernoulli(0.4)).collect::<Vec<_>>());
+        let mut scratch = ExecScratch::new();
+        let mut warm_misses = 0;
+        for round in 0..3 {
+            let (out, _) = smam.run_incremental_into(&q, &cache, 4, &cfg, &mut scratch);
+            scratch.put_enc(out);
+            if round == 0 {
+                warm_misses = scratch.stats().misses;
+            }
+        }
+        assert_eq!(
+            scratch.stats().misses,
+            warm_misses,
+            "warm incremental SDSA passes must not allocate"
         );
     }
 

@@ -1,0 +1,173 @@
+//! Differential harness for the autoregressive decode path: the
+//! incremental spike-stream KV-cache session must be **bit-identical to
+//! full recompute**, three ways at once —
+//!
+//! 1. per-step logits equal the dense [`GoldenDecoder`] oracle replaying
+//!    the whole prefix from scratch (full recompute, no cache);
+//! 2. the incremental session's logits, cumulative phase charges
+//!    (`UnitStats` per phase, cycles, SRAM traffic) and cache state equal
+//!    a *fresh* session replaying the same prefix — no hidden state may
+//!    leak between steps beyond the defined session state (LIF membranes
+//!    plus the KV cache);
+//! 3. every spike engine (CSR, bitmap, adaptive) generates the same
+//!    values, over random decoder shapes and random token sequences.
+//!
+//! Plus KV-cache invariants at the session level: the cache holds exactly
+//! `blocks x timesteps` lanes of `pos()` positions after every step, its
+//! storage grows monotonically, and `reset()` replays bit-exactly with
+//! zero steady-state allocation (arena reuse).
+
+use spikeformer_accel::accel::DecodeSession;
+use spikeformer_accel::hw::{AccelConfig, EngineSelect};
+use spikeformer_accel::model::{DecoderShape, GoldenDecoder, QuantizedModel, SdtModelConfig};
+use spikeformer_accel::spike::KvCache;
+use spikeformer_accel::util::{proptest::check, Prng};
+use spikeformer_accel::{prop_assert, prop_assert_eq};
+
+/// A random valid decoder config: heads divide the embedding, every
+/// dimension small enough that the dense oracle stays fast.
+fn random_decoder_cfg(rng: &mut Prng) -> SdtModelConfig {
+    let heads = [1usize, 2, 4][rng.gen_range(0, 3)];
+    let mut cfg = SdtModelConfig::tiny();
+    cfg.name = "prop-decoder".into();
+    cfg.num_heads = heads;
+    cfg.embed_dim = heads * [4usize, 8, 12][rng.gen_range(0, 3)];
+    cfg.num_blocks = rng.gen_range(1, 3);
+    cfg.timesteps = rng.gen_range(1, 4);
+    cfg.mlp_hidden = 16 * rng.gen_range(1, 4);
+    cfg.attn_v_th = u32::try_from(rng.gen_range(1, 4)).unwrap();
+    cfg.num_classes = rng.gen_range(2, 8);
+    cfg.decoder = Some(DecoderShape { max_seq_len: rng.gen_range(8, 17) });
+    cfg.validate().expect("random decoder config must validate");
+    cfg
+}
+
+fn random_engine(rng: &mut Prng) -> EngineSelect {
+    [EngineSelect::Csr, EngineSelect::Bitmap, EngineSelect::adaptive()][rng.gen_range(0, 3)]
+}
+
+#[test]
+fn prop_incremental_decode_is_bit_identical_to_full_recompute() {
+    check("decode: incremental == fresh replay == dense golden", 10, |rng| {
+        let cfg = random_decoder_cfg(rng);
+        let model = QuantizedModel::random(&cfg, rng.next_u64());
+        let mut hw = AccelConfig::small();
+        hw.engine = random_engine(rng);
+        hw.validate().expect("hw config");
+        let n = rng.gen_range(2, 6);
+        let seq: Vec<usize> = (0..n).map(|_| rng.gen_range(0, cfg.vocab())).collect();
+
+        let golden = GoldenDecoder::new(&model).expect("decoder model");
+        let mut inc = DecodeSession::new(&model, &hw).expect("session");
+        let mut last_words = 0u64;
+        for p in 0..n {
+            let logits = inc.step(&model, &hw, seq[p]).expect("step");
+            prop_assert_eq!(inc.pos(), p + 1);
+
+            // (1) dense full recompute of the whole prefix, every step.
+            let dense = golden.run(&seq[..=p]).expect("golden run");
+            prop_assert_eq!(&logits, &dense.logits[p]);
+
+            // (2) a fresh session replaying the prefix: logits, cycles,
+            // per-phase UnitStats and cache storage all bit-identical.
+            let mut fresh = DecodeSession::new(&model, &hw).expect("fresh session");
+            let replay = fresh.prefill(&model, &hw, &seq[..=p]).expect("replay");
+            prop_assert_eq!(&logits, &replay);
+            prop_assert_eq!(inc.cycles(), fresh.cycles());
+            prop_assert_eq!(inc.cache_words(), fresh.cache_words());
+            prop_assert_eq!(&inc.sink().phases.phases, &fresh.sink().phases.phases);
+
+            // Cache storage can only grow as positions append.
+            prop_assert!(inc.cache_words() >= last_words);
+            last_words = inc.cache_words();
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_every_engine_decodes_the_same_values() {
+    check("decode: csr == bitmap == adaptive", 8, |rng| {
+        let cfg = random_decoder_cfg(rng);
+        let model = QuantizedModel::random(&cfg, rng.next_u64());
+        let n = rng.gen_range(2, 6);
+        let seq: Vec<usize> = (0..n).map(|_| rng.gen_range(0, cfg.vocab())).collect();
+        let mut per_engine: Vec<Vec<Vec<f32>>> = Vec::new();
+        for engine in [EngineSelect::Csr, EngineSelect::Bitmap, EngineSelect::adaptive()] {
+            let mut hw = AccelConfig::small();
+            hw.engine = engine;
+            hw.validate().expect("hw config");
+            let mut s = DecodeSession::new(&model, &hw).expect("session");
+            let logits: Vec<Vec<f32>> =
+                seq.iter().map(|&t| s.step(&model, &hw, t).expect("step")).collect();
+            per_engine.push(logits);
+        }
+        prop_assert_eq!(&per_engine[0], &per_engine[1]);
+        prop_assert_eq!(&per_engine[0], &per_engine[2]);
+        Ok(())
+    });
+}
+
+#[test]
+fn session_reset_reuses_arenas_and_replays_bit_exactly() {
+    let cfg = SdtModelConfig::tiny_decoder();
+    let model = QuantizedModel::random(&cfg, 5);
+    let hw = AccelConfig::small();
+    let mut s = DecodeSession::new(&model, &hw).expect("session");
+    let seq = [1usize, 4, 2, 0, 3];
+    let first: Vec<Vec<f32>> =
+        seq.iter().map(|&t| s.step(&model, &hw, t).expect("step")).collect();
+    let cycles = s.cycles();
+    let words = s.cache_words();
+    s.reset();
+    assert_eq!(s.pos(), 0);
+    assert_eq!(s.cache_words(), 0);
+    let again: Vec<Vec<f32>> =
+        seq.iter().map(|&t| s.step(&model, &hw, t).expect("step")).collect();
+    assert_eq!(first, again, "reset session must replay bit-exactly");
+    assert_eq!(s.cycles(), cycles);
+    assert_eq!(s.cache_words(), words, "arena reuse must not change modelled storage");
+}
+
+#[test]
+fn kv_cache_length_equals_tokens_emitted_across_sessions() {
+    // The structural invariant at the cache level: every (block,
+    // timestep) lane holds exactly `tokens()` positions after each
+    // `finish_token`, across reset/reuse cycles.
+    let (blocks, timesteps, max_seq, d) = (2usize, 3usize, 6usize, 20usize);
+    let mut cache = KvCache::new(blocks, timesteps, max_seq, d);
+    let row = |chans: &[u16]| {
+        let mut e = spikeformer_accel::spike::EncodedSpikes::empty(d, 1);
+        for &c in chans {
+            e.push(usize::from(c), 0);
+        }
+        e
+    };
+    for session in 0..2 {
+        for tok in 0..max_seq {
+            for b in 0..blocks {
+                for t in 0..timesteps {
+                    let k = row(&[1, 3 + u16::try_from(tok % 4).unwrap()]);
+                    let v = row(&[0]);
+                    cache.stream_mut(b, t).append_into(&k, &v);
+                }
+            }
+            cache.finish_token().expect("lanes aligned");
+            assert_eq!(cache.tokens(), tok + 1, "session {session}");
+            for b in 0..blocks {
+                for t in 0..timesteps {
+                    assert_eq!(cache.stream(b, t).len(), cache.tokens());
+                }
+            }
+        }
+        cache.reset();
+        assert_eq!(cache.tokens(), 0);
+        assert_eq!(cache.storage_words(), 0);
+    }
+
+    // A lane left short is an invariant violation, not a silent skew.
+    let mut bad = KvCache::new(1, 2, 4, d);
+    bad.stream_mut(0, 0).append_into(&row(&[2]), &row(&[5]));
+    let err = bad.finish_token().unwrap_err().to_string();
+    assert!(err.contains("positions after token"), "unexpected error: {err}");
+}

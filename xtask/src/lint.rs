@@ -658,6 +658,26 @@ mod tests {
     }
 
     #[test]
+    fn kvcache_hot_paths_are_covered() {
+        // The KV-cache appenders (`rust/src/spike/kvcache.rs`) sit on the
+        // per-token decode path: R3 must fire on an allocating `*_into`
+        // append and R2 on an unannotated widening cast in the same file,
+        // and the annotated shapes the real file uses must pass clean.
+        let bad = "pub fn append_into(&mut self, k: &E, v: &E) -> Stats {\n    \
+                   let row: Vec<u16> = k.addrs().to_vec();\n    \
+                   let words = row.len() as u64;\n    self.store(&row);\n    \
+                   Stats { words }\n}\n";
+        let v = lint_source("rust/src/spike/kvcache.rs", bad);
+        assert_eq!(rules(&v), ["alloc-in-into", "bare-cast"]);
+        let ok = "pub fn append_into(&mut self, k: &E, v: &E) -> Stats {\n    \
+                  self.row_buf.clear();\n    \
+                  self.row_buf.extend_from_slice(k.addrs());\n    \
+                  let words = self.row_buf.len() as u64; // as-ok: widening spike count for stats\n    \
+                  self.store();\n    Stats { words }\n}\n";
+        assert!(lint_source("rust/src/spike/kvcache.rs", ok).is_empty());
+    }
+
+    #[test]
     fn display_format_is_stable() {
         let v = Violation {
             file: "rust/src/x.rs".into(),
